@@ -1,0 +1,47 @@
+//! Soak test: run thousands of coordinator steps and print RSS — guards the
+//! PJRT input-buffer leak fixed in `Runtime::execute_refs` (the `execute`
+//! C path leaks its internally-created device buffers; we use `execute_b`
+//! with host-owned buffers instead). RSS must stay flat.
+
+use step_nm::config::{ExperimentConfig, RecipeKind};
+use step_nm::coordinator::Session;
+use step_nm::runtime::Runtime;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for line in s.lines() {
+        if let Some(kb) = line.strip_prefix("VmRSS:") {
+            return kb.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let rt = Runtime::from_dir("artifacts")?;
+    let cfg = ExperimentConfig::builder("mlp_cf10")
+        .recipe(RecipeKind::SrSte)
+        .sparsity(1, 4)
+        .steps(steps + 1)
+        .lr(1e-4)
+        .build();
+    let mut s = Session::new(&rt, &cfg)?;
+    let mut baseline = 0.0;
+    for i in 1..=steps {
+        s.step()?;
+        if i == 100 {
+            baseline = rss_mb();
+        }
+        if i % 250 == 0 {
+            println!("step {i}: rss {:.0} MB", rss_mb());
+        }
+    }
+    let final_rss = rss_mb();
+    anyhow::ensure!(
+        final_rss < baseline * 1.5 + 64.0,
+        "RSS grew from {baseline:.0} to {final_rss:.0} MB — leak regression"
+    );
+    println!("soak OK: rss stable at {final_rss:.0} MB over {steps} steps");
+    Ok(())
+}

@@ -1,0 +1,173 @@
+"""AOT lowering: every (model, recipe) step function -> HLO text artifact.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/.
+
+Outputs:
+  artifacts/<name>.hlo.txt   one module per artifact
+  artifacts/manifest.json    input/output layouts + model param specs, the
+                             single source of truth for the Rust runtime
+
+Run via ``make artifacts`` (no-op when inputs are unchanged) - python never
+runs on the training path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train_steps as ts
+from .models import ModelSpec, registry, _init_param
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_init_artifact(model: ModelSpec) -> ts.Artifact:
+    """Param initialization as an artifact: seed (int32[1]) -> params.
+
+    Keeps initialization on-device and seed-parameterized so the Rust
+    coordinator can run many-seed experiments without Python.
+    """
+    def fn(seed):
+        key = jax.random.PRNGKey(seed[0])
+        out = []
+        for spec in model.params:
+            key, sub = jax.random.split(key)
+            out.append(_init_param(sub, spec))
+        return tuple(out)
+
+    return ts.Artifact(
+        f"{model.name}__init", fn, (jnp.zeros((1,), jnp.int32),),
+        ["seed"], [f"p.{p.name}" for p in model.params],
+        {"recipe": "init", "model": model.name},
+    )
+
+
+# Build plan: (model key, batch, seq, M values for masked recipes)
+# See DESIGN.md SS3 for which experiment consumes which artifact.
+PLAN = {
+    "mlp_cf10": dict(batch=128, seq=None, ms=[4, 8, 16, 32], sgdm=True,
+                     asp=True),
+    "cnn_cf100": dict(batch=64, seq=None, ms=[4, 8, 16, 32], sgdm=True,
+                      asp=True),
+    "enc_glue2": dict(batch=32, seq=32, ms=[4], asp=True),
+    "enc_glue3": dict(batch=32, seq=32, ms=[4], asp=True),
+    "enc_stsb": dict(batch=32, seq=32, ms=[4], asp=True),
+    "lm_wiki": dict(batch=16, seq=64, ms=[4], asp=True),
+    "lm_wmt": dict(batch=16, seq=48, ms=[4]),
+    "lm_e2e": dict(batch=8, seq=128, ms=[4]),
+    "mlp_pallas": dict(batch=32, seq=None, ms=[4], asp=True, pallas=True),
+}
+
+
+def artifacts_for(model: ModelSpec, plan: dict):
+    batch, seq = plan["batch"], plan.get("seq")
+    yield build_init_artifact(model)
+    yield ts.build_dense_adam(model, batch, seq)
+    if plan.get("sgdm"):
+        yield ts.build_dense_sgdm(model, batch, seq)
+        yield ts.build_srste_sgdm(model, batch, seq, plan["ms"][0])
+    for m in plan["ms"]:
+        yield ts.build_srste_adam(model, batch, seq, m)
+        yield ts.build_step_phase2(model, batch, seq, m)
+        yield ts.build_eval(model, batch, seq, m)
+        if plan.get("asp"):
+            yield ts.build_asp_adam(model, batch, seq, m)
+    if plan.get("pallas"):
+        yield ts.build_srste_adam_pallas(model, batch, seq, 2, 4)
+
+
+def spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_artifact(art: ts.Artifact, out_dir: str, force: bool) -> dict:
+    path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+    lowered = jax.jit(art.fn).lower(*art.example_args)
+    outs = jax.eval_shape(art.fn, *art.example_args)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    entry = {
+        "name": art.name,
+        "path": os.path.basename(path),
+        "inputs": [dict(name=n, **spec_of(a))
+                   for n, a in zip(art.input_names, art.example_args)],
+        "outputs": [dict(name=n, **spec_of(o))
+                    for n, o in zip(art.output_names, outs)],
+        "meta": art.meta,
+    }
+    # Always lower and compare content: a kernel/model edit must regenerate
+    # the artifact even when the file exists (stale HLO is a silent
+    # correctness bug on the Rust side).
+    text = to_hlo_text(lowered)
+    sha = hashlib.sha256(text.encode()).hexdigest()[:16]
+    stale = True
+    if not force and os.path.exists(path):
+        with open(path, "rb") as f:
+            stale = hashlib.sha256(f.read()).hexdigest()[:16] != sha
+    if force or stale:
+        with open(path, "w") as f:
+            f.write(text)
+    entry["sha256"] = sha
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model keys to (re)build")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    models = registry()
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": [], "models": {}}
+    for key, plan in PLAN.items():
+        model = models[key]
+        manifest["models"][key] = {
+            "params": [dict(name=p.name, shape=list(p.shape), sparse=p.sparse)
+                       for p in model.params],
+            "sparse_indices": model.sparse_indices,
+            "kind": model.kind,
+            "n_classes": model.n_classes,
+            "dim": model.dim,
+            "batch": plan["batch"],
+            "seq": plan.get("seq"),
+        }
+        if only is not None and key not in only:
+            # still need manifest entries for existing artifacts
+            pass
+        for art in artifacts_for(model, plan):
+            force = args.force or (only is not None and key in only)
+            entry = lower_artifact(art, args.out_dir, force=force)
+            manifest["artifacts"].append(entry)
+            print(f"[aot] {entry['name']}  ({entry['sha256']})", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts "
+          f"to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Pallas kernel: fused N:M-masked matmul ``x @ (Pi .* w)``.
+
+This is the sparse-inference hot-spot the Ampere Sparse Tensor Core
+accelerates in hardware. TPU adaptation (DESIGN.md SSHardware-Adaptation):
+instead of WMMA consuming a compressed 2:4 operand, we fuse mask computation
+and application into the RHS tile load so the MXU consumes already-masked
+tiles from VMEM and the mask never round-trips to HBM. The HBM<->VMEM
+schedule CUDA expresses with threadblocks is the (i, j, k) BlockSpec grid
+below, k innermost so the output tile stays resident as the accumulator.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mask_tile(w: jax.Array, n: int, m: int) -> jax.Array:
+    """N:M-mask one VMEM tile: N rounds of vectorized argmax-and-exclude."""
+    rows, cols = w.shape
+    groups = jnp.abs(w.reshape(rows, cols // m, m))
+    selected = jnp.zeros_like(groups, dtype=jnp.bool_)
+    neg = jnp.asarray(-1.0, groups.dtype)
+    for _ in range(n):
+        cand = jnp.where(selected, neg, groups)
+        idx = jnp.argmax(cand, axis=-1)  # lowest index wins ties (= top_k)
+        selected = jnp.logical_or(selected, jax.nn.one_hot(idx, m, dtype=jnp.bool_))
+    return jnp.where(selected.reshape(rows, cols), w, jnp.zeros_like(w))
+
+
+def _masked_matmul_kernel(x_ref, w_ref, o_ref, *, n: int, m: int, k_tiles: int):
+    """Grid (i, j, k): o[i, j] += x[i, k] @ (Pi .* w)[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wm = _mask_tile(w_ref[...], n, m)
+    o_ref[...] += jnp.dot(x_ref[...], wm, preferred_element_type=o_ref.dtype)
+
+
+def masked_matmul(x: jax.Array, w: jax.Array, n: int, m: int,
+                  block_b: int = 128, block_f: int = 128,
+                  block_k: int = 512) -> jax.Array:
+    """``x[B,K] @ (Pi .* w[K,F])`` with the N:M mask fused into the RHS load.
+
+    Grouping matches ref.masked_matmul: last axis of w, contiguous groups of
+    M. Tiles clamp to the problem size; the F tile is rounded down to a
+    multiple of M so no group straddles a tile boundary; awkward shapes fall
+    back to a single whole-array tile (identical lowering path).
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} w={w.shape}")
+    if w.shape[-1] % m != 0:
+        raise ValueError(f"F={w.shape[-1]} not divisible by M={m}")
+    if not (1 <= n <= m):
+        raise ValueError(f"need 1 <= N <= M, got N={n} M={m}")
+    b, kdim = x.shape
+    _, f = w.shape
+    bb = min(block_b, b)
+    bf = min(block_f - block_f % m or m, f)
+    bk = min(block_k, kdim)
+    if b % bb or f % bf or kdim % bk:
+        bb, bf, bk = b, f, kdim
+    k_tiles = kdim // bk
+    grid = (b // bb, f // bf, k_tiles)
+    return pl.pallas_call(
+        functools.partial(_masked_matmul_kernel, n=n, m=m, k_tiles=k_tiles),
+        out_shape=jax.ShapeDtypeStruct((b, f), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bf), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bf), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(x, w)

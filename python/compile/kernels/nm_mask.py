@@ -1,0 +1,75 @@
+"""Pallas kernel: N:M structured-sparsity mask (the paper's Pi_t).
+
+TPU adaptation of the Ampere 2:4 pruning primitive (DESIGN.md
+SSHardware-Adaptation): the weight matrix is tiled into VMEM-resident blocks
+via BlockSpec; within a block the M-group top-N selection runs as N rounds of
+a vectorized argmax-and-exclude sweep on the VPU (no data-dependent gather,
+no top_k custom call - every round is a lane-parallel compare/select over the
+minor axis, which is how this maps onto the 8x128 vector unit).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and the form in
+which the kernel lowers into the AOT HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nm_mask_kernel(w_ref, mask_ref, *, n: int, m: int):
+    """Mask one (rows, cols) VMEM tile. cols % m == 0, n/m static."""
+    w = w_ref[...]
+    rows, cols = w.shape
+    groups = w.reshape(rows, cols // m, m)
+    mag = jnp.abs(groups)
+    selected = jnp.zeros_like(mag, dtype=jnp.bool_)
+    # N rounds of argmax-and-exclude. Tie-break: argmax returns the lowest
+    # index, matching jax.lax.top_k stability (pinned in ref.nm_mask).
+    neg = jnp.asarray(-1.0, mag.dtype)
+    for _ in range(n):
+        cand = jnp.where(selected, neg, mag)
+        idx = jnp.argmax(cand, axis=-1)  # [rows, cols//m]
+        hit = jax.nn.one_hot(idx, m, dtype=jnp.bool_)
+        selected = jnp.logical_or(selected, hit)
+    mask_ref[...] = selected.reshape(rows, cols).astype(w.dtype)
+
+
+def nm_mask(w: jax.Array, n: int, m: int,
+            block_rows: int = 256, block_cols: int = 512) -> jax.Array:
+    """Binary N:M mask of ``w`` (2-D, last-axis groups of M), Pallas-tiled.
+
+    Tile columns are rounded to a multiple of M so no group straddles a tile
+    boundary; tiles are clamped to the array so small inputs still work.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"nm_mask kernel expects 2-D weights, got {w.shape}")
+    if w.shape[-1] % m != 0:
+        raise ValueError(f"last dim {w.shape[-1]} not divisible by M={m}")
+    if not (1 <= n <= m):
+        raise ValueError(f"need 1 <= N <= M, got N={n} M={m}")
+    rows, cols = w.shape
+    br = min(block_rows, rows)
+    bc = min(block_cols - block_cols % m or m, cols)
+    if cols % bc != 0 or rows % br != 0:
+        # Fall back to one whole-array tile for awkward shapes; still a
+        # pallas_call so the lowering path is identical.
+        br, bc = rows, cols
+    grid = (rows // br, cols // bc)
+    return pl.pallas_call(
+        functools.partial(_nm_mask_kernel, n=n, m=m),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(w)
+
+
+def apply_mask(w: jax.Array, n: int, m: int, **kw) -> jax.Array:
+    """Pi .* w via the mask kernel."""
+    return nm_mask(w, n, m, **kw) * w

@@ -1,0 +1,130 @@
+"""Pallas kernels: fused optimizer updates (Adam, STEP phase 2, SR-STE refine).
+
+These are the per-parameter elementwise hot loops of Algorithm 1. On TPU they
+are VPU-bound streaming kernels: each grid step pulls one VMEM tile of every
+state tensor, applies the fused update, and writes back - one HBM round-trip
+per tensor per step instead of one per intermediate (what an unfused jnp
+expression chain would do before XLA fusion; the kernel makes the fusion
+explicit and guarantees it).
+
+Scalars (lr, t, lambda) arrive as (1, 1) arrays so the same artifact serves
+every step index / schedule value - the Rust coordinator feeds them per step.
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grid_1d(size: int, block: int):
+    if size % block:
+        block = size
+    return (size // block,), block
+
+
+# ---------------------------------------------------------------------------
+# Dense Adam (Alg. 1 lines 4-8 / Eqs 3-7)
+# ---------------------------------------------------------------------------
+
+def _adam_kernel(w_ref, m_ref, v_ref, g_ref, lr_ref, t_ref,
+                 w_out, m_out, v_out, *, beta1: float, beta2: float,
+                 eps: float):
+    g = g_ref[...]
+    m1 = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v1 = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    t = t_ref[0, 0]
+    mhat = m1 / (1.0 - jnp.power(jnp.asarray(beta1, g.dtype), t))
+    vhat = v1 / (1.0 - jnp.power(jnp.asarray(beta2, g.dtype), t))
+    w_out[...] = w_ref[...] - lr_ref[0, 0] * mhat / (jnp.sqrt(vhat) + eps)
+    m_out[...] = m1
+    v_out[...] = v1
+
+
+def adam_update(w, m, v, g, t, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+                block: int = 4096):
+    """Fused dense-Adam step over a flat [d] parameter tensor.
+
+    ``t`` is the 1-based step (traced scalar ok); returns (w', m', v').
+    """
+    d = w.shape[0]
+    grid, blk = _grid_1d(d, block)
+    lr_a = jnp.full((1, 1), lr, w.dtype)
+    t_a = jnp.full((1, 1), t, w.dtype)
+    flat = pl.BlockSpec((blk,), lambda i: (i,))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = jax.ShapeDtypeStruct((d,), w.dtype)
+    return pl.pallas_call(
+        functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps),
+        out_shape=(out, out, out),
+        grid=grid,
+        in_specs=[flat, flat, flat, flat, scal, scal],
+        out_specs=(flat, flat, flat),
+        interpret=True,
+    )(w, m, v, g, lr_a, t_a)
+
+
+# ---------------------------------------------------------------------------
+# STEP phase 2 (Alg. 1 lines 18-20): frozen v*, momentum-only update
+# ---------------------------------------------------------------------------
+
+def _step2_kernel(w_ref, m_ref, vstar_ref, g_ref, lr_ref, t_ref,
+                  w_out, m_out, *, beta1: float, eps: float):
+    g = g_ref[...]
+    m1 = beta1 * m_ref[...] + (1.0 - beta1) * g
+    t = t_ref[0, 0]
+    mhat = m1 / (1.0 - jnp.power(jnp.asarray(beta1, g.dtype), t))
+    w_out[...] = w_ref[...] - lr_ref[0, 0] * mhat / jnp.sqrt(vstar_ref[...] + eps)
+    m_out[...] = m1
+
+
+def step_phase2_update(w, m, v_star, g, t, lr, beta1=0.9, eps=1e-8,
+                       block: int = 4096):
+    """Fused STEP mask-learning-phase step. v* is read-only (frozen).
+
+    eps sits *inside* the sqrt, exactly as Alg. 1 line 20. Returns (w', m').
+    """
+    d = w.shape[0]
+    grid, blk = _grid_1d(d, block)
+    lr_a = jnp.full((1, 1), lr, w.dtype)
+    t_a = jnp.full((1, 1), t, w.dtype)
+    flat = pl.BlockSpec((blk,), lambda i: (i,))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = jax.ShapeDtypeStruct((d,), w.dtype)
+    return pl.pallas_call(
+        functools.partial(_step2_kernel, beta1=beta1, eps=eps),
+        out_shape=(out, out),
+        grid=grid,
+        in_specs=[flat, flat, flat, flat, scal, scal],
+        out_specs=(flat, flat),
+        interpret=True,
+    )(w, m, v_star, g, lr_a, t_a)
+
+
+# ---------------------------------------------------------------------------
+# SR-STE gradient refinement (Eq 9)
+# ---------------------------------------------------------------------------
+
+def _srste_kernel(g_ref, w_ref, mask_ref, lam_ref, out_ref):
+    out_ref[...] = g_ref[...] + lam_ref[0, 0] * (1.0 - mask_ref[...]) * w_ref[...]
+
+
+def srste_refine(g, w, mask, lam, block: int = 4096):
+    """Fused SR-STE refinement g + lam*(1-Pi).*w over flat [d] tensors."""
+    d = g.shape[0]
+    grid, blk = _grid_1d(d, block)
+    lam_a = jnp.full((1, 1), lam, g.dtype)
+    flat = pl.BlockSpec((blk,), lambda i: (i,))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _srste_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), g.dtype),
+        grid=grid,
+        in_specs=[flat, flat, flat, scal],
+        out_specs=flat,
+        interpret=True,
+    )(g, w, mask, lam_a)

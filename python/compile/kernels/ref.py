@@ -1,0 +1,173 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions define the *semantics* each kernel must match bit-for-bit
+(masks) or to float tolerance (arithmetic). pytest sweeps the kernels against
+these with hypothesis; the Rust integration tests compare the HLO artifacts
+against the same math re-implemented in ``rust/src/optim``.
+
+Conventions
+-----------
+* N:M sparsity groups are taken along the **last** axis of the weight tensor,
+  which must be divisible by M. "N:M" keeps the N largest-|w| entries of every
+  contiguous group of M (ties broken by lowest index, matching
+  ``jax.lax.top_k``).
+* Adam follows Kingma & Ba exactly as restated in the paper's Eqs (2)-(7),
+  with the paper's step convention: at step ``t`` (1-based) bias correction
+  divides by ``1 - beta^t``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# N:M masks
+# ---------------------------------------------------------------------------
+
+def nm_mask(w: jax.Array, n: int, m: int) -> jax.Array:
+    """Return the binary N:M mask Pi for ``w`` (last-axis groups of M).
+
+    Keeps the N largest-magnitude entries in each group of M consecutive
+    elements along the last axis. Ties: lowest index wins (top_k semantics).
+    """
+    if w.shape[-1] % m != 0:
+        raise ValueError(f"last dim {w.shape[-1]} not divisible by M={m}")
+    if not (1 <= n <= m):
+        raise ValueError(f"need 1 <= N <= M, got N={n} M={m}")
+    groups = w.reshape(*w.shape[:-1], w.shape[-1] // m, m)
+    mag = jnp.abs(groups)
+    # top_k is stable: on ties it prefers lower indices.
+    _, idx = jax.lax.top_k(mag, n)
+    mask_groups = jnp.zeros_like(groups, dtype=w.dtype)
+    mask_groups = jnp.put_along_axis(
+        mask_groups, idx, jnp.ones_like(idx, dtype=w.dtype), axis=-1,
+        inplace=False,
+    )
+    return mask_groups.reshape(w.shape)
+
+
+def apply_mask(w: jax.Array, n: int, m: int) -> jax.Array:
+    """Pi .* w."""
+    return nm_mask(w, n, m) * w
+
+
+def nm_mask_dynamic(w: jax.Array, n: jax.Array, m: int) -> jax.Array:
+    """N:M mask where N is a *traced* int scalar (same semantics as nm_mask).
+
+    Rank-based: within each M-group an entry's rank is the count of strictly
+    larger magnitudes plus the count of equal magnitudes at lower index
+    (stable, so ties go to the lower index exactly like top_k); keep
+    rank < n. This lets a single AOT artifact serve every N (the Rust
+    coordinator feeds n per layer per step: layer-wise DominoSearch ratios,
+    decaying-mask schedules, and n == m for dense eval all reuse one
+    executable).
+
+    The pairwise-comparison form (O(M²) vectorized compares on [.., M, M])
+    replaced a double-argsort implementation in the perf pass: bit-identical
+    output, ~15× faster on the CPU backend and fusion-friendly everywhere
+    (EXPERIMENTS.md §Perf).
+    """
+    if w.shape[-1] % m != 0:
+        raise ValueError(f"last dim {w.shape[-1]} not divisible by M={m}")
+    groups = w.reshape(*w.shape[:-1], w.shape[-1] // m, m)
+    mag = jnp.abs(groups)
+    a = mag[..., :, None]  # [.., m, 1] — the entry being ranked
+    b = mag[..., None, :]  # [.., 1, m] — its group
+    greater = (b > a).sum(axis=-1)
+    idx = jnp.arange(m)
+    eq_lower = ((b == a) & (idx[None, :] < idx[:, None])).sum(axis=-1)
+    ranks = greater + eq_lower
+    keep = ranks < jnp.asarray(n, ranks.dtype)
+    return keep.reshape(w.shape).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked matmul (the Ampere sparse-tensor-core analog)
+# ---------------------------------------------------------------------------
+
+def masked_matmul(x: jax.Array, w: jax.Array, n: int, m: int) -> jax.Array:
+    """x @ (Pi .* w): the sparse-inference forward hot-spot.
+
+    x: [B, K], w: [K, F] with F % m == 0, masked along the last axis of w.
+    The paper masks the weight tensor; the grouping-axis convention is pinned
+    here and mirrored in rust/src/sparsity.
+    """
+    return x @ apply_mask(w, n, m)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer updates
+# ---------------------------------------------------------------------------
+
+def srste_refine(g: jax.Array, w: jax.Array, mask: jax.Array, lam) -> jax.Array:
+    """SR-STE gradient refinement, Eq (9): g + lam * (1 - Pi) .* w."""
+    return g + lam * (1.0 - mask) * w
+
+
+def adam_update(w, m, v, g, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One dense Adam step, Eqs (3)-(7). ``t`` is the 1-based step index.
+
+    Returns (w', m', v').
+    """
+    m1 = beta1 * m + (1.0 - beta1) * g
+    v1 = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    t = jnp.asarray(t, dtype=w.dtype)
+    mhat = m1 / (1.0 - jnp.power(jnp.asarray(beta1, w.dtype), t))
+    vhat = v1 / (1.0 - jnp.power(jnp.asarray(beta2, w.dtype), t))
+    w1 = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return w1, m1, v1
+
+
+def step_phase2_update(w, m, v_star, g, t, lr, beta1=0.9, eps=1e-8):
+    """STEP mask-learning-phase update, Alg. 1 lines 18-20.
+
+    v_star is the frozen precondition (RAW v at the switch point, no bias
+    correction -- Alg. 1 line 11 stores v_t directly and line 20 uses
+    sqrt(v* + eps) with eps *inside* the sqrt, unlike the dense phase).
+    Returns (w', m'); v_star is untouched by construction.
+    """
+    m1 = beta1 * m + (1.0 - beta1) * g
+    t = jnp.asarray(t, dtype=w.dtype)
+    mhat = m1 / (1.0 - jnp.power(jnp.asarray(beta1, w.dtype), t))
+    w1 = w - lr * mhat / jnp.sqrt(v_star + eps)
+    return w1, m1
+
+
+def sgdm_update(w, buf, g, lr, momentum=0.9):
+    """Momentum-SGD step (PyTorch convention): buf' = mu*buf + g; w' = w - lr*buf'."""
+    buf1 = momentum * buf + g
+    w1 = w - lr * buf1
+    return w1, buf1
+
+
+# ---------------------------------------------------------------------------
+# Variance telemetry (what the rust AutoSwitch consumes)
+# ---------------------------------------------------------------------------
+
+def variance_stats(v_new: jax.Array, v_old: jax.Array):
+    """Return (l1(v), l2(v), l1(v_new - v_old), d) as f32 scalars."""
+    d = jnp.asarray(v_new.size, jnp.float32)
+    return (
+        jnp.sum(jnp.abs(v_new)).astype(jnp.float32),
+        jnp.sqrt(jnp.sum(jnp.square(v_new))).astype(jnp.float32),
+        jnp.sum(jnp.abs(v_new - v_old)).astype(jnp.float32),
+        d,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decaying mask schedule (Kao et al. 2022 ablation, Fig 6)
+# ---------------------------------------------------------------------------
+
+def decaying_n(step: int, m: int, decay_interval: int, start_step: int) -> int:
+    """N for the decaying-mask recipe at ``step``: dense before start_step,
+    then M-1, then N = max(1, floor(M / 2^k)) per decay interval k >= 1.
+    """
+    if step < start_step:
+        return m  # dense
+    k = (step - start_step) // decay_interval
+    if k == 0:
+        return m - 1
+    return max(1, m >> k)

@@ -1,0 +1,287 @@
+"""Layer-2 model zoo: pure-JAX (no flax) forward passes + initializers.
+
+Every model is a ``ModelSpec``: an ordered list of parameter specs (name,
+shape, sparse-eligibility) plus ``apply(params, batch) -> logits`` and
+``init(seed) -> params``. Parameters are plain ordered lists of jnp arrays so
+the AOT artifacts have a stable, manifest-describable input layout for the
+Rust runtime.
+
+Sparse eligibility mirrors the paper's choices: Linear / attention projection
+/ conv kernels are maskable; embeddings, layer norms, biases and heads stay
+dense (BERT: "all the Linear modules"; GPT-2: "all the Conv1D modules";
+ResNet/DenseNet: "all the Conv2D layers").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    sparse: bool  # eligible for N:M masking (last axis grouped by M)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    params: Tuple[ParamSpec, ...]
+    apply: Callable  # (params: List[Array], x) -> logits
+    kind: str        # "classify" | "regress" | "lm"
+    n_classes: int   # classes (classify), 1 (regress), vocab (lm)
+    in_dim: int = 0  # flat feature-vector width (0 for token models)
+
+    def init(self, seed: int) -> List[jax.Array]:
+        key = jax.random.PRNGKey(seed)
+        out = []
+        for spec in self.params:
+            key, sub = jax.random.split(key)
+            out.append(_init_param(sub, spec))
+        return out
+
+    @property
+    def sparse_indices(self) -> List[int]:
+        return [i for i, p in enumerate(self.params) if p.sparse]
+
+    @property
+    def dim(self) -> int:
+        return sum(math.prod(p.shape) for p in self.params)
+
+
+def _init_param(key, spec: ParamSpec) -> jax.Array:
+    shape = spec.shape
+    lname = spec.name
+    if lname.endswith("_b") or "bias" in lname or "ln_" in lname and lname.endswith("_beta"):
+        return jnp.zeros(shape, jnp.float32)
+    if "ln_" in lname and lname.endswith("_gamma"):
+        return jnp.ones(shape, jnp.float32)
+    if "emb" in lname:
+        return 0.02 * jax.random.normal(key, shape, jnp.float32)
+    # fan-in scaled init for weight matrices / conv kernels
+    fan_in = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (CIFAR-analog fast path)
+# ---------------------------------------------------------------------------
+
+def mlp(name: str, in_dim: int, hidden: Sequence[int], n_classes: int) -> ModelSpec:
+    """ReLU MLP classifier. Hidden weight matrices are sparse-eligible."""
+    sizes = [in_dim, *hidden, n_classes]
+    specs: List[ParamSpec] = []
+    for i in range(len(sizes) - 1):
+        last = i == len(sizes) - 2
+        specs.append(ParamSpec(f"fc{i}_w", (sizes[i], sizes[i + 1]), sparse=not last))
+        specs.append(ParamSpec(f"fc{i}_b", (sizes[i + 1],), sparse=False))
+
+    n_layers = len(sizes) - 1
+
+    def apply(params: List[jax.Array], x: jax.Array) -> jax.Array:
+        h = x.reshape(x.shape[0], -1)
+        for i in range(n_layers):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = h @ w + b
+            if i != n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return ModelSpec(name, tuple(specs), apply, "classify", n_classes, in_dim)
+
+
+# ---------------------------------------------------------------------------
+# CNN (ResNet18 / DenseNet121 analog: conv stacks + residual connections)
+# ---------------------------------------------------------------------------
+
+def cnn(name: str, channels: Sequence[int], n_classes: int,
+        in_hw: int = 16, in_c: int = 3) -> ModelSpec:
+    """Small residual CNN on NHWC images. Conv kernels are sparse-eligible
+    (masked along the output-channel axis, matching the pinned last-axis
+    convention)."""
+    specs: List[ParamSpec] = [
+        ParamSpec("stem_w", (3, 3, in_c, channels[0]), sparse=False),  # stem kept dense (first conv, as in SR-STE practice)
+        ParamSpec("stem_b", (channels[0],), sparse=False),
+    ]
+    for i, (cin, cout) in enumerate(zip(channels[:-1], channels[1:])):
+        specs += [
+            ParamSpec(f"blk{i}_conv1_w", (3, 3, cin, cout), sparse=True),
+            ParamSpec(f"blk{i}_conv1_b", (cout,), sparse=False),
+            ParamSpec(f"blk{i}_conv2_w", (3, 3, cout, cout), sparse=True),
+            ParamSpec(f"blk{i}_conv2_b", (cout,), sparse=False),
+            ParamSpec(f"blk{i}_skip_w", (1, 1, cin, cout), sparse=False),
+        ]
+    specs += [
+        ParamSpec("head_w", (channels[-1], n_classes), sparse=False),
+        ParamSpec("head_b", (n_classes,), sparse=False),
+    ]
+
+    n_blocks = len(channels) - 1
+
+    def conv(x, w, b=None, stride=1):
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y if b is None else y + b
+
+    def apply(params: List[jax.Array], x: jax.Array) -> jax.Array:
+        x = x.reshape(x.shape[0], in_hw, in_hw, in_c)
+        p = iter(params)
+        h = jax.nn.relu(conv(x, next(p), next(p)))
+        for i in range(n_blocks):
+            w1, b1, w2, b2, ws = next(p), next(p), next(p), next(p), next(p)
+            stride = 2 if i % 2 == 1 else 1
+            y = jax.nn.relu(conv(h, w1, b1, stride))
+            y = conv(y, w2, b2)
+            h = jax.nn.relu(y + conv(h, ws, stride=stride))
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return h @ next(p) + next(p)
+
+    return ModelSpec(name, tuple(specs), apply, "classify", n_classes,
+                     in_hw * in_hw * in_c)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks (shared by encoder / LM)
+# ---------------------------------------------------------------------------
+
+def _tf_layer_specs(prefix: str, d: int, d_ff: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{prefix}_wq", (d, d), sparse=True),
+        ParamSpec(f"{prefix}_wk", (d, d), sparse=True),
+        ParamSpec(f"{prefix}_wv", (d, d), sparse=True),
+        ParamSpec(f"{prefix}_wo", (d, d), sparse=True),
+        ParamSpec(f"{prefix}_ln1_gamma", (d,), sparse=False),
+        ParamSpec(f"{prefix}_ln1_beta", (d,), sparse=False),
+        ParamSpec(f"{prefix}_fc1_w", (d, d_ff), sparse=True),
+        ParamSpec(f"{prefix}_fc1_b", (d_ff,), sparse=False),
+        ParamSpec(f"{prefix}_fc2_w", (d_ff, d), sparse=True),
+        ParamSpec(f"{prefix}_fc2_b", (d,), sparse=False),
+        ParamSpec(f"{prefix}_ln2_gamma", (d,), sparse=False),
+        ParamSpec(f"{prefix}_ln2_beta", (d,), sparse=False),
+    ]
+
+
+def _layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def _tf_layer(h, p, n_heads: int, causal: bool):
+    """Pre-LN transformer layer. ``p`` is an iterator over the 12 params."""
+    wq, wk, wv, wo = next(p), next(p), next(p), next(p)
+    g1, b1 = next(p), next(p)
+    fc1w, fc1b, fc2w, fc2b = next(p), next(p), next(p), next(p)
+    g2, b2 = next(p), next(p)
+
+    bsz, seq, d = h.shape
+    dh = d // n_heads
+    x = _layernorm(h, g1, b1)
+    q = (x @ wq).reshape(bsz, seq, n_heads, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(bsz, seq, n_heads, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(bsz, seq, n_heads, dh).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+    h = h + ctx @ wo
+
+    x = _layernorm(h, g2, b2)
+    h = h + jax.nn.gelu(x @ fc1w + fc1b) @ fc2w + fc2b
+    return h
+
+
+def transformer_lm(name: str, vocab: int, d: int, n_layers: int,
+                   n_heads: int, seq_len: int, d_ff: int | None = None) -> ModelSpec:
+    """Decoder-only causal LM (GPT-2 analog). Sparse: all projection /
+    feed-forward matrices (the Conv1D analogs); embeddings + head dense."""
+    d_ff = d_ff or 4 * d
+    specs: List[ParamSpec] = [
+        ParamSpec("tok_emb", (vocab, d), sparse=False),
+        ParamSpec("pos_emb", (seq_len, d), sparse=False),
+    ]
+    for i in range(n_layers):
+        specs += _tf_layer_specs(f"l{i}", d, d_ff)
+    specs += [
+        ParamSpec("lnf_gamma", (d,), sparse=False),
+        ParamSpec("lnf_beta", (d,), sparse=False),
+        ParamSpec("head_w", (d, vocab), sparse=False),
+    ]
+
+    def apply(params: List[jax.Array], x: jax.Array) -> jax.Array:
+        p = iter(params)
+        tok, pos = next(p), next(p)
+        h = tok[x] + pos[None, : x.shape[1]]
+        for _ in range(n_layers):
+            h = _tf_layer(h, p, n_heads, causal=True)
+        h = _layernorm(h, next(p), next(p))
+        return h @ next(p)  # [B, S, vocab]
+
+    return ModelSpec(name, tuple(specs), apply, "lm", vocab)
+
+
+def transformer_encoder(name: str, vocab: int, d: int, n_layers: int,
+                        n_heads: int, seq_len: int, n_classes: int,
+                        kind: str = "classify",
+                        d_ff: int | None = None) -> ModelSpec:
+    """Bidirectional encoder + CLS head (BERT analog). kind: classify|regress."""
+    d_ff = d_ff or 4 * d
+    specs: List[ParamSpec] = [
+        ParamSpec("tok_emb", (vocab, d), sparse=False),
+        ParamSpec("pos_emb", (seq_len, d), sparse=False),
+    ]
+    for i in range(n_layers):
+        specs += _tf_layer_specs(f"l{i}", d, d_ff)
+    specs += [
+        ParamSpec("lnf_gamma", (d,), sparse=False),
+        ParamSpec("lnf_beta", (d,), sparse=False),
+        ParamSpec("head_w", (d, n_classes), sparse=False),
+        ParamSpec("head_b", (n_classes,), sparse=False),
+    ]
+
+    def apply(params: List[jax.Array], x: jax.Array) -> jax.Array:
+        p = iter(params)
+        tok, pos = next(p), next(p)
+        h = tok[x] + pos[None, : x.shape[1]]
+        for _ in range(n_layers):
+            h = _tf_layer(h, p, n_heads, causal=False)
+        h = _layernorm(h, next(p), next(p))
+        cls = h[:, 0]  # first token pools the sequence
+        return cls @ next(p) + next(p)
+
+    return ModelSpec(name, tuple(specs), apply, kind, n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Registry of the configs the experiments use (see DESIGN.md SS3)
+# ---------------------------------------------------------------------------
+
+def registry() -> dict:
+    return {
+        # CIFAR analogs (Figs 1-5, 7, 8; Tables 1, 4)
+        "mlp_cf10": mlp("mlp_cf10", 3 * 16 * 16, [512, 256], 10),
+        "cnn_cf100": cnn("cnn_cf100", [32, 64, 64], 100),
+        # BERT-Base / GLUE analogs (Table 2)
+        "enc_glue2": transformer_encoder("enc_glue2", 512, 128, 2, 4, 32, 2),
+        "enc_glue3": transformer_encoder("enc_glue3", 512, 128, 2, 4, 32, 3),
+        "enc_stsb": transformer_encoder("enc_stsb", 512, 128, 2, 4, 32, 1,
+                                        kind="regress"),
+        # GPT-2 / WikiText analogs (Table 3) + WMT analog (Fig 6)
+        "lm_wiki": transformer_lm("lm_wiki", 256, 128, 4, 4, 64),
+        "lm_wmt": transformer_lm("lm_wmt", 128, 128, 2, 4, 48),
+        # pallas cross-check config (tiny, static 2:4 kernels)
+        "mlp_pallas": mlp("mlp_pallas", 64, [64], 10),
+        # e2e example config: multi-layer LM for the end-to-end driver
+        "lm_e2e": transformer_lm("lm_e2e", 256, 256, 6, 8, 128),
+    }

@@ -1,0 +1,531 @@
+"""Layer-2 train/eval step builders: one jitted function per (model, recipe).
+
+Every builder returns an ``Artifact``: the step function, a description of
+its flat input/output layout (what ``artifacts/manifest.json`` records for
+the Rust runtime), and example arguments for lowering. The Rust coordinator
+owns all state; each call is purely functional:
+
+    inputs : params..., opt-state..., batch, scalars (lr, t, lam), n_vec
+    outputs: params'..., opt-state'..., loss, telemetry scalars
+
+Recipes (DESIGN.md SS2):
+  dense_adam   Alg. 1 lines 2-9  (also STEP phase 1)
+  dense_sgdm   momentum-SGD baseline (Fig 1)
+  srste_adam   Eq (9) with Adam; lam == 0 gives plain STE (Fig 8 variant:
+               run this after the switch point to "keep updating v")
+  srste_sgdm   Eq (9) with momentum SGD (Fig 1)
+  step_phase2  Alg. 1 lines 15-22: frozen v*, masked fwd, momentum-only
+  asp_adam     ASP: masked fwd/bwd with gradients and weights projected onto
+               the current support (prune-once-retrain semantics)
+  eval         masked (or dense, n == m) forward + loss + raw metric sums
+
+N is a *runtime* input (int32 vector, one entry per sparse tensor; see
+ref.nm_mask_dynamic) so a single artifact serves uniform ratios, layer-wise
+DominoSearch ratios, decaying-mask schedules and dense eval (n == m).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .models import ModelSpec
+
+N_STATS = 4    # l1(v), l2(v), l1(dv), sum log|dv|
+N_METRICS = 8  # recipe-independent raw metric sums (see eval builder)
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: Callable
+    example_args: tuple
+    input_names: List[str]
+    output_names: List[str]
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _masks_of(model: ModelSpec, params: List[jax.Array], n_vec: jax.Array,
+              m: int) -> List[jax.Array | None]:
+    """Per-tensor N:M masks (None for dense tensors).
+
+    Called OUTSIDE value_and_grad: masks are stop-gradient constants w.r.t.
+    the step (Pi_t is a function of w_t but STE treats it as fixed), and
+    keeping the argsort out of the differentiated region both avoids the
+    sort-VJP and computes each mask exactly once per step.
+    """
+    masks: List[jax.Array | None] = []
+    si = 0
+    for spec, p in zip(model.params, params):
+        if not spec.sparse:
+            masks.append(None)
+            continue
+        flat2d = p.reshape(-1, p.shape[-1])
+        mask = ref.nm_mask_dynamic(flat2d, n_vec[si], m).reshape(p.shape)
+        masks.append(jax.lax.stop_gradient(mask))
+        si += 1
+    return masks
+
+
+def _apply_masks(params: List[jax.Array], masks: List[jax.Array | None],
+                 ste: bool) -> List[jax.Array]:
+    """``ste=True``: straight-through (d(masked)/d(param) == I, Eq 8).
+    ``ste=False``: plain product (pruned-coordinate gradients zeroed - ASP)."""
+    out = []
+    for p, mk in zip(params, masks):
+        if mk is None:
+            out.append(p)
+        elif ste:
+            out.append(p + jax.lax.stop_gradient(mk * p - p))
+        else:
+            out.append(mk * p)
+    return out
+
+
+def _loss_fn(model: ModelSpec):
+    if model.kind == "classify":
+        def loss(params, x, y):
+            logits = model.apply(params, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    elif model.kind == "regress":
+        def loss(params, x, y):
+            pred = model.apply(params, x)[:, 0]
+            return jnp.mean(jnp.square(pred - y))
+    elif model.kind == "lm":
+        def loss(params, x, y):
+            logits = model.apply(params, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+            return jnp.mean(nll)
+    else:
+        raise ValueError(model.kind)
+    return loss
+
+
+def _var_stats(v_new: List[jax.Array], v_old: List[jax.Array]):
+    """Telemetry scalars for AutoSwitch: l1(v), l2(v), l1(dv), sum log|dv|."""
+    l1 = sum(jnp.sum(jnp.abs(v)) for v in v_new)
+    l2 = jnp.sqrt(sum(jnp.sum(jnp.square(v)) for v in v_new))
+    dv_l1 = sum(jnp.sum(jnp.abs(a - b)) for a, b in zip(v_new, v_old))
+    log_dv = sum(jnp.sum(jnp.log(jnp.abs(a - b) + 1e-38))
+                 for a, b in zip(v_new, v_old))
+    return jnp.stack([l1, l2, dv_l1, log_dv]).astype(jnp.float32)
+
+
+def _batch_example(model: ModelSpec, batch: int, seq: int | None):
+    if model.kind == "lm":
+        x = jnp.zeros((batch, seq), jnp.int32)
+        y = jnp.zeros((batch, seq), jnp.int32)
+    elif model.kind == "regress":
+        x = _x_example(model, batch, seq)
+        y = jnp.zeros((batch,), jnp.float32)
+    else:
+        x = _x_example(model, batch, seq)
+        y = jnp.zeros((batch,), jnp.int32)
+    return x, y
+
+
+def _x_example(model: ModelSpec, batch: int, seq: int | None):
+    if seq is not None:  # token models
+        return jnp.zeros((batch, seq), jnp.int32)
+    return jnp.zeros((batch, model.in_dim), jnp.float32)
+
+
+def _names(model: ModelSpec, prefix: str) -> List[str]:
+    return [f"{prefix}.{p.name}" for p in model.params]
+
+
+def _scalar(x, dtype=jnp.float32):
+    return jnp.asarray([x], dtype)
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def build_dense_adam(model: ModelSpec, batch: int, seq: int | None,
+                     beta1=0.9, beta2=0.999, eps=1e-8) -> Artifact:
+    """Dense Adam step (STEP phase 1). Emits variance telemetry."""
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+
+    def fn(*args):
+        params = list(args[:P])
+        m = list(args[P:2 * P])
+        v = list(args[2 * P:3 * P])
+        x, y, lr, t = args[3 * P], args[3 * P + 1], args[3 * P + 2][0], args[3 * P + 3][0]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g in zip(params, m, v, grads):
+            p1, m1, v1 = ref.adam_update(p, mi, vi, g, t, lr, beta1, beta2, eps)
+            new_p.append(p1); new_m.append(m1); new_v.append(v1)
+        stats = _var_stats(new_v, v)
+        return (*new_p, *new_m, *new_v, loss[None], stats)
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*[jnp.zeros(p.shape, jnp.float32) for p in model.params],
+          *zeros, *zeros, x, y, _scalar(1e-3), _scalar(1.0))
+    return Artifact(
+        f"{model.name}__dense_adam", fn, ex,
+        _names(model, "p") + _names(model, "m") + _names(model, "v")
+        + ["x", "y", "lr", "t"],
+        _names(model, "p'") + _names(model, "m'") + _names(model, "v'")
+        + ["loss", "stats"],
+        {"recipe": "dense_adam", "model": model.name, "batch": batch,
+         "beta1": beta1, "beta2": beta2, "eps": eps},
+    )
+
+
+def build_dense_sgdm(model: ModelSpec, batch: int, seq: int | None,
+                     momentum=0.9) -> Artifact:
+    """Dense momentum-SGD step (Fig 1 left column)."""
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+
+    def fn(*args):
+        params = list(args[:P])
+        buf = list(args[P:2 * P])
+        x, y, lr = args[2 * P], args[2 * P + 1], args[2 * P + 2][0]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_p, new_b = [], []
+        for p, b, g in zip(params, buf, grads):
+            p1, b1 = ref.sgdm_update(p, b, g, lr, momentum)
+            new_p.append(p1); new_b.append(b1)
+        return (*new_p, *new_b, loss[None])
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, x, y, _scalar(1e-2))
+    return Artifact(
+        f"{model.name}__dense_sgdm", fn, ex,
+        _names(model, "p") + _names(model, "b") + ["x", "y", "lr"],
+        _names(model, "p'") + _names(model, "b'") + ["loss"],
+        {"recipe": "dense_sgdm", "model": model.name, "batch": batch,
+         "momentum": momentum},
+    )
+
+
+def build_srste_adam(model: ModelSpec, batch: int, seq: int | None, m_sparse: int,
+                     beta1=0.9, beta2=0.999, eps=1e-8) -> Artifact:
+    """SR-STE with Adam (Eq 9). lam == 0 -> plain STE. Emits telemetry."""
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+    S = len(model.sparse_indices)
+
+    def fn(*args):
+        params = list(args[:P])
+        m = list(args[P:2 * P])
+        v = list(args[2 * P:3 * P])
+        x, y = args[3 * P], args[3 * P + 1]
+        lr, t, lam = args[3 * P + 2][0], args[3 * P + 3][0], args[3 * P + 4][0]
+        n_vec = args[3 * P + 5]
+
+        masks = _masks_of(model, params, n_vec, m_sparse)
+
+        def masked_loss(ps):
+            return loss_fn(_apply_masks(ps, masks, ste=True), x, y)
+
+        loss, grads = jax.value_and_grad(masked_loss)(params)
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g, mk in zip(params, m, v, grads, masks):
+            if mk is not None:
+                g = ref.srste_refine(g, p, mk, lam)  # Eq (9)
+            p1, m1, v1 = ref.adam_update(p, mi, vi, g, t, lr, beta1, beta2, eps)
+            new_p.append(p1); new_m.append(m1); new_v.append(v1)
+        stats = _var_stats(new_v, v)
+        return (*new_p, *new_m, *new_v, loss[None], stats)
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, *zeros, x, y, _scalar(1e-3), _scalar(1.0),
+          _scalar(2e-4), jnp.full((S,), 2, jnp.int32))
+    return Artifact(
+        f"{model.name}__srste_adam_m{m_sparse}", fn, ex,
+        _names(model, "p") + _names(model, "m") + _names(model, "v")
+        + ["x", "y", "lr", "t", "lam", "n_vec"],
+        _names(model, "p'") + _names(model, "m'") + _names(model, "v'")
+        + ["loss", "stats"],
+        {"recipe": "srste_adam", "model": model.name, "batch": batch,
+         "m": m_sparse, "beta1": beta1, "beta2": beta2, "eps": eps},
+    )
+
+
+def build_srste_sgdm(model: ModelSpec, batch: int, seq: int | None,
+                     m_sparse: int, momentum=0.9) -> Artifact:
+    """SR-STE with momentum SGD (the regime where SR-STE works; Fig 1)."""
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+    S = len(model.sparse_indices)
+
+    def fn(*args):
+        params = list(args[:P])
+        buf = list(args[P:2 * P])
+        x, y = args[2 * P], args[2 * P + 1]
+        lr, lam = args[2 * P + 2][0], args[2 * P + 3][0]
+        n_vec = args[2 * P + 4]
+
+        masks = _masks_of(model, params, n_vec, m_sparse)
+
+        def masked_loss(ps):
+            return loss_fn(_apply_masks(ps, masks, ste=True), x, y)
+
+        loss, grads = jax.value_and_grad(masked_loss)(params)
+        new_p, new_b = [], []
+        for p, b, g, mk in zip(params, buf, grads, masks):
+            if mk is not None:
+                g = ref.srste_refine(g, p, mk, lam)
+            p1, b1 = ref.sgdm_update(p, b, g, lr, momentum)
+            new_p.append(p1); new_b.append(b1)
+        return (*new_p, *new_b, loss[None])
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, x, y, _scalar(1e-2), _scalar(2e-4),
+          jnp.full((S,), 2, jnp.int32))
+    return Artifact(
+        f"{model.name}__srste_sgdm_m{m_sparse}", fn, ex,
+        _names(model, "p") + _names(model, "b") + ["x", "y", "lr", "lam", "n_vec"],
+        _names(model, "p'") + _names(model, "b'") + ["loss"],
+        {"recipe": "srste_sgdm", "model": model.name, "batch": batch,
+         "m": m_sparse, "momentum": momentum},
+    )
+
+
+def build_step_phase2(model: ModelSpec, batch: int, seq: int | None,
+                      m_sparse: int, beta1=0.9, eps=1e-8) -> Artifact:
+    """STEP mask-learning phase (Alg. 1 lines 15-22): v* frozen precondition.
+
+    v* enters as input but is NOT an output - freezing is structural. The
+    optional SR-STE refinement (lam) composes with the frozen precondition.
+    """
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+    S = len(model.sparse_indices)
+
+    def fn(*args):
+        params = list(args[:P])
+        m = list(args[P:2 * P])
+        v_star = list(args[2 * P:3 * P])
+        x, y = args[3 * P], args[3 * P + 1]
+        lr, t, lam = args[3 * P + 2][0], args[3 * P + 3][0], args[3 * P + 4][0]
+        n_vec = args[3 * P + 5]
+
+        masks = _masks_of(model, params, n_vec, m_sparse)
+
+        def masked_loss(ps):
+            return loss_fn(_apply_masks(ps, masks, ste=True), x, y)
+
+        loss, grads = jax.value_and_grad(masked_loss)(params)
+        new_p, new_m = [], []
+        for p, mi, vs, g, mk in zip(params, m, v_star, grads, masks):
+            if mk is not None:
+                g = ref.srste_refine(g, p, mk, lam)
+            p1, m1 = ref.step_phase2_update(p, mi, vs, g, t, lr, beta1, eps)
+            new_p.append(p1); new_m.append(m1)
+        return (*new_p, *new_m, loss[None])
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ones = [jnp.ones(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, *ones, x, y, _scalar(1e-3), _scalar(1.0),
+          _scalar(0.0), jnp.full((S,), 2, jnp.int32))
+    return Artifact(
+        f"{model.name}__step_phase2_m{m_sparse}", fn, ex,
+        _names(model, "p") + _names(model, "m") + _names(model, "vstar")
+        + ["x", "y", "lr", "t", "lam", "n_vec"],
+        _names(model, "p'") + _names(model, "m'") + ["loss"],
+        {"recipe": "step_phase2", "model": model.name, "batch": batch,
+         "m": m_sparse, "beta1": beta1, "eps": eps},
+    )
+
+
+def build_asp_adam(model: ModelSpec, batch: int, seq: int | None,
+                   m_sparse: int, beta1=0.9, beta2=0.999, eps=1e-8) -> Artifact:
+    """ASP-style step: plain product masking (no STE), gradients and the
+    updated weights both projected onto the support, so pruned coordinates
+    stay at zero and the mask is effectively fixed after the first step."""
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+    S = len(model.sparse_indices)
+
+    def fn(*args):
+        params = list(args[:P])
+        m = list(args[P:2 * P])
+        v = list(args[2 * P:3 * P])
+        x, y = args[3 * P], args[3 * P + 1]
+        lr, t = args[3 * P + 2][0], args[3 * P + 3][0]
+        n_vec = args[3 * P + 4]
+
+        masks = _masks_of(model, params, n_vec, m_sparse)
+
+        def masked_loss(ps):
+            return loss_fn(_apply_masks(ps, masks, ste=False), x, y)
+
+        loss, grads = jax.value_and_grad(masked_loss)(params)
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g, mk in zip(params, m, v, grads, masks):
+            p1, m1, v1 = ref.adam_update(p, mi, vi, g, t, lr, beta1, beta2, eps)
+            if mk is not None:
+                p1 = mk * p1  # project back onto the support
+            new_p.append(p1); new_m.append(m1); new_v.append(v1)
+        stats = _var_stats(new_v, v)
+        return (*new_p, *new_m, *new_v, loss[None], stats)
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, *zeros, x, y, _scalar(1e-3), _scalar(1.0),
+          jnp.full((S,), 2, jnp.int32))
+    return Artifact(
+        f"{model.name}__asp_adam_m{m_sparse}", fn, ex,
+        _names(model, "p") + _names(model, "m") + _names(model, "v")
+        + ["x", "y", "lr", "t", "n_vec"],
+        _names(model, "p'") + _names(model, "m'") + _names(model, "v'")
+        + ["loss", "stats"],
+        {"recipe": "asp_adam", "model": model.name, "batch": batch,
+         "m": m_sparse, "beta1": beta1, "beta2": beta2, "eps": eps},
+    )
+
+
+def build_eval(model: ModelSpec, batch: int, seq: int | None,
+               m_sparse: int) -> Artifact:
+    """Masked evaluation step (n == m gives dense eval).
+
+    Outputs loss plus a fixed-width vector of raw metric sums the Rust side
+    reduces across batches:
+      classify: [correct, count, tp, fp, tn, fn, 0, 0]
+                (confusion counts w.r.t. class 1, for F1/MCC on binary tasks)
+      regress : [sum_p, sum_y, sum_pp, sum_yy, sum_py, count, sse, 0]
+      lm      : [total_nll, tokens, 0, ...]
+    """
+    P = len(model.params)
+    S = len(model.sparse_indices)
+
+    def fn(*args):
+        params = list(args[:P])
+        x, y, n_vec = args[P], args[P + 1], args[P + 2]
+        masks = _masks_of(model, params, n_vec, m_sparse)
+        out = model.apply(_apply_masks(params, masks, ste=False), x)
+        z = jnp.zeros((), jnp.float32)
+        if model.kind == "classify":
+            logp = jax.nn.log_softmax(out, axis=-1)
+            loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+            pred = jnp.argmax(out, axis=-1)
+            correct = jnp.sum(pred == y).astype(jnp.float32)
+            # confusion counts w.r.t. class 1 (meaningful for binary tasks;
+            # harmless extra sums otherwise) - feeds F1 / Matthews corr.
+            pp = (pred == 1)
+            yp = (y == 1)
+            tp = jnp.sum(pp & yp).astype(jnp.float32)
+            fp = jnp.sum(pp & ~yp).astype(jnp.float32)
+            fn_ = jnp.sum(~pp & yp).astype(jnp.float32)
+            tn = jnp.sum(~pp & ~yp).astype(jnp.float32)
+            metrics = jnp.stack([correct, jnp.asarray(y.shape[0], jnp.float32),
+                                 tp, fp, tn, fn_, z, z])
+        elif model.kind == "regress":
+            pred = out[:, 0]
+            loss = jnp.mean(jnp.square(pred - y))
+            metrics = jnp.stack([
+                jnp.sum(pred), jnp.sum(y), jnp.sum(pred * pred),
+                jnp.sum(y * y), jnp.sum(pred * y),
+                jnp.asarray(y.shape[0], jnp.float32),
+                jnp.sum(jnp.square(pred - y)), z])
+        else:  # lm
+            logp = jax.nn.log_softmax(out, axis=-1)
+            nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+            loss = jnp.mean(nll)
+            metrics = jnp.stack([jnp.sum(nll),
+                                 jnp.asarray(nll.size, jnp.float32),
+                                 z, z, z, z, z, z])
+        return (loss[None], metrics)
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, x, y, jnp.full((S,), m_sparse, jnp.int32))
+    return Artifact(
+        f"{model.name}__eval_m{m_sparse}", fn, ex,
+        _names(model, "p") + ["x", "y", "n_vec"],
+        ["loss", "metrics"],
+        {"recipe": "eval", "model": model.name, "batch": batch, "m": m_sparse,
+         "kind": model.kind},
+    )
+
+
+def build_srste_adam_pallas(model: ModelSpec, batch: int, seq: int | None,
+                            n_sparse: int, m_sparse: int,
+                            beta1=0.9, beta2=0.999, eps=1e-8) -> Artifact:
+    """Kernel-bearing variant of srste_adam: the N:M mask and the fused
+    optimizer updates run through the Pallas kernels (interpret mode) so the
+    L1 kernels lower into the artifact. Static (n, m) - the kernels use
+    top-k-style static selection. Verified equal to the jnp variant by
+    python/tests and by the Rust integration test."""
+    from .kernels.nm_mask import nm_mask as pallas_nm_mask
+    from .kernels.optim_update import adam_update as pallas_adam
+    from .kernels.optim_update import srste_refine as pallas_srste
+
+    loss_fn = _loss_fn(model)
+    P = len(model.params)
+
+    def fn(*args):
+        params = list(args[:P])
+        m = list(args[P:2 * P])
+        v = list(args[2 * P:3 * P])
+        x, y = args[3 * P], args[3 * P + 1]
+        lr, t, lam = args[3 * P + 2][0], args[3 * P + 3][0], args[3 * P + 4][0]
+
+        def masks_of(ps):
+            out = []
+            for spec, p in zip(model.params, ps):
+                if spec.sparse:
+                    flat2d = p.reshape(-1, p.shape[-1])
+                    mk = pallas_nm_mask(flat2d, n_sparse, m_sparse).reshape(p.shape)
+                    out.append(jax.lax.stop_gradient(mk))
+                else:
+                    out.append(None)
+            return out
+
+        masks = masks_of(params)
+
+        def masked_loss(ps):
+            mp = [p if mk is None else p + jax.lax.stop_gradient(mk * p - p)
+                  for p, mk in zip(ps, masks)]
+            return loss_fn(mp, x, y)
+
+        loss, grads = jax.value_and_grad(masked_loss)(params)
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g, mk in zip(params, m, v, grads, masks):
+            shape = p.shape
+            if mk is not None:
+                g = pallas_srste(g.reshape(-1), p.reshape(-1),
+                                 mk.reshape(-1), lam).reshape(shape)
+            p1, m1, v1 = pallas_adam(p.reshape(-1), mi.reshape(-1),
+                                     vi.reshape(-1), g.reshape(-1), t, lr,
+                                     beta1, beta2, eps)
+            new_p.append(p1.reshape(shape))
+            new_m.append(m1.reshape(shape))
+            new_v.append(v1.reshape(shape))
+        stats = _var_stats(new_v, v)
+        return (*new_p, *new_m, *new_v, loss[None], stats)
+
+    x, y = _batch_example(model, batch, seq)
+    zeros = [jnp.zeros(p.shape, jnp.float32) for p in model.params]
+    ex = (*zeros, *zeros, *zeros, x, y, _scalar(1e-3), _scalar(1.0), _scalar(2e-4))
+    return Artifact(
+        f"{model.name}__srste_adam_pallas_n{n_sparse}m{m_sparse}", fn, ex,
+        _names(model, "p") + _names(model, "m") + _names(model, "v")
+        + ["x", "y", "lr", "t", "lam"],
+        _names(model, "p'") + _names(model, "m'") + _names(model, "v'")
+        + ["loss", "stats"],
+        {"recipe": "srste_adam_pallas", "model": model.name, "batch": batch,
+         "n": n_sparse, "m": m_sparse, "beta1": beta1, "beta2": beta2,
+         "eps": eps},
+    )

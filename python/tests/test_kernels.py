@@ -1,0 +1,217 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes / N:M ratios / magnitudes; masks must match
+bit-for-bit, arithmetic to float tolerance. This is the core correctness
+signal for the kernel layer (DESIGN.md SS5).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.nm_mask import nm_mask as k_nm_mask, apply_mask as k_apply_mask
+from compile.kernels.masked_matmul import masked_matmul as k_masked_matmul
+from compile.kernels.optim_update import (
+    adam_update as k_adam, step_phase2_update as k_step2,
+    srste_refine as k_srste,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def nm_ratios():
+    return st.sampled_from([(1, 2), (2, 2), (1, 4), (2, 4), (3, 4),
+                            (1, 8), (4, 8), (7, 8), (1, 16), (8, 16),
+                            (2, 32), (16, 32)])
+
+
+@st.composite
+def weight_matrix(draw, m_groups=True):
+    n, m = draw(nm_ratios())
+    rows = draw(st.integers(1, 48))
+    gcols = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(rows, gcols * m)).astype(np.float32)
+    return n, m, jnp.asarray(w)
+
+
+class TestNmMask:
+    @given(weight_matrix())
+    @settings(**SETTINGS)
+    def test_matches_ref(self, case):
+        n, m, w = case
+        got = k_nm_mask(w, n, m)
+        want = ref.nm_mask(w, n, m)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(weight_matrix())
+    @settings(**SETTINGS)
+    def test_exactly_n_per_group(self, case):
+        n, m, w = case
+        mask = np.asarray(k_nm_mask(w, n, m))
+        groups = mask.reshape(-1, m)
+        np.testing.assert_array_equal(groups.sum(axis=1),
+                                      np.full(groups.shape[0], n))
+
+    @given(weight_matrix())
+    @settings(**SETTINGS)
+    def test_keeps_largest(self, case):
+        """Every kept entry's |w| >= every dropped entry's |w| in its group."""
+        n, m, w = case
+        mask = np.asarray(k_nm_mask(w, n, m)).reshape(-1, m)
+        mag = np.abs(np.asarray(w)).reshape(-1, m)
+        kept_min = np.where(mask > 0, mag, np.inf).min(axis=1)
+        drop_max = np.where(mask == 0, mag, -np.inf).max(axis=1)
+        assert (kept_min >= drop_max - 1e-12).all()
+
+    def test_tie_break_lowest_index(self):
+        w = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+        mask = np.asarray(k_nm_mask(w, 2, 4))
+        np.testing.assert_array_equal(mask, [[1, 1, 0, 0]])
+
+    def test_negative_magnitudes(self):
+        w = jnp.asarray([[-5.0, 1.0, -2.0, 0.5]])
+        mask = np.asarray(k_nm_mask(w, 2, 4))
+        np.testing.assert_array_equal(mask, [[1, 0, 1, 0]])
+
+    def test_multi_tile(self):
+        """Shape large enough to take the multi-tile grid path."""
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.normal(size=(512, 1024)).astype(np.float32))
+        got = k_nm_mask(w, 2, 4, block_rows=256, block_cols=512)
+        want = ref.nm_mask(w, 2, 4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_rejects_bad_m(self):
+        w = jnp.zeros((4, 6))
+        with pytest.raises(ValueError):
+            k_nm_mask(w, 1, 4)
+        with pytest.raises(ValueError):
+            k_nm_mask(w, 0, 2)
+        with pytest.raises(ValueError):
+            k_nm_mask(w, 3, 2)
+
+
+class TestDynamicMask:
+    @given(weight_matrix())
+    @settings(**SETTINGS)
+    def test_dynamic_equals_static(self, case):
+        n, m, w = case
+        got = ref.nm_mask_dynamic(w, jnp.asarray(n, jnp.int32), m)
+        want = ref.nm_mask(w, n, m)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_n_equals_m_is_dense(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        mask = ref.nm_mask_dynamic(w, jnp.asarray(4, jnp.int32), 4)
+        np.testing.assert_array_equal(np.asarray(mask), np.ones((8, 16)))
+
+    def test_jit_dynamic_n(self):
+        """One jitted artifact must serve every N (DESIGN rationale)."""
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        f = jax.jit(lambda w, n: ref.nm_mask_dynamic(w, n, 4))
+        for n in range(1, 5):
+            np.testing.assert_array_equal(
+                np.asarray(f(w, jnp.asarray(n, jnp.int32))),
+                np.asarray(ref.nm_mask(w, n, 4)))
+
+
+class TestMaskedMatmul:
+    @given(st.integers(1, 16), st.integers(1, 8), st.integers(1, 8),
+           nm_ratios(), st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_matches_ref(self, b, kg, fg, nm, seed):
+        n, m = nm
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, kg * 4)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(kg * 4, fg * m)).astype(np.float32))
+        got = k_masked_matmul(x, w, n, m)
+        want = ref.masked_matmul(x, w, n, m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_tiled_grid_path(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(1024, 256)).astype(np.float32))
+        got = k_masked_matmul(x, w, 2, 4, block_b=128, block_f=128, block_k=512)
+        want = ref.masked_matmul(x, w, 2, 4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=1e-3)
+
+    def test_dense_when_n_equals_m(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+        got = k_masked_matmul(x, w, 4, 4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@st.composite
+def flat_state(draw):
+    d = draw(st.sampled_from([8, 64, 256, 1000]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w, m, g = (jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+               for _ in range(3))
+    v = jnp.asarray(np.abs(rng.normal(size=(d,))).astype(np.float32))
+    t = float(draw(st.integers(1, 10000)))
+    lr = draw(st.sampled_from([1e-4, 5e-5, 1e-3]))
+    return w, m, v, g, t, lr
+
+
+class TestOptimKernels:
+    @given(flat_state())
+    @settings(**SETTINGS)
+    def test_adam_matches_ref(self, s):
+        w, m, v, g, t, lr = s
+        got = k_adam(w, m, v, g, t, lr)
+        want = ref.adam_update(w, m, v, g, t, lr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+
+    @given(flat_state())
+    @settings(**SETTINGS)
+    def test_step2_matches_ref(self, s):
+        w, m, v, g, t, lr = s
+        got = k_step2(w, m, v, g, t, lr)
+        want = ref.step_phase2_update(w, m, v, g, t, lr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+
+    @given(flat_state())
+    @settings(**SETTINGS)
+    def test_step2_never_touches_v(self, s):
+        """Freezing is structural: the kernel has no v output at all."""
+        w, m, v, g, t, lr = s
+        out = k_step2(w, m, v, g, t, lr)
+        assert len(out) == 2  # (w', m') only
+
+    @given(flat_state(), st.sampled_from([0.0, 2e-4, 6e-5]))
+    @settings(**SETTINGS)
+    def test_srste_matches_ref(self, s, lam):
+        w, m, v, g, t, lr = s
+        d = w.shape[0]
+        mcols = 4 if d % 4 == 0 else 2
+        mask = ref.nm_mask(w.reshape(-1, mcols), 1, mcols).reshape(-1)
+        got = k_srste(g, w, mask, lam)
+        want = ref.srste_refine(g, w, mask, lam)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_srste_lambda_zero_is_identity(self):
+        rng = np.random.default_rng(5)
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        mask = ref.nm_mask(w.reshape(-1, 4), 2, 4).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(k_srste(g, w, mask, 0.0)),
+                                      np.asarray(g))

@@ -1,0 +1,275 @@
+"""L2 correctness: the recipe step builders (train_steps.py) against the
+optimizer oracle, model zoo shape checks, and the eval metric layout the
+Rust coordinator depends on.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import train_steps as ts
+from compile.kernels import ref
+from compile.models import registry
+
+MODELS = registry()
+MLP = MODELS["mlp_pallas"]  # tiny: fast to trace
+
+
+def run_artifact(art, *args):
+    out = art.fn(*(args if args else art.example_args))
+    return out
+
+
+def real_example(model, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    params = model.init(seed)
+    x = jnp.asarray(rng.normal(size=(batch, model.in_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, model.n_classes, size=(batch,)).astype(np.int32))
+    return params, x, y
+
+
+class TestDenseAdam:
+    def test_output_arity_matches_names(self):
+        art = ts.build_dense_adam(MLP, 8, None)
+        outs = run_artifact(art)
+        assert len(outs) == len(art.output_names)
+        assert len(art.example_args) == len(art.input_names)
+
+    def test_single_step_matches_ref_adam(self):
+        art = ts.build_dense_adam(MLP, 8, None)
+        params, x, y = real_example(MLP, 8)
+        P = len(params)
+        zeros = [jnp.zeros_like(p) for p in params]
+        outs = art.fn(*params, *zeros, *zeros, x, y,
+                      jnp.asarray([1e-3], jnp.float32), jnp.asarray([1.0], jnp.float32))
+        # recompute with ref: gradient of the dense loss
+        def loss(ps):
+            logits = MLP.apply(ps, x)
+            logp = jax.nn.log_softmax(logits, -1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+        grads = jax.grad(loss)(params)
+        for i, (p, g) in enumerate(zip(params, grads)):
+            p1, m1, v1 = ref.adam_update(p, jnp.zeros_like(p), jnp.zeros_like(p),
+                                         g, 1.0, 1e-3)
+            np.testing.assert_allclose(outs[i], p1, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(outs[P + i], m1, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(outs[2 * P + i], v1, rtol=1e-5, atol=1e-7)
+
+    def test_stats_vector_is_v_telemetry(self):
+        art = ts.build_dense_adam(MLP, 8, None)
+        params, x, y = real_example(MLP, 8, seed=3)
+        zeros = [jnp.zeros_like(p) for p in params]
+        outs = art.fn(*params, *zeros, *zeros, x, y,
+                      jnp.asarray([1e-3], jnp.float32), jnp.asarray([1.0], jnp.float32))
+        P = len(params)
+        new_v = outs[2 * P:3 * P]
+        stats = outs[-1]
+        v_l1 = sum(float(jnp.sum(jnp.abs(v))) for v in new_v)
+        dv_l1 = v_l1  # old v was zero
+        assert stats.shape == (4,)
+        np.testing.assert_allclose(float(stats[0]), v_l1, rtol=1e-5)
+        np.testing.assert_allclose(float(stats[2]), dv_l1, rtol=1e-5)
+
+
+class TestStepPhase2:
+    def test_vstar_is_not_an_output(self):
+        art = ts.build_step_phase2(MLP, 8, None, 4)
+        # structural freeze: outputs are only params' + m' + loss
+        P = len(MLP.params)
+        assert len(art.output_names) == 2 * P + 1
+        assert all(not n.startswith("vstar") for n in art.output_names)
+
+    def test_matches_ref_update_with_mask(self):
+        art = ts.build_step_phase2(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=5)
+        P = len(params)
+        zeros = [jnp.zeros_like(p) for p in params]
+        vstar = [jnp.full_like(p, 0.02) for p in params]
+        n_vec = jnp.full((len(MLP.sparse_indices),), 2, jnp.int32)
+        outs = art.fn(*params, *zeros, *vstar, x, y,
+                      jnp.asarray([1e-3], jnp.float32), jnp.asarray([1.0], jnp.float32),
+                      jnp.asarray([0.0], jnp.float32), n_vec)
+
+        # reference: STE gradient at masked params, then phase-2 update
+        masks = []
+        for spec, p in zip(MLP.params, params):
+            if spec.sparse:
+                masks.append(ref.nm_mask(p.reshape(-1, p.shape[-1]), 2, 4).reshape(p.shape))
+            else:
+                masks.append(None)
+
+        def masked_loss(ps):
+            mp = [pp if mk is None else pp + jax.lax.stop_gradient(mk * pp - pp)
+                  for pp, mk in zip(ps, masks)]
+            logits = MLP.apply(mp, x)
+            logp = jax.nn.log_softmax(logits, -1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+
+        grads = jax.grad(masked_loss)(params)
+        for i, (p, g, vs) in enumerate(zip(params, grads, vstar)):
+            p1, m1 = ref.step_phase2_update(p, jnp.zeros_like(p), vs, g, 1.0, 1e-3)
+            np.testing.assert_allclose(outs[i], p1, rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(outs[P + i], m1, rtol=1e-4, atol=1e-6)
+
+
+class TestSrSte:
+    def test_lam_zero_equals_plain_ste(self):
+        art = ts.build_srste_adam(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=7)
+        zeros = [jnp.zeros_like(p) for p in params]
+        n_vec = jnp.full((len(MLP.sparse_indices),), 2, jnp.int32)
+        lr = jnp.asarray([1e-3], jnp.float32)
+        t = jnp.asarray([1.0], jnp.float32)
+        out0 = art.fn(*params, *zeros, *zeros, x, y, lr, t,
+                      jnp.asarray([0.0], jnp.float32), n_vec)
+        out1 = art.fn(*params, *zeros, *zeros, x, y, lr, t,
+                      jnp.asarray([5e-3], jnp.float32), n_vec)
+        # some sparse weight tensor must differ once lam != 0
+        si = MLP.sparse_indices[0]
+        assert not np.allclose(out0[si], out1[si])
+
+    def test_dense_tensors_not_refined(self):
+        # lam only touches sparse tensors: bias updates identical across lam
+        art = ts.build_srste_adam(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=9)
+        zeros = [jnp.zeros_like(p) for p in params]
+        n_vec = jnp.full((len(MLP.sparse_indices),), 2, jnp.int32)
+        lr = jnp.asarray([1e-3], jnp.float32)
+        t = jnp.asarray([1.0], jnp.float32)
+        outs = [art.fn(*params, *zeros, *zeros, x, y, lr, t,
+                       jnp.asarray([lam], jnp.float32), n_vec)
+                for lam in (0.0, 1.0)]
+        dense_idx = [i for i, s in enumerate(MLP.params) if not s.sparse]
+        for i in dense_idx:
+            np.testing.assert_array_equal(outs[0][i], outs[1][i])
+
+
+class TestAsp:
+    def test_projection_keeps_support(self):
+        art = ts.build_asp_adam(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=11)
+        zeros = [jnp.zeros_like(p) for p in params]
+        n_vec = jnp.full((len(MLP.sparse_indices),), 2, jnp.int32)
+        outs = art.fn(*params, *zeros, *zeros, x, y,
+                      jnp.asarray([1e-3], jnp.float32), jnp.asarray([1.0], jnp.float32),
+                      n_vec)
+        for si in MLP.sparse_indices:
+            w1 = np.asarray(outs[si])
+            groups = w1.reshape(-1, 4)
+            nonzero = (groups != 0).sum(axis=1)
+            assert (nonzero <= 2).all(), "ASP weights must stay 2:4-supported"
+
+
+class TestEval:
+    def test_classify_metrics_layout(self):
+        art = ts.build_eval(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=13)
+        n_vec = jnp.full((len(MLP.sparse_indices),), 4, jnp.int32)  # dense
+        loss, metrics = art.fn(*params, x, y, n_vec)
+        assert metrics.shape == (8,)
+        correct, count, tp, fp, tn, fn = (float(metrics[i]) for i in range(6))
+        assert count == 8.0
+        assert 0 <= correct <= 8
+        # confusion identity: tp+fp+tn+fn == count
+        assert tp + fp + tn + fn == count
+        # accuracy from confusion consistent for the class-1 slice
+        logits = MLP.apply(params, x)
+        pred = np.argmax(np.asarray(logits), -1)
+        yy = np.asarray(y)
+        assert tp == ((pred == 1) & (yy == 1)).sum()
+        assert float(loss[0]) > 0
+
+    def test_dense_eval_equals_n_eq_m(self):
+        art = ts.build_eval(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=15)
+        S = len(MLP.sparse_indices)
+        l_dense, _ = art.fn(*params, x, y, jnp.full((S,), 4, jnp.int32))
+        # host-side dense forward
+        logits = MLP.apply(params, x)
+        logp = jax.nn.log_softmax(logits, -1)
+        expect = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+        np.testing.assert_allclose(float(l_dense[0]), float(expect), rtol=1e-5)
+
+    def test_masked_eval_changes_loss(self):
+        art = ts.build_eval(MLP, 8, None, 4)
+        params, x, y = real_example(MLP, 8, seed=17)
+        S = len(MLP.sparse_indices)
+        l_dense, _ = art.fn(*params, x, y, jnp.full((S,), 4, jnp.int32))
+        l_masked, _ = art.fn(*params, x, y, jnp.full((S,), 1, jnp.int32))
+        assert float(l_dense[0]) != float(l_masked[0])
+
+
+class TestModels:
+    @pytest.mark.parametrize("key", ["mlp_cf10", "mlp_pallas"])
+    def test_mlp_apply_shapes(self, key):
+        model = MODELS[key]
+        params = model.init(0)
+        x = jnp.zeros((4, model.in_dim), jnp.float32)
+        out = model.apply(params, x)
+        assert out.shape == (4, model.n_classes)
+
+    @pytest.mark.parametrize("key", ["lm_wiki", "lm_wmt"])
+    def test_lm_apply_shapes(self, key):
+        model = MODELS[key]
+        params = model.init(0)
+        seq = 16
+        x = jnp.zeros((2, seq), jnp.int32)
+        out = model.apply(params, x)
+        assert out.shape == (2, seq, model.n_classes)
+
+    def test_encoder_apply_shapes(self):
+        model = MODELS["enc_glue3"]
+        params = model.init(0)
+        out = model.apply(params, jnp.zeros((2, 32), jnp.int32))
+        assert out.shape == (2, 3)
+
+    def test_init_deterministic(self):
+        a = MLP.init(42)
+        b = MLP.init(42)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        c = MLP.init(43)
+        assert not np.allclose(a[0], c[0])
+
+    def test_sparse_indices_last_dims_divide_32(self):
+        # every sparse-eligible tensor must support the full M grid
+        for key, model in MODELS.items():
+            for i in model.sparse_indices:
+                shape = model.params[i].shape
+                assert shape[-1] % 4 == 0, f"{key} param {i} last dim {shape[-1]}"
+
+
+class TestDecayingN:
+    def test_matches_paper_schedule(self):
+        assert ref.decaying_n(0, 8, 10, 5) == 8
+        assert ref.decaying_n(5, 8, 10, 5) == 7
+        assert ref.decaying_n(15, 8, 10, 5) == 4
+        assert ref.decaying_n(25, 8, 10, 5) == 2
+        assert ref.decaying_n(35, 8, 10, 5) == 1
+        assert ref.decaying_n(9999, 8, 10, 5) == 1
+
+
+class TestPerfModel:
+    def test_all_shipped_tiles_fit_vmem(self):
+        from compile import perf_model as pm
+        rows = [
+            pm.nm_mask_model(256, 512, 4),
+            pm.nm_mask_model(256, 512, 32),
+            pm.masked_matmul_model(128, 128, 512),
+            pm.masked_matmul_model(256, 256, 1024),
+            pm.optim_update_model(),
+        ]
+        assert all(r["ok"] for r in rows)
+        mm = pm.masked_matmul_model(128, 128, 512)
+        assert mm["mxu_util_dense"] == 1.0  # MXU-aligned tiles
+
+    def test_unaligned_tile_flags_low_utilization(self):
+        from compile import perf_model as pm
+        mm = pm.masked_matmul_model(bm=100, bn=100, bk=512)
+        assert mm["mxu_util_dense"] < 0.7
+
+    def test_oversized_tile_flagged(self):
+        from compile import perf_model as pm
+        r = pm.masked_matmul_model(bm=1024, bn=2048, bk=4096)
+        assert not r["ok"]

@@ -1,0 +1,76 @@
+//! `cargo bench --bench pjrt_step` — end-to-end per-step latency of every
+//! recipe artifact through the PJRT runtime, plus the coordinator-overhead
+//! accounting that EXPERIMENTS.md §Perf tracks. One row per paper recipe.
+
+use step_nm::bench::{print_header, Harness};
+use step_nm::config::{ExperimentConfig, RecipeKind};
+use step_nm::coordinator::Session;
+use step_nm::runtime::Runtime;
+
+fn bench_model(rt: &Runtime, model: &str, recipes: &[(&str, RecipeKind, &str)]) {
+    let h = Harness { warmup: 2, min_iters: 5, max_iters: 40,
+        min_time: std::time::Duration::from_millis(400) };
+    print_header(&format!("PJRT per-step latency — {model}"));
+    for (label, recipe, ratio) in recipes {
+        let mut cfg = ExperimentConfig::builder(model)
+            .recipe(*recipe)
+            .steps(10_000)
+            .lr(1e-4)
+            .build();
+        cfg.ratio = ratio.parse().unwrap();
+        cfg.autoswitch.fixed_step = Some(1);
+        let mut session = match Session::new(rt, &cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("  {label}: skipped ({e})");
+                continue;
+            }
+        };
+        // warm cache + cross the phase switch for STEP
+        session.step().unwrap();
+        session.step().unwrap();
+        rt.reset_stats();
+        let r = h.run(label, || session.step().unwrap());
+        let st = rt.stats();
+        let per_exec = st.execute_secs / st.executions.max(1) as f64;
+        let overhead = (r.mean() - per_exec).max(0.0) / r.mean();
+        println!(
+            "{}  (XLA {:.1}ms/step, coordinator overhead {:.1}%)",
+            r.row(),
+            per_exec * 1e3,
+            overhead * 100.0
+        );
+    }
+}
+
+fn main() {
+    let rt = Runtime::from_dir("artifacts").expect("run `make artifacts` first");
+    let full: Vec<(&str, RecipeKind, &str)> = vec![
+        ("dense_adam", RecipeKind::Dense, "2:4"),
+        ("dense_sgdm", RecipeKind::DenseSgdm, "2:4"),
+        ("srste_adam 1:4", RecipeKind::SrSte, "1:4"),
+        ("asp_adam 1:4", RecipeKind::Asp, "1:4"),
+        ("step phase2 1:4", RecipeKind::Step, "1:4"),
+        ("step phase2 1:16", RecipeKind::Step, "1:16"),
+    ];
+    bench_model(&rt, "mlp_cf10", &full);
+    let lm: Vec<(&str, RecipeKind, &str)> = vec![
+        ("dense_adam", RecipeKind::Dense, "2:4"),
+        ("srste_adam 2:4", RecipeKind::SrSte, "2:4"),
+        ("step phase2 2:4", RecipeKind::Step, "2:4"),
+    ];
+    bench_model(&rt, "lm_wiki", &lm);
+
+    // eval-path latency
+    print_header("eval latency (masked forward, 6 batches)");
+    let h = Harness::quick();
+    let cfg = ExperimentConfig::builder("mlp_cf10")
+        .recipe(RecipeKind::SrSte)
+        .sparsity(1, 4)
+        .eval_batches(6)
+        .lr(1e-4)
+        .build();
+    let session = Session::new(&rt, &cfg).unwrap();
+    let r = h.run("eval mlp_cf10 1:4", || session.evaluate().unwrap());
+    println!("{}", r.row());
+}

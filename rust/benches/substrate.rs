@@ -1,0 +1,73 @@
+//! `cargo bench --bench substrate` — pure-Rust hot-path kernels: N:M mask
+//! selection, the blocked matmuls, fused optimizer updates, and the
+//! AutoSwitch window. These are the L3 components on the per-step path.
+
+use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
+use step_nm::bench::{print_header, Harness};
+use step_nm::optim::{adam_update, sgdm_update, step_phase2_update, AdamHp};
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, NmRatio};
+use step_nm::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+
+fn main() {
+    let h = Harness::default();
+    let mut rng = Pcg64::new(42);
+
+    print_header("N:M mask selection (512x512 f32)");
+    let w = Tensor::randn(&[512, 512], &mut rng, 0.0, 1.0);
+    let mut mask = Tensor::zeros(&[512, 512]);
+    for (n, m) in [(2usize, 4usize), (1, 4), (2, 8), (4, 16), (8, 32)] {
+        let r = h.run(&format!("nm_mask {n}:{m}"), || {
+            nm_mask_into(&w, NmRatio::new(n, m), &mut mask)
+        });
+        println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+    }
+    let mut wc = w.clone();
+    let r = h.run("apply_nm_inplace 2:4", || {
+        wc.data_mut().copy_from_slice(w.data());
+        apply_nm_inplace(&mut wc, NmRatio::new(2, 4))
+    });
+    println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+
+    print_header("blocked matmuls (training shapes)");
+    let x = Tensor::randn(&[128, 768], &mut rng, 0.0, 1.0);
+    let w1 = Tensor::randn(&[768, 512], &mut rng, 0.0, 1.0);
+    let dy = Tensor::randn(&[128, 512], &mut rng, 0.0, 1.0);
+    let flops = 2.0 * 128.0 * 768.0 * 512.0;
+    let r = h.run("fwd   x@w    128x768x512", || matmul(&x, &w1));
+    println!("{}  ({:.2} GFLOP/s)", r.row(), flops / r.mean() / 1e9);
+    let r = h.run("bwd-x dy@wT  128x512x768", || matmul_bt(&dy, &w1));
+    println!("{}  ({:.2} GFLOP/s)", r.row(), flops / r.mean() / 1e9);
+    let r = h.run("bwd-w xT@dy  768x128x512", || matmul_at(&x, &dy));
+    println!("{}  ({:.2} GFLOP/s)", r.row(), flops / r.mean() / 1e9);
+
+    print_header("fused optimizer updates (512x512)");
+    let g = Tensor::randn(&[512, 512], &mut rng, 0.0, 0.1);
+    let mut p = w.clone();
+    let mut m = Tensor::zeros(&[512, 512]);
+    let mut v = Tensor::zeros(&[512, 512]);
+    let r = h.run("adam_update", || {
+        adam_update(&mut p, &mut m, &mut v, &g, 100, 1e-3, AdamHp::default())
+    });
+    println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+    let v_star = Tensor::full(&[512, 512], 0.01);
+    let r = h.run("step_phase2_update", || {
+        step_phase2_update(&mut p, &mut m, &v_star, &g, 100, 1e-3, 0.9, 1e-8)
+    });
+    println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+    let mut buf = Tensor::zeros(&[512, 512]);
+    let r = h.run("sgdm_update", || {
+        sgdm_update(&mut p, &mut buf, &g, 1e-2, 0.9)
+    });
+    println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+
+    print_header("AutoSwitch observe() (per-step cost)");
+    let mut asw = AutoSwitch::new(1_000_000, 1e-8, 0.999, ZOption::Arithmetic);
+    let stat = SwitchStat { v_l1: 1.0, v_l2: 1.0, dv_l1: 0.5, log_dv: -10.0 };
+    let mut t = 0usize;
+    let r = h.run("autoswitch observe", || {
+        t += 1;
+        asw.observe(t, stat)
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,184 @@
+//! Timing harness (the offline image has no criterion): warmup, fixed-count
+//! or fixed-duration iteration, and robust summary stats (mean / p50 / p95 /
+//! min), plus a tiny table printer shared by the `benches/` targets and the
+//! `step-nm bench` subcommands.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall times, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    /// Ops (or items) per second at the mean time, given `items` per iter.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean()
+    }
+
+    /// One formatted row: `name  mean  p50  p95  min  iters`.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.p50()),
+            fmt_time(self.p95()),
+            fmt_time(self.min()),
+            self.iters
+        )
+    }
+}
+
+/// Human-friendly seconds formatting (ns → s).
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        "n/a".into()
+    } else if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// The harness: `warmup` untimed iterations, then time until both `min_iters`
+/// and `min_time` are satisfied (capped at `max_iters`).
+#[derive(Debug, Clone, Copy)]
+pub struct Harness {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+impl Harness {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(100),
+        }
+    }
+
+    /// Run `f` repeatedly; the closure's return value is black-boxed so the
+    /// optimizer cannot delete the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult { name: name.to_string(), iters: samples.len(), samples }
+    }
+}
+
+/// Prevent the optimizer from eliding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print the standard bench table header.
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "mean", "p50", "p95", "min", "iters"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_runs_and_reports() {
+        let h = Harness { warmup: 1, min_iters: 5, max_iters: 5, min_time: Duration::ZERO };
+        let r = h.run("noop", || 42);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.p50() <= r.p95());
+        assert!(r.min() <= r.mean() * 1.0001);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 4,
+            samples: vec![4.0, 1.0, 3.0, 2.0],
+        };
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(100.0), 4.0);
+        assert_eq!(r.p50(), 3.0); // round(0.5*3)=2 -> sorted[2]=3
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult { name: "x".into(), iters: 2, samples: vec![0.5, 0.5] };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,188 @@
+//! Binary checkpointing of parameters + optimizer state.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "SNMC" | version u32 | n_tensors u32 |
+//!   per tensor: name_len u32 | name bytes | ndim u32 | dims u64… | f32 data…
+//! ```
+//! Tensors are named so checkpoints are robust to reordering; loading
+//! validates shape agreement against the expected layout.
+
+use crate::tensor::Tensor;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SNMC";
+const VERSION: u32 = 1;
+
+/// A named collection of tensors (params, m, v, …).
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.push((name.into(), t));
+    }
+
+    /// Add a whole group under `prefix` ("p", "m", "v", …).
+    pub fn push_group(&mut self, prefix: &str, tensors: &[Tensor]) {
+        for (i, t) in tensors.iter().enumerate() {
+            self.push(format!("{prefix}.{i}"), t.clone());
+        }
+    }
+
+    /// Extract the group saved by [`push_group`].
+    pub fn group(&self, prefix: &str) -> Vec<Tensor> {
+        let mut found: Vec<(usize, Tensor)> = self
+            .entries
+            .iter()
+            .filter_map(|(name, t)| {
+                let rest = name.strip_prefix(prefix)?.strip_prefix('.')?;
+                rest.parse::<usize>().ok().map(|i| (i, t.clone()))
+            })
+            .collect();
+        found.sort_by_key(|(i, _)| *i);
+        found.into_iter().map(|(_, t)| t).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            crate::util::ensure_dir(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(t.ndim() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // contiguous f32 block
+            for &x in t.data() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic {magic:?}");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let n = read_u32(&mut r)? as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u32(&mut r)? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            entries.push((String::from_utf8(name)?, Tensor::new(&shape, data)));
+        }
+        Ok(Self { entries })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("stepnm_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::new(1);
+        let mut ck = Checkpoint::new();
+        ck.push("w", Tensor::randn(&[3, 4], &mut rng, 0.0, 1.0));
+        ck.push("b", Tensor::randn(&[4], &mut rng, 0.0, 1.0));
+        ck.push("scalar", Tensor::scalar1(7.0));
+        let path = tmp("rt.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.entries.len(), back.entries.len());
+        for ((n1, t1), (n2, t2)) in ck.entries.iter().zip(&back.entries) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2); // bit-exact
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn groups_roundtrip_in_order() {
+        let mut rng = Pcg64::new(2);
+        let params: Vec<Tensor> = (0..5)
+            .map(|i| Tensor::randn(&[i + 1, 2], &mut rng, 0.0, 1.0))
+            .collect();
+        let mut ck = Checkpoint::new();
+        ck.push_group("p", &params);
+        ck.push_group("m", &params);
+        let path = tmp("grp.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let p2 = back.group("p");
+        assert_eq!(p2.len(), 5);
+        for (a, b) in params.iter().zip(&p2) {
+            assert_eq!(a, b);
+        }
+        // "m" must not absorb "p" entries
+        assert_eq!(back.group("m").len(), 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let path = tmp("bad.bin");
+        std::fs::write(&path, b"XXXX0000").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn get_by_name() {
+        let mut ck = Checkpoint::new();
+        ck.push("x", Tensor::scalar1(1.0));
+        assert!(ck.get("x").is_some());
+        assert!(ck.get("y").is_none());
+    }
+}

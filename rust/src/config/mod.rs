@@ -1,0 +1,393 @@
+//! Experiment configuration: a TOML-subset parser (offline image has no
+//! toml/serde crates) plus the typed [`ExperimentConfig`] the coordinator
+//! consumes, with validation and a builder for programmatic use.
+//!
+//! Supported TOML subset — everything the configs in `configs/` use:
+//! `[section]` headers, `key = value` with string / integer / float / bool /
+//! homogeneous-array values, `#` comments.
+
+pub mod toml;
+
+pub use toml::TomlDoc;
+
+use crate::autoswitch::ZOption;
+use crate::optim::AdamHp;
+use crate::sparsity::NmRatio;
+
+/// Which training recipe to run (the paper's comparison set).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecipeKind {
+    Dense,
+    DenseSgdm,
+    Ste,
+    SrSte,
+    SrSteSgdm,
+    Asp,
+    Step,
+    /// Fig. 8 ablation arm: STEP but v keeps updating in phase 2.
+    StepVarianceUpdated,
+    DecayingMask,
+}
+
+impl RecipeKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dense" | "dense_adam" => RecipeKind::Dense,
+            "dense_sgdm" => RecipeKind::DenseSgdm,
+            "ste" => RecipeKind::Ste,
+            "srste" | "sr_ste" | "srste_adam" => RecipeKind::SrSte,
+            "srste_sgdm" => RecipeKind::SrSteSgdm,
+            "asp" => RecipeKind::Asp,
+            "step" => RecipeKind::Step,
+            "step_v_updated" => RecipeKind::StepVarianceUpdated,
+            "decaying_mask" | "decaying" => RecipeKind::DecayingMask,
+            other => anyhow::bail!("unknown recipe {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecipeKind::Dense => "dense",
+            RecipeKind::DenseSgdm => "dense_sgdm",
+            RecipeKind::Ste => "ste",
+            RecipeKind::SrSte => "srste",
+            RecipeKind::SrSteSgdm => "srste_sgdm",
+            RecipeKind::Asp => "asp",
+            RecipeKind::Step => "step",
+            RecipeKind::StepVarianceUpdated => "step_v_updated",
+            RecipeKind::DecayingMask => "decaying_mask",
+        }
+    }
+
+    /// Does this recipe need Adam variance telemetry (drives AutoSwitch)?
+    pub fn uses_adam(&self) -> bool {
+        !matches!(self, RecipeKind::DenseSgdm | RecipeKind::SrSteSgdm)
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, RecipeKind::Dense | RecipeKind::DenseSgdm)
+    }
+}
+
+/// AutoSwitch configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchConfig {
+    pub option: ZOption,
+    /// Use the `[0.1T, 0.5T]` clip (paper default for tight budgets).
+    pub clip: bool,
+    /// Override: fixed switch step (None = AutoSwitch decides). Drives the
+    /// Fig. 7 sweep.
+    pub fixed_step: Option<usize>,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        Self { option: ZOption::Arithmetic, clip: true, fixed_step: None }
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Model key in the artifact manifest ("mlp_cf10", "lm_wiki", …).
+    pub model: String,
+    pub recipe: RecipeKind,
+    /// Uniform sparsity ratio (per-layer ratios come from DominoSearch mode).
+    pub ratio: NmRatio,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// SR-STE λ (Eq 9); the paper's tuned default is 2e-4.
+    pub lam: f32,
+    pub hp: AdamHp,
+    /// SGDM momentum (Fig. 1 baselines).
+    pub momentum: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Cap on eval batches per evaluation (0 = use the whole eval set).
+    pub eval_batches: usize,
+    pub autoswitch: SwitchConfig,
+    /// Decaying-mask: steps of dense warmup + interval between decays.
+    pub decay_start: usize,
+    pub decay_interval: usize,
+    /// Where results land.
+    pub out_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn builder(model: &str) -> ExperimentBuilder {
+        ExperimentBuilder(Self {
+            model: model.to_string(),
+            recipe: RecipeKind::Step,
+            ratio: NmRatio::new(2, 4),
+            steps: 1000,
+            batch: 128,
+            lr: 1e-3,
+            lam: 2e-4,
+            hp: AdamHp::default(),
+            momentum: 0.9,
+            seed: 0,
+            eval_every: 100,
+            eval_batches: 8,
+            autoswitch: SwitchConfig::default(),
+            decay_start: 0,
+            decay_interval: 0,
+            out_dir: "results".to_string(),
+        })
+    }
+
+    /// Validate cross-field consistency.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.steps > 0, "steps must be > 0");
+        anyhow::ensure!(self.batch > 0, "batch must be > 0");
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(self.eval_every > 0, "eval_every must be > 0");
+        anyhow::ensure!(
+            self.hp.beta1 > 0.0 && self.hp.beta1 < 1.0,
+            "beta1 out of range"
+        );
+        anyhow::ensure!(
+            self.hp.beta2 > 0.0 && self.hp.beta2 < 1.0,
+            "beta2 out of range"
+        );
+        if self.recipe == RecipeKind::DecayingMask {
+            anyhow::ensure!(self.decay_interval > 0, "decaying_mask needs decay_interval");
+        }
+        if let Some(fx) = self.autoswitch.fixed_step {
+            anyhow::ensure!(fx < self.steps, "fixed switch step {fx} >= steps {}", self.steps);
+        }
+        Ok(())
+    }
+
+    /// Parse from a TOML file (see `configs/` for examples).
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let mut b = Self::builder(
+            doc.get_str("experiment", "model")
+                .ok_or_else(|| anyhow::anyhow!("missing experiment.model"))?,
+        );
+        if let Some(r) = doc.get_str("experiment", "recipe") {
+            b = b.recipe(RecipeKind::parse(r)?);
+        }
+        if let Some(r) = doc.get_str("experiment", "sparsity") {
+            let ratio: NmRatio = r.parse()?;
+            b = b.sparsity(ratio.n, ratio.m);
+        }
+        if let Some(v) = doc.get_int("experiment", "steps") {
+            b = b.steps(v as usize);
+        }
+        if let Some(v) = doc.get_int("experiment", "batch") {
+            b = b.batch(v as usize);
+        }
+        if let Some(v) = doc.get_float("experiment", "lr") {
+            b = b.lr(v as f32);
+        }
+        if let Some(v) = doc.get_float("experiment", "lam") {
+            b = b.lam(v as f32);
+        }
+        if let Some(v) = doc.get_int("experiment", "seed") {
+            b = b.seed(v as u64);
+        }
+        if let Some(v) = doc.get_int("experiment", "eval_every") {
+            b = b.eval_every(v as usize);
+        }
+        if let Some(v) = doc.get_str("experiment", "out_dir") {
+            b.0.out_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_float("adam", "beta1") {
+            b.0.hp.beta1 = v as f32;
+        }
+        if let Some(v) = doc.get_float("adam", "beta2") {
+            b.0.hp.beta2 = v as f32;
+        }
+        if let Some(v) = doc.get_float("adam", "eps") {
+            b.0.hp.eps = v as f32;
+        }
+        if let Some(v) = doc.get_str("autoswitch", "option") {
+            b.0.autoswitch.option = match v {
+                "arithmetic" | "I" => ZOption::Arithmetic,
+                "geometric" | "II" => ZOption::Geometric,
+                other => anyhow::bail!("unknown autoswitch option {other:?}"),
+            };
+        }
+        if let Some(v) = doc.get_bool("autoswitch", "clip") {
+            b.0.autoswitch.clip = v;
+        }
+        if let Some(v) = doc.get_int("autoswitch", "fixed_step") {
+            b.0.autoswitch.fixed_step = Some(v as usize);
+        }
+        if let Some(v) = doc.get_int("decay", "start") {
+            b.0.decay_start = v as usize;
+        }
+        if let Some(v) = doc.get_int("decay", "interval") {
+            b.0.decay_interval = v as usize;
+        }
+        let cfg = b.build();
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Stable identifier used in result rows & file names.
+    pub fn run_id(&self) -> String {
+        format!(
+            "{}__{}_{}to{}_s{}",
+            self.model,
+            self.recipe.name(),
+            self.ratio.n,
+            self.ratio.m,
+            self.seed
+        )
+    }
+}
+
+/// Fluent builder (the examples use this instead of TOML files).
+pub struct ExperimentBuilder(ExperimentConfig);
+
+impl ExperimentBuilder {
+    pub fn recipe(mut self, r: RecipeKind) -> Self {
+        self.0.recipe = r;
+        self
+    }
+
+    pub fn sparsity(mut self, n: usize, m: usize) -> Self {
+        self.0.ratio = NmRatio::new(n, m);
+        self
+    }
+
+    pub fn steps(mut self, s: usize) -> Self {
+        self.0.steps = s;
+        self
+    }
+
+    pub fn batch(mut self, b: usize) -> Self {
+        self.0.batch = b;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.0.lr = lr;
+        self
+    }
+
+    pub fn lam(mut self, lam: f32) -> Self {
+        self.0.lam = lam;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.0.seed = s;
+        self
+    }
+
+    pub fn eval_every(mut self, e: usize) -> Self {
+        self.0.eval_every = e;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.0.eval_batches = n;
+        self
+    }
+
+    pub fn fixed_switch(mut self, step: usize) -> Self {
+        self.0.autoswitch.fixed_step = Some(step);
+        self
+    }
+
+    pub fn switch_option(mut self, o: ZOption) -> Self {
+        self.0.autoswitch.option = o;
+        self
+    }
+
+    pub fn decay(mut self, start: usize, interval: usize) -> Self {
+        self.0.decay_start = start;
+        self.0.decay_interval = interval;
+        self
+    }
+
+    pub fn out_dir(mut self, d: &str) -> Self {
+        self.0.out_dir = d.to_string();
+        self
+    }
+
+    pub fn build(self) -> ExperimentConfig {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_roundtrip() {
+        let cfg = ExperimentConfig::builder("mlp_cf10")
+            .recipe(RecipeKind::SrSte)
+            .sparsity(1, 4)
+            .steps(500)
+            .lr(5e-4)
+            .seed(3)
+            .build();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.run_id(), "mlp_cf10__srste_1to4_s3");
+        assert!(cfg.recipe.is_sparse());
+    }
+
+    #[test]
+    fn recipe_parse_all() {
+        for name in [
+            "dense", "dense_sgdm", "ste", "srste", "srste_sgdm", "asp", "step",
+            "step_v_updated", "decaying_mask",
+        ] {
+            let r = RecipeKind::parse(name).unwrap();
+            // name() of the parsed value must re-parse to the same variant
+            assert_eq!(RecipeKind::parse(r.name()).unwrap(), r);
+        }
+        assert!(RecipeKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut cfg = ExperimentConfig::builder("m").steps(0).build();
+        assert!(cfg.validate().is_err());
+        cfg.steps = 10;
+        cfg.validate().unwrap();
+        cfg.autoswitch.fixed_step = Some(20);
+        assert!(cfg.validate().is_err());
+        cfg.autoswitch.fixed_step = Some(5);
+        cfg.validate().unwrap();
+        cfg.recipe = RecipeKind::DecayingMask;
+        assert!(cfg.validate().is_err(), "decaying needs interval");
+    }
+
+    #[test]
+    fn from_toml_full() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment config
+            [experiment]
+            model = "mlp_cf10"
+            recipe = "step"
+            sparsity = "1:8"
+            steps = 250
+            batch = 64
+            lr = 0.0005
+            seed = 7
+
+            [adam]
+            beta2 = 0.99
+
+            [autoswitch]
+            option = "geometric"
+            clip = false
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.model, "mlp_cf10");
+        assert_eq!(cfg.ratio, NmRatio::new(1, 8));
+        assert_eq!(cfg.steps, 250);
+        assert_eq!(cfg.hp.beta2, 0.99);
+        assert_eq!(cfg.autoswitch.option, ZOption::Geometric);
+        assert!(!cfg.autoswitch.clip);
+    }
+}

@@ -1,0 +1,246 @@
+//! A TOML-subset parser sufficient for the experiment configs:
+//! `[section]` headers, `key = value` lines, `#` comments, and string /
+//! integer / float / boolean / flat-array values. No nested tables, no
+//! multi-line strings, no datetimes — configs stay simple by design.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too ("lr = 1" is 1.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) → value`. Keys before any section
+/// header live in section `""`.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.map
+                .insert((section.clone(), key.trim().to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Self::parse(&crate::util::read_to_string(path.as_ref())?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(|v| v.as_int())
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(|v| v.as_float())
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(|v| v.as_bool())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string {s:?}"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // numbers: int first (no '.', 'e'), then float
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains(['.', 'e', 'E']) {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("cannot parse value {s:?}")
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello # not a comment"
+            i = 42        # comment
+            f = 3.5
+            e = 1e-4
+            b = true
+            arr = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello # not a comment"));
+        assert_eq!(doc.get_int("a", "i"), Some(42));
+        assert_eq!(doc.get_float("a", "f"), Some(3.5));
+        assert_eq!(doc.get_float("a", "e"), Some(1e-4));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        match doc.get("a", "arr") {
+            Some(TomlValue::Array(v)) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_float_accessor() {
+        let doc = TomlDoc::parse("lr = 1").unwrap();
+        assert_eq!(doc.get_float("", "lr"), Some(1.0));
+        assert_eq!(doc.get_str("", "lr"), None);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_int("", "n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = TomlDoc::parse("x 1").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = TomlDoc::parse("\n\n[bad").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[s]\nk = 1").unwrap();
+        assert!(doc.get("s", "other").is_none());
+        assert!(doc.get("t", "k").is_none());
+    }
+}

@@ -1,0 +1,24 @@
+//! The training coordinator: Rust owns all state (params, Adam m/v, the
+//! frozen v*, step counter, masks' N schedule) and drives the AOT step
+//! artifacts through PJRT, one purely-functional call per step.
+//!
+//! The STEP recipe is realized as a *phase state machine*:
+//!
+//! ```text
+//!   Precondition (dense_adam artifact, v actively updated)
+//!        │  AutoSwitch fires on the variance telemetry stream
+//!        ▼
+//!   MaskLearning (step_phase2 artifact: v* enters as a constant input,
+//!                 is never an output — freezing is structural)
+//! ```
+//!
+//! Every other recipe is a single-artifact loop. Evaluation always runs the
+//! masked eval artifact (`n == m` recovers dense eval), matching the paper's
+//! "evaluated with sparsity for fair comparison" protocol (Fig. 4 caption).
+
+pub mod prefetch;
+pub mod session;
+pub mod sweep;
+
+pub use session::{Report, Session};
+pub use sweep::{Sweep, SweepRow};

@@ -1,0 +1,100 @@
+//! Batch prefetcher: a single worker thread generates training batch `t+1`
+//! while the device executes step `t` (the double-buffered data path
+//! DESIGN.md §Perf promises). Batches are deterministic in `(dataset,
+//! step)`, so prefetching cannot change results — only overlap latency.
+
+use crate::data::{Batch, Dataset};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+pub struct Prefetcher {
+    req_tx: mpsc::Sender<usize>,
+    batch_rx: mpsc::Receiver<(usize, Batch)>,
+    /// The next step already requested from the worker (in-flight).
+    inflight: Option<usize>,
+    _handle: std::thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    pub fn new(ds: Arc<dyn Dataset>, batch_size: usize) -> Self {
+        let (req_tx, req_rx) = mpsc::channel::<usize>();
+        let (batch_tx, batch_rx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("batch-prefetch".into())
+            .spawn(move || {
+                while let Ok(step) = req_rx.recv() {
+                    if batch_tx.send((step, ds.train_batch(step, batch_size))).is_err() {
+                        break; // session dropped
+                    }
+                }
+            })
+            .expect("spawning prefetch thread");
+        Self { req_tx, batch_rx, inflight: None, _handle: handle }
+    }
+
+    /// Fetch the batch for `step`, then immediately queue `step + 1`.
+    ///
+    /// Robust to out-of-order use (e.g. after a phase change the step index
+    /// continues linearly, but a stale in-flight batch is discarded).
+    pub fn get(&mut self, step: usize) -> Batch {
+        // ensure the wanted step is requested
+        match self.inflight {
+            Some(s) if s == step => {}
+            _ => {
+                self.req_tx.send(step).expect("prefetch worker gone");
+                self.inflight = Some(step);
+            }
+        }
+        // receive until the wanted step arrives (stale in-flight results
+        // from an out-of-order jump are discarded)
+        let batch = loop {
+            let (got, batch) = self.batch_rx.recv().expect("prefetch worker gone");
+            if got == step {
+                break batch;
+            }
+        };
+        // queue the next step so it generates during device execution
+        self.req_tx.send(step + 1).expect("prefetch worker gone");
+        self.inflight = Some(step + 1);
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CifarLike;
+
+    #[test]
+    fn prefetched_batches_match_direct_generation() {
+        let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(4, 16, 0.5, 32, 3));
+        let mut pf = Prefetcher::new(ds.clone(), 8);
+        for step in 1..=20 {
+            let a = pf.get(step);
+            let b = ds.train_batch(step, 8);
+            match (&a.x, &b.x) {
+                (crate::data::BatchX::Features(x1), crate::data::BatchX::Features(x2)) => {
+                    assert_eq!(x1, x2, "step {step}")
+                }
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_from_out_of_order_requests() {
+        let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(4, 16, 0.5, 32, 3));
+        let mut pf = Prefetcher::new(ds.clone(), 4);
+        pf.get(1);
+        pf.get(2);
+        // jump: ask for 10 while 3 is in flight
+        let b = pf.get(10);
+        let direct = ds.train_batch(10, 4);
+        match (&b.x, &direct.x) {
+            (crate::data::BatchX::Features(x1), crate::data::BatchX::Features(x2)) => {
+                assert_eq!(x1, x2)
+            }
+            _ => panic!(),
+        }
+    }
+}

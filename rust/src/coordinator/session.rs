@@ -1,0 +1,569 @@
+//! One training run: config + runtime → trained (sparse) model + report.
+
+use crate::autoswitch::{
+    AutoSwitch, Clip, FixedPolicy, SwitchPolicy, SwitchStat,
+};
+use crate::config::{ExperimentConfig, RecipeKind};
+use crate::data::{
+    Batch, BatchX, BatchY, CifarLike, Dataset, GlueTask, SyntheticCorpus, TaskKind,
+    TranslatePairs,
+};
+use crate::metrics::EvalAccum;
+use crate::runtime::{ModelInfo, Runtime, Value, ValueRef};
+use crate::sparsity::DecaySchedule;
+use crate::telemetry::{Trace, TracePoint};
+use crate::tensor::Tensor;
+
+/// Final numbers of one run.
+#[derive(Debug, Clone)]
+pub struct FinalEval {
+    /// Primary metric (accuracy / Pearson / perplexity, per model kind).
+    pub primary: f64,
+    pub metric_name: &'static str,
+    pub loss: f64,
+}
+
+/// The full result of a [`Session::run`].
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub run_id: String,
+    pub final_eval: FinalEval,
+    /// Best eval metric over the run (direction-aware).
+    pub best_eval: f64,
+    /// 1-based step the phase switched at (0 = no switch / not STEP).
+    pub switch_step: usize,
+    pub trace: Trace,
+    /// Wall seconds spent training (excludes eval).
+    pub train_secs: f64,
+    /// Final training loss (mean of last 20 steps).
+    pub tail_loss: f64,
+}
+
+/// The training phase (STEP recipes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Precondition,
+    MaskLearning,
+}
+
+/// A PJRT-backed training session.
+pub struct Session<'rt> {
+    rt: &'rt Runtime,
+    cfg: ExperimentConfig,
+    model: ModelInfo,
+    dataset: std::sync::Arc<dyn Dataset>,
+    /// Background batch generation (created on first step; reset when the
+    /// dataset is swapped).
+    prefetcher: Option<super::prefetch::Prefetcher>,
+    // state (host-owned; artifacts are purely functional)
+    params: Vec<Tensor>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    v_star: Option<Vec<Tensor>>,
+    t: usize,
+    phase: Phase,
+    policy: Option<Box<dyn SwitchPolicy>>,
+    /// Per-sparse-tensor N override (DominoSearch / Table 4). `None` =
+    /// uniform `cfg.ratio.n`.
+    layer_ns: Option<Vec<i32>>,
+    /// Metric override ("f1" | "mcc" | default per model kind) — the GLUE
+    /// suite scores tasks with their benchmark metric (Table 2).
+    eval_metric: Option<&'static str>,
+    schedule: Option<DecaySchedule>,
+    pub trace: Trace,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: &ExperimentConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let model = rt.registry().model(&cfg.model)?.clone();
+        let mut cfg = cfg.clone();
+        // The artifacts are lowered at a fixed batch; the session always uses
+        // the manifest's batch (shape-specialized executables).
+        cfg.batch = model.batch;
+        let dataset = default_dataset(&cfg.model, &model, cfg.seed)?;
+        anyhow::ensure!(
+            dataset.kind() == model.kind,
+            "dataset kind {} vs model kind {}",
+            dataset.kind(),
+            model.kind
+        );
+
+        // init params on device (seeded)
+        let init = rt.init_params(&cfg.model, cfg.seed as i32)?;
+        let params: Vec<Tensor> = init.into_iter().map(Value::into_tensor).collect();
+        anyhow::ensure!(params.len() == model.n_params(), "init arity mismatch");
+        let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+
+        let policy: Option<Box<dyn SwitchPolicy>> = match cfg.recipe {
+            RecipeKind::Step | RecipeKind::StepVarianceUpdated => {
+                Some(match cfg.autoswitch.fixed_step {
+                    Some(at_step) => Box::new(FixedPolicy { at_step }),
+                    None => {
+                        let mut asw = AutoSwitch::new(
+                            model.dim,
+                            cfg.hp.eps as f64,
+                            cfg.hp.beta2 as f64,
+                            cfg.autoswitch.option,
+                        );
+                        if cfg.autoswitch.clip {
+                            asw = asw.with_clip(Clip::default_for(cfg.steps));
+                        }
+                        Box::new(asw)
+                    }
+                })
+            }
+            _ => None,
+        };
+
+        let schedule = (cfg.recipe == RecipeKind::DecayingMask).then(|| {
+            DecaySchedule::new(cfg.ratio.m, cfg.ratio.n, cfg.decay_start, cfg.decay_interval)
+        });
+
+        Ok(Self {
+            rt,
+            cfg,
+            model,
+            dataset: std::sync::Arc::from(dataset),
+            prefetcher: None,
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            v_star: None,
+            t: 0,
+            phase: Phase::Precondition,
+            policy,
+            layer_ns: None,
+            eval_metric: None,
+            schedule,
+            trace: Trace::default(),
+        })
+    }
+
+    /// Override the dataset (the examples plug custom workloads in here).
+    pub fn with_dataset(mut self, ds: Box<dyn Dataset>) -> anyhow::Result<Self> {
+        self.set_dataset(ds)?;
+        Ok(self)
+    }
+
+    /// In-place dataset override (sweep-hook form).
+    pub fn set_dataset(&mut self, ds: Box<dyn Dataset>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ds.kind() == self.model.kind,
+            "dataset kind {} vs model kind {}",
+            ds.kind(),
+            self.model.kind
+        );
+        self.dataset = std::sync::Arc::from(ds);
+        self.prefetcher = None; // batches must come from the new dataset
+        Ok(())
+    }
+
+    /// Per-layer N override (DominoSearch integration, Table 4). One entry
+    /// per sparse tensor, each `1 ..= m`.
+    pub fn with_layer_ns(mut self, ns: Vec<usize>) -> anyhow::Result<Self> {
+        self.set_layer_ns(ns)?;
+        Ok(self)
+    }
+
+    /// In-place per-layer N override (sweep-hook form).
+    pub fn set_layer_ns(&mut self, ns: Vec<usize>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ns.len() == self.model.n_sparse(),
+            "need {} per-layer N values, got {}",
+            self.model.n_sparse(),
+            ns.len()
+        );
+        for &n in &ns {
+            anyhow::ensure!(n >= 1 && n <= self.cfg.ratio.m, "bad layer N {n}");
+        }
+        self.layer_ns = Some(ns.into_iter().map(|n| n as i32).collect());
+        Ok(())
+    }
+
+    /// Score evals with a GLUE-style metric ("f1" or "mcc") instead of the
+    /// model kind's default.
+    pub fn with_eval_metric(mut self, metric: &'static str) -> Self {
+        self.eval_metric = Some(metric);
+        self
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn model_info(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn in_phase2(&self) -> bool {
+        self.phase == Phase::MaskLearning
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.t
+    }
+
+    // ------------------------------------------------------------------
+    // artifact plumbing
+    // ------------------------------------------------------------------
+
+    /// The step artifact to run at the current (phase, step).
+    fn step_artifact(&self) -> String {
+        let model = &self.cfg.model;
+        let m = self.cfg.ratio.m;
+        match self.cfg.recipe {
+            RecipeKind::Dense => format!("{model}__dense_adam"),
+            RecipeKind::DenseSgdm => format!("{model}__dense_sgdm"),
+            RecipeKind::Ste | RecipeKind::SrSte => format!("{model}__srste_adam_m{m}"),
+            RecipeKind::SrSteSgdm => format!("{model}__srste_sgdm_m{m}"),
+            RecipeKind::Asp => format!("{model}__asp_adam_m{m}"),
+            RecipeKind::Step => match self.phase {
+                Phase::Precondition => format!("{model}__dense_adam"),
+                Phase::MaskLearning => format!("{model}__step_phase2_m{m}"),
+            },
+            // Fig. 8 ablation: after the switch, keep updating v — i.e. run
+            // the srste artifact (plain Adam over masked grads) in phase 2.
+            RecipeKind::StepVarianceUpdated => match self.phase {
+                Phase::Precondition => format!("{model}__dense_adam"),
+                Phase::MaskLearning => format!("{model}__srste_adam_m{m}"),
+            },
+            RecipeKind::DecayingMask => {
+                // dense warmup, then schedule-driven N through the srste
+                // artifact (N is a runtime input)
+                let n = self.schedule.expect("schedule").n_at(self.t);
+                if n >= m {
+                    format!("{model}__dense_adam")
+                } else {
+                    format!("{model}__srste_adam_m{m}")
+                }
+            }
+        }
+    }
+
+    /// N per sparse tensor fed to the mask kernels this step.
+    fn n_vec(&self) -> Vec<i32> {
+        let uniform = match self.cfg.recipe {
+            RecipeKind::DecayingMask => self
+                .schedule
+                .expect("schedule")
+                .n_at(self.t)
+                .min(self.cfg.ratio.m) as i32,
+            _ => self.cfg.ratio.n as i32,
+        };
+        match &self.layer_ns {
+            Some(ns) => ns.clone(),
+            None => vec![uniform; self.model.n_sparse()],
+        }
+    }
+
+    fn batch_values(&self, batch: &Batch) -> (Value, Value) {
+        let x = match &batch.x {
+            BatchX::Features(t) => Value::f32(t.clone()),
+            BatchX::Tokens { ids, batch, seq } => Value::i32_mat(ids.clone(), *batch, *seq),
+        };
+        let y = match &batch.y {
+            BatchY::Classes(c) => Value::i32_vec(c.iter().map(|&v| v as i32).collect()),
+            BatchY::Values(v) => Value::f32(Tensor::new(&[v.len()], v.clone())),
+            BatchY::Tokens { ids, batch, seq } => Value::i32_mat(ids.clone(), *batch, *seq),
+        };
+        (x, y)
+    }
+
+    // ------------------------------------------------------------------
+    // the training loop
+    // ------------------------------------------------------------------
+
+    /// Run one training step; returns (loss, stats).
+    pub fn step(&mut self) -> anyhow::Result<(f64, SwitchStat)> {
+        self.t += 1;
+        let artifact = self.step_artifact();
+        // prefetched: batch t+1 generates on the worker while the device
+        // runs step t (results identical — batches are (dataset, step)-pure)
+        let batch = {
+            let pf = self.prefetcher.get_or_insert_with(|| {
+                super::prefetch::Prefetcher::new(self.dataset.clone(), self.cfg.batch)
+            });
+            pf.get(self.t)
+        };
+        let (x, y) = self.batch_values(&batch);
+        let p = self.model.n_params();
+        let lam = if self.cfg.recipe == RecipeKind::Ste { 0.0 } else { self.cfg.lam };
+
+        // assemble inputs in the artifact's layout (see train_steps.py) —
+        // state tensors are *borrowed* into literals (no per-step clone of
+        // the model state; EXPERIMENTS.md §Perf)
+        let lr_s = Tensor::scalar1(self.cfg.lr);
+        let t_s = Tensor::scalar1(self.t as f32);
+        let lam_s = Tensor::scalar1(lam);
+        let n_vec = self.n_vec();
+        let n_shape = [n_vec.len()];
+        let nv = ValueRef::I32 { data: &n_vec, shape: &n_shape };
+        let xr = x.as_ref_value();
+        let yr = y.as_ref_value();
+
+        let mut inputs: Vec<ValueRef> = Vec::with_capacity(3 * p + 8);
+        for t in &self.params {
+            inputs.push(ValueRef::F32(t));
+        }
+        for t in &self.m {
+            inputs.push(ValueRef::F32(t));
+        }
+        let spec_recipe = self
+            .rt
+            .registry()
+            .artifact(&artifact)?
+            .recipe
+            .clone();
+        match spec_recipe.as_str() {
+            "dense_adam" => {
+                for t in &self.v {
+                    inputs.push(ValueRef::F32(t));
+                }
+                inputs.push(xr);
+                inputs.push(yr);
+                inputs.push(ValueRef::F32(&lr_s));
+                inputs.push(ValueRef::F32(&t_s));
+            }
+            "dense_sgdm" => {
+                inputs.push(xr);
+                inputs.push(yr);
+                inputs.push(ValueRef::F32(&lr_s));
+            }
+            "srste_adam" | "asp_adam" => {
+                for t in &self.v {
+                    inputs.push(ValueRef::F32(t));
+                }
+                inputs.push(xr);
+                inputs.push(yr);
+                inputs.push(ValueRef::F32(&lr_s));
+                inputs.push(ValueRef::F32(&t_s));
+                if spec_recipe == "srste_adam" {
+                    inputs.push(ValueRef::F32(&lam_s));
+                }
+                inputs.push(nv);
+            }
+            "srste_sgdm" => {
+                inputs.push(xr);
+                inputs.push(yr);
+                inputs.push(ValueRef::F32(&lr_s));
+                inputs.push(ValueRef::F32(&lam_s));
+                inputs.push(nv);
+            }
+            "step_phase2" => {
+                let v_star = self.v_star.as_ref().expect("phase 2 without v*");
+                for t in v_star {
+                    inputs.push(ValueRef::F32(t));
+                }
+                inputs.push(xr);
+                inputs.push(yr);
+                inputs.push(ValueRef::F32(&lr_s));
+                inputs.push(ValueRef::F32(&t_s));
+                inputs.push(ValueRef::F32(&lam_s));
+                inputs.push(nv);
+            }
+            other => anyhow::bail!("unknown step recipe {other:?}"),
+        }
+
+        let mut out = self.rt.execute_refs(&artifact, &inputs)?;
+
+        // unpack outputs: params', m', [v'], loss, [stats]
+        let has_v = matches!(spec_recipe.as_str(), "dense_adam" | "srste_adam" | "asp_adam");
+        let mut it = out.drain(..);
+        for i in 0..p {
+            self.params[i] = it.next().unwrap().into_tensor();
+        }
+        for i in 0..p {
+            self.m[i] = it.next().unwrap().into_tensor();
+        }
+        if has_v {
+            for i in 0..p {
+                self.v[i] = it.next().unwrap().into_tensor();
+            }
+        }
+        let loss = it.next().unwrap().scalar_f64();
+        let stat = if has_v {
+            let stats = it.next().unwrap().into_tensor();
+            let d = stats.data();
+            SwitchStat {
+                v_l1: d[0] as f64,
+                v_l2: d[1] as f64,
+                dv_l1: d[2] as f64,
+                log_dv: d[3] as f64,
+            }
+        } else {
+            SwitchStat { v_l1: 0.0, v_l2: 0.0, dv_l1: 0.0, log_dv: 0.0 }
+        };
+
+        // phase machine: only during the precondition phase of STEP recipes
+        if self.phase == Phase::Precondition {
+            if let Some(policy) = self.policy.as_mut() {
+                if policy.observe(self.t, stat) {
+                    self.v_star = Some(self.v.clone());
+                    self.phase = Phase::MaskLearning;
+                    self.trace.switch_step = self.t;
+                }
+            }
+        }
+
+        self.trace.push(TracePoint {
+            t: self.t,
+            loss,
+            stat,
+            phase2: self.phase == Phase::MaskLearning,
+        });
+        Ok((loss, stat))
+    }
+
+    /// Evaluate the current weights with masks applied (`n == m` for the
+    /// dense recipes). Returns the primary metric + mean loss.
+    pub fn evaluate(&self) -> anyhow::Result<FinalEval> {
+        let m = self.cfg.ratio.m;
+        let artifact = format!("{}__eval_m{m}", self.cfg.model);
+        let n_eval = if self.cfg.recipe.is_sparse() {
+            self.n_vec()
+        } else {
+            vec![m as i32; self.model.n_sparse()]
+        };
+        let mut acc = EvalAccum::default();
+        let mut batches = self.dataset.eval_batches(self.model.batch);
+        if self.cfg.eval_batches > 0 {
+            batches.truncate(self.cfg.eval_batches);
+        }
+        let n_shape = [n_eval.len()];
+        for batch in batches {
+            let (x, y) = self.batch_values(&batch);
+            let mut inputs: Vec<ValueRef> = Vec::with_capacity(self.model.n_params() + 3);
+            for t in &self.params {
+                inputs.push(ValueRef::F32(t));
+            }
+            inputs.push(x.as_ref_value());
+            inputs.push(y.as_ref_value());
+            inputs.push(ValueRef::I32 { data: &n_eval, shape: &n_shape });
+            let out = self.rt.execute_refs(&artifact, &inputs)?;
+            let loss = out[0].scalar_f64();
+            let metrics = out[1].as_tensor().data().to_vec();
+            acc.add(loss, &metrics);
+        }
+        let (primary, metric_name) = match self.eval_metric {
+            Some("f1") => (acc.f1(), "f1"),
+            Some("mcc") => (acc.mcc(), "mcc"),
+            Some(other) => anyhow::bail!("unknown eval metric {other:?}"),
+            None => match self.model.kind.as_str() {
+                "classify" => (acc.accuracy(), "accuracy"),
+                "regress" => (acc.pearson(), "pearson"),
+                "lm" => (acc.perplexity(), "perplexity"),
+                other => anyhow::bail!("unknown model kind {other:?}"),
+            },
+        };
+        Ok(FinalEval { primary, metric_name, loss: acc.mean_loss() })
+    }
+
+    /// Is a larger primary metric better for this model kind?
+    pub fn higher_is_better(&self) -> bool {
+        self.model.kind != "lm"
+    }
+
+    /// Run the configured number of steps with periodic eval; returns the
+    /// final report. Alg. 1's final line (mask the weights for inference)
+    /// is realized by the eval artifact's mask application.
+    pub fn run(&mut self) -> anyhow::Result<Report> {
+        let t0 = std::time::Instant::now();
+        let mut train_secs = 0.0;
+        let mut best: Option<f64> = None;
+        while self.t < self.cfg.steps {
+            let s0 = std::time::Instant::now();
+            self.step()?;
+            train_secs += s0.elapsed().as_secs_f64();
+            if self.t % self.cfg.eval_every == 0 || self.t == self.cfg.steps {
+                let ev = self.evaluate()?;
+                self.trace.push_eval(self.t, ev.primary);
+                best = Some(match best {
+                    None => ev.primary,
+                    Some(b) => {
+                        if self.higher_is_better() {
+                            b.max(ev.primary)
+                        } else {
+                            b.min(ev.primary)
+                        }
+                    }
+                });
+            }
+        }
+        let final_eval = self.evaluate()?;
+        let _total = t0.elapsed().as_secs_f64();
+        Ok(Report {
+            run_id: self.cfg.run_id(),
+            best_eval: best.unwrap_or(final_eval.primary),
+            switch_step: self.trace.switch_step,
+            tail_loss: self.trace.tail_loss(20),
+            trace: std::mem::take(&mut self.trace),
+            final_eval,
+            train_secs,
+        })
+    }
+
+    /// Export the final *sparse* inference weights (Π_T ⊙ w_T) on the host —
+    /// used by the checkpoint examples.
+    pub fn sparse_params(&self) -> Vec<Tensor> {
+        let ns = self.n_vec();
+        let mut si = 0;
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                if self.cfg.recipe.is_sparse() && self.model.params[i].2 {
+                    let n = ns[si] as usize;
+                    si += 1;
+                    crate::sparsity::apply_nm(
+                        p,
+                        crate::sparsity::NmRatio::new(n, self.cfg.ratio.m),
+                    )
+                } else {
+                    p.clone()
+                }
+            })
+            .collect()
+    }
+}
+
+/// The paper-mapped default dataset for each model key (DESIGN.md §4).
+pub fn default_dataset(
+    key: &str,
+    model: &ModelInfo,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Dataset>> {
+    let ds: Box<dyn Dataset> = match key {
+        "mlp_cf10" => Box::new(CifarLike::cifar10_analog(seed)),
+        "cnn_cf100" => Box::new(CifarLike::cifar100_analog(seed)),
+        "mlp_pallas" => Box::new(CifarLike::new(10, model.in_dim(), 0.8, 256, seed)),
+        "enc_glue2" => Box::new(GlueTask::new("sst2", TaskKind::Binary, 512, 32, 512, 0.06, seed)),
+        "enc_glue3" => Box::new(GlueTask::new(
+            "mnli_m",
+            TaskKind::ThreeWay,
+            512,
+            32,
+            512,
+            0.10,
+            seed,
+        )),
+        "enc_stsb" => Box::new(GlueTask::new(
+            "stsb",
+            TaskKind::Regression,
+            512,
+            32,
+            512,
+            0.15,
+            seed,
+        )),
+        "lm_wiki" => Box::new(SyntheticCorpus::wikitext2_analog(256, 64, seed)),
+        "lm_e2e" => Box::new(SyntheticCorpus::new(256, 128, 400_000, 30_000, seed)),
+        "lm_wmt" => Box::new(TranslatePairs::wmt_analog(seed)),
+        other => anyhow::bail!("no default dataset for model {other:?}"),
+    };
+    Ok(ds)
+}

@@ -1,0 +1,125 @@
+//! The sweep engine: run a grid of (config × seed), aggregate across seeds,
+//! and sink rows to `results/*.jsonl`. Every table/figure bench is a sweep.
+
+use super::session::{Report, Session};
+use crate::config::ExperimentConfig;
+use crate::runtime::Runtime;
+use crate::telemetry::{JsonlSink, Summary};
+use crate::util::json::{Json, JsonObj};
+
+/// One aggregated sweep cell.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub label: String,
+    /// Per-seed primary metrics.
+    pub values: Vec<f64>,
+    pub summary: Summary,
+    /// Per-seed switch steps (0 where not applicable).
+    pub switch_steps: Vec<usize>,
+    pub reports: Vec<Report>,
+}
+
+/// Runs experiment grids against one [`Runtime`].
+pub struct Sweep<'rt> {
+    rt: &'rt Runtime,
+    sink: Option<JsonlSink>,
+    /// Progress printing.
+    pub verbose: bool,
+}
+
+impl<'rt> Sweep<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Self { rt, sink: None, verbose: true }
+    }
+
+    pub fn with_sink(mut self, path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        self.sink = Some(JsonlSink::create(path)?);
+        Ok(self)
+    }
+
+    /// Run `cfg` across `seeds`, aggregating the final primary metric.
+    pub fn run_seeds(&self, label: &str, cfg: &ExperimentConfig, seeds: &[u64])
+        -> anyhow::Result<SweepRow> {
+        self.run_seeds_with(label, cfg, seeds, |_s| Ok(()))
+    }
+
+    /// Like [`run_seeds`], with a per-session customization hook (layer-wise
+    /// N override, dataset swap, …) applied before the run starts.
+    pub fn run_seeds_with(
+        &self,
+        label: &str,
+        cfg: &ExperimentConfig,
+        seeds: &[u64],
+        customize: impl Fn(&mut Session) -> anyhow::Result<()>,
+    ) -> anyhow::Result<SweepRow> {
+        let mut values = Vec::with_capacity(seeds.len());
+        let mut switch_steps = Vec::with_capacity(seeds.len());
+        let mut reports = Vec::with_capacity(seeds.len());
+        for &seed in seeds {
+            let mut cfg = cfg.clone();
+            cfg.seed = seed;
+            let mut session = Session::new(self.rt, &cfg)?;
+            customize(&mut session)?;
+            let report = session.run()?;
+            if self.verbose {
+                eprintln!(
+                    "[sweep] {label} seed={seed}: {}={:.4} (switch@{}, {:.1}s)",
+                    report.final_eval.metric_name,
+                    report.final_eval.primary,
+                    report.switch_step,
+                    report.train_secs
+                );
+            }
+            if let Some(sink) = &self.sink {
+                sink.append(&report_row(label, &cfg, &report))?;
+            }
+            values.push(report.final_eval.primary);
+            switch_steps.push(report.switch_step);
+            reports.push(report);
+        }
+        Ok(SweepRow {
+            label: label.to_string(),
+            summary: Summary::of(&values),
+            values,
+            switch_steps,
+            reports,
+        })
+    }
+}
+
+fn report_row(label: &str, cfg: &ExperimentConfig, r: &Report) -> JsonObj {
+    let mut row = JsonObj::new();
+    row.insert("label", Json::Str(label.to_string()));
+    row.insert("run_id", Json::Str(r.run_id.clone()));
+    row.insert("model", Json::Str(cfg.model.clone()));
+    row.insert("recipe", Json::Str(cfg.recipe.name().to_string()));
+    row.insert("sparsity", Json::Str(cfg.ratio.to_string()));
+    row.insert("seed", Json::Num(cfg.seed as f64));
+    row.insert("steps", Json::Num(cfg.steps as f64));
+    row.insert("metric", Json::Str(r.final_eval.metric_name.to_string()));
+    row.insert("value", Json::Num(r.final_eval.primary));
+    row.insert("best", Json::Num(r.best_eval));
+    row.insert("eval_loss", Json::Num(r.final_eval.loss));
+    row.insert("tail_train_loss", Json::Num(r.tail_loss));
+    row.insert("switch_step", Json::Num(r.switch_step as f64));
+    row.insert("train_secs", Json::Num(r.train_secs));
+    row
+}
+
+/// Format a `label → mean ± std (n)` block for stdout tables.
+pub fn format_rows(rows: &[SweepRow]) -> String {
+    let mut out = String::new();
+    let width = rows.iter().map(|r| r.label.len()).max().unwrap_or(8).max(8);
+    for r in rows {
+        out.push_str(&format!(
+            "{:<width$}  {:>9.4} ± {:>7.4}  (n={}, median {:.4})\n",
+            r.label,
+            r.summary.mean,
+            r.summary.std,
+            r.summary.n,
+            r.summary.median,
+            width = width
+        ));
+    }
+    out
+}

@@ -1,0 +1,163 @@
+//! WMT analog: synthetic "translation" pairs formatted decoder-only,
+//! `[BOS, src…, SEP, tgt…]`, where the target is a fixed random token
+//! mapping of the (reversed) source — a reversible structure a small causal
+//! LM can learn, exercising the seq2seq-style loss the Fig. 6 decaying-mask
+//! ablation trains on.
+
+use super::{Batch, BatchX, BatchY, Dataset};
+use crate::rng::{Pcg64, Zipf};
+
+/// The synthetic translation dataset.
+#[derive(Debug, Clone)]
+pub struct TranslatePairs {
+    pub vocab: usize,
+    /// Full formatted sequence length (src + sep + tgt fits exactly).
+    pub seq: usize,
+    /// Token mapping ("dictionary") from source to target symbols.
+    mapping: Vec<i32>,
+    seed: u64,
+    eval: Vec<Vec<i32>>,
+}
+
+const BOS: i32 = 0;
+const SEP: i32 = 1;
+/// Source symbols live in [2, vocab/2); targets in [vocab/2, vocab).
+impl TranslatePairs {
+    pub fn new(vocab: usize, seq: usize, n_eval: usize, seed: u64) -> Self {
+        assert!(vocab >= 8 && seq >= 6 && seq % 2 == 0);
+        let half = vocab / 2;
+        let mut rng = Pcg64::with_stream(seed, 0x7A61);
+        // bijective mapping src-symbol -> tgt-symbol
+        let perm = rng.permutation(half - 2);
+        let mapping: Vec<i32> = perm.iter().map(|&p| (half + 2 + p).min(vocab - 1) as i32).collect();
+        let mut me = Self { vocab, seq, mapping, seed, eval: Vec::new() };
+        let mut erng = Pcg64::with_stream(seed, 0xE7A3);
+        me.eval = (0..n_eval).map(|_| me.draw(&mut erng)).collect();
+        me
+    }
+
+    /// WMT17-like config for the `lm_wmt` model (vocab 128, seq 48).
+    pub fn wmt_analog(seed: u64) -> Self {
+        Self::new(128, 48, 512, seed)
+    }
+
+    fn draw(&self, rng: &mut Pcg64) -> Vec<i32> {
+        let half = self.vocab / 2;
+        let src_len = (self.seq - 2) / 2;
+        let zipf = Zipf::new(half - 2, 1.05);
+        let src: Vec<i32> = (0..src_len).map(|_| 2 + zipf.sample(rng) as i32).collect();
+        let mut toks = Vec::with_capacity(self.seq);
+        toks.push(BOS);
+        toks.extend(&src);
+        toks.push(SEP);
+        // target: mapped source, reversed (forces attention, not copying)
+        for &s in src.iter().rev() {
+            toks.push(self.mapping[(s - 2) as usize]);
+        }
+        debug_assert_eq!(toks.len(), self.seq);
+        toks
+    }
+}
+
+impl Dataset for TranslatePairs {
+    fn train_batch(&self, step: usize, batch: usize) -> Batch {
+        let mut rng = Pcg64::with_stream(self.seed ^ 0x7A18, step as u64);
+        let mut xs = Vec::with_capacity(batch * self.seq);
+        let mut ys = Vec::with_capacity(batch * self.seq);
+        for _ in 0..batch {
+            let toks = self.draw(&mut rng);
+            xs.extend(&toks[..self.seq]);
+            // next-token targets; last position predicts BOS (ignored noise)
+            ys.extend(&toks[1..]);
+            ys.push(BOS);
+        }
+        Batch {
+            x: BatchX::Tokens { ids: xs, batch, seq: self.seq },
+            y: BatchY::Tokens { ids: ys, batch, seq: self.seq },
+        }
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + batch <= self.eval.len() {
+            let mut xs = Vec::with_capacity(batch * self.seq);
+            let mut ys = Vec::with_capacity(batch * self.seq);
+            for toks in &self.eval[i..i + batch] {
+                xs.extend(&toks[..self.seq]);
+                ys.extend(&toks[1..]);
+                ys.push(BOS);
+            }
+            out.push(Batch {
+                x: BatchX::Tokens { ids: xs, batch, seq: self.seq },
+                y: BatchY::Tokens { ids: ys, batch, seq: self.seq },
+            });
+            i += batch;
+        }
+        out
+    }
+
+    fn kind(&self) -> &'static str {
+        "lm"
+    }
+
+    fn name(&self) -> String {
+        "wmt_like".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_is_bos_src_sep_tgt() {
+        let d = TranslatePairs::new(64, 12, 16, 1);
+        let toks = d.draw(&mut Pcg64::new(0));
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks[6], SEP); // src_len = 5, so SEP at index 6
+        // src in [2, 32); tgt in [32, 64)
+        for &t in &toks[1..6] {
+            assert!((2..32).contains(&t), "{toks:?}");
+        }
+        for &t in &toks[7..] {
+            assert!((32..64).contains(&t), "{toks:?}");
+        }
+    }
+
+    #[test]
+    fn mapping_is_deterministic_function() {
+        let d = TranslatePairs::new(64, 12, 16, 1);
+        // same source symbol always maps to the same target symbol
+        let a = d.mapping[3];
+        let b = d.mapping[3];
+        assert_eq!(a, b);
+        let d2 = TranslatePairs::new(64, 12, 16, 1);
+        assert_eq!(d.mapping, d2.mapping);
+    }
+
+    #[test]
+    fn target_is_reversed_mapped_source() {
+        let d = TranslatePairs::new(64, 12, 16, 2);
+        let toks = d.draw(&mut Pcg64::new(7));
+        let src = &toks[1..6];
+        let tgt = &toks[7..12];
+        for (i, &s) in src.iter().enumerate() {
+            assert_eq!(tgt[4 - i], d.mapping[(s - 2) as usize]);
+        }
+    }
+
+    #[test]
+    fn batches_shift_targets() {
+        let d = TranslatePairs::new(64, 12, 16, 3);
+        let b = d.train_batch(0, 2);
+        let (BatchX::Tokens { ids: x, .. }, BatchY::Tokens { ids: y, .. }) = (&b.x, &b.y) else {
+            panic!()
+        };
+        for row in 0..2 {
+            for i in 0..11 {
+                assert_eq!(y[row * 12 + i], x[row * 12 + i + 1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Shared plumbing for the table/figure experiments: run profiles
+//! (quick/default/full), result directories, and the paper-vs-measured
+//! report printer.
+
+use step_nm::config::{ExperimentConfig, RecipeKind};
+use step_nm::runtime::Runtime;
+use step_nm::telemetry::write_csv;
+
+/// How much compute an experiment spends. `quick` is CI-sized; `full`
+/// approaches the paper's budgets (hours on this CPU substrate).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub steps: usize,
+    pub seeds: Vec<u64>,
+    pub eval_every: usize,
+    pub full: bool,
+    pub out_dir: String,
+}
+
+impl Profile {
+    pub fn from_flags(flags: &crate::Flags) -> anyhow::Result<Self> {
+        let full = flags.has("full");
+        let quick = flags.has("quick") || !full;
+        let n_seeds: usize = flags
+            .get_parse::<usize>("seeds")?
+            .unwrap_or(if full { 5 } else { 2 });
+        let steps = flags
+            .get_parse::<usize>("steps")?
+            .unwrap_or(if quick { 300 } else { 1200 });
+        Ok(Self {
+            steps,
+            seeds: (0..n_seeds as u64).collect(),
+            eval_every: (steps / 6).max(1),
+            full,
+            out_dir: flags.get("out").unwrap_or("results").to_string(),
+        })
+    }
+
+    /// Scale the step budget (tasks with different natural lengths).
+    pub fn steps_scaled(&self, factor: f64) -> usize {
+        ((self.steps as f64 * factor) as usize).max(20)
+    }
+
+    pub fn csv_path(&self, name: &str) -> String {
+        format!("{}/{name}.csv", self.out_dir)
+    }
+
+    pub fn jsonl_path(&self, name: &str) -> String {
+        format!("{}/{name}.jsonl", self.out_dir)
+    }
+}
+
+/// A baseline experiment config for a model at this profile.
+///
+/// The Adam learning rate follows the paper's CIFAR grid winner (1e-4, §6);
+/// the LM/GLUE experiments override to their fine-tuning values. This is the
+/// regime where the Fig-1 gap reproduces: at a fixed budget, SR-STE's noisy
+/// variance slows Adam enough to leave accuracy on the table.
+pub fn base_cfg(model: &str, profile: &Profile) -> ExperimentConfig {
+    ExperimentConfig::builder(model)
+        .steps(profile.steps)
+        .eval_every(profile.eval_every)
+        .eval_batches(6)
+        .lr(1e-4)
+        .build()
+}
+
+/// The momentum-SGD learning rate paired with [`base_cfg`] (Fig 1 arms).
+pub const SGDM_LR: f32 = 0.1;
+
+/// Pretty paper-vs-measured block.
+pub struct PaperTable {
+    pub title: String,
+    rows: Vec<(String, String, String)>,
+}
+
+impl PaperTable {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, label: &str, paper: impl std::fmt::Display, ours: impl std::fmt::Display) {
+        self.rows.push((label.to_string(), paper.to_string(), ours.to_string()));
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let w = self
+            .rows
+            .iter()
+            .map(|(l, _, _)| l.len())
+            .max()
+            .unwrap_or(10)
+            .max(10);
+        println!("{:<w$}  {:>18}  {:>18}", "", "paper", "measured", w = w);
+        for (l, p, o) in &self.rows {
+            println!("{l:<w$}  {p:>18}  {o:>18}", w = w);
+        }
+    }
+}
+
+/// Write eval curves (step, metric per column) for plotting a figure.
+pub fn write_curves(
+    path: &str,
+    labels: &[&str],
+    curves: &[Vec<(usize, f64)>],
+) -> anyhow::Result<()> {
+    assert_eq!(labels.len(), curves.len());
+    // align on the union of steps; missing points carried forward
+    let mut steps: Vec<usize> = curves.iter().flatten().map(|(s, _)| *s).collect();
+    steps.sort_unstable();
+    steps.dedup();
+    let mut rows = Vec::new();
+    for &s in &steps {
+        let mut row = vec![s as f64];
+        for c in curves {
+            let v = c
+                .iter()
+                .take_while(|(cs, _)| *cs <= s)
+                .last()
+                .map(|(_, v)| *v)
+                .unwrap_or(f64::NAN);
+            row.push(v);
+        }
+        rows.push(row);
+    }
+    let mut header = vec!["step"];
+    header.extend_from_slice(labels);
+    write_csv(path, &header, &rows)?;
+    println!("[csv] wrote {path}");
+    Ok(())
+}
+
+/// Construct the runtime once per bench invocation.
+pub fn runtime(flags: &crate::Flags) -> anyhow::Result<Runtime> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    Runtime::from_dir(dir)
+}
+
+/// The four headline recipes of Figs 4–5.
+pub fn headline_recipes() -> [(&'static str, RecipeKind); 4] {
+    [
+        ("dense", RecipeKind::Dense),
+        ("asp", RecipeKind::Asp),
+        ("srste", RecipeKind::SrSte),
+        ("step", RecipeKind::Step),
+    ]
+}

@@ -1,0 +1,54 @@
+//! Figure 4 — STEP closes the gap of ASP and SR-STE to dense (1:4, Adam).
+//!
+//! Expected ordering of final accuracy: dense ≈ STEP > SR-STE > ASP.
+//! (During STEP's precondition phase the model is *evaluated with masks*,
+//! so its curve starts low and jumps after the switch — same as the paper.)
+
+use super::common::{base_cfg, headline_recipes, write_curves, PaperTable, Profile};
+use step_nm::coordinator::Sweep;
+use step_nm::runtime::Runtime;
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let models: Vec<&str> = if profile.full {
+        vec!["mlp_cf10", "cnn_cf100"]
+    } else {
+        vec!["mlp_cf10"]
+    };
+    let mut table = PaperTable::new("Fig 4: STEP vs ASP vs SR-STE vs dense (1:4, Adam)");
+    for model in &models {
+        let sweep = Sweep::new(rt).with_sink(profile.jsonl_path("fig4"))?;
+        let mut finals = std::collections::BTreeMap::new();
+        let mut labels = Vec::new();
+        let mut curves = Vec::new();
+        let mut switch = 0usize;
+        for (name, recipe) in headline_recipes() {
+            let mut cfg = base_cfg(model, profile);
+            cfg.recipe = recipe;
+            cfg.ratio = "1:4".parse()?;
+            let row = sweep.run_seeds(&format!("fig4/{model}/{name}"), &cfg, &profile.seeds)?;
+            finals.insert(name, row.summary.mean);
+            if name == "step" {
+                switch = row.switch_steps[0];
+            }
+            labels.push(name);
+            curves.push(row.reports[0].trace.evals.clone());
+        }
+        write_curves(&profile.csv_path(&format!("fig4_{model}")), &labels, &curves)?;
+        let f = |n: &str| finals[n] * 100.0;
+        table.row(
+            &format!("{model} dense/step/srste/asp"),
+            "d ≈ step > srste > asp",
+            format!("{:.1}/{:.1}/{:.1}/{:.1}%", f("dense"), f("step"), f("srste"), f("asp")),
+        );
+        table.row(
+            &format!("{model} STEP closes gap"),
+            "yes",
+            format!(
+                "{} (switch@{switch})",
+                finals["step"] >= finals["srste"] && finals["step"] >= finals["asp"]
+            ),
+        );
+    }
+    table.print();
+    Ok(())
+}

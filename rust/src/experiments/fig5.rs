@@ -1,0 +1,78 @@
+//! Figure 5 — robustness to aggressive ratios: STEP holds near-dense
+//! accuracy up to 1:16 while SR-STE/ASP degrade from 1:8.
+
+use super::common::{base_cfg, PaperTable, Profile};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::Sweep;
+use step_nm::runtime::Runtime;
+use step_nm::telemetry::write_csv;
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let model = "mlp_cf10";
+    let ratios = ["1:4", "1:8", "1:16"];
+    let recipes = [
+        ("srste", RecipeKind::SrSte),
+        ("asp", RecipeKind::Asp),
+        ("step", RecipeKind::Step),
+    ];
+    let sweep = Sweep::new(rt).with_sink(profile.jsonl_path("fig5"))?;
+
+    // dense reference (no mask)
+    let mut dense_cfg = base_cfg(model, profile);
+    dense_cfg.recipe = RecipeKind::Dense;
+    let dense = sweep
+        .run_seeds("fig5/dense", &dense_cfg, &profile.seeds)?
+        .summary
+        .mean;
+
+    let mut rows = Vec::new();
+    let mut grid = std::collections::BTreeMap::new();
+    for ratio in ratios {
+        for (name, recipe) in recipes {
+            let mut cfg = base_cfg(model, profile);
+            cfg.recipe = recipe;
+            cfg.ratio = ratio.parse()?;
+            let row =
+                sweep.run_seeds(&format!("fig5/{name}/{ratio}"), &cfg, &profile.seeds)?;
+            grid.insert((ratio, name), row.summary.mean);
+            let r: step_nm::sparsity::NmRatio = ratio.parse()?;
+            rows.push(vec![
+                r.m as f64,
+                match name {
+                    "srste" => 0.0,
+                    "asp" => 1.0,
+                    _ => 2.0,
+                },
+                row.summary.mean,
+            ]);
+        }
+    }
+    write_csv(
+        &profile.csv_path("fig5_aggressive"),
+        &["m", "recipe(0=srste,1=asp,2=step)", "final"],
+        &rows,
+    )?;
+
+    let mut table = PaperTable::new("Fig 5: aggressive sparsity (dense ref included)");
+    table.row("dense reference", "—", format!("{:.1}%", dense * 100.0));
+    for ratio in ratios {
+        table.row(
+            &format!("{ratio} srste/asp/step"),
+            "step degrades least",
+            format!(
+                "{:.1}/{:.1}/{:.1}%",
+                grid[&(ratio, "srste")] * 100.0,
+                grid[&(ratio, "asp")] * 100.0,
+                grid[&(ratio, "step")] * 100.0
+            ),
+        );
+    }
+    let robust16 = dense - grid[&("1:16", "step")];
+    table.row(
+        "STEP drop at 1:16 vs dense",
+        "negligible",
+        format!("{:+.2}%", 100.0 * robust16),
+    );
+    table.print();
+    Ok(())
+}

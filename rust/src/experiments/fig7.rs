@@ -1,0 +1,68 @@
+//! Figure 7 — precondition-length ablation: STEP hits dense-level accuracy
+//! for switch points anywhere between ~10% and ~80% of training; AutoSwitch
+//! lands in that flat region.
+
+use super::common::{base_cfg, PaperTable, Profile};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::Sweep;
+use step_nm::runtime::Runtime;
+use step_nm::telemetry::write_csv;
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let model = "mlp_cf10";
+    let fractions = if profile.full {
+        vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+    } else {
+        vec![0.1, 0.3, 0.5, 0.7]
+    };
+    let sweep = Sweep::new(rt).with_sink(profile.jsonl_path("fig7"))?;
+    let mut rows = Vec::new();
+    let mut accs = Vec::new();
+    for &frac in &fractions {
+        let mut cfg = base_cfg(model, profile);
+        cfg.recipe = RecipeKind::Step;
+        cfg.ratio = "1:4".parse()?;
+        cfg.autoswitch.fixed_step = Some(((profile.steps as f64) * frac) as usize);
+        let row = sweep.run_seeds(&format!("fig7/switch{:.0}%", frac * 100.0), &cfg,
+            &profile.seeds)?;
+        rows.push(vec![frac, row.summary.mean]);
+        accs.push(row.summary.mean);
+    }
+    // the AutoSwitch-decided run for the marker
+    let mut cfg = base_cfg(model, profile);
+    cfg.recipe = RecipeKind::Step;
+    cfg.ratio = "1:4".parse()?;
+    let auto = sweep.run_seeds("fig7/autoswitch", &cfg, &profile.seeds)?;
+    let auto_frac = auto.switch_steps[0] as f64 / profile.steps as f64;
+    rows.push(vec![auto_frac, auto.summary.mean]);
+    write_csv(&profile.csv_path("fig7_switch_sweep"), &["switch_frac", "final_acc"], &rows)?;
+
+    let spread = accs
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max)
+        - accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut table = PaperTable::new("Fig 7: switch-point flexibility (final acc vs switch ratio)");
+    table.row(
+        "acc per switch fraction",
+        "flat 10–80%",
+        fractions
+            .iter()
+            .zip(&accs)
+            .map(|(f, a)| format!("{:.0}%→{:.1}", f * 100.0, a * 100.0))
+            .collect::<Vec<_>>()
+            .join(" "),
+    );
+    table.row(
+        "acc spread across the sweep",
+        "small",
+        format!("{:.2}% pts", spread * 100.0),
+    );
+    table.row(
+        "autoswitch lands in flat region",
+        "≈ 20%",
+        format!("{:.0}% (acc {:.1}%)", auto_frac * 100.0, auto.summary.mean * 100.0),
+    );
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Figure 8 — why freeze the variance: letting v keep updating from masked
+//! gradients during phase 2 hurts final accuracy.
+
+use super::common::{base_cfg, write_curves, PaperTable, Profile};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::Sweep;
+use step_nm::runtime::Runtime;
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let models: Vec<&str> = if profile.full {
+        vec!["mlp_cf10", "cnn_cf100"]
+    } else {
+        vec!["mlp_cf10"]
+    };
+    let mut table = PaperTable::new("Fig 8: frozen v* vs updated v in the mask-learning phase");
+    for model in &models {
+        let sweep = Sweep::new(rt).with_sink(profile.jsonl_path("fig8"))?;
+        let mut finals = std::collections::BTreeMap::new();
+        let mut labels = Vec::new();
+        let mut curves = Vec::new();
+        for (name, recipe) in [
+            ("step_frozen", RecipeKind::Step),
+            ("step_v_updated", RecipeKind::StepVarianceUpdated),
+        ] {
+            let mut cfg = base_cfg(model, profile);
+            cfg.recipe = recipe;
+            cfg.ratio = "1:4".parse()?;
+            // same switch point for a paired comparison
+            cfg.autoswitch.fixed_step = Some(profile.steps / 4);
+            let row = sweep.run_seeds(&format!("fig8/{model}/{name}"), &cfg, &profile.seeds)?;
+            finals.insert(name, row.summary.mean);
+            labels.push(name);
+            curves.push(row.reports[0].trace.evals.clone());
+        }
+        write_curves(&profile.csv_path(&format!("fig8_{model}")), &labels, &curves)?;
+        table.row(
+            &format!("{model} frozen vs updated"),
+            "frozen better",
+            format!(
+                "{:.1}% vs {:.1}% ({})",
+                finals["step_frozen"] * 100.0,
+                finals["step_v_updated"] * 100.0,
+                finals["step_frozen"] >= finals["step_v_updated"]
+            ),
+        );
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! `step-nm bench` — regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §3 maps experiment ids to modules).
+//!
+//! Each experiment prints a paper-vs-measured block, writes curve CSVs and
+//! per-run JSONL rows under `results/`, and returns an error only on
+//! infrastructure failure (a *numerical* mismatch is reported, not fatal —
+//! the substrate is a synthetic simulator, the reproduction target is the
+//! qualitative shape; see EXPERIMENTS.md).
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod perf;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::parse_flags;
+
+pub fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let which = flags
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let profile = common::Profile::from_flags(&flags)?;
+    step_nm::util::ensure_dir(std::path::Path::new(&profile.out_dir))?;
+    let rt = common::runtime(&flags)?;
+    println!(
+        "[bench] {which} profile: steps={} seeds={} full={} out={}",
+        profile.steps,
+        profile.seeds.len(),
+        profile.full,
+        profile.out_dir
+    );
+    let t0 = std::time::Instant::now();
+    match which {
+        "fig1" => fig1::run(&rt, &profile)?,
+        "fig2" => fig2::run(&rt, &profile)?,
+        "fig3" => fig3::run(&rt, &profile)?,
+        "fig4" => fig4::run(&rt, &profile)?,
+        "fig5" => fig5::run(&rt, &profile)?,
+        "fig6" => fig6::run(&rt, &profile)?,
+        "fig7" => fig7::run(&rt, &profile)?,
+        "fig8" => fig8::run(&rt, &profile)?,
+        "table1" => table1::run(&rt, &profile)?,
+        "table2" => table2::run(&rt, &profile)?,
+        "table3" => table3::run(&rt, &profile)?,
+        "table4" => table4::run(&rt, &profile)?,
+        "perf" => perf::run(&rt, &profile)?,
+        "all" => {
+            fig1::run(&rt, &profile)?;
+            fig2::run(&rt, &profile)?;
+            fig3::run(&rt, &profile)?;
+            fig4::run(&rt, &profile)?;
+            fig5::run(&rt, &profile)?;
+            fig6::run(&rt, &profile)?;
+            fig7::run(&rt, &profile)?;
+            fig8::run(&rt, &profile)?;
+            table1::run(&rt, &profile)?;
+            table2::run(&rt, &profile)?;
+            table3::run(&rt, &profile)?;
+            table4::run(&rt, &profile)?;
+            perf::run(&rt, &profile)?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (want fig1..fig8, table1..table4, perf, all)"
+        ),
+    }
+    println!("[bench] {which} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

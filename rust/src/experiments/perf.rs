@@ -1,0 +1,95 @@
+//! `step-nm bench perf` — the whole-stack profiling pass (EXPERIMENTS.md
+//! §Perf): L3 substrate kernels, PJRT per-artifact step latency, coordinator
+//! overhead, and throughput accounting.
+
+use super::common::{base_cfg, Profile};
+use step_nm::bench::{print_header, Harness};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::Session;
+use step_nm::rng::Pcg64;
+use step_nm::runtime::Runtime;
+use step_nm::sparsity::{nm_mask_into, NmRatio};
+use step_nm::tensor::{matmul, Tensor};
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let h = Harness::default();
+    let hq = Harness::quick();
+    let mut rng = Pcg64::new(7);
+
+    // ---- L3 substrate kernels ------------------------------------------
+    print_header("L3 substrate kernels (pure Rust)");
+    let w = Tensor::randn(&[512, 512], &mut rng, 0.0, 1.0);
+    let mut mask = Tensor::zeros(&[512, 512]);
+    for m in [4usize, 16] {
+        let r = h.run(&format!("nm_mask 512x512 2:{m}"), || {
+            nm_mask_into(&w, NmRatio::new(2.min(m), m), &mut mask);
+        });
+        println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+    }
+    let a = Tensor::randn(&[128, 768], &mut rng, 0.0, 1.0);
+    let b = Tensor::randn(&[768, 512], &mut rng, 0.0, 1.0);
+    let r = h.run("matmul 128x768x512", || matmul(&a, &b));
+    let flops = 2.0 * 128.0 * 768.0 * 512.0;
+    println!("{}  ({:.2} GFLOP/s)", r.row(), flops / r.mean() / 1e9);
+
+    let mut wm = w.clone();
+    let mut mm = Tensor::zeros(&[512, 512]);
+    let mut vm = Tensor::zeros(&[512, 512]);
+    let g = Tensor::randn(&[512, 512], &mut rng, 0.0, 0.1);
+    let r = h.run("adam_update 512x512 fused", || {
+        step_nm::optim::adam_update(&mut wm, &mut mm, &mut vm, &g, 10, 1e-3,
+            step_nm::optim::AdamHp::default());
+    });
+    println!("{}  ({:.1} Melem/s)", r.row(), 512.0 * 512.0 / r.mean() / 1e6);
+
+    // ---- PJRT step latency per artifact ---------------------------------
+    print_header("PJRT step latency (mlp_cf10, batch 128)");
+    for (label, recipe) in [
+        ("dense_adam", RecipeKind::Dense),
+        ("srste_adam 1:4", RecipeKind::SrSte),
+        ("step phase2 1:4", RecipeKind::Step),
+    ] {
+        let mut cfg = base_cfg("mlp_cf10", profile);
+        cfg.recipe = recipe;
+        cfg.ratio = "1:4".parse()?;
+        cfg.autoswitch.fixed_step = Some(1); // STEP: enter phase 2 immediately
+        let mut session = Session::new(rt, &cfg)?;
+        session.step()?; // warm the executable cache + phase switch
+        session.step()?;
+        rt.reset_stats();
+        let r = hq.run(label, || session.step().unwrap());
+        let st = rt.stats();
+        let overhead = 1.0 - st.execute_secs / (st.execute_secs + st.convert_secs).max(1e-12);
+        println!(
+            "{}  (coordinator+convert overhead {:.1}%)",
+            r.row(),
+            100.0 * overhead
+        );
+    }
+
+    // ---- end-to-end throughput ------------------------------------------
+    print_header("end-to-end training throughput");
+    let mut cfg = base_cfg("mlp_cf10", profile);
+    cfg.recipe = RecipeKind::Step;
+    cfg.ratio = "2:4".parse()?;
+    cfg.steps = 60;
+    cfg.eval_every = 1000;
+    let mut session = Session::new(rt, &cfg)?;
+    rt.reset_stats();
+    let t0 = std::time::Instant::now();
+    let report = session.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let st = rt.stats();
+    let examples = (cfg.batch * 60) as f64;
+    println!(
+        "step recipe, 60 steps: {:.2}s wall  {:.0} ex/s  execute {:.2}s  convert {:.2}s  \
+         host-side {:.1}%  (train_secs {:.2})",
+        wall,
+        examples / wall,
+        st.execute_secs,
+        st.convert_secs,
+        100.0 * (wall - st.execute_secs) / wall,
+        report.train_secs,
+    );
+    Ok(())
+}

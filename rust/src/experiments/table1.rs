@@ -1,0 +1,84 @@
+//! Table 1 — AutoSwitch vs the Eq-(10) relative-norm and Eq-(11) staleness
+//! baselines: run dense Adam, record the variance-telemetry trace, let each
+//! policy pick a switch point t₀ offline, and score the *post-switch
+//! stability* `H⁻¹ Σ_{t=t₀..t₀+H} ‖v_{t+1} − v_t‖₁` (lower = the frozen
+//! precondition stays truer). Averaged over seeds.
+
+use super::common::{base_cfg, PaperTable, Profile};
+use step_nm::autoswitch::{
+    find_switch_point, post_switch_stability, AutoSwitch, RelativeNormPolicy, StalenessPolicy,
+    SwitchPolicy, SwitchStat, ZOption,
+};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::Session;
+use step_nm::runtime::Runtime;
+use step_nm::telemetry::Summary;
+use step_nm::util::fmt_sci;
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    // Paper rows: ResNet18/CF10, DenseNet121/CF100, BERT-Large. Analogs:
+    let tasks: Vec<&str> = if profile.full {
+        vec!["mlp_cf10", "cnn_cf100", "enc_glue2"]
+    } else {
+        vec!["mlp_cf10", "enc_glue2"]
+    };
+    let horizon = (profile.steps / 3).max(20); // paper uses 1k of much longer runs
+    let mut table = PaperTable::new(
+        "Table 1: post-switch variance stability (lower = better precondition)",
+    );
+    for task in &tasks {
+        let mut per_policy: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for &seed in &profile.seeds {
+            let mut cfg = base_cfg(task, profile);
+            cfg.recipe = RecipeKind::Dense;
+            cfg.seed = seed;
+            cfg.eval_every = cfg.steps + 1; // telemetry-only run, skip evals
+            let mut session = Session::new(rt, &cfg)?;
+            let d = session.model_info().dim;
+            let report = session.run()?;
+            let trace: Vec<SwitchStat> =
+                report.trace.points.iter().map(|p| p.stat).collect();
+
+            let mut policies: Vec<Box<dyn SwitchPolicy>> = vec![
+                Box::new(RelativeNormPolicy::new()),
+                Box::new(StalenessPolicy::new(cfg.hp.beta2 as f64)),
+                Box::new(AutoSwitch::new(
+                    d,
+                    cfg.hp.eps as f64,
+                    cfg.hp.beta2 as f64,
+                    ZOption::Arithmetic,
+                )),
+            ];
+            for (i, policy) in policies.iter_mut().enumerate() {
+                // a policy that never fires is charged the trace start
+                // (worst case), matching "no usable switch point"
+                let t0 = find_switch_point(policy.as_mut(), &trace).unwrap_or(1);
+                let score = post_switch_stability(&trace, t0, horizon);
+                if score.is_finite() {
+                    per_policy[i].push(score);
+                }
+            }
+        }
+        let means: Vec<f64> = per_policy
+            .iter()
+            .map(|v| Summary::of(v).mean)
+            .collect();
+        table.row(
+            &format!("{task} Eq10/Eq11/AutoSwitch"),
+            "AS smallest",
+            format!(
+                "{} / {} / {}",
+                fmt_sci(means[0]),
+                fmt_sci(means[1]),
+                fmt_sci(means[2])
+            ),
+        );
+        table.row(
+            &format!("{task} AS wins"),
+            "yes",
+            format!("{}", means[2] <= means[0] && means[2] <= means[1]),
+        );
+    }
+    table.print();
+    Ok(())
+}

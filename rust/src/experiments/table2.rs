@@ -1,0 +1,124 @@
+//! Table 2 — BERT-Base fine-tuning on GLUE (2:4 on all linears).
+//!
+//! The nine GLUE-analog tasks each fine-tune the matching encoder artifact
+//! (2-class / 3-class / regression head) on a tight budget, scored with the
+//! benchmark's own metric (MCC for CoLA-analog, Pearson for STS-B-analog,
+//! F1 for MRPC/QQP-analogs, accuracy elsewhere). Expected ordering of the
+//! average score: Dense ≈ STEP > SR-STE > ASP.
+
+use super::common::{base_cfg, headline_recipes, PaperTable, Profile};
+use step_nm::coordinator::Session;
+use step_nm::data::{GlueSuite, TaskKind};
+use step_nm::runtime::Runtime;
+use step_nm::telemetry::JsonlSink;
+use step_nm::util::json::{Json, JsonObj};
+
+/// Encoder artifact model for each task kind.
+fn model_for(kind: TaskKind) -> &'static str {
+    match kind {
+        TaskKind::ThreeWay => "enc_glue3",
+        TaskKind::Regression => "enc_stsb",
+        _ => "enc_glue2",
+    }
+}
+
+fn metric_override(kind: TaskKind) -> Option<&'static str> {
+    match kind {
+        TaskKind::BinaryF1 => Some("f1"),
+        TaskKind::BinaryMcc => Some("mcc"),
+        _ => None,
+    }
+}
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let suite = GlueSuite::standard(512, 32, 1234);
+    let tasks: Vec<_> = if profile.full {
+        suite.tasks.iter().collect()
+    } else {
+        // quick: a representative subset (acc + f1 + mcc + pearson + 3-way)
+        suite
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.name, "sst2" | "mrpc" | "cola" | "stsb" | "mnli_m"))
+            .collect()
+    };
+    let steps = profile.steps_scaled(if profile.full { 0.5 } else { 0.35 }); // fine-tune budget
+    // encoder steps are ~10× a CIFAR-analog step; cap quick mode at 1 seed
+    let seeds: Vec<u64> = if profile.full {
+        profile.seeds.clone()
+    } else {
+        profile.seeds[..1.min(profile.seeds.len())].to_vec()
+    };
+    let sink = JsonlSink::create(profile.jsonl_path("table2"))?;
+
+    let mut table = PaperTable::new("Table 2: GLUE-analog fine-tuning, 2:4 on all linears");
+    let mut avgs: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for task in &tasks {
+        let mut scores = Vec::new();
+        for (rname, recipe) in headline_recipes() {
+            let mut vals = Vec::new();
+            for &seed in &seeds {
+                let mut cfg = base_cfg(model_for(task.kind), profile);
+                cfg.recipe = recipe;
+                cfg.ratio = "2:4".parse()?;
+                cfg.steps = steps;
+                cfg.eval_every = steps; // final eval only (budget)
+                cfg.seed = seed;
+                cfg.lr = 5e-4;
+                let mut session = Session::new(rt, &cfg)?
+                    .with_dataset(Box::new((*task).clone()))?;
+                if let Some(m) = metric_override(task.kind) {
+                    session = session.with_eval_metric(m);
+                }
+                let report = session.run()?;
+                vals.push(report.final_eval.primary);
+                let mut row = JsonObj::new();
+                row.insert("task", Json::Str(task.name.to_string()));
+                row.insert("recipe", Json::Str(rname.to_string()));
+                row.insert("seed", Json::Num(seed as f64));
+                row.insert("metric", Json::Str(task.kind.metric_name().to_string()));
+                row.insert("value", Json::Num(*vals.last().unwrap()));
+                sink.append(&row)?;
+            }
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            scores.push((rname, mean));
+            avgs.entry(rname).or_default().push(mean);
+            eprintln!(
+                "[table2] {} {rname}: {}={:.3}",
+                task.name,
+                task.kind.metric_name(),
+                mean
+            );
+        }
+        table.row(
+            &format!("{} ({})", task.name, task.kind.metric_name()),
+            "step ≈ dense",
+            scores
+                .iter()
+                .map(|(n, v)| format!("{n}={:.3}", v))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+    }
+    // average score row (paper: dense 81.0, asp 75.8, srste 78.3, step 80.7)
+    let avg =
+        |name: &str| -> f64 { avgs[name].iter().sum::<f64>() / avgs[name].len() as f64 };
+    table.row(
+        "avg dense/asp/srste/step",
+        "81.0/75.8/78.3/80.7",
+        format!(
+            "{:.3}/{:.3}/{:.3}/{:.3}",
+            avg("dense"),
+            avg("asp"),
+            avg("srste"),
+            avg("step")
+        ),
+    );
+    table.row(
+        "ordering holds",
+        "dense ≈ step > srste > asp",
+        format!("{}", avg("step") >= avg("srste") && avg("srste") >= avg("asp")),
+    );
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Table 4 — layer-wise N:M via DominoSearch, with and without STEP.
+//!
+//! Per-layer N over a shared M is assigned by `sparsity::domino_assign` on
+//! the *initial* weights under a global density budget of `4/M` (so the
+//! budget tightens as M grows: 4:8 → 4:16 → 4:32 average, mirroring the
+//! paper's accuracy decline across its Mixed-N:8/16/32 rows). "DS" trains
+//! with SR-STE over the mixed ratios; "DS+STEP" runs the same ratios through
+//! the STEP recipe. STEP must recover most of the DS drop, especially at
+//! aggressive M.
+
+use super::common::{base_cfg, PaperTable, Profile};
+use step_nm::config::RecipeKind;
+use step_nm::coordinator::{Session, Sweep};
+use step_nm::runtime::{Runtime, Value};
+use step_nm::sparsity::{domino_assign, DominoBudget};
+use step_nm::tensor::Tensor;
+
+/// Compute the per-layer N assignment from a fresh init of `model`.
+fn layer_ns(rt: &Runtime, model: &str, m: usize, seed: u64) -> anyhow::Result<Vec<usize>> {
+    let params: Vec<Tensor> = rt
+        .init_params(model, seed as i32)?
+        .into_iter()
+        .map(Value::into_tensor)
+        .collect();
+    let info = rt.registry().model(model)?;
+    let sparse: Vec<&Tensor> = info
+        .sparse_indices
+        .iter()
+        .map(|&i| &params[i])
+        .collect();
+    let budget = DominoBudget::new(m, (4.0 / m as f64).min(1.0));
+    Ok(domino_assign(&sparse, budget).iter().map(|r| r.n).collect())
+}
+
+pub fn run(rt: &Runtime, profile: &Profile) -> anyhow::Result<()> {
+    let models: Vec<&str> = if profile.full {
+        vec!["mlp_cf10", "cnn_cf100"]
+    } else {
+        vec!["mlp_cf10"]
+    };
+    let ms: Vec<usize> = if profile.full { vec![8, 16, 32] } else { vec![8, 32] };
+    let mut table = PaperTable::new("Table 4: DominoSearch layer-wise N:M, DS vs DS+STEP");
+    for model in &models {
+        let sweep = Sweep::new(rt).with_sink(profile.jsonl_path("table4"))?;
+        // dense reference
+        let mut dense_cfg = base_cfg(model, profile);
+        dense_cfg.recipe = RecipeKind::Dense;
+        let dense = sweep
+            .run_seeds(&format!("table4/{model}/dense"), &dense_cfg, &profile.seeds)?
+            .summary
+            .mean;
+        table.row(&format!("{model} dense"), "ref", format!("{:.1}%", dense * 100.0));
+        for &m in &ms {
+            let ns = layer_ns(rt, model, m, 0)?;
+            eprintln!("[table4] {model} M={m}: layer ns = {ns:?}");
+            let mut results = std::collections::BTreeMap::new();
+            for (name, recipe) in
+                [("DS", RecipeKind::SrSte), ("DS+STEP", RecipeKind::Step)]
+            {
+                let mut cfg = base_cfg(model, profile);
+                cfg.recipe = recipe;
+                cfg.ratio = format!("1:{m}").parse()?; // m fixes the artifact; n comes per layer
+                let ns2 = ns.clone();
+                let row = sweep.run_seeds_with(
+                    &format!("table4/{model}/m{m}/{name}"),
+                    &cfg,
+                    &profile.seeds,
+                    move |s: &mut Session| s.set_layer_ns(ns2.clone()),
+                )?;
+                results.insert(name, row.summary.mean);
+            }
+            let ds = results["DS"];
+            let ds_step = results["DS+STEP"];
+            table.row(
+                &format!("{model} Mixed N:{m} DS vs DS+STEP"),
+                "STEP recovers drop",
+                format!(
+                    "{:.1}% vs {:.1}% ({})",
+                    ds * 100.0,
+                    ds_step * 100.0,
+                    ds_step >= ds
+                ),
+            );
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! # step-nm — STEP: Learning N:M Structured Sparsity Masks from Scratch with Precondition
+//!
+//! A full reproduction of the ICML 2023 paper (Lu et al.) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (build time)** — Pallas kernels (`python/compile/kernels/`):
+//!   N:M mask selection, masked matmul, fused optimizer updates. Verified
+//!   against a pure-jnp oracle (`ref.py`) by pytest.
+//! * **Layer 2 (build time)** — JAX model zoo + per-recipe train/eval step
+//!   functions (`python/compile/`), AOT-lowered to HLO text artifacts in
+//!   `artifacts/` with a `manifest.json` describing every input/output.
+//! * **Layer 3 (run time, this crate)** — the Rust coordinator. It owns all
+//!   training state, loads the HLO artifacts through PJRT (the [`runtime`]
+//!   module), and drives the paper's recipes: dense Adam / momentum SGD,
+//!   STE, SR-STE, ASP, Decaying Mask, and **STEP** with the **AutoSwitch**
+//!   phase detector ([`autoswitch`]). Python never runs on the training path.
+//!
+//! The crate additionally contains a *pure-Rust* experiment engine
+//! ([`model`], [`optim`]) used where thousands of steps across many seeds
+//! are needed (e.g. Table 1's switch-point statistics) — it is bit-compared
+//! against the HLO path by the integration tests.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use step_nm::prelude::*;
+//!
+//! // Load the artifact registry produced by `make artifacts`.
+//! let registry = Registry::load("artifacts").unwrap();
+//! let rt = Runtime::new(registry).unwrap();
+//!
+//! // Train the CIFAR-analog MLP with the full STEP recipe.
+//! let cfg = ExperimentConfig::builder("mlp_cf10")
+//!     .recipe(RecipeKind::Step)
+//!     .sparsity(2, 4)
+//!     .steps(2000)
+//!     .build();
+//! let mut session = Session::new(&rt, &cfg).unwrap();
+//! let report = session.run().unwrap();
+//! println!("final eval accuracy = {:.4}", report.final_eval.primary);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
+//! experiment ↔ module map.
+
+pub mod autoswitch;
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod sparsity;
+pub mod telemetry;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
+    pub use crate::config::{ExperimentConfig, RecipeKind};
+    pub use crate::coordinator::{Report, Session, Sweep};
+    pub use crate::data::Dataset;
+    pub use crate::optim::OptimizerKind;
+    pub use crate::rng::Pcg64;
+    pub use crate::runtime::{Registry, Runtime};
+    pub use crate::sparsity::{nm_mask, NmRatio};
+    pub use crate::tensor::Tensor;
+}

@@ -1,0 +1,225 @@
+//! `step-nm` — the experiment launcher.
+//!
+//! ```text
+//! step-nm train --config configs/e2e_lm.toml      # one training run
+//! step-nm train --model mlp_cf10 --recipe step --sparsity 1:4 --steps 800
+//! step-nm bench <fig1|fig2|...|table4|perf|all> [--quick|--full]
+//! step-nm list                                    # artifacts + models
+//! step-nm info                                    # runtime/platform info
+//! ```
+//!
+//! (Hand-rolled argument parsing; the offline image has no clap.)
+
+use step_nm::config::{ExperimentConfig, RecipeKind, TomlDoc};
+use step_nm::coordinator::Session;
+use step_nm::runtime::{Registry, Runtime};
+
+mod experiments;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("bench") => experiments::cmd_bench(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "step-nm — STEP: Learning N:M Structured Sparsity Masks from Scratch \
+         with Precondition (ICML 2023)\n\n\
+         USAGE:\n  step-nm train [--config FILE] [--model KEY] [--recipe R] \
+         [--sparsity N:M]\n                [--steps N] [--batch N] [--lr F] [--lam F] \
+         [--seed N]\n                [--fixed-switch N] [--eval-every N] [--artifacts DIR]\n  \
+         step-nm bench <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|table4|perf|all>\n  \
+         \x20             [--quick|--full] [--seeds N] [--artifacts DIR] [--out DIR]\n  \
+         step-nm list\n  step-nm info\n\n\
+         RECIPES: dense dense_sgdm ste srste srste_sgdm asp step step_v_updated decaying_mask"
+    );
+}
+
+/// Parse `--key value` pairs into a lookup.
+pub fn parse_flags(args: &[String]) -> anyhow::Result<Flags> {
+    let mut flags = Flags::default();
+    let mut i = 0;
+    while i < args.len() {
+        let key = &args[i];
+        if let Some(name) = key.strip_prefix("--") {
+            // boolean flags
+            if matches!(name, "quick" | "full" | "verbose") {
+                flags.bools.push(name.to_string());
+                i += 1;
+                continue;
+            }
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+            flags.kv.push((name.to_string(), val.clone()));
+            i += 2;
+        } else {
+            flags.positional.push(key.clone());
+            i += 1;
+        }
+    }
+    Ok(flags)
+}
+
+/// Parsed CLI flags.
+#[derive(Debug, Default)]
+pub struct Flags {
+    pub kv: Vec<(String, String)>,
+    pub bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+}
+
+fn artifacts_dir(flags: &Flags) -> String {
+    flags.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let flags = parse_flags(args)?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => {
+            let model = flags
+                .get("model")
+                .ok_or_else(|| anyhow::anyhow!("need --config or --model"))?;
+            ExperimentConfig::builder(model).build()
+        }
+    };
+    // CLI overrides
+    if let Some(r) = flags.get("recipe") {
+        cfg.recipe = RecipeKind::parse(r)?;
+    }
+    if let Some(s) = flags.get("sparsity") {
+        cfg.ratio = s.parse()?;
+    }
+    if let Some(v) = flags.get_parse::<usize>("steps")? {
+        cfg.steps = v;
+    }
+    if let Some(v) = flags.get_parse::<usize>("batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = flags.get_parse::<f32>("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = flags.get_parse::<f32>("lam")? {
+        cfg.lam = v;
+    }
+    if let Some(v) = flags.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = flags.get_parse::<usize>("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = flags.get_parse::<usize>("fixed-switch")? {
+        cfg.autoswitch.fixed_step = Some(v);
+    }
+    cfg.validate()?;
+
+    let rt = Runtime::from_dir(artifacts_dir(&flags))?;
+    println!(
+        "[train] {} recipe={} sparsity={} steps={} (platform: {})",
+        cfg.model,
+        cfg.recipe.name(),
+        cfg.ratio,
+        cfg.steps,
+        rt.platform()
+    );
+    let mut session = Session::new(&rt, &cfg)?;
+    let t0 = std::time::Instant::now();
+    let report = session.run()?;
+    println!(
+        "[train] done in {:.1}s: final {}={:.4} (best {:.4}), tail loss {:.4}, switch@{}",
+        t0.elapsed().as_secs_f64(),
+        report.final_eval.metric_name,
+        report.final_eval.primary,
+        report.best_eval,
+        report.tail_loss,
+        report.switch_step
+    );
+    let st = rt.stats();
+    println!(
+        "[train] runtime: {} executions, {:.2}s execute, {:.2}s convert, {:.2}s compile",
+        st.executions, st.execute_secs, st.convert_secs, st.compile_secs
+    );
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let reg = Registry::load("artifacts")?;
+    println!("models:");
+    for (key, m) in &reg.manifest.models {
+        println!(
+            "  {key:<12} kind={:<9} params={:<3} sparse={:<2} dim={} batch={} seq={:?}",
+            m.kind,
+            m.n_params(),
+            m.n_sparse(),
+            m.dim,
+            m.batch,
+            m.seq
+        );
+    }
+    println!("\nartifacts ({}):", reg.manifest.artifacts.len());
+    for (name, a) in &reg.manifest.artifacts {
+        println!(
+            "  {name:<44} recipe={:<18} in={:<3} out={}",
+            a.recipe,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("platform      : {}", rt.platform());
+    println!("artifacts     : {}", rt.registry().manifest.artifacts.len());
+    println!("models        : {}", rt.registry().manifest.models.len());
+    Ok(())
+}

@@ -1,0 +1,324 @@
+//! Evaluation metrics matching the paper's per-task scoring: accuracy,
+//! perplexity, F1, Matthews correlation, Pearson/Spearman, and a BLEU-lite
+//! for the translation analog.
+//!
+//! Metrics reduce the *raw sums* the eval artifacts emit (`build_eval` in
+//! `train_steps.py` documents the 8-wide metric vector), so host code never
+//! sees per-example predictions on the PJRT path; the pure-Rust path fills
+//! the same accumulators.
+
+/// Streaming accumulator over eval batches — mirrors the artifact layout:
+/// classify: `[correct, count]`; regress: `[Σp, Σy, Σpp, Σyy, Σpy, n, sse]`;
+/// lm: `[Σnll, tokens]`.
+#[derive(Debug, Clone, Default)]
+pub struct EvalAccum {
+    pub raw: [f64; 8],
+    pub loss_sum: f64,
+    pub batches: usize,
+}
+
+impl EvalAccum {
+    pub fn add(&mut self, loss: f64, metrics: &[f32]) {
+        assert!(metrics.len() >= 8, "metric vector too short");
+        for (a, &m) in self.raw.iter_mut().zip(metrics) {
+            *a += m as f64;
+        }
+        self.loss_sum += loss;
+        self.batches += 1;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.batches.max(1) as f64
+    }
+
+    /// Classification accuracy from `[correct, count, ..]`.
+    pub fn accuracy(&self) -> f64 {
+        self.raw[0] / self.raw[1].max(1.0)
+    }
+
+    /// LM perplexity from `[Σnll, tokens, ..]`.
+    pub fn perplexity(&self) -> f64 {
+        (self.raw[0] / self.raw[1].max(1.0)).exp()
+    }
+
+    /// Pearson r from the regression sums.
+    pub fn pearson(&self) -> f64 {
+        let [sp, sy, spp, syy, spy, n, ..] = self.raw;
+        pearson_from_sums(sp, sy, spp, syy, spy, n)
+    }
+
+    /// Binary confusion counts from the classify layout
+    /// `[correct, count, tp, fp, tn, fn, ..]`.
+    pub fn confusion(&self) -> Confusion {
+        Confusion {
+            tp: self.raw[2] as usize,
+            fp: self.raw[3] as usize,
+            tn: self.raw[4] as usize,
+            fn_: self.raw[5] as usize,
+        }
+    }
+
+    /// F1 of class 1 (binary classify artifacts).
+    pub fn f1(&self) -> f64 {
+        self.confusion().f1()
+    }
+
+    /// Matthews correlation (binary classify artifacts).
+    pub fn mcc(&self) -> f64 {
+        self.confusion().mcc()
+    }
+}
+
+/// Pearson correlation from streaming sums.
+pub fn pearson_from_sums(sp: f64, sy: f64, spp: f64, syy: f64, spy: f64, n: f64) -> f64 {
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let cov = spy - sp * sy / n;
+    let vp = spp - sp * sp / n;
+    let vy = syy - sy * sy / n;
+    if vp <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vp.sqrt() * vy.sqrt())
+}
+
+/// Pearson correlation of two equal-length slices.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let (mut sp, mut sy, mut spp, mut syy, mut spy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        sp += x;
+        sy += y;
+        spp += x * x;
+        syy += y * y;
+        spy += x * y;
+    }
+    pearson_from_sums(sp, sy, spp, syy, spy, n)
+}
+
+/// Spearman rank correlation (Pearson over ranks, average-rank ties).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average rank
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Binary confusion counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+impl Confusion {
+    pub fn from_preds(preds: &[usize], labels: &[usize]) -> Self {
+        assert_eq!(preds.len(), labels.len());
+        let mut c = Self::default();
+        for (&p, &y) in preds.iter().zip(labels) {
+            match (p, y) {
+                (1, 1) => c.tp += 1,
+                (1, 0) => c.fp += 1,
+                (0, 0) => c.tn += 1,
+                (0, 1) => c.fn_ += 1,
+                _ => panic!("binary metric fed non-binary label ({p}, {y})"),
+            }
+        }
+        c
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        (self.tp + self.tn) as f64 / total.max(1) as f64
+    }
+
+    /// F1 of the positive class.
+    pub fn f1(&self) -> f64 {
+        let denom = 2 * self.tp + self.fp + self.fn_;
+        if denom == 0 {
+            0.0
+        } else {
+            2.0 * self.tp as f64 / denom as f64
+        }
+    }
+
+    /// Matthews correlation coefficient.
+    pub fn mcc(&self) -> f64 {
+        let (tp, fp, tn, fn_) = (self.tp as f64, self.fp as f64, self.tn as f64, self.fn_ as f64);
+        let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+        if denom == 0.0 {
+            0.0
+        } else {
+            (tp * tn - fp * fn_) / denom
+        }
+    }
+}
+
+/// Multi-class accuracy.
+pub fn accuracy(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let correct = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
+    correct as f64 / preds.len().max(1) as f64
+}
+
+/// Perplexity from total negative log-likelihood over `tokens` tokens.
+pub fn perplexity(total_nll: f64, tokens: f64) -> f64 {
+    (total_nll / tokens.max(1.0)).exp()
+}
+
+/// BLEU-lite: geometric mean of 1–2-gram precisions with brevity penalty —
+/// enough to rank translation outputs without the full BLEU machinery.
+pub fn bleu_lite(hyp: &[i32], reference: &[i32]) -> f64 {
+    if hyp.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let p1 = ngram_precision(hyp, reference, 1);
+    let p2 = ngram_precision(hyp, reference, 2);
+    if p1 == 0.0 {
+        return 0.0;
+    }
+    let p2 = p2.max(1e-9);
+    let bp = if hyp.len() >= reference.len() {
+        1.0
+    } else {
+        (1.0 - reference.len() as f64 / hyp.len() as f64).exp()
+    };
+    bp * (p1.ln() * 0.5 + p2.ln() * 0.5).exp()
+}
+
+fn ngram_precision(hyp: &[i32], reference: &[i32], n: usize) -> f64 {
+    if hyp.len() < n {
+        return 0.0;
+    }
+    use std::collections::HashMap;
+    let mut ref_counts: HashMap<&[i32], usize> = HashMap::new();
+    for w in reference.windows(n) {
+        *ref_counts.entry(w).or_default() += 1;
+    }
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for w in hyp.windows(n) {
+        total += 1;
+        if let Some(c) = ref_counts.get_mut(w) {
+            if *c > 0 {
+                *c -= 1;
+                hits += 1;
+            }
+        }
+    }
+    hits as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn f1_and_mcc_known_values() {
+        let c = Confusion { tp: 8, fp: 2, tn: 7, fn_: 3 };
+        assert!((c.f1() - 2.0 * 8.0 / (16.0 + 2.0 + 3.0)).abs() < 1e-12);
+        // perfect prediction
+        let p = Confusion { tp: 5, fp: 0, tn: 5, fn_: 0 };
+        assert_eq!(p.mcc(), 1.0);
+        assert_eq!(p.f1(), 1.0);
+        // inverted prediction
+        let inv = Confusion { tp: 0, fp: 5, tn: 0, fn_: 5 };
+        assert_eq!(inv.mcc(), -1.0);
+    }
+
+    #[test]
+    fn mcc_zero_when_degenerate() {
+        let c = Confusion { tp: 0, fp: 0, tn: 10, fn_: 0 };
+        assert_eq!(c.mcc(), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anticorrelated() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone but nonlinear
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0];
+        let r = ranks(&a);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn perplexity_uniform() {
+        // uniform over 256 tokens: nll = ln 256 per token
+        let ppl = perplexity(100.0 * (256.0f64).ln(), 100.0);
+        assert!((ppl - 256.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bleu_identity_is_one() {
+        let s = [1, 2, 3, 4, 5];
+        assert!((bleu_lite(&s, &s) - 1.0).abs() < 1e-12);
+        assert_eq!(bleu_lite(&[9, 9, 9], &s), 0.0);
+    }
+
+    #[test]
+    fn eval_accum_classify_path() {
+        let mut acc = EvalAccum::default();
+        acc.add(0.5, &[30.0, 32.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        acc.add(0.7, &[28.0, 32.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!((acc.accuracy() - 58.0 / 64.0).abs() < 1e-12);
+        assert!((acc.mean_loss() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_accum_pearson_matches_direct() {
+        let p = [1.0f64, 2.0, 3.0, 5.0];
+        let y = [1.1f64, 1.9, 3.2, 4.8];
+        let mut acc = EvalAccum::default();
+        let (mut sp, mut sy, mut spp, mut syy, mut spy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for (&a, &b) in p.iter().zip(&y) {
+            sp += a;
+            sy += b;
+            spp += a * a;
+            syy += b * b;
+            spy += a * b;
+        }
+        acc.add(0.0, &[
+            sp as f32, sy as f32, spp as f32, syy as f32, spy as f32, 4.0, 0.0, 0.0,
+        ]);
+        assert!((acc.pearson() - pearson(&p, &y)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,227 @@
+//! Pure-Rust MLP with exact backprop — the fast-CPU substrate for the
+//! many-seed / many-step experiments (Table 1 traces, Theorem-1 checks,
+//! Fig. 7's switch-ratio sweep) where per-step PJRT dispatch would dominate.
+//!
+//! The layout mirrors `python/compile/models.mlp`: parameters are the flat
+//! ordered list `[fc0_w, fc0_b, fc1_w, fc1_b, …]` with hidden weight
+//! matrices sparse-eligible and the final layer dense, so recipe code (and
+//! the manifest conventions) transfer unchanged between the two engines.
+
+use crate::rng::Pcg64;
+use crate::sparsity::NmRatio;
+use crate::tensor::{
+    add_bias, argmax_rows, cross_entropy_with_grad, matmul, matmul_at, matmul_bt, relu, Tensor,
+};
+
+/// An MLP classifier: `in_dim → hidden… → n_classes`, ReLU activations.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(in_dim: usize, hidden: &[usize], n_classes: usize) -> Self {
+        let mut sizes = vec![in_dim];
+        sizes.extend_from_slice(hidden);
+        sizes.push(n_classes);
+        Self { sizes }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// Number of parameter tensors (2 per layer: weight, bias).
+    pub fn n_params(&self) -> usize {
+        2 * self.n_layers()
+    }
+
+    /// Total scalar parameter count.
+    pub fn dim(&self) -> usize {
+        self.init(&mut Pcg64::new(0)).iter().map(|t| t.numel()).sum()
+    }
+
+    /// Fan-in-scaled init matching `models._init_param` (weights ~
+    /// N(0, 1/fan_in), biases zero).
+    pub fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for l in 0..self.n_layers() {
+            let (fan_in, fan_out) = (self.sizes[l], self.sizes[l + 1]);
+            let scale = 1.0 / (fan_in as f32).sqrt();
+            out.push(Tensor::randn(&[fan_in, fan_out], rng, 0.0, scale));
+            out.push(Tensor::zeros(&[fan_out]));
+        }
+        out
+    }
+
+    /// Sparse-eligibility per parameter tensor: hidden weights yes, last
+    /// layer and biases no — matching the Python model zoo.
+    pub fn sparse_flags(&self) -> Vec<bool> {
+        let n = self.n_layers();
+        (0..self.n_params())
+            .map(|i| i % 2 == 0 && i / 2 != n - 1)
+            .collect()
+    }
+
+    /// Uniform ratio vector from the flags (`None` = dense tensor).
+    pub fn ratios(&self, ratio: NmRatio) -> Vec<Option<NmRatio>> {
+        self.sparse_flags()
+            .into_iter()
+            .map(|s| if s { Some(ratio) } else { None })
+            .collect()
+    }
+
+    /// Forward pass: logits `[batch, n_classes]`.
+    pub fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
+        let mut h = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+        for l in 0..self.n_layers() {
+            let w = &params[2 * l];
+            let b = &params[2 * l + 1];
+            h = matmul(&h, w);
+            add_bias(&mut h, b);
+            if l != self.n_layers() - 1 {
+                h = relu(&h);
+            }
+        }
+        h
+    }
+
+    /// Mean cross-entropy loss + exact gradients w.r.t. every parameter.
+    ///
+    /// Returns `(loss, grads)` where `grads[i]` matches `params[i]`'s shape.
+    pub fn loss_and_grad(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<Tensor>) {
+        let n_layers = self.n_layers();
+        // forward, caching pre-activations' post-ReLU values
+        let x2 = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers + 1);
+        acts.push(x2);
+        for l in 0..n_layers {
+            let mut h = matmul(acts.last().unwrap(), &params[2 * l]);
+            add_bias(&mut h, &params[2 * l + 1]);
+            if l != n_layers - 1 {
+                h = relu(&h);
+            }
+            acts.push(h);
+        }
+        let logits = acts.last().unwrap();
+        let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
+
+        // backward
+        let mut grads: Vec<Tensor> = (0..self.n_params())
+            .map(|_| Tensor::zeros(&[0]))
+            .collect();
+        for l in (0..n_layers).rev() {
+            let a_in = &acts[l];
+            // dW = a_inᵀ @ delta ; db = colsum(delta)
+            grads[2 * l] = matmul_at(a_in, &delta);
+            let (rows, cols) = delta.as_2d();
+            let mut db = Tensor::zeros(&[cols]);
+            for r in 0..rows {
+                for c in 0..cols {
+                    db.data_mut()[c] += delta.data()[r * cols + c];
+                }
+            }
+            grads[2 * l + 1] = db;
+            if l > 0 {
+                // dA = delta @ Wᵀ, gated by the ReLU mask of a_in
+                let mut da = matmul_bt(&delta, &params[2 * l]);
+                for (d, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                delta = da;
+            }
+        }
+        (loss, grads)
+    }
+
+    /// Classification accuracy on a batch.
+    pub fn accuracy(&self, params: &[Tensor], x: &Tensor, labels: &[usize]) -> f64 {
+        let logits = self.forward(params, x);
+        let preds = argmax_rows(&logits);
+        let correct = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
+        correct as f64 / labels.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Cases;
+
+    #[test]
+    fn shapes_and_flags() {
+        let mlp = Mlp::new(8, &[16, 12], 3);
+        assert_eq!(mlp.n_layers(), 3);
+        assert_eq!(mlp.n_params(), 6);
+        assert_eq!(
+            mlp.sparse_flags(),
+            vec![true, false, true, false, false, false]
+        );
+        let p = mlp.init(&mut Pcg64::new(0));
+        assert_eq!(p[0].shape(), &[8, 16]);
+        assert_eq!(p[5].shape(), &[3]);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let p = mlp.init(&mut Pcg64::new(1));
+        let x = Tensor::randn(&[5, 8], &mut Pcg64::new(2), 0.0, 1.0);
+        let y = mlp.forward(&p, &x);
+        assert_eq!(y.shape(), &[5, 3]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        Cases::new(4).run(|rng, _| {
+            let mlp = Mlp::new(4, &[6], 3);
+            let params = mlp.init(rng);
+            let x = Tensor::randn(&[3, 4], rng, 0.0, 1.0);
+            let labels = vec![rng.below(3), rng.below(3), rng.below(3)];
+            let (loss, grads) = mlp.loss_and_grad(&params, &x, &labels);
+            let eps = 1e-3f32;
+            // probe a handful of random coordinates of each tensor
+            for (pi, g) in grads.iter().enumerate() {
+                for _probe in 0..4 {
+                    let idx = rng.below(g.numel());
+                    let mut pp = params.clone();
+                    pp[pi].data_mut()[idx] += eps;
+                    let (l2, _) = mlp.loss_and_grad(&pp, &x, &labels);
+                    let fd = (l2 - loss) / eps as f64;
+                    let an = g.data()[idx] as f64;
+                    assert!(
+                        (fd - an).abs() < 5e-2 * (1.0 + an.abs()),
+                        "param {pi} idx {idx}: fd {fd} vs {an}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Pcg64::new(3);
+        let mlp = Mlp::new(10, &[32], 4);
+        let mut params = mlp.init(&mut rng);
+        // fixed synthetic batch: learn to classify by cluster
+        let x = Tensor::randn(&[64, 10], &mut rng, 0.0, 1.0);
+        let labels: Vec<usize> = (0..64).map(|i| i % 4).collect();
+        let (first, _) = mlp.loss_and_grad(&params, &x, &labels);
+        for _ in 0..200 {
+            let (_, grads) = mlp.loss_and_grad(&params, &x, &labels);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                crate::tensor::axpy(p, -0.5, g);
+            }
+        }
+        let (last, _) = mlp.loss_and_grad(&params, &x, &labels);
+        assert!(last < first * 0.5, "{first} -> {last}");
+        assert!(mlp.accuracy(&params, &x, &labels) > 0.8);
+    }
+}

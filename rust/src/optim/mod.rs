@@ -1,0 +1,345 @@
+//! Pure-Rust reference optimizers: Adam (Eqs 2–7), momentum SGD, the STEP
+//! phase-2 update (Alg. 1 lines 15–22), and the SR-STE gradient refinement
+//! (Eq 9).
+//!
+//! These serve two roles:
+//! 1. **Bit-true oracles** for the HLO artifacts: the integration tests run
+//!    the same step through PJRT and through this module and compare.
+//! 2. **Engines for the pure-Rust experiments** (Table 1's many-seed variance
+//!    traces, the property tests on Theorem 1) where PJRT dispatch per step
+//!    would dominate.
+//!
+//! All updates are single-pass fused loops over the parameter slices —
+//! mirroring the Pallas optimizer kernels (`optim_update.py`).
+
+pub mod recipes;
+
+pub use recipes::{PureRecipe, RecipeState};
+
+use crate::tensor::Tensor;
+
+/// Which optimizer family drives a recipe (Fig. 1 contrasts the two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Adam,
+    Sgdm,
+}
+
+impl std::fmt::Display for OptimizerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OptimizerKind::Adam => write!(f, "adam"),
+            OptimizerKind::Sgdm => write!(f, "sgdm"),
+        }
+    }
+}
+
+/// Adam hyperparameters — paper defaults (§6): β₁=0.9, β₂=0.999, ε=1e-8.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamHp {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl AdamHp {
+    /// AutoSwitch sampling-window length `T_w = ⌊(1-β₂)⁻¹⌋` (Alg. 2).
+    pub fn window(&self) -> usize {
+        (1.0 / (1.0 - self.beta2 as f64)).floor() as usize
+    }
+}
+
+/// Per-tensor Adam state (m, v); `t` is tracked by the owner because the
+/// paper's bias correction uses the global step.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+impl AdamState {
+    pub fn zeros_like(params: &[Tensor]) -> Self {
+        Self {
+            m: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            v: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+        }
+    }
+}
+
+/// One dense Adam step on a single tensor (Eqs 3–7), 1-based step `t`.
+///
+/// Fused: one pass over the four slices, no intermediate allocation.
+pub fn adam_update(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    t: u64,
+    lr: f32,
+    hp: AdamHp,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let bc1 = 1.0 - (hp.beta1 as f64).powi(t as i32);
+    let bc2 = 1.0 - (hp.beta2 as f64).powi(t as i32);
+    let (b1, b2, eps) = (hp.beta1, hp.beta2, hp.eps);
+    let (bc1, bc2) = (bc1 as f32, bc2 as f32);
+    let wd = w.data_mut();
+    let md = m.data_mut();
+    let vd = v.data_mut();
+    let gd = g.data();
+    for i in 0..wd.len() {
+        let gi = gd[i];
+        let mi = b1 * md[i] + (1.0 - b1) * gi;
+        let vi = b2 * vd[i] + (1.0 - b2) * gi * gi;
+        md[i] = mi;
+        vd[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        // paper Eq (7): eps OUTSIDE the sqrt in the dense phase
+        wd[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+/// One momentum-SGD step (PyTorch convention: buf' = μ·buf + g; w -= lr·buf').
+pub fn sgdm_update(w: &mut Tensor, buf: &mut Tensor, g: &Tensor, lr: f32, momentum: f32) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let wd = w.data_mut();
+    let bd = buf.data_mut();
+    let gd = g.data();
+    for i in 0..wd.len() {
+        let b = momentum * bd[i] + gd[i];
+        bd[i] = b;
+        wd[i] -= lr * b;
+    }
+}
+
+/// STEP phase-2 update (Alg. 1 lines 18–20): momentum only, preconditioned
+/// by the **frozen** raw `v*` — note `ε` sits *inside* the sqrt here
+/// (`w' = w − γ·m̂ / sqrt(v* + ε)`, Alg. 1 line 20), unlike the dense phase.
+/// `v_star` is deliberately taken by shared reference: phase 2 cannot touch it.
+pub fn step_phase2_update(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v_star: &Tensor,
+    g: &Tensor,
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let bc1 = (1.0 - (beta1 as f64).powi(t as i32)) as f32;
+    let wd = w.data_mut();
+    let md = m.data_mut();
+    let vd = v_star.data();
+    let gd = g.data();
+    for i in 0..wd.len() {
+        let mi = beta1 * md[i] + (1.0 - beta1) * gd[i];
+        md[i] = mi;
+        wd[i] -= lr * (mi / bc1) / (vd[i] + eps).sqrt();
+    }
+}
+
+/// SR-STE gradient refinement (Eq 9): `g ← g + λ·(1 − Π) ⊙ w`, in place.
+pub fn srste_refine(g: &mut Tensor, w: &Tensor, mask: &Tensor, lam: f32) {
+    debug_assert_eq!(g.shape(), w.shape());
+    debug_assert_eq!(g.shape(), mask.shape());
+    if lam == 0.0 {
+        return;
+    }
+    let gd = g.data_mut();
+    let wd = w.data();
+    let md = mask.data();
+    for i in 0..gd.len() {
+        gd[i] += lam * (1.0 - md[i]) * wd[i];
+    }
+}
+
+/// Variance-change telemetry produced by one optimizer step — exactly the
+/// four scalars the HLO artifacts emit (`train_steps._var_stats`), so the
+/// AutoSwitch consumes identical inputs on both paths.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct VarStats {
+    /// ‖v‖₁ over all coordinates of all tensors.
+    pub v_l1: f64,
+    /// ‖v‖₂.
+    pub v_l2: f64,
+    /// ‖v − v_prev‖₁ (the AutoSwitch Option-I numerator).
+    pub dv_l1: f64,
+    /// Σ log(|v − v_prev| + 1e-38) (the Option-II numerator).
+    pub log_dv: f64,
+}
+
+impl VarStats {
+    /// Accumulate the contribution of one tensor's (v_new, v_old) pair.
+    pub fn accumulate(&mut self, v_new: &Tensor, v_old: &Tensor) {
+        debug_assert_eq!(v_new.shape(), v_old.shape());
+        let mut l1 = 0.0f64;
+        let mut sq = 0.0f64;
+        let mut dv = 0.0f64;
+        let mut lg = 0.0f64;
+        for (&a, &b) in v_new.data().iter().zip(v_old.data()) {
+            l1 += a.abs() as f64;
+            sq += (a as f64) * (a as f64);
+            let d = (a - b).abs() as f64;
+            dv += d;
+            lg += (d + 1e-38).ln();
+        }
+        self.v_l1 += l1;
+        // accumulate squared then sqrt at the end via finish()
+        self.v_l2 += sq;
+        self.dv_l1 += dv;
+        self.log_dv += lg;
+    }
+
+    /// Finalize after all tensors accumulated (v_l2 held Σx² until now).
+    pub fn finish(mut self) -> Self {
+        self.v_l2 = self.v_l2.sqrt();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil::{assert_close, Cases};
+
+    /// Scalar reference Adam from the paper's equations, step-by-step.
+    fn scalar_adam(
+        mut w: f64,
+        gs: &[f64],
+        lr: f64,
+        b1: f64,
+        b2: f64,
+        eps: f64,
+    ) -> f64 {
+        let (mut m, mut v) = (0.0f64, 0.0f64);
+        for (i, &g) in gs.iter().enumerate() {
+            let t = (i + 1) as i32;
+            m = b1 * m + (1.0 - b1) * g;
+            v = b2 * v + (1.0 - b2) * g * g;
+            let mhat = m / (1.0 - b1.powi(t));
+            let vhat = v / (1.0 - b2.powi(t));
+            w -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        w
+    }
+
+    #[test]
+    fn adam_matches_scalar_reference() {
+        let gs = [0.5f64, -0.2, 0.1, 0.9, -0.4];
+        let expect = scalar_adam(1.0, &gs, 1e-2, 0.9, 0.999, 1e-8);
+
+        let mut w = Tensor::scalar1(1.0);
+        let mut m = Tensor::scalar1(0.0);
+        let mut v = Tensor::scalar1(0.0);
+        for (i, &g) in gs.iter().enumerate() {
+            adam_update(
+                &mut w,
+                &mut m,
+                &mut v,
+                &Tensor::scalar1(g as f32),
+                (i + 1) as u64,
+                1e-2,
+                AdamHp::default(),
+            );
+        }
+        assert!((w.data()[0] as f64 - expect).abs() < 1e-6, "{} vs {expect}", w.data()[0]);
+    }
+
+    #[test]
+    fn adam_first_step_sign_of_gradient() {
+        // with m=v=0 and t=1, the first Adam step is ≈ -lr * sign(g)
+        let mut w = Tensor::new(&[2], vec![0.0, 0.0]);
+        let mut m = Tensor::zeros(&[2]);
+        let mut v = Tensor::zeros(&[2]);
+        let g = Tensor::new(&[2], vec![3.0, -0.001]);
+        adam_update(&mut w, &mut m, &mut v, &g, 1, 0.1, AdamHp::default());
+        assert!((w.data()[0] + 0.1).abs() < 1e-3, "{}", w.data()[0]);
+        assert!((w.data()[1] - 0.1).abs() < 1e-2, "{}", w.data()[1]);
+    }
+
+    #[test]
+    fn sgdm_accumulates_momentum() {
+        let mut w = Tensor::scalar1(0.0);
+        let mut b = Tensor::scalar1(0.0);
+        let g = Tensor::scalar1(1.0);
+        sgdm_update(&mut w, &mut b, &g, 0.1, 0.9);
+        assert!((w.data()[0] + 0.1).abs() < 1e-7);
+        sgdm_update(&mut w, &mut b, &g, 0.1, 0.9);
+        // buf = 0.9*1 + 1 = 1.9; w = -0.1 - 0.19 = -0.29
+        assert!((w.data()[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phase2_never_touches_v() {
+        let v_star = Tensor::new(&[3], vec![0.4, 0.1, 0.9]);
+        let v_copy = v_star.clone();
+        let mut w = Tensor::new(&[3], vec![1.0, 1.0, 1.0]);
+        let mut m = Tensor::zeros(&[3]);
+        for t in 1..=10 {
+            let g = Tensor::new(&[3], vec![0.1 * t as f32, -0.2, 0.3]);
+            step_phase2_update(&mut w, &mut m, &v_star, &g, t, 1e-2, 0.9, 1e-8);
+        }
+        assert_eq!(v_star, v_copy); // structural freeze
+    }
+
+    #[test]
+    fn phase2_eps_inside_sqrt() {
+        // v*=0 coordinate: step size = lr * mhat / sqrt(eps)
+        let v_star = Tensor::scalar1(0.0);
+        let mut w = Tensor::scalar1(0.0);
+        let mut m = Tensor::scalar1(0.0);
+        let g = Tensor::scalar1(1.0);
+        step_phase2_update(&mut w, &mut m, &v_star, &g, 1, 1e-3, 0.9, 1e-8);
+        let expect = -(1e-3f64) / (1e-8f64).sqrt(); // = -10.0
+        assert!((w.data()[0] as f64 - expect).abs() < 1e-3, "{}", w.data()[0]);
+    }
+
+    #[test]
+    fn srste_refine_matches_eq9() {
+        let w = Tensor::new(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mask = Tensor::new(&[4], vec![1.0, 0.0, 1.0, 0.0]);
+        let mut g = Tensor::new(&[4], vec![0.1; 4]);
+        srste_refine(&mut g, &w, &mask, 0.5);
+        assert_close(g.data(), &[0.1, 0.1 + 1.0, 0.1, 0.1 + 2.0], 1e-6);
+    }
+
+    #[test]
+    fn srste_lam_zero_is_noop() {
+        Cases::new(20).run(|rng2, _| {
+            let w = Tensor::randn(&[8], rng2, 0.0, 1.0);
+            let mask = Tensor::new(&[8], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+            let mut g = Tensor::randn(&[8], rng2, 0.0, 1.0);
+            let g0 = g.clone();
+            srste_refine(&mut g, &w, &mask, 0.0);
+            assert_eq!(g, g0);
+        });
+    }
+
+    #[test]
+    fn var_stats_match_manual() {
+        let v_new = Tensor::new(&[2], vec![3.0, -4.0]);
+        let v_old = Tensor::new(&[2], vec![1.0, -1.0]);
+        let mut s = VarStats::default();
+        s.accumulate(&v_new, &v_old);
+        let s = s.finish();
+        assert!((s.v_l1 - 7.0).abs() < 1e-9);
+        assert!((s.v_l2 - 5.0).abs() < 1e-9);
+        assert!((s.dv_l1 - 5.0).abs() < 1e-9);
+        assert!((s.log_dv - (2.0f64.ln() + 3.0f64.ln())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_hp_window() {
+        assert_eq!(AdamHp::default().window(), 1000);
+        assert_eq!(AdamHp { beta2: 0.99, ..Default::default() }.window(), 100);
+    }
+}

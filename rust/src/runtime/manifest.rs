@@ -1,0 +1,295 @@
+//! `artifacts/manifest.json` parsing: the single source of truth for every
+//! AOT artifact's input/output layout and every model's parameter spec.
+//!
+//! Written by `python/compile/aot.py`; the Rust runtime is fully data-driven
+//! from this file — adding a model or recipe on the Python side requires no
+//! Rust changes.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Dtype of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One named tensor slot of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("{name}: bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing dtype"))?,
+        )?;
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One AOT artifact (an HLO module + its I/O contract).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Recipe name ("dense_adam", "step_phase2", …).
+    pub recipe: String,
+    /// Model key this artifact belongs to.
+    pub model: String,
+    /// Group size M for masked recipes (0 = n/a).
+    pub m: usize,
+}
+
+/// One model's parameter layout.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub key: String,
+    /// (name, shape, sparse-eligible) in artifact argument order.
+    pub params: Vec<(String, Vec<usize>, bool)>,
+    pub sparse_indices: Vec<usize>,
+    /// "classify" | "regress" | "lm".
+    pub kind: String,
+    pub n_classes: usize,
+    /// Total scalar parameter count.
+    pub dim: usize,
+    /// Batch size the artifacts were lowered with.
+    pub batch: usize,
+    /// Sequence length (token models; None otherwise).
+    pub seq: Option<usize>,
+}
+
+impl ModelInfo {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_sparse(&self) -> usize {
+        self.sparse_indices.len()
+    }
+
+    /// Flat input width for feature models (product of a param-0 row? no —
+    /// recorded by the conventions: classify/regress feature models take
+    /// `[batch, in_dim]`). Derived from the first weight's fan-in.
+    pub fn in_dim(&self) -> usize {
+        self.params
+            .first()
+            .map(|(_, shape, _)| shape.first().copied().unwrap_or(0))
+            .unwrap_or(0)
+    }
+}
+
+/// The parsed manifest: artifact dir + specs + models.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = crate::util::read_to_string(&path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: PathBuf, json: &Json) -> anyhow::Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for a in json
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let meta = a.get("meta");
+            let spec = ArtifactSpec {
+                path: a
+                    .get("path")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing path"))?
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                recipe: meta.get("recipe").as_str().unwrap_or("").to_string(),
+                model: meta.get("model").as_str().unwrap_or("").to_string(),
+                m: meta.get("m").as_usize().unwrap_or(0),
+                name: name.clone(),
+            };
+            artifacts.insert(name, spec);
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = json.get("models").as_obj() {
+            for key in obj.keys() {
+                let m = obj.get(key).unwrap();
+                let params = m
+                    .get("params")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("model {key}: missing params"))?
+                    .iter()
+                    .map(|p| {
+                        let name = p.get("name").as_str().unwrap_or("").to_string();
+                        let shape: Vec<usize> = p
+                            .get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect();
+                        let sparse = p.get("sparse").as_bool().unwrap_or(false);
+                        (name, shape, sparse)
+                    })
+                    .collect::<Vec<_>>();
+                let sparse_indices = m
+                    .get("sparse_indices")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_usize())
+                    .collect();
+                models.insert(
+                    key.clone(),
+                    ModelInfo {
+                        key: key.clone(),
+                        params,
+                        sparse_indices,
+                        kind: m.get("kind").as_str().unwrap_or("classify").to_string(),
+                        n_classes: m.get("n_classes").as_usize().unwrap_or(0),
+                        dim: m.get("dim").as_usize().unwrap_or(0),
+                        batch: m.get("batch").as_usize().unwrap_or(0),
+                        seq: m.get("seq").as_usize(),
+                    },
+                );
+            }
+        }
+        Ok(Self { dir, artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest (have {})",
+                self.artifacts.len()))
+    }
+
+    pub fn model(&self, key: &str) -> anyhow::Result<&ModelInfo> {
+        self.models.get(key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {key:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "m__dense_adam", "path": "m__dense_adam.hlo.txt",
+         "inputs": [{"name": "p.w", "shape": [4, 8], "dtype": "float32"},
+                    {"name": "x", "shape": [2, 4], "dtype": "float32"},
+                    {"name": "y", "shape": [2], "dtype": "int32"}],
+         "outputs": [{"name": "loss", "shape": [1], "dtype": "float32"}],
+         "meta": {"recipe": "dense_adam", "model": "m", "m": 4}}
+      ],
+      "models": {
+        "m": {"params": [{"name": "w", "shape": [4, 8], "sparse": true}],
+              "sparse_indices": [0], "kind": "classify", "n_classes": 10,
+              "dim": 32, "batch": 2, "seq": null}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &json).unwrap();
+        let a = m.artifact("m__dense_adam").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].dtype, Dtype::I32);
+        assert_eq!(a.recipe, "dense_adam");
+        assert_eq!(a.m, 4);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.n_params(), 1);
+        assert_eq!(model.sparse_indices, vec![0]);
+        assert_eq!(model.seq, None);
+        assert_eq!(model.in_dim(), 4);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration smoke against the checked-out artifacts dir
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.artifacts.len() >= 10);
+            let mlp = m.model("mlp_cf10").unwrap();
+            assert!(mlp.n_sparse() > 0);
+            // every artifact's HLO file must exist
+            for spec in m.artifacts.values() {
+                assert!(m.hlo_path(spec).exists(), "{} missing", spec.path);
+            }
+        }
+    }
+}

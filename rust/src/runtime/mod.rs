@@ -1,0 +1,231 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client from the Rust hot path.
+//!
+//! Pipeline per artifact (cached after first use):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `PjRtLoadedExecutable`. HLO **text** is the
+//! interchange format — jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see `/opt/xla-example/README.md`).
+//!
+//! Inputs/outputs are validated against the manifest on every call; the
+//! conversion `Tensor ↔ Literal` is a flat memcpy (both sides are row-major
+//! contiguous).
+
+pub mod manifest;
+pub mod value;
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelInfo, TensorSpec};
+pub use value::{Value, ValueRef};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// The artifact registry: manifest + directory. Separate from [`Runtime`] so
+/// tests can inspect specs without a PJRT client.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub manifest: Manifest,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Ok(Self { manifest: Manifest::load(dir)? })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    pub fn model(&self, key: &str) -> anyhow::Result<&ModelInfo> {
+        self.manifest.model(key)
+    }
+
+    /// Artifact names for a model, by recipe prefix.
+    pub fn artifacts_for_model(&self, model: &str) -> Vec<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .values()
+            .filter(|a| a.model == model)
+            .collect()
+    }
+}
+
+/// Cumulative runtime counters (perf accounting; see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    /// Seconds inside PJRT `execute`.
+    pub execute_secs: f64,
+    /// Seconds converting host values ↔ literals.
+    pub convert_secs: f64,
+    /// Seconds compiling artifacts (first-use only).
+    pub compile_secs: f64,
+}
+
+/// The PJRT execution engine.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(registry: Registry) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            registry,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Convenience: load the registry and build the runtime in one call.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Self::new(Registry::load(dir)?)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.registry.artifact(name)?;
+        let path = self.registry.manifest.hlo_path(spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.stats.borrow_mut().compile_secs += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact with host values; validates the I/O contract
+    /// against the manifest and returns outputs in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let refs: Vec<value::ValueRef> = inputs.iter().map(Value::as_ref_value).collect();
+        self.execute_refs(name, &refs)
+    }
+
+    /// Borrowed-input variant — the hot-loop path: state tensors are
+    /// uploaded straight to host-owned device buffers (no owned-`Value`
+    /// clone, no literal intermediate) and executed via `execute_b`.
+    ///
+    /// `execute_b` rather than `execute` is load-bearing: the `execute`
+    /// C path creates one device buffer per input and leaks it
+    /// (`buffer.release()` in xla_rs.cc without a matching delete —
+    /// ~6 MB/step on the MLP, an OOM after a few thousand steps). Buffers
+    /// created here are dropped (and freed) when this call returns.
+    pub fn execute_refs(&self, name: &str, inputs: &[value::ValueRef]) -> anyhow::Result<Vec<Value>> {
+        let spec = self.registry.artifact(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: got {} inputs, artifact takes {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        let t0 = Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(v, s)| {
+                v.check(s).map_err(|e| anyhow::anyhow!("{name}: input {}: {e}", s.name))?;
+                v.to_buffer(&self.client)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let convert_in = t0.elapsed().as_secs_f64();
+
+        let exe = self.executable(name)?;
+        let t1 = Instant::now();
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow::anyhow!("{name}: execute failed: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name}: readback failed: {e:?}"))?;
+        let exec_secs = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: output not a tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        let outputs = parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| Value::from_literal(&lit, s))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let convert_out = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += exec_secs;
+        st.convert_secs += convert_in + convert_out;
+        Ok(outputs)
+    }
+
+    /// Initialize a model's parameters on-device via its `__init` artifact.
+    pub fn init_params(&self, model_key: &str, seed: i32) -> anyhow::Result<Vec<Value>> {
+        let name = format!("{model_key}__init");
+        self.execute(&name, &[Value::i32_vec(vec![seed])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need the PJRT client + real artifacts live in
+    // rust/tests/ (integration). Unit tests here cover the registry surface.
+    use super::*;
+
+    #[test]
+    fn registry_load_missing_dir_errors() {
+        assert!(Registry::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn registry_query_helpers() {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let reg = Registry::load("artifacts").unwrap();
+            let arts = reg.artifacts_for_model("mlp_cf10");
+            assert!(arts.iter().any(|a| a.recipe == "dense_adam"));
+            assert!(arts.iter().any(|a| a.recipe == "step_phase2"));
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Host-side values crossing the PJRT boundary: f32 tensors and i32 arrays,
+//! with manifest-validated conversion to/from `xla::Literal`.
+
+use super::manifest::{Dtype, TensorSpec};
+use crate::tensor::Tensor;
+
+/// A typed host value matching one artifact input/output slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    // ---- constructors ------------------------------------------------------
+
+    pub fn f32(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+
+    /// `[1]`-shaped f32 scalar — the artifacts' scalar convention.
+    pub fn scalar(v: f32) -> Self {
+        Value::F32(Tensor::scalar1(v))
+    }
+
+    pub fn i32_vec(data: Vec<i32>) -> Self {
+        let shape = vec![data.len()];
+        Value::I32 { data, shape }
+    }
+
+    pub fn i32_mat(data: Vec<i32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Value::I32 { data, shape: vec![rows, cols] }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Unwrap as f32 tensor (panics on dtype mismatch — callers have already
+    /// validated against the manifest).
+    pub fn as_tensor(&self) -> &Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32 { .. } => panic!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32 { .. } => panic!("expected f32 value, got i32"),
+        }
+    }
+
+    /// First element as f64 (loss / scalar outputs).
+    pub fn scalar_f64(&self) -> f64 {
+        match self {
+            Value::F32(t) => t.data()[0] as f64,
+            Value::I32 { data, .. } => data[0] as f64,
+        }
+    }
+
+    /// Validate against a manifest slot.
+    pub fn check(&self, spec: &TensorSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dtype() == spec.dtype,
+            "dtype mismatch: value {:?} vs spec {:?}",
+            self.dtype(),
+            spec.dtype
+        );
+        anyhow::ensure!(
+            self.shape() == spec.shape.as_slice(),
+            "shape mismatch: value {:?} vs spec {:?}",
+            self.shape(),
+            spec.shape
+        );
+        Ok(())
+    }
+
+    // ---- literal conversion --------------------------------------------------
+
+    /// Convert to an `xla::Literal` (single flat copy).
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data().as_ptr() as *const u8,
+                        t.data().len() * 4,
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.shape(),
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("f32 literal: {e:?}"))?
+            }
+            Value::I32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert a literal back, trusting the manifest spec for shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Self> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("{}: f32 readback: {e:?}", spec.name))?;
+                anyhow::ensure!(
+                    data.len() == spec.numel(),
+                    "{}: got {} elements, spec says {}",
+                    spec.name,
+                    data.len(),
+                    spec.numel()
+                );
+                Ok(Value::F32(Tensor::new(&spec.shape, data)))
+            }
+            Dtype::I32 => {
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("{}: i32 readback: {e:?}", spec.name))?;
+                anyhow::ensure!(data.len() == spec.numel(), "{}: wrong element count", spec.name);
+                Ok(Value::I32 { data, shape: spec.shape.clone() })
+            }
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+/// A borrowed view of a [`Value`] — the allocation-free input path for the
+/// training hot loop (EXPERIMENTS.md §Perf: avoids cloning the full model
+/// state into owned `Value`s every step).
+#[derive(Debug, Clone, Copy)]
+pub enum ValueRef<'a> {
+    F32(&'a Tensor),
+    I32 { data: &'a [i32], shape: &'a [usize] },
+}
+
+impl<'a> ValueRef<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ValueRef::F32(t) => t.shape(),
+            ValueRef::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ValueRef::F32(_) => Dtype::F32,
+            ValueRef::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn check(&self, spec: &TensorSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dtype() == spec.dtype,
+            "dtype mismatch: value {:?} vs spec {:?}",
+            self.dtype(),
+            spec.dtype
+        );
+        anyhow::ensure!(
+            self.shape() == spec.shape.as_slice(),
+            "shape mismatch: value {:?} vs spec {:?}",
+            self.shape(),
+            spec.shape
+        );
+        Ok(())
+    }
+
+    /// Upload straight to a device buffer (one flat copy). The returned
+    /// `PjRtBuffer` is host-owned and freed on drop — the runtime feeds
+    /// these to `execute_b`, avoiding the `execute` C-path which leaks its
+    /// internally-created input buffers (xla_rs.cc `buffer.release()`).
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> anyhow::Result<xla::PjRtBuffer> {
+        match self {
+            ValueRef::F32(t) => client
+                .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                .map_err(|e| anyhow::anyhow!("f32 buffer: {e:?}")),
+            ValueRef::I32 { data, shape } => client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .map_err(|e| anyhow::anyhow!("i32 buffer: {e:?}")),
+        }
+    }
+
+    /// Convert to a literal (one flat copy; no owned-Value intermediate).
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        match self {
+            ValueRef::F32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data().as_ptr() as *const u8,
+                        t.data().len() * 4,
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.shape(),
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("f32 literal: {e:?}"))
+            }
+            ValueRef::I32 { data, shape } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))
+            }
+        }
+    }
+}
+
+impl Value {
+    /// Borrow as a [`ValueRef`].
+    pub fn as_ref_value(&self) -> ValueRef<'_> {
+        match self {
+            Value::F32(t) => ValueRef::F32(t),
+            Value::I32 { data, shape } => ValueRef::I32 { data, shape },
+        }
+    }
+}
+
+impl<'a> From<&'a Tensor> for ValueRef<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        ValueRef::F32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn check_validates_shape_and_dtype() {
+        let v = Value::f32(Tensor::zeros(&[2, 3]));
+        assert!(v.check(&spec("x", &[2, 3], Dtype::F32)).is_ok());
+        assert!(v.check(&spec("x", &[3, 2], Dtype::F32)).is_err());
+        assert!(v.check(&spec("x", &[2, 3], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::new(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        let v = Value::f32(t.clone());
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &spec("x", &[2, 2], Dtype::F32)).unwrap();
+        assert_eq!(back.as_tensor(), &t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = Value::i32_mat(vec![1, -2, 3, 4, 5, 6], 2, 3);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, &spec("y", &[2, 3], Dtype::I32)).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn scalar_convention() {
+        let v = Value::scalar(0.5);
+        assert_eq!(v.shape(), &[1]);
+        assert_eq!(v.scalar_f64(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn as_tensor_panics_on_i32() {
+        Value::i32_vec(vec![1]).as_tensor();
+    }
+}

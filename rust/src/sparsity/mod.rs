@@ -1,0 +1,295 @@
+//! N:M structured sparsity: mask computation, application, accounting, the
+//! DominoSearch layer-wise ratio assignment, and the Decaying-Mask schedule.
+//!
+//! Semantics are pinned to the Layer-1 oracle (`python/compile/kernels/ref.py`):
+//! groups of `M` consecutive elements along the **last** axis; keep the `N`
+//! largest by |w|; ties broken toward the *lower* index (matching
+//! `jax.lax.top_k` stability). The integration tests compare this module
+//! bit-for-bit against the `nm_mask` HLO artifact.
+
+pub mod domino;
+pub mod schedule;
+
+pub use domino::{domino_assign, DominoBudget};
+pub use schedule::{decaying_n, DecaySchedule};
+
+use crate::tensor::Tensor;
+
+/// An N:M ratio (keep `n` of every `m` consecutive weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NmRatio {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmRatio {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(m >= 1 && n >= 1 && n <= m, "invalid N:M = {n}:{m}");
+        Self { n, m }
+    }
+
+    /// Fraction of weights kept.
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    /// Fraction pruned.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.n == self.m
+    }
+}
+
+impl std::fmt::Display for NmRatio {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+impl std::str::FromStr for NmRatio {
+    type Err = anyhow::Error;
+
+    /// Parse "2:4".
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let (n, m) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("expected N:M, got {s:?}"))?;
+        let (n, m): (usize, usize) = (n.trim().parse()?, m.trim().parse()?);
+        anyhow::ensure!(n >= 1 && n <= m, "invalid N:M = {n}:{m}");
+        Ok(NmRatio { n, m })
+    }
+}
+
+/// Compute the binary N:M mask of `w` (groups along the last axis).
+///
+/// Panics if the last axis is not divisible by `m`. The mask tensor has the
+/// same shape as `w` with entries in {0.0, 1.0}.
+pub fn nm_mask(w: &Tensor, ratio: NmRatio) -> Tensor {
+    let mut mask = Tensor::zeros(w.shape());
+    nm_mask_into(w, ratio, &mut mask);
+    mask
+}
+
+/// Allocation-free variant: writes the mask into `mask` (same shape as `w`).
+///
+/// Selection is N rounds of scan-max-and-exclude per group — the same
+/// algorithm as the Pallas kernel (`_nm_mask_kernel`), so tie-break behaviour
+/// is identical by construction: strict `>` comparison keeps the first
+/// (lowest-index) maximum.
+pub fn nm_mask_into(w: &Tensor, ratio: NmRatio, mask: &mut Tensor) {
+    let (n, m) = (ratio.n, ratio.m);
+    let cols = w.last_dim();
+    assert!(cols % m == 0, "last dim {cols} not divisible by M={m}");
+    assert_eq!(mask.shape(), w.shape());
+    let wd = w.data();
+    let md = mask.data_mut();
+    md.fill(0.0);
+    for g in 0..w.numel() / m {
+        let base = g * m;
+        let group = &wd[base..base + m];
+        let sel = &mut md[base..base + m];
+        if n >= m {
+            sel.fill(1.0);
+            continue;
+        }
+        for _round in 0..n {
+            let mut best = usize::MAX;
+            let mut best_mag = f32::NEG_INFINITY;
+            for (j, &x) in group.iter().enumerate() {
+                if sel[j] == 0.0 && x.abs() > best_mag {
+                    best_mag = x.abs();
+                    best = j;
+                }
+            }
+            sel[best] = 1.0;
+        }
+    }
+}
+
+/// `Π ⊙ w` in one pass.
+pub fn apply_nm(w: &Tensor, ratio: NmRatio) -> Tensor {
+    let mut out = w.clone();
+    apply_nm_inplace(&mut out, ratio);
+    out
+}
+
+/// Mask `w` in place (no separate mask tensor — used by inference paths).
+pub fn apply_nm_inplace(w: &mut Tensor, ratio: NmRatio) {
+    if ratio.is_dense() {
+        return;
+    }
+    let (n, m) = (ratio.n, ratio.m);
+    let cols = w.last_dim();
+    assert!(cols % m == 0, "last dim {cols} not divisible by M={m}");
+    let wd = w.data_mut();
+    // Indices of kept entries per group, selected without allocation for the
+    // common small-M cases via a fixed buffer.
+    let mut keep = [false; 64];
+    assert!(m <= 64, "M > 64 not supported by the in-place path");
+    for g in 0..wd.len() / m {
+        let base = g * m;
+        let group = &mut wd[base..base + m];
+        keep[..m].fill(false);
+        for _ in 0..n {
+            let mut best = usize::MAX;
+            let mut best_mag = f32::NEG_INFINITY;
+            for (j, &x) in group.iter().enumerate() {
+                if !keep[j] && x.abs() > best_mag {
+                    best_mag = x.abs();
+                    best = j;
+                }
+            }
+            keep[best] = true;
+        }
+        for (j, x) in group.iter_mut().enumerate() {
+            if !keep[j] {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Mask statistics for accounting/validation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MaskStats {
+    /// Number of kept (non-zero) mask entries.
+    pub kept: usize,
+    /// Total entries.
+    pub total: usize,
+    /// Whether every M-group kept exactly N entries.
+    pub exact: bool,
+}
+
+impl MaskStats {
+    pub fn density(&self) -> f64 {
+        self.kept as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Validate a {0,1} mask against a ratio: every group keeps exactly N.
+pub fn mask_stats(mask: &Tensor, ratio: NmRatio) -> MaskStats {
+    let m = ratio.m;
+    let md = mask.data();
+    let mut kept = 0usize;
+    let mut exact = mask.numel() % m == 0;
+    for g in 0..mask.numel() / m {
+        let cnt = md[g * m..(g + 1) * m]
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .count();
+        kept += cnt;
+        if cnt != ratio.n {
+            exact = false;
+        }
+    }
+    MaskStats { kept, total: mask.numel(), exact }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{gen_nm, gen_shape_div_m, gen_tensor, gen_tensor_with_ties, Cases};
+
+    #[test]
+    fn mask_2_4_basic() {
+        let w = Tensor::new(&[1, 4], vec![0.1, -3.0, 2.0, 0.5]);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        assert_eq!(mask.data(), &[0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn mask_ties_prefer_low_index() {
+        let w = Tensor::new(&[1, 4], vec![1.0, -1.0, 1.0, -1.0]);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        assert_eq!(mask.data(), &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mask_all_zero_group_keeps_first_n() {
+        let w = Tensor::new(&[1, 4], vec![0.0; 4]);
+        let mask = nm_mask(&w, NmRatio::new(1, 4));
+        assert_eq!(mask.data(), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_ratio_keeps_everything() {
+        let w = Tensor::new(&[2, 4], vec![1.0; 8]);
+        let mask = nm_mask(&w, NmRatio::new(4, 4));
+        assert!(mask.data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn property_exactly_n_per_group() {
+        Cases::new(100).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 6, 6);
+            let w = gen_tensor_with_ties(rng, &[r, c]);
+            let mask = nm_mask(&w, NmRatio::new(n, m));
+            let stats = mask_stats(&mask, NmRatio::new(n, m));
+            assert!(stats.exact, "n={n} m={m} shape=({r},{c})");
+            assert_eq!(stats.kept, w.numel() / m * n);
+        });
+    }
+
+    #[test]
+    fn property_mask_keeps_largest() {
+        Cases::new(100).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 4, 4);
+            let w = gen_tensor(rng, &[r, c]);
+            let mask = nm_mask(&w, NmRatio::new(n, m));
+            // every kept magnitude >= every dropped magnitude within a group
+            for g in 0..w.numel() / m {
+                let wg = &w.data()[g * m..(g + 1) * m];
+                let mg = &mask.data()[g * m..(g + 1) * m];
+                let min_kept = wg
+                    .iter()
+                    .zip(mg)
+                    .filter(|(_, &k)| k != 0.0)
+                    .map(|(&x, _)| x.abs())
+                    .fold(f32::INFINITY, f32::min);
+                let max_drop = wg
+                    .iter()
+                    .zip(mg)
+                    .filter(|(_, &k)| k == 0.0)
+                    .map(|(&x, _)| x.abs())
+                    .fold(0.0f32, f32::max);
+                assert!(min_kept >= max_drop, "kept {min_kept} < dropped {max_drop}");
+            }
+        });
+    }
+
+    #[test]
+    fn apply_inplace_matches_mask_product() {
+        Cases::new(60).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 5, 5);
+            let w = gen_tensor_with_ties(rng, &[r, c]);
+            let ratio = NmRatio::new(n, m);
+            let via_mask = crate::tensor::mul(&nm_mask(&w, ratio), &w);
+            let mut inplace = w.clone();
+            apply_nm_inplace(&mut inplace, ratio);
+            assert_eq!(via_mask.data(), inplace.data());
+        });
+    }
+
+    #[test]
+    fn ratio_parse_and_display() {
+        let r: NmRatio = "2:4".parse().unwrap();
+        assert_eq!(r, NmRatio::new(2, 4));
+        assert_eq!(r.to_string(), "2:4");
+        assert!("5:4".parse::<NmRatio>().is_err());
+        assert!("abc".parse::<NmRatio>().is_err());
+        assert_eq!(r.density(), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_last_dim_panics() {
+        let w = Tensor::new(&[1, 6], vec![0.0; 6]);
+        nm_mask(&w, NmRatio::new(2, 4));
+    }
+}

@@ -1,0 +1,111 @@
+//! Decaying-mask sparsity schedule (Kao et al., 2022) — the Fig. 6 ablation.
+//!
+//! The recipe: dense training until `start_step`, then start sparse training
+//! at `M-1 : M` and decay toward the target by halving, applying
+//! `N = max(target_n, floor(M / 2^k))` at decay interval `k ≥ 1`. Mirrors
+//! `ref.decaying_n` in the Layer-1 oracle, with the addition of a terminal
+//! `target_n` clamp so the schedule lands exactly on the configured ratio.
+
+/// Decaying-mask recipe parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DecaySchedule {
+    /// Group size M.
+    pub m: usize,
+    /// Final N to land on (e.g. 1 for 1:4).
+    pub target_n: usize,
+    /// Steps of dense training before sparsification starts. Setting this to
+    /// zero is the "without dense phase" arm of the Fig. 6 ablation.
+    pub start_step: usize,
+    /// Steps between decays.
+    pub decay_interval: usize,
+}
+
+impl DecaySchedule {
+    pub fn new(m: usize, target_n: usize, start_step: usize, decay_interval: usize) -> Self {
+        assert!(target_n >= 1 && target_n <= m);
+        assert!(decay_interval >= 1);
+        Self { m, target_n, start_step, decay_interval }
+    }
+
+    /// N to apply at `step` (0-based). `N == M` means dense.
+    pub fn n_at(&self, step: usize) -> usize {
+        decaying_n(step, self.m, self.decay_interval, self.start_step).max(self.target_n)
+    }
+
+    /// First step at which the schedule has reached `target_n`.
+    pub fn settle_step(&self) -> usize {
+        let mut k = 0usize;
+        // find smallest k with max(1, m >> k) <= target_n
+        while (self.m >> k).max(1) > self.target_n {
+            k += 1;
+        }
+        self.start_step + k.max(1) * self.decay_interval
+    }
+}
+
+/// Raw Kao et al. schedule: dense before `start_step`, then `M-1`, then
+/// `max(1, M >> k)` per elapsed decay interval `k ≥ 1`.
+/// Exactly `ref.decaying_n` in the Python oracle.
+pub fn decaying_n(step: usize, m: usize, decay_interval: usize, start_step: usize) -> usize {
+    if step < start_step {
+        return m; // dense
+    }
+    let k = (step - start_step) / decay_interval;
+    if k == 0 {
+        return m - 1;
+    }
+    m.checked_shr(k.min(u32::MAX as usize) as u32).unwrap_or(0).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_before_start() {
+        assert_eq!(decaying_n(0, 8, 10, 5), 8);
+        assert_eq!(decaying_n(4, 8, 10, 5), 8);
+    }
+
+    #[test]
+    fn m_minus_one_in_first_interval() {
+        assert_eq!(decaying_n(5, 8, 10, 5), 7);
+        assert_eq!(decaying_n(14, 8, 10, 5), 7);
+    }
+
+    #[test]
+    fn halving_sequence() {
+        // start=0, interval=10, m=8: k=1 -> 4, k=2 -> 2, k=3 -> 1, floor 1
+        assert_eq!(decaying_n(10, 8, 10, 0), 4);
+        assert_eq!(decaying_n(20, 8, 10, 0), 2);
+        assert_eq!(decaying_n(30, 8, 10, 0), 1);
+        assert_eq!(decaying_n(1000, 8, 10, 0), 1);
+    }
+
+    #[test]
+    fn schedule_clamps_to_target() {
+        let s = DecaySchedule::new(8, 2, 0, 10);
+        assert_eq!(s.n_at(30), 2); // raw would be 1
+        assert_eq!(s.n_at(0), 7);  // m-1 right at start
+    }
+
+    #[test]
+    fn schedule_monotone_nonincreasing() {
+        let s = DecaySchedule::new(16, 1, 7, 3);
+        let mut prev = usize::MAX;
+        for step in 0..100 {
+            let n = s.n_at(step);
+            assert!(n <= prev, "step {step}: {n} > {prev}");
+            prev = n;
+        }
+        assert_eq!(prev, 1);
+    }
+
+    #[test]
+    fn settle_step_reaches_target() {
+        let s = DecaySchedule::new(8, 1, 5, 10);
+        let t = s.settle_step();
+        assert_eq!(s.n_at(t), 1);
+        assert!(s.n_at(t.saturating_sub(s.decay_interval + 1)) > 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Telemetry: training traces (loss, variance stats, phase), summary
+//! statistics, and CSV/JSONL sinks under `results/`.
+//!
+//! Figures 2, 3 and 7 are regenerated directly from these traces; the bench
+//! harness writes one JSONL row per (experiment, recipe, seed) so results
+//! are machine-diffable across runs.
+
+use crate::autoswitch::SwitchStat;
+use crate::util::json::{Json, JsonObj};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    /// 1-based step.
+    pub t: usize,
+    pub loss: f64,
+    pub stat: SwitchStat,
+    /// True once the run is in the mask-learning phase.
+    pub phase2: bool,
+}
+
+/// An in-memory training trace with periodic eval snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    /// (step, primary eval metric) snapshots.
+    pub evals: Vec<(usize, f64)>,
+    /// Step at which the phase switched (0 = never).
+    pub switch_step: usize,
+}
+
+impl Trace {
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn push_eval(&mut self, step: usize, metric: f64) {
+        self.evals.push((step, metric));
+    }
+
+    /// Per-coordinate variance change `d⁻¹‖v_t − v_{t−1}‖₁` series (Fig. 3).
+    pub fn z_series(&self, d: usize) -> Vec<(usize, f64)> {
+        self.points
+            .iter()
+            .map(|p| (p.t, p.stat.dv_l1 / d as f64))
+            .collect()
+    }
+
+    /// ‖v_t‖₁ series (Fig. 2).
+    pub fn v_norm_series(&self) -> Vec<(usize, f64)> {
+        self.points.iter().map(|p| (p.t, p.stat.v_l1)).collect()
+    }
+
+    /// Mean loss over the final `k` steps.
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let n = self.points.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let start = n.saturating_sub(k);
+        let slice = &self.points[start..];
+        slice.iter().map(|p| p.loss).sum::<f64>() / slice.len() as f64
+    }
+
+    /// Best (max) eval metric seen.
+    pub fn best_eval(&self) -> Option<(usize, f64)> {
+        self.evals
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Final eval metric.
+    pub fn final_eval(&self) -> Option<(usize, f64)> {
+        self.evals.last().copied()
+    }
+}
+
+/// Summary stats over a sample (used when aggregating across seeds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+}
+
+/// Append-only JSONL sink (one object per line) under `results/`.
+pub struct JsonlSink {
+    path: PathBuf,
+}
+
+impl JsonlSink {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            crate::util::ensure_dir(dir)?;
+        }
+        Ok(Self { path })
+    }
+
+    pub fn append(&self, row: &JsonObj) -> anyhow::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", Json::Obj(row.clone()).to_string())?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Write a (step, value…) table as CSV — the plot-friendly sink for the
+/// figure benches.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        crate::util::ensure_dir(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| crate::util::fmt_sci(*v)).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(dv: f64) -> SwitchStat {
+        SwitchStat { v_l1: 1.0, v_l2: 1.0, dv_l1: dv, log_dv: 0.0 }
+    }
+
+    #[test]
+    fn trace_series_and_tail() {
+        let mut tr = Trace::default();
+        for t in 1..=10 {
+            tr.push(TracePoint { t, loss: (11 - t) as f64, stat: stat(t as f64), phase2: false });
+        }
+        assert_eq!(tr.z_series(2)[4], (5, 2.5));
+        assert_eq!(tr.v_norm_series().len(), 10);
+        assert!((tr.tail_loss(2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_eval_tracking() {
+        let mut tr = Trace::default();
+        tr.push_eval(10, 0.5);
+        tr.push_eval(20, 0.9);
+        tr.push_eval(30, 0.7);
+        assert_eq!(tr.best_eval(), Some((20, 0.9)));
+        assert_eq!(tr.final_eval(), Some((30, 0.7)));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn jsonl_sink_appends() {
+        let dir = std::env::temp_dir().join(format!("stepnm_test_{}", std::process::id()));
+        let path = dir.join("rows.jsonl");
+        let sink = JsonlSink::create(&path).unwrap();
+        let mut row = JsonObj::new();
+        row.insert("a", Json::Num(1.0));
+        sink.append(&row).unwrap();
+        sink.append(&row).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_writer_format() {
+        let dir = std::env::temp_dir().join(format!("stepnm_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        write_csv(&path, &["step", "loss"], &[vec![1.0, 0.5], vec![2.0, 0.25]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss\n"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,227 @@
+//! Minimal dense `f32` tensor used by the pure-Rust experiment engine and as
+//! the host-side representation the [`crate::runtime`] converts to/from PJRT
+//! literals.
+//!
+//! Row-major (C order) contiguous storage only — that matches both the HLO
+//! artifact layouts (jax default) and keeps the conversion to `xla::Literal`
+//! a straight memcpy. Ops are written for clarity first; the handful on the
+//! hot path (`matmul`, axpy-style updates) are blocked/unrolled — see
+//! `EXPERIMENTS.md` §Perf for the measured effect.
+
+pub mod ops;
+
+pub use ops::*;
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; length must match the shape product.
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, data.len(), "shape {shape:?} vs data len {}", data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// 1-element vector (the convention the artifacts use for scalars).
+    pub fn scalar1(v: f32) -> Self {
+        Self { shape: vec![1], data: vec![v] }
+    }
+
+    /// iid N(mean, std²) tensor.
+    pub fn randn(shape: &[usize], rng: &mut crate::rng::Pcg64, mean: f32, std: f32) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, mean, std);
+        t
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of the last axis (the N:M grouping axis); 1 for scalars.
+    pub fn last_dim(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    /// Rows when viewed as 2-D `[numel / last_dim, last_dim]`.
+    pub fn rows_2d(&self) -> usize {
+        if self.last_dim() == 0 {
+            0
+        } else {
+            self.numel() / self.last_dim()
+        }
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(ix < dim, "index {idx:?} out of bounds for {:?} at axis {i}", self.shape);
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    // ---- shape manipulation ------------------------------------------------
+
+    /// Reshape (same element count). Cheap: storage is contiguous.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View as `[rows, last_dim]` without copying.
+    pub fn as_2d(&self) -> (usize, usize) {
+        (self.rows_2d(), self.last_dim())
+    }
+
+    // ---- reductions ---------------------------------------------------------
+
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Count of exactly-zero entries (mask sparsity accounting).
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor{:?} (numel={})", self.shape, self.numel())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        let t = Tensor::new(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.rows_2d(), 2);
+        assert_eq!(t.last_dim(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_len() {
+        Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn index_math_row_major() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[0, 2]), 2.0);
+        assert_eq!(t.get(&[1, 0]), 3.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.set(&[2, 1], 7.5);
+        assert_eq!(t.get(&[2, 1]), 7.5);
+        assert_eq!(t.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[4], vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(t.l1(), 10.0);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.max_abs(), 4.0);
+        assert!((t.l2() - (30.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::new(&[2, 6], (0..12).map(|x| x as f32).collect());
+        let t = t.reshape(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.get(&[2, 3]), 11.0);
+    }
+
+    #[test]
+    fn scalar_conventions() {
+        assert_eq!(Tensor::scalar(2.0).shape(), &[] as &[usize]);
+        assert_eq!(Tensor::scalar1(2.0).shape(), &[1]);
+    }
+}

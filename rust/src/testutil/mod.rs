@@ -1,0 +1,165 @@
+//! Hand-rolled property-testing helpers (the offline image has no proptest).
+//!
+//! [`Cases`] drives a seeded generator through `n` iterations and reports the
+//! failing seed + iteration on panic, so failures replay deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath; compile-checked only
+//! use step_nm::testutil::Cases;
+//! Cases::new(64).run(|rng, case| {
+//!     let n = rng.range(1, 9);
+//!     assert!(n < 9, "case {case}");
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Default master seed for property tests; override with `STEP_NM_TEST_SEED`.
+fn master_seed() -> u64 {
+    std::env::var("STEP_NM_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// A deterministic multi-case property-test driver.
+pub struct Cases {
+    n: usize,
+    seed: u64,
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        Self { n, seed: master_seed() }
+    }
+
+    pub fn with_seed(n: usize, seed: u64) -> Self {
+        Self { n, seed }
+    }
+
+    /// Run `f(rng, case_index)` for each case with an independent rng.
+    /// Panics are re-raised with the replay seed attached.
+    pub fn run(self, f: impl Fn(&mut Pcg64, usize)) {
+        let mut root = Pcg64::new(self.seed);
+        for case in 0..self.n {
+            let mut rng = root.split(case as u64);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng, case)
+            }));
+            if let Err(payload) = result {
+                eprintln!(
+                    "property case {case}/{} failed (replay: STEP_NM_TEST_SEED={} case={case})",
+                    self.n, self.seed
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+/// A random (rows, cols) shape whose cols is a multiple of `m`.
+pub fn gen_shape_div_m(rng: &mut Pcg64, m: usize, max_rows: usize, max_groups: usize) -> (usize, usize) {
+    let rows = rng.range(1, max_rows + 1);
+    let groups = rng.range(1, max_groups + 1);
+    (rows, groups * m)
+}
+
+/// A random tensor with the given shape, values in roughly N(0, 1).
+pub fn gen_tensor(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    Tensor::randn(shape, rng, 0.0, 1.0)
+}
+
+/// A random tensor that intentionally contains ties and zeros (worst case
+/// for mask tie-breaking).
+pub fn gen_tensor_with_ties(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let numel: usize = shape.iter().product();
+    let vals = [-2.0f32, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0];
+    let data = (0..numel).map(|_| vals[rng.below(vals.len())]).collect();
+    Tensor::new(shape, data)
+}
+
+/// A random valid (n, m) sparsity pair with m ∈ {2,4,8,16,32}.
+pub fn gen_nm(rng: &mut Pcg64) -> (usize, usize) {
+    let ms = [2usize, 4, 8, 16, 32];
+    let m = ms[rng.below(ms.len())];
+    let n = rng.range(1, m + 1);
+    (n, m)
+}
+
+// ---------------------------------------------------------------------------
+// assertions
+// ---------------------------------------------------------------------------
+
+/// Assert elementwise |a − b| ≤ tol (plus matching lengths).
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "mismatch at [{i}]: {x} vs {y} (tol {tol}, diff {})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Assert relative closeness: |a−b| ≤ atol + rtol·|b|.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "mismatch at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        // capture values from run 1
+        let first: Vec<u64> = {
+            let vals = std::sync::Mutex::new(Vec::new());
+            Cases::with_seed(8, 1).run(|rng, _| {
+                vals.lock().unwrap().push(rng.next_u64());
+            });
+            vals.into_inner().unwrap()
+        };
+        let vals = std::sync::Mutex::new(Vec::new());
+        Cases::with_seed(8, 1).run(|rng, _| {
+            vals.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(first, vals.into_inner().unwrap());
+    }
+
+    #[test]
+    fn gen_shape_respects_m() {
+        Cases::new(32).run(|rng, _| {
+            let (_r, c) = gen_shape_div_m(rng, 4, 10, 10);
+            assert_eq!(c % 4, 0);
+            assert!(c >= 4);
+        });
+    }
+
+    #[test]
+    fn gen_nm_valid() {
+        Cases::new(64).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            assert!(1 <= n && n <= m);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_catches() {
+        assert_close(&[1.0], &[1.1], 0.01);
+    }
+}

@@ -1,0 +1,63 @@
+//! Small shared utilities: a JSON parser/writer (the offline image has no
+//! serde), error helpers, and filesystem helpers.
+//!
+//! The JSON module is deliberately minimal but complete for the subset the
+//! project produces and consumes: `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and the JSONL result sinks under `results/`.
+
+pub mod json;
+
+use std::path::Path;
+
+/// Create `dir` (and parents) if missing; error message includes the path.
+pub fn ensure_dir(dir: &Path) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))
+}
+
+/// Read a whole file to a string with a path-qualified error.
+pub fn read_to_string(path: &Path) -> anyhow::Result<String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))
+}
+
+/// Format a `f64` compactly for tables: 4 significant decimals, scientific
+/// below 1e-3.
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() < 1e-3 || x.abs() >= 1e6 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Monotonic wall-clock seconds since an arbitrary epoch (process start).
+pub fn now_secs() -> f64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sci_ranges() {
+        assert_eq!(fmt_sci(0.0), "0");
+        assert!(fmt_sci(1.0e-6).contains('e'));
+        assert!(!fmt_sci(0.5).contains('e'));
+        assert!(fmt_sci(2.0e7).contains('e'));
+    }
+
+    #[test]
+    fn now_secs_monotone() {
+        let a = now_secs();
+        let b = now_secs();
+        assert!(b >= a);
+    }
+}

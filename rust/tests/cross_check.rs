@@ -1,0 +1,265 @@
+//! Cross-layer validation: the pure-Rust optimizer/sparsity oracles must
+//! agree with the AOT HLO artifacts executed through PJRT, and the
+//! Pallas-kernel artifact must agree with the pure-jnp artifact.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when absent so `cargo test` works on a fresh clone.
+
+use step_nm::optim::{adam_update, srste_refine, step_phase2_update, AdamHp};
+use step_nm::rng::Pcg64;
+use step_nm::runtime::{Runtime, Value};
+use step_nm::sparsity::{nm_mask, NmRatio};
+use step_nm::tensor::Tensor;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::from_dir("artifacts").expect("runtime"))
+}
+
+/// Max |a-b| over two tensors.
+fn linf(a: &Tensor, b: &Tensor) -> f32 {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Build a deterministic batch for mlp_pallas (in_dim 64, 10 classes, b 32).
+fn batch(rng: &mut Pcg64) -> (Value, Value) {
+    let x = Tensor::randn(&[32, 64], rng, 0.0, 1.0);
+    let y: Vec<i32> = (0..32).map(|_| rng.below(10) as i32).collect();
+    (Value::f32(x), Value::i32_vec(y))
+}
+
+#[test]
+fn rust_adam_matches_hlo_dense_step() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(11);
+    let params: Vec<Tensor> = rt
+        .init_params("mlp_pallas", 3)
+        .unwrap()
+        .into_iter()
+        .map(Value::into_tensor)
+        .collect();
+    let mut m: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut v = m.clone();
+    let mut host_p = params.clone();
+    let mut dev_p = params;
+
+    for t in 1..=3u64 {
+        let (x, y) = batch(&mut rng);
+        // device step
+        let mut inputs: Vec<Value> = Vec::new();
+        inputs.extend(dev_p.iter().cloned().map(Value::f32));
+        inputs.extend(m.iter().cloned().map(Value::f32));
+        inputs.extend(v.iter().cloned().map(Value::f32));
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(Value::scalar(1e-3));
+        inputs.push(Value::scalar(t as f32));
+        let out = rt.execute("mlp_pallas__dense_adam", &inputs).unwrap();
+        let p_len = dev_p.len();
+        // host step with the gradient implied by the device update is not
+        // available directly; instead verify the optimizer algebra: recover
+        // g from the v update (v' = b2 v + (1-b2) g²) and check the weight
+        // update formula reproduces the artifact's output bit-closely.
+        for i in 0..p_len {
+            let p_new = out[i].as_tensor();
+            let m_new = out[p_len + i].as_tensor();
+            let v_new = out[2 * p_len + i].as_tensor();
+            // reconstruct g from the m update: g = (m' − b1 m) / (1 − b1)
+            let g = Tensor::new(
+                m[i].shape(),
+                m_new
+                    .data()
+                    .iter()
+                    .zip(m[i].data())
+                    .map(|(&m1, &m0)| (m1 - 0.9 * m0) / 0.1)
+                    .collect(),
+            );
+            let mut p_host = dev_p[i].clone();
+            let mut m_host = m[i].clone();
+            let mut v_host = v[i].clone();
+            adam_update(&mut p_host, &mut m_host, &mut v_host, &g, t, 1e-3, AdamHp::default());
+            assert!(
+                linf(&p_host, p_new) < 2e-4,
+                "param {i} step {t}: host adam diverges from artifact ({})",
+                linf(&p_host, p_new)
+            );
+            assert!(linf(&v_host, v_new) < 2e-4);
+            m[i] = m_new.clone();
+            v[i] = v_new.clone();
+            dev_p[i] = p_new.clone();
+            host_p[i] = p_host;
+        }
+    }
+}
+
+#[test]
+fn rust_mask_matches_hlo_eval_masking() {
+    // The eval artifact applies Π(n:m) ⊙ w before the forward pass. Feed a
+    // weight matrix whose mask we know, run eval at n and at m (dense), and
+    // verify the loss difference matches masking semantics computed in Rust.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(7);
+    let params: Vec<Tensor> = rt
+        .init_params("mlp_pallas", 5)
+        .unwrap()
+        .into_iter()
+        .map(Value::into_tensor)
+        .collect();
+    let info = rt.registry().model("mlp_pallas").unwrap().clone();
+    let (x, y) = batch(&mut rng);
+
+    let eval = |ps: &[Tensor], n: i32| -> f64 {
+        let mut inputs: Vec<Value> = ps.iter().cloned().map(Value::f32).collect();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(Value::i32_vec(vec![n; info.n_sparse()]));
+        let out = rt.execute("mlp_pallas__eval_m4", &inputs).unwrap();
+        out[0].scalar_f64()
+    };
+
+    // dense eval (n = m) on raw params == masked eval on host-masked params
+    // with n = m (identity)
+    let dense = eval(&params, 4);
+    // masked eval at 2:4 == dense eval of host-masked params
+    let masked_dev = eval(&params, 2);
+    let host_masked: Vec<Tensor> = params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            if info.params[i].2 {
+                step_nm::sparsity::apply_nm(p, NmRatio::new(2, 4))
+            } else {
+                p.clone()
+            }
+        })
+        .collect();
+    let masked_host = eval(&host_masked, 4);
+    assert!(
+        (masked_dev - masked_host).abs() < 1e-4,
+        "device-side masking {masked_dev} vs host-side masking {masked_host}"
+    );
+    assert!(
+        (masked_dev - dense).abs() > 1e-7,
+        "masking must change the loss (dense {dense}, masked {masked_dev})"
+    );
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The kernel-bearing artifact (Pallas nm_mask + fused Adam + SR-STE,
+    // interpret-mode) must produce the same step as the pure-jnp recipe.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(23);
+    let params: Vec<Tensor> = rt
+        .init_params("mlp_pallas", 9)
+        .unwrap()
+        .into_iter()
+        .map(Value::into_tensor)
+        .collect();
+    let zeros: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let info = rt.registry().model("mlp_pallas").unwrap().clone();
+    let (x, y) = batch(&mut rng);
+
+    let mut common: Vec<Value> = Vec::new();
+    common.extend(params.iter().cloned().map(Value::f32));
+    common.extend(zeros.iter().cloned().map(Value::f32));
+    common.extend(zeros.iter().cloned().map(Value::f32));
+    common.push(x);
+    common.push(y);
+    common.push(Value::scalar(1e-3));
+    common.push(Value::scalar(1.0));
+    common.push(Value::scalar(2e-4));
+
+    // jnp path takes an extra n_vec input; pallas path is static 2:4
+    let mut jnp_inputs = common.clone();
+    jnp_inputs.push(Value::i32_vec(vec![2; info.n_sparse()]));
+    let jnp = rt.execute("mlp_pallas__srste_adam_m4", &jnp_inputs).unwrap();
+    let pallas = rt
+        .execute("mlp_pallas__srste_adam_pallas_n2m4", &common)
+        .unwrap();
+
+    assert_eq!(jnp.len(), pallas.len());
+    for (i, (a, b)) in jnp.iter().zip(&pallas).enumerate() {
+        let (a, b) = (a.as_tensor(), b.as_tensor());
+        let d = linf(a, b);
+        assert!(d < 1e-5, "output {i}: pallas vs jnp linf = {d}");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    // wrong arity
+    let err = rt.execute("mlp_pallas__init", &[]).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "{err}");
+    // wrong dtype for the seed slot
+    let err = rt
+        .execute("mlp_pallas__init", &[Value::scalar(1.0)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("dtype"), "{err}");
+    // wrong shape
+    let err = rt
+        .execute("mlp_pallas__init", &[Value::i32_vec(vec![1, 2])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape"), "{err}");
+    // unknown artifact
+    assert!(rt.execute("nope__artifact", &[]).is_err());
+}
+
+#[test]
+fn init_is_seed_deterministic_on_device() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params("mlp_pallas", 7).unwrap();
+    let b = rt.init_params("mlp_pallas", 7).unwrap();
+    assert_eq!(a, b);
+    let c = rt.init_params("mlp_pallas", 8).unwrap();
+    assert_ne!(a[0], c[0]);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime() else { return };
+    let before = rt.cached_executables();
+    rt.executable("mlp_pallas__eval_m4").unwrap();
+    rt.executable("mlp_pallas__eval_m4").unwrap();
+    assert_eq!(rt.cached_executables(), before + 1);
+}
+
+#[test]
+fn rust_srste_and_phase2_oracles_are_consistent() {
+    // host-side consistency: applying Eq (9) then the phase-2 update must
+    // equal the composite done in one pass on small random tensors (the same
+    // algebra the artifacts fuse).
+    let mut rng = Pcg64::new(31);
+    for _ in 0..20 {
+        let w = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        let mut g = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
+        let g_orig = g.clone();
+        srste_refine(&mut g, &w, &mask, 2e-4);
+        // manual check on a few coordinates
+        for idx in [0usize, 5, 17, 31] {
+            let expect = g_orig.data()[idx]
+                + 2e-4 * (1.0 - mask.data()[idx]) * w.data()[idx];
+            assert!((g.data()[idx] - expect).abs() < 1e-7);
+        }
+        // phase-2 update leaves v* untouched and moves w against g
+        let v_star = Tensor::full(&[4, 8], 0.04);
+        let mut w2 = w.clone();
+        let mut m2 = Tensor::zeros(&[4, 8]);
+        step_phase2_update(&mut w2, &mut m2, &v_star, &g, 1, 1e-2, 0.9, 1e-8);
+        for i in 0..w2.numel() {
+            let expect = w.data()[i] - 1e-2 * g.data()[i] / (0.04f32 + 1e-8).sqrt();
+            assert!((w2.data()[i] - expect).abs() < 1e-5);
+        }
+    }
+}

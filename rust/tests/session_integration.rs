@@ -1,0 +1,229 @@
+//! End-to-end coordinator integration tests over the PJRT runtime: the
+//! phase state machine, mask invariants on trained weights, recipe
+//! equivalences, and the sweep engine. All on the tiny `mlp_pallas` config
+//! so the whole file stays fast.
+
+use step_nm::config::{ExperimentConfig, RecipeKind};
+use step_nm::coordinator::{Session, Sweep};
+use step_nm::runtime::Runtime;
+use step_nm::sparsity::{mask_stats, nm_mask, NmRatio};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::from_dir("artifacts").expect("runtime"))
+}
+
+fn tiny_cfg(recipe: RecipeKind) -> ExperimentConfig {
+    ExperimentConfig::builder("mlp_pallas")
+        .recipe(recipe)
+        .sparsity(2, 4)
+        .steps(40)
+        .lr(1e-3)
+        .eval_every(20)
+        .eval_batches(3)
+        .build()
+}
+
+#[test]
+fn step_recipe_switches_and_freezes() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(RecipeKind::Step);
+    cfg.autoswitch.fixed_step = Some(10);
+    let mut s = Session::new(&rt, &cfg).unwrap();
+    for _ in 0..9 {
+        s.step().unwrap();
+        assert!(!s.in_phase2(), "switched too early at {}", s.current_step());
+    }
+    s.step().unwrap();
+    assert!(s.in_phase2(), "fixed switch at 10 did not fire");
+    // phase 2 emits zero variance change (v frozen structurally)
+    let (_, stat) = s.step().unwrap();
+    assert_eq!(stat.dv_l1, 0.0);
+    assert_eq!(stat.v_l1, 0.0);
+}
+
+#[test]
+fn autoswitch_fires_within_clip_bounds() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(RecipeKind::Step); // clip defaults to [4, 20] of 40
+    let mut s = Session::new(&rt, &cfg).unwrap();
+    let report = s.run().unwrap();
+    assert!(report.switch_step > 40 / 10, "switch at {}", report.switch_step);
+    assert!(report.switch_step <= 40 / 2 + 1, "switch at {}", report.switch_step);
+}
+
+#[test]
+fn trained_sparse_params_satisfy_nm_exactly() {
+    let Some(rt) = runtime() else { return };
+    for recipe in [RecipeKind::SrSte, RecipeKind::Step, RecipeKind::Asp] {
+        let mut s = Session::new(&rt, &tiny_cfg(recipe)).unwrap();
+        s.run().unwrap();
+        let sparse = s.sparse_params();
+        let info = s.model_info();
+        for (i, t) in sparse.iter().enumerate() {
+            if info.params[i].2 {
+                let stats = mask_stats(&nm_mask(t, NmRatio::new(2, 4)), NmRatio::new(2, 4));
+                assert!(stats.exact, "{recipe:?}: tensor {i} violates 2:4");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_and_step_phase1_are_identical() {
+    // STEP before the switch IS dense Adam: identical params stream
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(RecipeKind::Step);
+    cfg.autoswitch.fixed_step = Some(35);
+    let mut a = Session::new(&rt, &cfg).unwrap();
+    let mut b = Session::new(&rt, &tiny_cfg(RecipeKind::Dense)).unwrap();
+    for _ in 0..5 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    for (ta, tb) in a.params().iter().zip(b.params()) {
+        assert_eq!(ta, tb, "phase-1 STEP must equal dense Adam bit-for-bit");
+    }
+}
+
+#[test]
+fn ste_is_srste_with_zero_lambda() {
+    let Some(rt) = runtime() else { return };
+    let mut ste_cfg = tiny_cfg(RecipeKind::Ste);
+    ste_cfg.lam = 99.0; // must be ignored for plain STE
+    let mut srste_cfg = tiny_cfg(RecipeKind::SrSte);
+    srste_cfg.lam = 0.0;
+    let mut a = Session::new(&rt, &ste_cfg).unwrap();
+    let mut b = Session::new(&rt, &srste_cfg).unwrap();
+    for _ in 0..5 {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    for (ta, tb) in a.params().iter().zip(b.params()) {
+        assert_eq!(ta, tb);
+    }
+}
+
+#[test]
+fn training_improves_over_init() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(RecipeKind::Step);
+    cfg.steps = 80;
+    let mut s = Session::new(&rt, &cfg).unwrap();
+    let init_eval = s.evaluate().unwrap();
+    let report = s.run().unwrap();
+    assert!(
+        report.final_eval.primary > init_eval.primary + 0.1,
+        "no learning: init acc {} vs final {}",
+        init_eval.primary,
+        report.final_eval.primary
+    );
+}
+
+#[test]
+fn seeds_reproduce_exactly() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(RecipeKind::SrSte);
+    let run = || {
+        let mut s = Session::new(&rt, &cfg).unwrap();
+        for _ in 0..10 {
+            s.step().unwrap();
+        }
+        s.params().to_vec()
+    };
+    let p1 = run();
+    let p2 = run();
+    assert_eq!(p1, p2, "same seed must give a bit-identical trajectory");
+}
+
+#[test]
+fn different_seeds_differ() {
+    let Some(rt) = runtime() else { return };
+    let mut c1 = tiny_cfg(RecipeKind::Dense);
+    c1.seed = 1;
+    let mut c2 = tiny_cfg(RecipeKind::Dense);
+    c2.seed = 2;
+    let mut s1 = Session::new(&rt, &c1).unwrap();
+    let mut s2 = Session::new(&rt, &c2).unwrap();
+    s1.step().unwrap();
+    s2.step().unwrap();
+    assert_ne!(s1.params()[0], s2.params()[0]);
+}
+
+#[test]
+fn layer_ns_override_applies_per_layer() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(RecipeKind::SrSte);
+    let mut s = Session::new(&rt, &cfg).unwrap();
+    let n_sparse = s.model_info().n_sparse();
+    s.set_layer_ns(vec![1; n_sparse]).unwrap();
+    for _ in 0..20 {
+        s.step().unwrap();
+    }
+    let sparse = s.sparse_params();
+    let info = s.model_info();
+    for (i, t) in sparse.iter().enumerate() {
+        if info.params[i].2 {
+            // density must be 1/4, not the cfg's 2/4
+            let zeros = t.count_zeros();
+            assert!(
+                zeros >= t.numel() * 3 / 4,
+                "tensor {i}: {} zeros of {}",
+                zeros,
+                t.numel()
+            );
+        }
+    }
+    // wrong arity is rejected
+    assert!(s.set_layer_ns(vec![1; n_sparse + 1]).is_err());
+}
+
+#[test]
+fn decaying_mask_session_runs_dense_then_sparse() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(RecipeKind::DecayingMask);
+    cfg.decay_start = 10;
+    cfg.decay_interval = 10;
+    let mut s = Session::new(&rt, &cfg).unwrap();
+    let report = s.run().unwrap();
+    assert_eq!(report.trace.points.len(), 40);
+    // loss must exist at every step and the run must finish
+    assert!(report.final_eval.primary.is_finite());
+}
+
+#[test]
+fn sweep_aggregates_across_seeds() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join(format!("stepnm_sweep_{}", std::process::id()));
+    let sink = dir.join("rows.jsonl");
+    let mut sweep = Sweep::new(&rt).with_sink(&sink).unwrap();
+    sweep.verbose = false;
+    let mut cfg = tiny_cfg(RecipeKind::Dense);
+    cfg.steps = 10;
+    cfg.eval_every = 10;
+    let row = sweep.run_seeds("itest", &cfg, &[0, 1, 2]).unwrap();
+    assert_eq!(row.values.len(), 3);
+    assert_eq!(row.summary.n, 3);
+    let text = std::fs::read_to_string(&sink).unwrap();
+    assert_eq!(text.lines().count(), 3);
+    for line in text.lines() {
+        let row = step_nm::util::json::Json::parse(line).unwrap();
+        assert_eq!(row.get("label").as_str(), Some("itest"));
+        assert!(row.get("value").as_f64().is_some());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_batch_cap_respected() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(RecipeKind::Dense);
+    cfg.eval_batches = 2;
+    let s = Session::new(&rt, &cfg).unwrap();
+    rt.reset_stats();
+    s.evaluate().unwrap();
+    assert_eq!(rt.stats().executions, 2);
+}

@@ -1,0 +1,149 @@
+//! Empirical validation of Theorem 1: with stationary g², the preconditioned
+//! variance error ‖v̂_t − v̂_{t₀}‖∞ stays below the
+//! √(4G²(1−β₂)²(t−t₀)·log(2/δ)) envelope, and the *average* per-step error
+//! decays as O(1/√(t−t₀)). Also checks the t₀ > log_{β₂}(1 − 1/√2)
+//! precondition and the martingale construction used in the proof.
+
+use step_nm::rng::Pcg64;
+
+/// Simulate Adam's v update with iid bounded stationary g² and return the
+/// bias-corrected v̂ trajectory for one coordinate.
+fn vhat_trajectory(rng: &mut Pcg64, beta2: f64, g_bound: f64, steps: usize) -> Vec<f64> {
+    let mut v = 0.0f64;
+    let mut out = Vec::with_capacity(steps);
+    for t in 1..=steps {
+        // stationary squared gradients: uniform in [0, G]
+        let g2 = rng.f64() * g_bound;
+        v = beta2 * v + (1.0 - beta2) * g2;
+        out.push(v / (1.0 - beta2.powi(t as i32)));
+    }
+    out
+}
+
+/// The Theorem-1 bound for given (G, β₂, δ, t−t₀).
+fn bound(g: f64, beta2: f64, delta: f64, dt: usize) -> f64 {
+    (4.0 * g * g * (1.0 - beta2).powi(2) * dt as f64 * (2.0f64 / delta).ln()).sqrt()
+}
+
+/// Minimal precondition step from the theorem statement.
+fn t0_min(beta2: f64) -> usize {
+    // t0 > log_{β₂}(1 − 1/√2)
+    ((1.0 - 1.0 / 2.0f64.sqrt()).ln() / beta2.ln()).ceil() as usize + 1
+}
+
+#[test]
+fn theorem1_bound_holds_with_high_probability() {
+    let beta2 = 0.99;
+    let g = 1.0;
+    let delta = 0.1;
+    let t0 = t0_min(beta2).max(200);
+    let steps = 2000;
+    let trials = 200;
+    let mut violations = 0usize;
+    let mut root = Pcg64::new(0xBEEF);
+    for trial in 0..trials {
+        let mut rng = root.split(trial as u64);
+        let vhat = vhat_trajectory(&mut rng, beta2, g, steps);
+        // check the bound at a few horizons
+        for dt in [50usize, 200, steps - t0 - 1] {
+            let err = (vhat[t0 + dt - 1] - vhat[t0 - 1]).abs();
+            if err >= bound(g, beta2, delta, dt) {
+                violations += 1;
+            }
+        }
+    }
+    // with probability ≥ 1−δ per (trial, horizon): expect ≤ δ·N violations
+    // (plus slack for the discretized check)
+    let checked = trials * 3;
+    assert!(
+        (violations as f64) < 2.0 * delta * checked as f64,
+        "{violations}/{checked} bound violations"
+    );
+}
+
+#[test]
+fn average_error_decays_like_inverse_sqrt() {
+    // the paper's reading of Thm 1: mean per-step error over horizon Δ decays
+    // ~ 1/√Δ. Check the measured mean error at Δ and 16Δ: ratio ≈ 4 within
+    // generous slack.
+    let beta2 = 0.999;
+    let t0 = 1000;
+    let mut err_short = 0.0f64;
+    let mut err_long = 0.0f64;
+    let trials = 100;
+    let mut root = Pcg64::new(0xF00D);
+    let (d_short, d_long) = (100usize, 1600usize);
+    for trial in 0..trials {
+        let mut rng = root.split(trial as u64);
+        let vhat = vhat_trajectory(&mut rng, beta2, 1.0, t0 + d_long + 1);
+        err_short += (vhat[t0 + d_short - 1] - vhat[t0 - 1]).abs() / d_short as f64;
+        err_long += (vhat[t0 + d_long - 1] - vhat[t0 - 1]).abs() / d_long as f64;
+    }
+    err_short /= trials as f64;
+    err_long /= trials as f64;
+    let ratio = err_short / err_long;
+    // ideal √16 = 4; accept [2, 10] (finite-sample slack)
+    assert!(
+        (2.0..12.0).contains(&ratio),
+        "avg-error decay ratio {ratio} (short {err_short}, long {err_long})"
+    );
+}
+
+#[test]
+fn martingale_increments_are_mean_zero_and_bounded() {
+    // Eq (12)–(13) of the proof: E[v̂_{t+1} − v̂_t | F_t] = 0 under
+    // stationarity, and |v̂_{t+1} − v̂_t| ≤ √2 (1−β₂) G after t₀.
+    let beta2 = 0.99;
+    let g = 1.0;
+    let t0 = t0_min(beta2);
+    let steps = 5000;
+    let mut rng = Pcg64::new(0xABCD);
+    let vhat = vhat_trajectory(&mut rng, beta2, g, steps);
+    let cap = 2.0f64.sqrt() * (1.0 - beta2) * g;
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for t in t0..steps - 1 {
+        let inc = vhat[t + 1] - vhat[t];
+        assert!(
+            inc.abs() <= cap * 1.0001,
+            "increment {inc} exceeds cap {cap} at t={t}"
+        );
+        sum += inc;
+        count += 1;
+    }
+    let mean = sum / count as f64;
+    assert!(mean.abs() < cap / 10.0, "mean increment {mean} not ≈ 0");
+}
+
+#[test]
+fn precondition_step_formula() {
+    // sanity on the t₀ constraint: 1 − β₂^t₀ > 1/√2 must hold at t₀_min
+    for beta2 in [0.9, 0.99, 0.999] {
+        let t0 = t0_min(beta2);
+        assert!(1.0 - beta2.powi(t0 as i32) > 1.0 / 2.0f64.sqrt());
+        assert!(1.0 - beta2.powi(t0 as i32 - 2) <= 1.0 / 2.0f64.sqrt() + 0.05);
+    }
+}
+
+#[test]
+fn fixed_v_vs_tracked_v_error_is_sublinear() {
+    // the cumulative max error over a long run grows slower than linear:
+    // check max_{t≤T} |v̂_t − v̂_{t0}| at T and 4T grows by < 4×.
+    let beta2 = 0.999;
+    let t0 = 500;
+    let mut root = Pcg64::new(0x5EED);
+    let mut ratio_sum = 0.0;
+    let trials = 40;
+    for trial in 0..trials {
+        let mut rng = root.split(trial);
+        let vhat = vhat_trajectory(&mut rng, beta2, 1.0, t0 + 4000);
+        let max_err = |horizon: usize| -> f64 {
+            (1..=horizon)
+                .map(|dt| (vhat[t0 + dt - 1] - vhat[t0 - 1]).abs())
+                .fold(0.0, f64::max)
+        };
+        ratio_sum += max_err(4000) / max_err(1000).max(1e-12);
+    }
+    let avg_ratio = ratio_sum / trials as f64;
+    assert!(avg_ratio < 3.0, "max-error growth ratio {avg_ratio} (want ≪ 4)");
+}
