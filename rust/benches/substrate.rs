@@ -1,13 +1,114 @@
 //! `cargo bench --bench substrate` — pure-Rust hot-path kernels: N:M mask
-//! selection, the blocked matmuls, fused optimizer updates, and the
-//! AutoSwitch window. These are the L3 components on the per-step path.
+//! selection, the blocked matmuls, fused optimizer updates, the AutoSwitch
+//! window, and the recipe-engine step-throughput suite (fused vs unfused
+//! reference on the Table-1 workload shapes, recorded to
+//! `BENCH_recipes.json` so future changes can track the trajectory).
 
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
-use step_nm::bench::{print_header, Harness};
-use step_nm::optim::{adam_update, sgdm_update, step_phase2_update, AdamHp};
+use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
+use step_nm::optim::{
+    adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
+};
 use step_nm::rng::Pcg64;
-use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, NmRatio};
+use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio};
 use step_nm::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+
+/// An MLP-shaped parameter stack: `[w0, b0, w1, b1, …]`, hidden weights
+/// sparse-eligible at 2:4, final layer + biases dense — the layout every
+/// Table-1 analog task trains.
+fn workload(
+    rng: &mut Pcg64,
+    sizes: &[usize],
+) -> (Vec<Tensor>, Vec<Option<NmRatio>>, Vec<Tensor>) {
+    let mut params = Vec::new();
+    let mut ratios = Vec::new();
+    for l in 0..sizes.len() - 1 {
+        params.push(Tensor::randn(&[sizes[l], sizes[l + 1]], rng, 0.0, 0.5));
+        ratios.push((l != sizes.len() - 2).then_some(NmRatio::new(2, 4)));
+        params.push(Tensor::randn(&[sizes[l + 1]], rng, 0.0, 0.1));
+        ratios.push(None);
+    }
+    let grads = params
+        .iter()
+        .map(|p| Tensor::randn(p.shape(), rng, 0.0, 0.1))
+        .collect();
+    (params, ratios, grads)
+}
+
+/// Fused vs reference step throughput for every recipe on one workload.
+/// The gradient closure returns a precomputed clone on both paths; its
+/// measured cost is subtracted from both means, so the recorded numbers
+/// isolate the engine (masks + forward weights + update + telemetry),
+/// not the loss closure.
+fn bench_recipe_steps(
+    rng: &mut Pcg64,
+    shape_name: &str,
+    sizes: &[usize],
+    out: &mut Vec<Comparison>,
+) {
+    let h = Harness {
+        warmup: 2,
+        min_iters: 5,
+        max_iters: 200,
+        min_time: std::time::Duration::from_millis(150),
+    };
+    print_header(&format!("recipe step throughput — {shape_name} {sizes:?}"));
+    let (params, ratios, grads) = workload(rng, sizes);
+    let total: usize = params.iter().map(Tensor::numel).sum();
+    // Both paths pay one grads.clone() per step inside the timed region (the
+    // closure must return owned grads). Measure that constant and subtract
+    // it from both means so the recorded ratio reflects the ENGINE, not the
+    // shared closure cost; floor at 5% of the raw mean to bound noise.
+    let clone_overhead = h.run("grads.clone() baseline", || grads.clone()).mean();
+    let engine_mean = |raw: f64| (raw - clone_overhead).max(raw * 0.05);
+    let recipes: [(&str, PureRecipe, bool); 8] = [
+        ("dense_adam", PureRecipe::DenseAdam, false),
+        ("dense_sgdm", PureRecipe::DenseSgdm { momentum: 0.9 }, false),
+        ("srste_adam", PureRecipe::SrSteAdam { lam: 2e-4 }, false),
+        ("srste_sgdm", PureRecipe::SrSteSgdm { lam: 2e-4, momentum: 0.9 }, false),
+        ("asp", PureRecipe::Asp, false),
+        // lam = 2e-4 like the Table-1 runs, so the STEP rows time the real
+        // workload (lam = 0 would skip the SR-STE term in the fused kernels)
+        ("step_phase2", PureRecipe::Step { lam: 2e-4 }, true),
+        ("step_v_updated", PureRecipe::StepVarianceUpdated { lam: 2e-4 }, true),
+        ("decaying_mask", PureRecipe::DecayingMask { lam: 2e-4 }, false),
+    ];
+    for (name, recipe, switch) in recipes {
+        let mut st0 =
+            RecipeState::new(recipe, &params, ratios.clone(), 1e-3, AdamHp::default());
+        if matches!(recipe, PureRecipe::DecayingMask { .. }) {
+            st0 = st0.with_schedule(DecaySchedule::new(4, 2, 0, 1_000_000));
+        }
+        // settle into steady state (and cross the STEP phase switch)
+        let mut p0 = params.clone();
+        for _ in 0..3 {
+            st0.step(&mut p0, |_| (0.0, grads.clone()));
+        }
+        if switch {
+            st0.switch_to_phase2();
+            st0.step(&mut p0, |_| (0.0, grads.clone()));
+        }
+
+        let mut st_fused = st0.clone();
+        let mut p_fused = p0.clone();
+        let r_fused = h.run(&format!("fused {name}"), || {
+            st_fused.step(&mut p_fused, |_| (0.0, grads.clone()))
+        });
+        let mut st_ref = st0.clone();
+        let mut p_ref = p0.clone();
+        let r_ref = h.run(&format!("ref   {name}"), || {
+            st_ref.step_reference(&mut p_ref, |_| (0.0, grads.clone()))
+        });
+        let cmp = Comparison {
+            name: format!("{shape_name}/{name}"),
+            baseline_mean: engine_mean(r_ref.mean()),
+            fused_mean: engine_mean(r_fused.mean()),
+        };
+        println!("{}  ({:.1} Melem/s)", r_fused.row(), total as f64 / r_fused.mean() / 1e6);
+        println!("{}  (fused speedup {:.2}x)", r_ref.row(), cmp.speedup());
+        out.push(cmp);
+    }
+}
 
 fn main() {
     let h = Harness::default();
@@ -70,4 +171,20 @@ fn main() {
         asw.observe(t, stat)
     });
     println!("{}", r.row());
+
+    // ---- recipe-engine step throughput (Table-1 workload shapes) --------
+    let mut comparisons = Vec::new();
+    bench_recipe_steps(&mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut comparisons);
+    bench_recipe_steps(&mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut comparisons);
+    let mean = comparisons.iter().map(Comparison::speedup).sum::<f64>()
+        / comparisons.len().max(1) as f64;
+    println!("\nmean fused speedup over reference: {mean:.2}x");
+    match write_comparison_json(
+        "BENCH_recipes.json",
+        "recipe step throughput (fused vs reference, Table-1 shapes; engine-only means, closure cost subtracted)",
+        &comparisons,
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_recipes.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_recipes.json: {e}"),
+    }
 }

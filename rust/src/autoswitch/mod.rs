@@ -147,7 +147,10 @@ impl SwitchPolicy for AutoSwitch {
         }
         let zbar = self.window_mean();
         match self.clip {
-            Some(c) => t > c.t_max || (zbar < self.eps && t > c.t_min),
+            // Force-fire at `t_max` itself (`>=`), keeping the switch inside
+            // the paper's `[T_min, T_max]` bound — `>` used to land it one
+            // step late, at `t_max + 1`.
+            Some(c) => t >= c.t_max || (zbar < self.eps && t > c.t_min),
             None => zbar < self.eps,
         }
     }
@@ -163,7 +166,7 @@ impl SwitchPolicy for AutoSwitch {
 
 /// Eq (10) — Agarwal et al., 2021: fire when the relative change of ‖v‖
 /// drops below 0.5:  | ‖v_t‖ − ‖v_{t−1}‖ | / ‖v_{t−1}‖ < 0.5.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct RelativeNormPolicy {
     prev: Option<f64>,
     /// Threshold; the published bound is 0.5.
@@ -173,6 +176,15 @@ pub struct RelativeNormPolicy {
 impl RelativeNormPolicy {
     pub fn new() -> Self {
         Self { prev: None, bound: 0.5 }
+    }
+}
+
+/// Delegates to [`RelativeNormPolicy::new`]. The derived `Default` used to
+/// yield `bound: 0.0` — a policy that can never fire, silently inconsistent
+/// with the published 0.5 threshold.
+impl Default for RelativeNormPolicy {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -333,12 +345,25 @@ mod tests {
         }
         assert!(asw.observe(11, stat(0.0, 1.0)));
 
-        // never-quiet trace: must force-fire past t_max
+        // never-quiet trace: must force-fire AT t_max (inside [t_min, t_max])
         let mut asw = AutoSwitch::new(1, 1e-12, 0.5, ZOption::Arithmetic).with_clip(clip);
-        for t in 1..=20 {
+        for t in 1..20 {
             assert!(!asw.observe(t, stat(100.0, 1.0)), "fired early at {t}");
         }
-        assert!(asw.observe(21, stat(100.0, 1.0)));
+        assert!(asw.observe(20, stat(100.0, 1.0)), "must force-fire at t_max");
+    }
+
+    #[test]
+    fn relative_norm_default_matches_new() {
+        // regression: the derived Default yielded bound 0.0 (never fires)
+        let d = RelativeNormPolicy::default();
+        assert_eq!(d.bound, RelativeNormPolicy::new().bound);
+        assert_eq!(d.bound, 0.5);
+        let mut p = RelativeNormPolicy::default();
+        // stat() maps v_l1 = 40 to v_l2 = 20; first observation never fires
+        assert!(!p.observe(1, stat(0.0, 40.0)));
+        // 20 → 21 is a 5% relative change: must fire with the 0.5 bound
+        assert!(p.observe(2, SwitchStat { v_l1: 0.0, v_l2: 21.0, dv_l1: 0.0, log_dv: 0.0 }));
     }
 
     #[test]

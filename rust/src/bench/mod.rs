@@ -133,6 +133,60 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One baseline-vs-fused timing pair of the step-throughput suite.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    /// Mean seconds/iter of the unfused reference path.
+    pub baseline_mean: f64,
+    /// Mean seconds/iter of the fused path.
+    pub fused_mean: f64,
+}
+
+impl Comparison {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_mean / self.fused_mean
+    }
+}
+
+/// Write a before/after comparison suite as a JSON document (e.g.
+/// `BENCH_recipes.json`), so future changes can diff throughput trajectories
+/// across commits.
+pub fn write_comparison_json(
+    path: impl AsRef<std::path::Path>,
+    suite: &str,
+    rows: &[Comparison],
+) -> anyhow::Result<()> {
+    use crate::util::json::{Json, JsonObj};
+    let mut doc = JsonObj::new();
+    doc.insert("suite", Json::Str(suite.to_string()));
+    let mut arr = Vec::with_capacity(rows.len());
+    for r in rows {
+        let mut o = JsonObj::new();
+        o.insert("name", Json::Str(r.name.clone()));
+        o.insert("baseline_mean_s", Json::Num(r.baseline_mean));
+        o.insert("fused_mean_s", Json::Num(r.fused_mean));
+        o.insert("speedup", Json::Num(r.speedup()));
+        arr.push(Json::Obj(o));
+    }
+    doc.insert("rows", Json::Arr(arr));
+    let mean_speedup = if rows.is_empty() {
+        0.0
+    } else {
+        rows.iter().map(Comparison::speedup).sum::<f64>() / rows.len() as f64
+    };
+    doc.insert("mean_speedup", Json::Num(mean_speedup));
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            crate::util::ensure_dir(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", Json::Obj(doc).to_string()))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
 /// Print the standard bench table header.
 pub fn print_header(title: &str) {
     println!("\n== {title} ==");
@@ -172,6 +226,24 @@ mod tests {
     fn throughput_math() {
         let r = BenchResult { name: "x".into(), iters: 2, samples: vec![0.5, 0.5] };
         assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comparison_json_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("stepnm_bench_{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        let rows = vec![
+            Comparison { name: "a".into(), baseline_mean: 0.4, fused_mean: 0.1 },
+            Comparison { name: "b".into(), baseline_mean: 0.2, fused_mean: 0.1 },
+        ];
+        write_comparison_json(&path, "unit", &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("suite").as_str(), Some("unit"));
+        assert_eq!(doc.get("rows").as_arr().unwrap().len(), 2);
+        let mean = doc.get("mean_speedup").as_f64().unwrap();
+        assert!((mean - 3.0).abs() < 1e-9, "mean speedup {mean}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -509,14 +509,23 @@ impl<'rt> Session<'rt> {
 
     /// Export the final *sparse* inference weights (Π_T ⊙ w_T) on the host —
     /// used by the checkpoint examples.
+    ///
+    /// STEP recipes still in the dense precondition phase export dense
+    /// weights: no mask learning has happened yet, so sparsifying a
+    /// mid-phase-1 checkpoint would corrupt its evaluation (mirrors
+    /// `RecipeState::final_sparse_params`).
     pub fn sparse_params(&self) -> Vec<Tensor> {
+        let sparsify = match self.cfg.recipe {
+            RecipeKind::Step | RecipeKind::StepVarianceUpdated => self.in_phase2(),
+            other => other.is_sparse(),
+        };
         let ns = self.n_vec();
         let mut si = 0;
         self.params
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                if self.cfg.recipe.is_sparse() && self.model.params[i].2 {
+                if sparsify && self.model.params[i].2 {
                     let n = ns[si] as usize;
                     si += 1;
                     crate::sparsity::apply_nm(

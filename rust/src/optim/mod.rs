@@ -11,6 +11,19 @@
 //!
 //! All updates are single-pass fused loops over the parameter slices —
 //! mirroring the Pallas optimizer kernels (`optim_update.py`).
+//!
+//! Two kernel families live here:
+//!
+//! * the **primitive** updates ([`adam_update`], [`sgdm_update`],
+//!   [`step_phase2_update`], [`srste_refine`]) — the bit-true oracles the
+//!   cross-checks compare against PJRT, each one concern per pass;
+//! * the **fused masked** updates ([`masked_adam_step`], [`asp_adam_step`],
+//!   [`masked_sgdm_step`], [`masked_phase2_step`]) — the recipe engine's hot
+//!   path: optional SR-STE refinement (Eq 9), the optimizer update, and
+//!   [`VarStats`] accumulation in ONE pass per tensor, with `dv` computed
+//!   from scalars inside the loop so no `v_old` clone is ever materialized.
+//!   They are bit-for-bit equivalent to composing the primitives (verified
+//!   by `rust/tests/recipe_fused.rs` across all eight recipes).
 
 pub mod recipes;
 
@@ -161,6 +174,198 @@ pub fn srste_refine(g: &mut Tensor, w: &Tensor, mask: &Tensor, lam: f32) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// fused masked kernels (the recipe engine's allocation-free hot path)
+// ---------------------------------------------------------------------------
+
+/// Fused masked Adam step on one tensor: optional SR-STE refinement
+/// (`g ← g + λ·(1 − Π) ⊙ w`, Eq 9), the Adam update (Eqs 3–7), and
+/// [`VarStats`] accumulation, all in a single pass.
+///
+/// Bit-identical to `srste_refine` + `adam_update` + `VarStats::accumulate`
+/// run back-to-back: every f32 expression is evaluated in the same order,
+/// and `dv` uses the pre-update `v` scalar instead of a whole-tensor clone.
+/// `mask = None` (or `lam == 0`) degrades to a plain dense Adam step.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_adam_step(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    mask: Option<&Tensor>,
+    lam: f32,
+    t: u64,
+    lr: f32,
+    hp: AdamHp,
+    stats: &mut VarStats,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let bc1 = (1.0 - (hp.beta1 as f64).powi(t as i32)) as f32;
+    let bc2 = (1.0 - (hp.beta2 as f64).powi(t as i32)) as f32;
+    let (b1, b2, eps) = (hp.beta1, hp.beta2, hp.eps);
+    let kd: Option<&[f32]> = match mask {
+        Some(mk) if lam != 0.0 => {
+            debug_assert_eq!(mk.shape(), g.shape());
+            Some(mk.data())
+        }
+        _ => None,
+    };
+    let wd = w.data_mut();
+    let md = m.data_mut();
+    let vd = v.data_mut();
+    let gd = g.data();
+    let (mut l1, mut sq, mut dv, mut lg) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..gd.len() {
+        let gi = match kd {
+            Some(kd) => gd[i] + lam * (1.0 - kd[i]) * wd[i],
+            None => gd[i],
+        };
+        let v_prev = vd[i];
+        let mi = b1 * md[i] + (1.0 - b1) * gi;
+        let vi = b2 * v_prev + (1.0 - b2) * gi * gi;
+        md[i] = mi;
+        vd[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        // paper Eq (7): eps OUTSIDE the sqrt in the dense phase
+        wd[i] -= lr * mhat / (vhat.sqrt() + eps);
+        l1 += vi.abs() as f64;
+        sq += (vi as f64) * (vi as f64);
+        let d = (vi - v_prev).abs() as f64;
+        dv += d;
+        lg += (d + 1e-38).ln();
+    }
+    stats.v_l1 += l1;
+    stats.v_l2 += sq; // Σx² until finish()
+    stats.dv_l1 += dv;
+    stats.log_dv += lg;
+}
+
+/// Fused ASP Adam step: the gradient is masked onto the support (no STE),
+/// the Adam update runs, and the weights are projected back onto the
+/// support — one pass, matching grad-mask + `adam_update` + `w ⊙ Π`.
+#[allow(clippy::too_many_arguments)]
+pub fn asp_adam_step(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    g: &Tensor,
+    mask: &Tensor,
+    t: u64,
+    lr: f32,
+    hp: AdamHp,
+    stats: &mut VarStats,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    debug_assert_eq!(w.shape(), mask.shape());
+    let bc1 = (1.0 - (hp.beta1 as f64).powi(t as i32)) as f32;
+    let bc2 = (1.0 - (hp.beta2 as f64).powi(t as i32)) as f32;
+    let (b1, b2, eps) = (hp.beta1, hp.beta2, hp.eps);
+    let wd = w.data_mut();
+    let md = m.data_mut();
+    let vd = v.data_mut();
+    let gd = g.data();
+    let kd = mask.data();
+    let (mut l1, mut sq, mut dv, mut lg) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..gd.len() {
+        let gi = gd[i] * kd[i];
+        let v_prev = vd[i];
+        let mi = b1 * md[i] + (1.0 - b1) * gi;
+        let vi = b2 * v_prev + (1.0 - b2) * gi * gi;
+        md[i] = mi;
+        vd[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        wd[i] -= lr * mhat / (vhat.sqrt() + eps);
+        // project the updated weight back onto the support
+        wd[i] *= kd[i];
+        l1 += vi.abs() as f64;
+        sq += (vi as f64) * (vi as f64);
+        let d = (vi - v_prev).abs() as f64;
+        dv += d;
+        lg += (d + 1e-38).ln();
+    }
+    stats.v_l1 += l1;
+    stats.v_l2 += sq;
+    stats.dv_l1 += dv;
+    stats.log_dv += lg;
+}
+
+/// Fused masked momentum-SGD step: optional SR-STE refinement + the SGDM
+/// update in one pass (bit-identical to `srste_refine` + `sgdm_update`).
+pub fn masked_sgdm_step(
+    w: &mut Tensor,
+    buf: &mut Tensor,
+    g: &Tensor,
+    mask: Option<&Tensor>,
+    lam: f32,
+    lr: f32,
+    momentum: f32,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let kd: Option<&[f32]> = match mask {
+        Some(mk) if lam != 0.0 => {
+            debug_assert_eq!(mk.shape(), g.shape());
+            Some(mk.data())
+        }
+        _ => None,
+    };
+    let wd = w.data_mut();
+    let bd = buf.data_mut();
+    let gd = g.data();
+    for i in 0..gd.len() {
+        let gi = match kd {
+            Some(kd) => gd[i] + lam * (1.0 - kd[i]) * wd[i],
+            None => gd[i],
+        };
+        let b = momentum * bd[i] + gi;
+        bd[i] = b;
+        wd[i] -= lr * b;
+    }
+}
+
+/// Fused masked STEP phase-2 step: optional SR-STE refinement + the
+/// frozen-v* momentum update (Alg. 1 lines 18–20) in one pass
+/// (bit-identical to `srste_refine` + `step_phase2_update`). `v_star` stays
+/// a shared reference — phase 2 cannot touch it.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_phase2_step(
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v_star: &Tensor,
+    g: &Tensor,
+    mask: Option<&Tensor>,
+    lam: f32,
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.shape(), g.shape());
+    let bc1 = (1.0 - (beta1 as f64).powi(t as i32)) as f32;
+    let kd: Option<&[f32]> = match mask {
+        Some(mk) if lam != 0.0 => {
+            debug_assert_eq!(mk.shape(), g.shape());
+            Some(mk.data())
+        }
+        _ => None,
+    };
+    let wd = w.data_mut();
+    let md = m.data_mut();
+    let vd = v_star.data();
+    let gd = g.data();
+    for i in 0..gd.len() {
+        let gi = match kd {
+            Some(kd) => gd[i] + lam * (1.0 - kd[i]) * wd[i],
+            None => gd[i],
+        };
+        let mi = beta1 * md[i] + (1.0 - beta1) * gi;
+        md[i] = mi;
+        // ε INSIDE the sqrt here, unlike the dense phase (Alg. 1 line 20)
+        wd[i] -= lr * (mi / bc1) / (vd[i] + eps).sqrt();
+    }
+}
+
 /// Variance-change telemetry produced by one optimizer step — exactly the
 /// four scalars the HLO artifacts emit (`train_steps._var_stats`), so the
 /// AutoSwitch consumes identical inputs on both paths.
@@ -196,6 +401,16 @@ impl VarStats {
         self.v_l2 += sq;
         self.dv_l1 += dv;
         self.log_dv += lg;
+    }
+
+    /// Merge another *pre-finish* partial (v_l2 still Σx²) into this one —
+    /// how the fused engine combines per-tensor partials, including the ones
+    /// returned by its parallel update workers, in tensor-index order.
+    pub fn absorb(&mut self, other: &VarStats) {
+        self.v_l1 += other.v_l1;
+        self.v_l2 += other.v_l2;
+        self.dv_l1 += other.dv_l1;
+        self.log_dv += other.log_dv;
     }
 
     /// Finalize after all tensors accumulated (v_l2 held Σx² until now).
@@ -341,5 +556,135 @@ mod tests {
     fn adam_hp_window() {
         assert_eq!(AdamHp::default().window(), 1000);
         assert_eq!(AdamHp { beta2: 0.99, ..Default::default() }.window(), 100);
+    }
+
+    /// The fused masked Adam kernel must be bit-identical to composing the
+    /// primitives: srste_refine → adam_update → VarStats::accumulate.
+    #[test]
+    fn masked_adam_step_matches_composed_primitives() {
+        Cases::new(40).run(|rng, _| {
+            let shape = [4usize, 8];
+            let w0 = Tensor::randn(&shape, rng, 0.0, 1.0);
+            let mask = crate::sparsity::nm_mask(&w0, crate::sparsity::NmRatio::new(2, 4));
+            let hp = AdamHp::default();
+            for (lam, use_mask) in [(0.0f32, true), (2e-4, true), (2e-4, false)] {
+                let mut rng2 = rng.split(7);
+                let (mut w_a, mut m_a, mut v_a) =
+                    (w0.clone(), Tensor::zeros(&shape), Tensor::zeros(&shape));
+                let (mut w_b, mut m_b, mut v_b) =
+                    (w0.clone(), Tensor::zeros(&shape), Tensor::zeros(&shape));
+                for t in 1..=5u64 {
+                    let g = Tensor::randn(&shape, &mut rng2, 0.0, 0.5);
+                    // composed reference
+                    let mut g_ref = g.clone();
+                    if use_mask {
+                        srste_refine(&mut g_ref, &w_a, &mask, lam);
+                    }
+                    let v_old = v_a.clone();
+                    adam_update(&mut w_a, &mut m_a, &mut v_a, &g_ref, t, 1e-2, hp);
+                    let mut s_ref = VarStats::default();
+                    s_ref.accumulate(&v_a, &v_old);
+                    // fused
+                    let mut s_fused = VarStats::default();
+                    masked_adam_step(
+                        &mut w_b,
+                        &mut m_b,
+                        &mut v_b,
+                        &g,
+                        use_mask.then_some(&mask),
+                        lam,
+                        t,
+                        1e-2,
+                        hp,
+                        &mut s_fused,
+                    );
+                    assert_eq!(w_a, w_b, "lam={lam} t={t}");
+                    assert_eq!(m_a, m_b);
+                    assert_eq!(v_a, v_b);
+                    assert_eq!(s_ref, s_fused);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn asp_adam_step_matches_composed_primitives() {
+        Cases::new(30).run(|rng, _| {
+            let shape = [2usize, 8];
+            let w0 = Tensor::randn(&shape, rng, 0.0, 1.0);
+            let mask = crate::sparsity::nm_mask(&w0, crate::sparsity::NmRatio::new(1, 4));
+            let hp = AdamHp::default();
+            let mut rng2 = rng.split(3);
+            let (mut w_a, mut m_a, mut v_a) =
+                (w0.clone(), Tensor::zeros(&shape), Tensor::zeros(&shape));
+            let (mut w_b, mut m_b, mut v_b) =
+                (w0.clone(), Tensor::zeros(&shape), Tensor::zeros(&shape));
+            for t in 1..=4u64 {
+                let g = Tensor::randn(&shape, &mut rng2, 0.0, 0.5);
+                let g_masked = crate::tensor::mul(&g, &mask);
+                let v_old = v_a.clone();
+                adam_update(&mut w_a, &mut m_a, &mut v_a, &g_masked, t, 5e-2, hp);
+                w_a = crate::tensor::mul(&w_a, &mask);
+                let mut s_ref = VarStats::default();
+                s_ref.accumulate(&v_a, &v_old);
+                let mut s_fused = VarStats::default();
+                asp_adam_step(&mut w_b, &mut m_b, &mut v_b, &g, &mask, t, 5e-2, hp, &mut s_fused);
+                assert_eq!(w_a, w_b, "t={t}");
+                assert_eq!(v_a, v_b);
+                assert_eq!(s_ref, s_fused);
+            }
+        });
+    }
+
+    #[test]
+    fn masked_sgdm_and_phase2_match_composed_primitives() {
+        Cases::new(30).run(|rng, _| {
+            let shape = [2usize, 8];
+            let w0 = Tensor::randn(&shape, rng, 0.0, 1.0);
+            let mask = crate::sparsity::nm_mask(&w0, crate::sparsity::NmRatio::new(2, 4));
+            let lam = 2e-4f32;
+            // SGDM
+            let (mut w_a, mut b_a) = (w0.clone(), Tensor::zeros(&shape));
+            let (mut w_b, mut b_b) = (w0.clone(), Tensor::zeros(&shape));
+            let mut rng2 = rng.split(1);
+            for _ in 0..4 {
+                let g = Tensor::randn(&shape, &mut rng2, 0.0, 0.5);
+                let mut g_ref = g.clone();
+                srste_refine(&mut g_ref, &w_a, &mask, lam);
+                sgdm_update(&mut w_a, &mut b_a, &g_ref, 0.1, 0.9);
+                masked_sgdm_step(&mut w_b, &mut b_b, &g, Some(&mask), lam, 0.1, 0.9);
+                assert_eq!(w_a, w_b);
+                assert_eq!(b_a, b_b);
+            }
+            // phase 2
+            let v_star = Tensor::full(&shape, 0.04);
+            let (mut w_a, mut m_a) = (w0.clone(), Tensor::zeros(&shape));
+            let (mut w_b, mut m_b) = (w0.clone(), Tensor::zeros(&shape));
+            let mut rng3 = rng.split(2);
+            for t in 1..=4u64 {
+                let g = Tensor::randn(&shape, &mut rng3, 0.0, 0.5);
+                let mut g_ref = g.clone();
+                srste_refine(&mut g_ref, &w_a, &mask, lam);
+                step_phase2_update(&mut w_a, &mut m_a, &v_star, &g_ref, t, 1e-2, 0.9, 1e-8);
+                masked_phase2_step(
+                    &mut w_b, &mut m_b, &v_star, &g, Some(&mask), lam, t, 1e-2, 0.9, 1e-8,
+                );
+                assert_eq!(w_a, w_b, "t={t}");
+                assert_eq!(m_a, m_b);
+            }
+        });
+    }
+
+    #[test]
+    fn var_stats_absorb_merges_partials() {
+        let v_new = Tensor::new(&[2], vec![3.0, -4.0]);
+        let v_old = Tensor::new(&[2], vec![1.0, -1.0]);
+        let mut whole = VarStats::default();
+        whole.accumulate(&v_new, &v_old);
+        let mut merged = VarStats::default();
+        let mut part = VarStats::default();
+        part.accumulate(&v_new, &v_old);
+        merged.absorb(&part);
+        assert_eq!(whole.finish(), merged.finish());
     }
 }

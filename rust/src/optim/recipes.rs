@@ -5,12 +5,44 @@
 //! This is the CPU-fast twin of the coordinator's PJRT path; the two are
 //! cross-validated by `rust/tests/cross_check.rs`. Table 1's 5-seed variance
 //! traces and the Theorem-1 property tests run here.
+//!
+//! # The fused step pipeline
+//!
+//! [`RecipeState::step`] is **allocation-free in steady state** for every
+//! tensor-sized buffer: masks are written into persistent scratch
+//! ([`nm_mask_into`]), forward weights are built with `copy_from` /
+//! `mul_into` writes into the `scratch_masked` buffers, and the per-tensor
+//! update runs one fused kernel ([`super::masked_adam_step`] and friends)
+//! that combines SR-STE refinement (Eq 9), the optimizer update, and
+//! [`VarStats`] accumulation in a single pass — the `dv` telemetry is
+//! computed from the pre-update `v` scalar inside the loop, so the old
+//! per-step `v_old` clone no longer exists. ASP's cached masks are passed by
+//! reference instead of being deep-cloned every step. Multi-tensor models
+//! above [`PAR_MIN_NUMEL`] total elements update their tensors on scoped
+//! threads (per-tensor partial [`VarStats`] are merged in index order, so
+//! the result is bit-identical to the serial path).
+//!
+//! [`RecipeState::step_reference`] retains the original unfused pipeline
+//! (clone-heavy, one concern per pass) as the readability oracle; the two
+//! are held bit-for-bit equal on all eight recipes by
+//! `rust/tests/recipe_fused.rs`, and `cargo bench --bench substrate`
+//! measures the speedup into `BENCH_recipes.json`.
 
 use super::{
-    adam_update, sgdm_update, srste_refine, step_phase2_update, AdamHp, AdamState, VarStats,
+    adam_update, asp_adam_step, masked_adam_step, masked_phase2_step, masked_sgdm_step,
+    sgdm_update, srste_refine, step_phase2_update, AdamHp, AdamState, VarStats,
 };
 use crate::sparsity::{nm_mask_into, DecaySchedule, NmRatio};
 use crate::tensor::Tensor;
+
+/// Below this many total parameter scalars the fused engine stays serial —
+/// thread spawn overhead dominates on the paper's small MLP shapes.
+pub const PAR_MIN_NUMEL: usize = 1 << 18;
+
+/// Even when the step as a whole goes parallel, tensors smaller than this
+/// (biases, norms) update on the calling thread — a spawn/join round trip
+/// costs more than their entire update.
+pub const PAR_MIN_TENSOR_NUMEL: usize = 1 << 14;
 
 /// Which recipe a [`RecipeState`] runs. See DESIGN.md §2 for the paper map.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -54,6 +86,18 @@ impl PureRecipe {
     pub fn is_sparse(&self) -> bool {
         !matches!(self, PureRecipe::DenseAdam | PureRecipe::DenseSgdm { .. })
     }
+
+    /// SR-STE λ composed into this recipe (0 where Eq 9 does not apply).
+    fn lam(&self) -> f32 {
+        match *self {
+            PureRecipe::SrSteAdam { lam }
+            | PureRecipe::SrSteSgdm { lam, .. }
+            | PureRecipe::Step { lam }
+            | PureRecipe::StepVarianceUpdated { lam }
+            | PureRecipe::DecayingMask { lam } => lam,
+            _ => 0.0,
+        }
+    }
 }
 
 /// STEP phase marker.
@@ -63,6 +107,52 @@ pub enum Phase {
     Precondition,
     /// Mask learning with frozen v* (Alg. 1 second loop).
     MaskLearning,
+}
+
+/// Which fused kernel one step's update dispatches to — resolved once per
+/// step from (recipe, phase), shared by every tensor.
+#[derive(Debug, Clone, Copy)]
+enum UpdateKind {
+    Sgdm { momentum: f32 },
+    Phase2,
+    AspAdam,
+    Adam,
+}
+
+/// One tensor's fused update; returns the pre-finish [`VarStats`] partial.
+#[allow(clippy::too_many_arguments)]
+fn update_one(
+    kind: UpdateKind,
+    w: &mut Tensor,
+    m: &mut Tensor,
+    v: &mut Tensor,
+    v_star: Option<&Tensor>,
+    g: &Tensor,
+    mask: Option<&Tensor>,
+    lam: f32,
+    t: u64,
+    lr: f32,
+    hp: AdamHp,
+) -> VarStats {
+    let mut stats = VarStats::default();
+    match kind {
+        UpdateKind::Sgdm { momentum } => {
+            masked_sgdm_step(w, m, g, mask, lam, lr, momentum);
+        }
+        UpdateKind::Phase2 => {
+            let v_star = v_star.expect("phase 2 without v*");
+            masked_phase2_step(w, m, v_star, g, mask, lam, t, lr, hp.beta1, hp.eps);
+        }
+        UpdateKind::AspAdam => match mask {
+            Some(k) => asp_adam_step(w, m, v, g, k, t, lr, hp, &mut stats),
+            // dense tensors (bias, norm) under ASP: plain Adam
+            None => masked_adam_step(w, m, v, g, None, 0.0, t, lr, hp, &mut stats),
+        },
+        UpdateKind::Adam => {
+            masked_adam_step(w, m, v, g, mask, lam, t, lr, hp, &mut stats);
+        }
+    }
+    stats
 }
 
 /// Full optimizer + mask state for one recipe over one parameter list.
@@ -89,6 +179,9 @@ pub struct RecipeState {
     /// Scratch mask buffers (allocation-free steady state).
     scratch_masks: Vec<Option<Tensor>>,
     scratch_masked: Vec<Tensor>,
+    /// Whether parameter `i`'s mask is live *this* step (a buffer can exist
+    /// while the recipe/phase/schedule says "dense this step").
+    mask_active: Vec<bool>,
 }
 
 impl RecipeState {
@@ -109,6 +202,7 @@ impl RecipeState {
             .map(|(p, r)| r.map(|_| Tensor::zeros(p.shape())))
             .collect();
         let scratch_masked = params.to_vec();
+        let mask_active = vec![false; params.len()];
         Self {
             recipe,
             hp,
@@ -123,6 +217,7 @@ impl RecipeState {
             schedule: None,
             scratch_masks,
             scratch_masked,
+            mask_active,
         }
     }
 
@@ -173,20 +268,170 @@ impl RecipeState {
         }
     }
 
-    /// Run one training step.
+    /// Run one training step through the **fused** pipeline.
     ///
     /// `loss_and_grad` receives the (masked, per the recipe) forward weights
     /// and returns the loss and gradients w.r.t. those weights — the STE
     /// convention: gradients flow to the raw weights unchanged (Eq 8).
     ///
     /// Returns `(loss, VarStats)`; the stats describe this step's v change
-    /// (zeros for SGDM / phase-2 STEP where v is not updated).
+    /// (zeros for SGDM / phase-2 STEP where v is not updated). Bit-for-bit
+    /// equal to [`RecipeState::step_reference`].
     pub fn step<F>(&mut self, params: &mut [Tensor], mut loss_and_grad: F) -> (f64, VarStats)
     where
         F: FnMut(&[Tensor]) -> (f64, Vec<Tensor>),
     {
         self.t += 1;
-        let masks = self.compute_masks(params);
+        self.refresh_masks(params);
+        self.write_forward(params);
+        let (loss, grads) = loss_and_grad(&self.scratch_masked);
+        assert_eq!(grads.len(), params.len());
+        let stats = self.fused_update(params, &grads);
+        (loss, stats)
+    }
+
+    /// Recompute this step's masks into the persistent scratch buffers and
+    /// set the per-tensor active flags. ASP caches its masks on first use
+    /// and reuses them by reference forever after.
+    fn refresh_masks(&mut self, params: &[Tensor]) {
+        if matches!(self.recipe, PureRecipe::Asp) {
+            if self.asp_masks.is_none() {
+                let masks: Vec<Option<Tensor>> = params
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| self.ratios[i].map(|r| crate::sparsity::nm_mask(p, r)))
+                    .collect();
+                self.asp_masks = Some(masks);
+            }
+            let asp = self.asp_masks.as_ref().expect("just cached");
+            for (active, mask) in self.mask_active.iter_mut().zip(asp) {
+                *active = mask.is_some();
+            }
+            return;
+        }
+        for i in 0..params.len() {
+            match self.current_ratio(i) {
+                Some(r) => {
+                    let buf = self.scratch_masks[i]
+                        .as_mut()
+                        .expect("sparse param lacks scratch mask");
+                    nm_mask_into(&params[i], r, buf);
+                    self.mask_active[i] = true;
+                }
+                None => self.mask_active[i] = false,
+            }
+        }
+    }
+
+    /// Build the forward weights `Π ⊙ w` (or a plain copy) into the
+    /// persistent `scratch_masked` buffers — no per-step clones.
+    fn write_forward(&mut self, params: &[Tensor]) {
+        let Self { recipe, asp_masks, scratch_masks, scratch_masked, mask_active, .. } = self;
+        let mask_src: &[Option<Tensor>] = if matches!(*recipe, PureRecipe::Asp) {
+            asp_masks.as_deref().expect("ASP masks cached by refresh_masks")
+        } else {
+            &scratch_masks[..]
+        };
+        for (i, (dst, p)) in scratch_masked.iter_mut().zip(params).enumerate() {
+            if mask_active[i] {
+                let mask = mask_src[i].as_ref().expect("active mask missing buffer");
+                crate::tensor::mul_into(mask, p, dst);
+            } else {
+                dst.copy_from(p);
+            }
+        }
+    }
+
+    /// The fused per-tensor optimizer update: one kernel pass per tensor,
+    /// scoped threads for large multi-tensor models, per-tensor [`VarStats`]
+    /// partials merged in index order (bit-identical serial or parallel).
+    fn fused_update(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> VarStats {
+        let lam = self.recipe.lam();
+        let kind = match self.recipe {
+            PureRecipe::DenseSgdm { momentum } | PureRecipe::SrSteSgdm { momentum, .. } => {
+                UpdateKind::Sgdm { momentum }
+            }
+            PureRecipe::Step { .. } if self.in_phase2() => UpdateKind::Phase2,
+            PureRecipe::Asp => UpdateKind::AspAdam,
+            // Fig. 8 variant in phase 2 KEEPS updating v — i.e. plain Adam
+            // over the masked gradients.
+            _ => UpdateKind::Adam,
+        };
+        let Self { hp, lr, t, m, v, v_star, asp_masks, scratch_masks, mask_active, .. } = self;
+        let (hp, lr, t) = (*hp, *lr, *t);
+        let mask_src: &[Option<Tensor>] = match kind {
+            UpdateKind::AspAdam => {
+                asp_masks.as_deref().expect("ASP masks cached by refresh_masks")
+            }
+            _ => &scratch_masks[..],
+        };
+        let mask_active: &[bool] = mask_active;
+        let v_star: Option<&[Tensor]> = v_star.as_deref();
+
+        let mut stats = VarStats::default();
+        let total: usize = params.iter().map(Tensor::numel).sum();
+        if params.len() > 1 && total >= PAR_MIN_NUMEL {
+            // One worker per LARGE tensor; small tensors (biases, norms)
+            // update on the calling thread while the workers run — a
+            // spawn/join round trip costs more than their whole update.
+            // Partials land in a per-index slot and merge in index order, so
+            // the f64 telemetry is bit-identical to the serial path.
+            let mut partials: Vec<VarStats> = vec![VarStats::default(); params.len()];
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                let mut inline = Vec::new();
+                for (i, ((p, mi), vi)) in
+                    params.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).enumerate()
+                {
+                    let g = &grads[i];
+                    let mask = if mask_active[i] { mask_src[i].as_ref() } else { None };
+                    let vs = v_star.map(|vs| &vs[i]);
+                    if p.numel() >= PAR_MIN_TENSOR_NUMEL {
+                        let h = s
+                            .spawn(move || update_one(kind, p, mi, vi, vs, g, mask, lam, t, lr, hp));
+                        handles.push((i, h));
+                    } else {
+                        inline.push((i, p, mi, vi, vs, g, mask));
+                    }
+                }
+                for (i, p, mi, vi, vs, g, mask) in inline {
+                    partials[i] = update_one(kind, p, mi, vi, vs, g, mask, lam, t, lr, hp);
+                }
+                for (i, h) in handles {
+                    partials[i] = h.join().expect("recipe update worker panicked");
+                }
+            });
+            for partial in &partials {
+                stats.absorb(partial);
+            }
+        } else {
+            for (i, ((p, mi), vi)) in
+                params.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).enumerate()
+            {
+                let mask = if mask_active[i] { mask_src[i].as_ref() } else { None };
+                let vs = v_star.map(|vs| &vs[i]);
+                let partial = update_one(kind, p, mi, vi, vs, &grads[i], mask, lam, t, lr, hp);
+                stats.absorb(&partial);
+            }
+        }
+        stats.finish()
+    }
+
+    /// The original unfused step pipeline — one concern per pass, tensor
+    /// clones where the fused path reuses scratch. Kept as the readability
+    /// oracle and the baseline of the `BENCH_recipes.json` throughput suite;
+    /// `rust/tests/recipe_fused.rs` holds it bit-for-bit equal to
+    /// [`RecipeState::step`] on all eight recipes.
+    pub fn step_reference<F>(
+        &mut self,
+        params: &mut [Tensor],
+        mut loss_and_grad: F,
+    ) -> (f64, VarStats)
+    where
+        F: FnMut(&[Tensor]) -> (f64, Vec<Tensor>),
+    {
+        self.t += 1;
+        let masks = self.compute_masks_cloned(params);
 
         // forward weights: Π ⊙ w for masked tensors, w otherwise
         for (i, p) in params.iter().enumerate() {
@@ -199,14 +444,7 @@ impl RecipeState {
         assert_eq!(grads.len(), params.len());
 
         // SR-STE refinement (Eq 9) where applicable
-        let lam = match self.recipe {
-            PureRecipe::SrSteAdam { lam }
-            | PureRecipe::SrSteSgdm { lam, .. }
-            | PureRecipe::Step { lam }
-            | PureRecipe::StepVarianceUpdated { lam }
-            | PureRecipe::DecayingMask { lam } => lam,
-            _ => 0.0,
-        };
+        let lam = self.recipe.lam();
         if lam != 0.0 {
             for ((g, p), mask) in grads.iter_mut().zip(params.iter()).zip(&masks) {
                 if let Some(mask) = mask {
@@ -249,9 +487,6 @@ impl RecipeState {
                 }
                 _ => {
                     let v_old = self.v[i].clone();
-                    // Fig. 8 variant in phase 2 uses the frozen-style update
-                    // target but KEEPS updating v — i.e. plain Adam over the
-                    // masked gradients, which is exactly adam_update here.
                     adam_update(
                         &mut params[i],
                         &mut self.m[i],
@@ -275,20 +510,33 @@ impl RecipeState {
         (loss, stats.finish())
     }
 
-    /// Final inference weights: `Π_T ⊙ w_T` (Alg. 1 line 24).
+    /// Should [`final_sparse_params`](Self::final_sparse_params) mask the
+    /// weights? STEP recipes still in the dense precondition phase have done
+    /// no mask learning — sparsifying a mid-phase-1 checkpoint would corrupt
+    /// its evaluation, so they export dense until the switch.
+    fn sparsify_at_export(&self) -> bool {
+        match self.recipe {
+            PureRecipe::Step { .. } | PureRecipe::StepVarianceUpdated { .. } => self.in_phase2(),
+            _ => self.recipe.is_sparse(),
+        }
+    }
+
+    /// Final inference weights: `Π_T ⊙ w_T` (Alg. 1 line 24). STEP recipes
+    /// that never left the precondition phase return the dense weights.
     pub fn final_sparse_params(&self, params: &[Tensor]) -> Vec<Tensor> {
         params
             .iter()
             .enumerate()
             .map(|(i, p)| match self.ratios[i] {
-                Some(r) if self.recipe.is_sparse() => crate::sparsity::apply_nm(p, r),
+                Some(r) if self.sparsify_at_export() => crate::sparsity::apply_nm(p, r),
                 _ => p.clone(),
             })
             .collect()
     }
 
-    /// Masks for this step (ASP reuses its first sparse-step masks).
-    fn compute_masks(&mut self, params: &[Tensor]) -> Vec<Option<Tensor>> {
+    /// Masks for this step as owned clones (ASP reuses its first
+    /// sparse-step masks) — the unfused oracle's mask path.
+    fn compute_masks_cloned(&mut self, params: &[Tensor]) -> Vec<Option<Tensor>> {
         if matches!(self.recipe, PureRecipe::Asp) {
             if self.asp_masks.is_none() {
                 let masks: Vec<Option<Tensor>> = params
@@ -483,5 +731,79 @@ mod tests {
         assert!(stats.exact);
         // half the entries must be exactly zero
         assert_eq!(fp[0].count_zeros(), fp[0].numel() / 2);
+    }
+
+    /// Regression: STEP checkpoints taken mid-phase-1 must stay dense — no
+    /// mask learning has happened, so sparsifying them corrupts evaluation.
+    #[test]
+    fn final_sparse_params_stay_dense_in_step_phase1() {
+        for recipe in [
+            PureRecipe::Step { lam: 0.0 },
+            PureRecipe::StepVarianceUpdated { lam: 0.0 },
+        ] {
+            let (mut params, target, mut st) = setup(recipe);
+            for _ in 0..5 {
+                st.step(&mut params, quad_loss(&target));
+            }
+            let fp = st.final_sparse_params(&params);
+            assert_eq!(fp[0], params[0], "{recipe:?}: phase-1 export must be dense");
+            assert_eq!(fp[1], params[1]);
+            // after the switch, exports are masked as before
+            st.switch_to_phase2();
+            st.step(&mut params, quad_loss(&target));
+            let fp2 = st.final_sparse_params(&params);
+            assert!(
+                fp2[0].count_zeros() >= fp2[0].numel() / 2,
+                "{recipe:?}: phase-2 export must satisfy 2:4"
+            );
+        }
+    }
+
+    /// The fused step and the unfused reference pipeline must agree
+    /// bit-for-bit on every recipe (the integration suite runs the long
+    /// version over an MLP; this is the quick quadratic-loss check).
+    #[test]
+    fn fused_step_matches_reference_on_quadratic() {
+        let recipes = [
+            PureRecipe::DenseAdam,
+            PureRecipe::DenseSgdm { momentum: 0.9 },
+            PureRecipe::SrSteAdam { lam: 2e-4 },
+            PureRecipe::SrSteSgdm { lam: 2e-4, momentum: 0.9 },
+            PureRecipe::Asp,
+            PureRecipe::Step { lam: 2e-4 },
+            PureRecipe::StepVarianceUpdated { lam: 2e-4 },
+            PureRecipe::DecayingMask { lam: 2e-4 },
+        ];
+        for recipe in recipes {
+            let (params0, target, st0) = setup(recipe);
+            let (mut st_fused, mut st_ref) = (st0.clone(), st0.clone());
+            if matches!(recipe, PureRecipe::DecayingMask { .. }) {
+                let s = DecaySchedule::new(4, 2, 2, 4);
+                st_fused = st_fused.with_schedule(s);
+                st_ref = st_ref.with_schedule(s);
+            }
+            let mut p_fused = params0.clone();
+            let mut p_ref = params0;
+            for t in 1..=15u64 {
+                if t == 8
+                    && matches!(
+                        recipe,
+                        PureRecipe::Step { .. } | PureRecipe::StepVarianceUpdated { .. }
+                    )
+                {
+                    st_fused.switch_to_phase2();
+                    st_ref.switch_to_phase2();
+                }
+                let (loss_a, stats_a) = st_fused.step(&mut p_fused, quad_loss(&target));
+                let (loss_b, stats_b) = st_ref.step_reference(&mut p_ref, quad_loss(&target));
+                assert_eq!(loss_a.to_bits(), loss_b.to_bits(), "{recipe:?} t={t}");
+                assert_eq!(stats_a, stats_b, "{recipe:?} t={t}");
+                for i in 0..p_fused.len() {
+                    assert_eq!(p_fused[i], p_ref[i], "{recipe:?} t={t} param {i}");
+                    assert_eq!(st_fused.m[i], st_ref.m[i], "{recipe:?} t={t} m {i}");
+                    assert_eq!(st_fused.v[i], st_ref.v[i], "{recipe:?} t={t} v {i}");
+                }
+            }
+        }
     }
 }

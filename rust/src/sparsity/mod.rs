@@ -96,12 +96,23 @@ pub fn nm_mask_into(w: &Tensor, ratio: NmRatio, mask: &mut Tensor) {
             continue;
         }
         for _round in 0..n {
+            // `best` starts at the first unselected index so a group whose
+            // remaining candidates are all NaN (NaN fails every `>`) still
+            // selects something — the low-index tie-break extended to NaN —
+            // instead of indexing with usize::MAX and panicking. Any non-NaN
+            // candidate beats `NEG_INFINITY`, so non-NaN behavior (keep the
+            // largest |x|, ties to the lowest index) is unchanged.
             let mut best = usize::MAX;
             let mut best_mag = f32::NEG_INFINITY;
             for (j, &x) in group.iter().enumerate() {
-                if sel[j] == 0.0 && x.abs() > best_mag {
-                    best_mag = x.abs();
-                    best = j;
+                if sel[j] == 0.0 {
+                    if best == usize::MAX {
+                        best = j;
+                    }
+                    if x.abs() > best_mag {
+                        best_mag = x.abs();
+                        best = j;
+                    }
                 }
             }
             sel[best] = 1.0;
@@ -134,12 +145,19 @@ pub fn apply_nm_inplace(w: &mut Tensor, ratio: NmRatio) {
         let group = &mut wd[base..base + m];
         keep[..m].fill(false);
         for _ in 0..n {
+            // Same NaN-safe fallback as `nm_mask_into`: without it, an
+            // all-NaN remainder leaves `best == usize::MAX` and panics.
             let mut best = usize::MAX;
             let mut best_mag = f32::NEG_INFINITY;
             for (j, &x) in group.iter().enumerate() {
-                if !keep[j] && x.abs() > best_mag {
-                    best_mag = x.abs();
-                    best = j;
+                if !keep[j] {
+                    if best == usize::MAX {
+                        best = j;
+                    }
+                    if x.abs() > best_mag {
+                        best_mag = x.abs();
+                        best = j;
+                    }
                 }
             }
             keep[best] = true;
@@ -284,6 +302,67 @@ mod tests {
         assert!("5:4".parse::<NmRatio>().is_err());
         assert!("abc".parse::<NmRatio>().is_err());
         assert_eq!(r.density(), 0.5);
+    }
+
+    #[test]
+    fn all_nan_group_keeps_first_n_without_panicking() {
+        // regression: `best` used to stay usize::MAX when every remaining
+        // candidate was NaN, panicking on `sel[best]`
+        let w = Tensor::new(&[1, 4], vec![f32::NAN; 4]);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        assert_eq!(mask.data(), &[1.0, 1.0, 0.0, 0.0]);
+        let mut inplace = w.clone();
+        apply_nm_inplace(&mut inplace, NmRatio::new(2, 4));
+        assert!(inplace.data()[0].is_nan() && inplace.data()[1].is_nan());
+        assert_eq!(&inplace.data()[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn nan_never_preferred_over_finite_values() {
+        // mixed groups keep the old semantics: NaN loses every comparison
+        let w = Tensor::new(&[1, 4], vec![f32::NAN, 0.5, f32::NAN, 2.0]);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        assert_eq!(mask.data(), &[0.0, 1.0, 0.0, 1.0]);
+        // one finite survivor + NaN filler: finite first, then lowest NaN
+        let mask = nm_mask(
+            &Tensor::new(&[1, 4], vec![f32::NAN, f32::NAN, 1.0, f32::NAN]),
+            NmRatio::new(2, 4),
+        );
+        assert_eq!(mask.data(), &[1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn infinities_rank_by_magnitude() {
+        let w = Tensor::new(&[1, 4], vec![3.0, f32::NEG_INFINITY, f32::INFINITY, -8.0]);
+        let mask = nm_mask(&w, NmRatio::new(2, 4));
+        // |−inf| == |+inf| tie → lowest index wins the first slot
+        assert_eq!(mask.data(), &[0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn property_nonfinite_inputs_never_panic_and_stay_exact() {
+        Cases::new(120).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 4, 4);
+            let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, 1.0, -2.0];
+            let data: Vec<f32> = (0..r * c).map(|_| specials[rng.below(specials.len())]).collect();
+            let w = Tensor::new(&[r, c], data);
+            let ratio = NmRatio::new(n, m);
+            let mask = nm_mask(&w, ratio);
+            let stats = mask_stats(&mask, ratio);
+            assert!(stats.exact, "n={n} m={m}: every group must keep exactly N");
+            // the in-place path agrees with the mask product on the support
+            let mut inplace = w.clone();
+            apply_nm_inplace(&mut inplace, ratio);
+            for i in 0..w.numel() {
+                if mask.data()[i] == 0.0 {
+                    assert_eq!(inplace.data()[i], 0.0, "dropped slot {i} must be zeroed");
+                } else {
+                    let (a, b) = (inplace.data()[i], w.data()[i]);
+                    assert!(a == b || (a.is_nan() && b.is_nan()), "kept slot {i}: {a} vs {b}");
+                }
+            }
+        });
     }
 
     #[test]

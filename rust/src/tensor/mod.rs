@@ -73,6 +73,18 @@ impl Tensor {
         &mut self.data
     }
 
+    /// Overwrite this tensor's data with `src`'s (shapes must match) — the
+    /// scratch-reuse primitive of the fused recipe engine: a `memcpy` into an
+    /// existing buffer instead of a fresh `clone()` per step.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert_eq!(
+            self.shape, src.shape,
+            "copy_from shape mismatch {:?} vs {:?}",
+            self.shape, src.shape
+        );
+        self.data.copy_from_slice(&src.data);
+    }
+
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }

@@ -27,6 +27,19 @@ pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
     zip_map(a, b, |x, y| x * y)
 }
 
+/// `out = a ⊙ b` into a preallocated tensor — the allocation-free Hadamard
+/// the fused recipe engine uses to build forward weights (`Π ⊙ w`) in its
+/// scratch buffers every step.
+pub fn mul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    assert_eq!(a.shape(), b.shape(), "shape mismatch {:?} vs {:?}", a.shape(), b.shape());
+    assert_eq!(a.shape(), out.shape(), "out shape {:?} vs {:?}", out.shape(), a.shape());
+    let ad = a.data();
+    let bd = b.data();
+    for (o, (&x, &y)) in out.data_mut().iter_mut().zip(ad.iter().zip(bd)) {
+        *o = x * y;
+    }
+}
+
 /// Elementwise combine with shape check.
 pub fn zip_map(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
     assert_eq!(a.shape(), b.shape(), "shape mismatch {:?} vs {:?}", a.shape(), b.shape());
@@ -362,6 +375,32 @@ mod tests {
     fn argmax_rows_ties_prefer_low_index() {
         let t = Tensor::new(&[1, 3], vec![2.0, 2.0, 1.0]);
         assert_eq!(argmax_rows(&t), vec![0]);
+    }
+
+    #[test]
+    fn mul_into_matches_mul() {
+        let mut rng = crate::rng::Pcg64::new(5);
+        let a = Tensor::randn(&[3, 8], &mut rng, 0.0, 1.0);
+        let b = Tensor::randn(&[3, 8], &mut rng, 0.0, 1.0);
+        let mut out = Tensor::full(&[3, 8], 99.0);
+        mul_into(&a, &b, &mut out);
+        assert_eq!(out, mul(&a, &b));
+    }
+
+    #[test]
+    fn copy_from_overwrites_in_place() {
+        let src = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut dst = Tensor::zeros(&[2, 2]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    #[should_panic]
+    fn copy_from_rejects_shape_mismatch() {
+        let src = Tensor::zeros(&[2, 2]);
+        let mut dst = Tensor::zeros(&[4]);
+        dst.copy_from(&src);
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the surface
+//! step-nm uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros (all call sites are fully path-qualified, e.g.
+//! `anyhow::bail!`). The image this repo builds in has no crates.io access,
+//! so the dependency is vendored as a path crate.
+//!
+//! Differences from the real crate (acceptable for this project):
+//! * the error holds a rendered message, not the source chain — `{:#}`
+//!   alternate formatting prints the same message;
+//! * no `Context` extension trait (unused here);
+//! * no backtrace capture.
+
+use std::fmt;
+
+/// A rendered, type-erased error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what keeps this blanket conversion coherent (mirroring the real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Self::msg(&e)
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] when the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // std error converts via the blanket From
+        crate::ensure!(n < 100, "too big: {n}");
+        if n == 13 {
+            crate::bail!("unlucky {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("200").unwrap_err().to_string(), "too big: 200");
+        assert_eq!(parse("13").unwrap_err().to_string(), "unlucky 13");
+        let e = crate::anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+        assert_eq!(format!("{e:#}"), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+    }
+
+    #[test]
+    fn question_mark_through_anyhow_results() {
+        fn outer() -> Result<()> {
+            parse("13")?;
+            Ok(())
+        }
+        assert!(outer().is_err());
+    }
+}

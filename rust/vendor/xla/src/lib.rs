@@ -1,0 +1,222 @@
+//! Offline stub of the `xla` PJRT bindings (the subset `step_nm::runtime`
+//! consumes). The build image has no XLA toolchain, so this crate keeps the
+//! runtime layer compiling and lets everything artifact-independent (the
+//! pure-Rust engine, the manifest/value plumbing, all unit tests) run.
+//!
+//! Behavior:
+//! * [`Literal`] is fully functional (typed byte storage + reinterpreting
+//!   readback), so the `Value ↔ Literal` conversion tests pass;
+//! * client/executable entry points that would need a real PJRT backend
+//!   ([`PjRtClient::compile`], [`HloModuleProto::from_text_file`],
+//!   [`PjRtLoadedExecutable::execute_b`]) return a descriptive [`Error`] —
+//!   the coordinator surfaces it as "PJRT unavailable", and every
+//!   artifact-dependent test already skips when `artifacts/` is absent.
+//!
+//! Swap this path dependency for the real bindings to execute HLO artifacts.
+
+use std::path::Path;
+
+/// Stub error type; formatted with `{:?}` by the runtime's `map_err` calls.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: step-nm was built against the offline xla stub \
+         (rust/vendor/xla); link the real PJRT bindings to execute artifacts"
+    ))
+}
+
+/// Element types the runtime moves across the boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host dtypes that can cross into a [`Literal`].
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// A typed host literal: shape + raw little-endian bytes. Functional in the
+/// stub (the conversion layer is pure host code).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel * 4 != bytes.len() {
+            return Err(Error(format!(
+                "literal byte length {} does not match shape {shape:?}",
+                bytes.len()
+            )));
+        }
+        Ok(Self { ty, shape: shape.to_vec(), bytes: bytes.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Reinterpret the stored bytes as `T` values.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal dtype {:?} read as {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        Ok(self
+            .bytes
+            .chunks_exact(size)
+            .map(|c| unsafe { std::ptr::read_unaligned(c.as_ptr() as *const T) })
+            .collect())
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples (only a
+    /// real execution does), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple readback"))
+    }
+}
+
+/// Stub device buffer (no storage — execution is unavailable anyway).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device readback"))
+    }
+}
+
+/// Stub PJRT client. Construction succeeds so host-only paths (registry
+/// inspection, value conversion) work; compilation/execution fail clearly.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (offline xla stub)".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Stub HLO module proto: parsing requires the real text parser.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error(format!(
+            "cannot parse {}: step-nm was built against the offline xla stub",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 0.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn execution_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let exe_err = client.compile(&XlaComputation::from_proto(&HloModuleProto));
+        assert!(format!("{:?}", exe_err.unwrap_err()).contains("offline xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
