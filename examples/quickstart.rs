@@ -2,19 +2,33 @@
 //! dense-Adam precondition phase, AutoSwitch, frozen-v* mask learning —
 //! and compare against SR-STE at the same budget.
 //!
+//! This file doubles as a tour of the coordinator API; read it top to
+//! bottom. The short version of STEP (Alg. 1): train *dense* until the Adam
+//! second moment `v` stops moving, freeze it as the preconditioner `v*`,
+//! then learn the N:M mask with STE while `v*` steers the update — because
+//! a mask learned against a half-baked variance estimate is what makes
+//! SR-STE lose accuracy under Adam.
+//!
 //! ```bash
 //! make artifacts            # once: build the AOT HLO artifacts
 //! cargo run --release --example quickstart
 //! ```
+//! (Without `artifacts/` the offline PJRT stub reports a clear error — see
+//! `examples/packed_inference.rs` for a tour that runs fully offline.)
 
 use step_nm::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts (produced by `make artifacts`).
+    // 1. Load the AOT artifacts (produced by `make artifacts`). The Runtime
+    //    owns the PJRT client; the manifest tells it every artifact's
+    //    input/output layout, so the session below is fully data-driven.
     let rt = Runtime::from_dir("artifacts")?;
     println!("platform: {}", rt.platform());
 
-    // 2. Configure the experiment: 1:4 structured sparsity, 300 steps.
+    // 2. Configure the experiment: 1:4 structured sparsity (keep 1 weight
+    //    of every 4 — a 75%-sparse model), 300 steps. `ExperimentConfig`
+    //    carries everything a run needs: model key, recipe, ratio, lr,
+    //    eval cadence; the builder fills paper defaults for the rest.
     let steps = 300;
     let base = |recipe| {
         ExperimentConfig::builder("mlp_cf10")
@@ -26,8 +40,12 @@ fn main() -> anyhow::Result<()> {
             .build()
     };
 
-    // 3. Train with STEP. AutoSwitch picks the phase boundary from the
-    //    variance telemetry — no hand-tuned switch step.
+    // 3. Train with STEP. The session starts in the dense precondition
+    //    phase; each step's artifact emits variance telemetry (‖v‖₁, ‖dv‖₁,
+    //    …) and AutoSwitch (Alg. 2) watches the stream — when the sliding
+    //    window of per-coordinate variance changes concentrates below the
+    //    Adam ε, the session freezes v* and flips to the mask-learning
+    //    artifact. No hand-tuned switch step anywhere.
     let mut step_session = Session::new(&rt, &base(RecipeKind::Step))?;
     let step_report = step_session.run()?;
     println!(
@@ -36,7 +54,8 @@ fn main() -> anyhow::Result<()> {
         step_report.switch_step,
     );
 
-    // 4. Baseline: SR-STE with Adam at the same budget.
+    // 4. Baseline: SR-STE with Adam at the same budget — the recipe whose
+    //    Adam-regime accuracy drop motivated STEP (paper Fig. 1/Table 1).
     let mut srste_session = Session::new(&rt, &base(RecipeKind::SrSte))?;
     let srste_report = srste_session.run()?;
     println!(
@@ -44,7 +63,9 @@ fn main() -> anyhow::Result<()> {
         srste_report.final_eval.primary * 100.0
     );
 
-    // 5. The trained weights satisfy the N:M constraint exactly.
+    // 5. The trained weights satisfy the N:M constraint exactly: every
+    //    group of 4 consecutive weights keeps exactly 1 nonzero.
+    //    `sparse_params()` exports Π_T ⊙ w_T (Alg. 1's final line).
     let sparse = step_session.sparse_params();
     let ratio = NmRatio::new(1, 4);
     for (i, t) in sparse.iter().enumerate() {
@@ -58,5 +79,16 @@ fn main() -> anyhow::Result<()> {
         "STEP recovers {:+.1} accuracy points over SR-STE",
         (step_report.final_eval.primary - srste_report.final_eval.primary) * 100.0
     );
+
+    // 6. Deployment: pack the learned sparsity once and serve from the
+    //    compressed form — only the kept values + 2-bit index codes are
+    //    stored, and the forward kernels skip pruned slots entirely.
+    //    (See examples/packed_inference.rs for the full serving tour.)
+    if let Ok(server) = step_session.batch_server() {
+        println!(
+            "packed for serving: {:.1}% of the dense weight bytes",
+            server.compression() * 100.0
+        );
+    }
     Ok(())
 }

@@ -1,11 +1,14 @@
 //! `cargo bench --bench substrate` — pure-Rust hot-path kernels: N:M mask
 //! selection, the blocked matmuls, fused optimizer updates, the AutoSwitch
-//! window, and the recipe-engine step-throughput suite (fused vs unfused
+//! window, the recipe-engine step-throughput suite (fused vs unfused
 //! reference on the Table-1 workload shapes, recorded to
-//! `BENCH_recipes.json` so future changes can track the trajectory).
+//! `BENCH_recipes.json`), and the packed-inference suite (compressed N:M
+//! forward vs dense masked forward, recorded to `BENCH_inference.json`).
 
+use step_nm::coordinator::BatchServer;
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
 use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
+use step_nm::model::Mlp;
 use step_nm::optim::{
     adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
 };
@@ -110,6 +113,80 @@ fn bench_recipe_steps(
     }
 }
 
+/// Packed-vs-dense inference throughput for one Table-1 MLP shape at 2:4.
+///
+/// The baseline is the dense *masked* forward — `Mlp::forward` over weights
+/// with the learned mask already multiplied in (zeros cost full
+/// multiply-adds and memory traffic). The packed side runs the same model
+/// through the compressed-storage kernels. Outputs are asserted
+/// bit-identical before anything is timed, so the comparison can never
+/// silently measure two different computations.
+fn bench_packed_inference(
+    rng: &mut Pcg64,
+    shape_name: &str,
+    sizes: &[usize],
+    out: &mut Vec<Comparison>,
+) {
+    let h = Harness {
+        warmup: 2,
+        min_iters: 5,
+        max_iters: 200,
+        min_time: std::time::Duration::from_millis(150),
+    };
+    print_header(&format!("packed inference — {shape_name} {sizes:?} @ 2:4"));
+    let mlp = Mlp { sizes: sizes.to_vec() };
+    let params = mlp.init(rng);
+    let ratio = NmRatio::new(2, 4);
+    let masked = mlp.masked_params(&params, ratio);
+    let packed = mlp.pack_params(&params, ratio);
+    let stored: usize = packed.iter().map(|p| p.stored_bytes()).sum();
+    let dense_bytes: usize = packed.iter().map(|p| p.dense_bytes()).sum();
+    println!(
+        "packed weights: {:.2} MiB vs dense {:.2} MiB ({:.1}% of dense)",
+        stored as f64 / (1 << 20) as f64,
+        dense_bytes as f64 / (1 << 20) as f64,
+        100.0 * stored as f64 / dense_bytes as f64
+    );
+    // correctness gate: bit-identical logits across kernel paths
+    for &b in &[1usize, 8, 37] {
+        let x = Tensor::randn(&[b, sizes[0]], rng, 0.0, 1.0);
+        assert_eq!(
+            mlp.forward(&masked, &x),
+            mlp.forward_packed(&packed, &x),
+            "packed forward diverged from dense masked forward at batch {b}"
+        );
+    }
+    for &b in &[1usize, 8, 32] {
+        let x = Tensor::randn(&[b, sizes[0]], rng, 0.0, 1.0);
+        let r_dense = h.run(&format!("dense masked fwd  b={b}"), || mlp.forward(&masked, &x));
+        let r_packed = h.run(&format!("packed fwd        b={b}"), || {
+            mlp.forward_packed(&packed, &x)
+        });
+        let cmp = Comparison {
+            name: format!("{shape_name}/fwd_b{b}"),
+            baseline_mean: r_dense.mean(),
+            fused_mean: r_packed.mean(),
+        };
+        println!("{}", r_dense.row());
+        println!("{}  (packed speedup {:.2}x)", r_packed.row(), cmp.speedup());
+        out.push(cmp);
+    }
+    // the serving path: pack once, serve repeated batches (threaded shards)
+    let mut server = BatchServer::new(mlp.clone(), packed.clone()).expect("server");
+    let xb = Tensor::randn(&[128, sizes[0]], rng, 0.0, 1.0);
+    assert_eq!(mlp.forward(&masked, &xb), server.serve(&xb), "serve path diverged");
+    let r_dense = h.run("dense masked fwd  b=128", || mlp.forward(&masked, &xb));
+    let r_serve = h.run("packed serve      b=128", || server.serve(&xb));
+    let cmp = Comparison {
+        name: format!("{shape_name}/serve_b128"),
+        baseline_mean: r_dense.mean(),
+        fused_mean: r_serve.mean(),
+    };
+    println!("{}", r_dense.row());
+    println!("{}  (serve speedup {:.2}x)", r_serve.row(), cmp.speedup());
+    out.push(cmp);
+}
+
 fn main() {
     let h = Harness::default();
     let mut rng = Pcg64::new(42);
@@ -186,5 +263,21 @@ fn main() {
     ) {
         Ok(()) => println!("[json] wrote BENCH_recipes.json"),
         Err(e) => eprintln!("[json] could not write BENCH_recipes.json: {e}"),
+    }
+
+    // ---- packed inference throughput (Table-1 shapes, 2:4) --------------
+    let mut inference = Vec::new();
+    bench_packed_inference(&mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut inference);
+    bench_packed_inference(&mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut inference);
+    let mean = inference.iter().map(Comparison::speedup).sum::<f64>()
+        / inference.len().max(1) as f64;
+    println!("\nmean packed speedup over dense masked forward: {mean:.2}x");
+    match write_comparison_json(
+        "BENCH_inference.json",
+        "packed N:M forward vs dense masked forward (2:4, Table-1 shapes; packed = compressed storage + sparse kernels, serve row = threaded batch serving)",
+        &inference,
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_inference.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_inference.json: {e}"),
     }
 }

@@ -1,14 +1,60 @@
 //! **AutoSwitch** (Algorithm 2) and the two baseline switch-point criteria it
-//! is compared against in Table 1.
+//! is compared against in Table 1 — the machinery that decides *when* STEP
+//! leaves its dense precondition phase.
 //!
-//! AutoSwitch samples the per-coordinate variance change
-//! `Z_t = d⁻¹‖v_t − v_{t−1}‖₁` (Option I, arithmetic mean) or
-//! `Z_t = exp(d⁻¹ Σ log|v_t − v_{t−1}|)` (Option II, geometric mean — robust
-//! to outlier coordinates), averages a sliding window of
-//! `T_w = ⌊(1−β₂)⁻¹⌋` samples, and fires when the window mean drops below the
-//! Adam `ε` — the task-adapted threshold the paper argues for. Optional
-//! clipping bounds the switch step to `[T_min, T_max]` (defaults `0.1·T`,
-//! `0.5·T`, motivated by Geweke's MCMC diagnostic).
+//! # The two-phase STEP recipe (Algorithm 1)
+//!
+//! STEP's diagnosis is that SR-STE-style mask learning breaks Adam because
+//! the second moment `v` (Eqs 4, 6) is estimated from *masked* gradients and
+//! never converges to a trustworthy preconditioner. The fix is a phase
+//! split:
+//!
+//! 1. **Precondition phase** — plain dense Adam (Eqs 2–7). No masks. The
+//!    only job of this phase is to let `v` settle into a reliable estimate
+//!    of the gradient variance.
+//! 2. **Mask-learning phase** — at the switch step, `v` is frozen as `v*`
+//!    and the optimizer becomes momentum-over-frozen-precondition
+//!    (Alg. 1 lines 15–22, note `ε` moves *inside* the sqrt); the N:M mask
+//!    is re-selected from `|w|` every step and learned through STE (Eq 8),
+//!    optionally with SR-STE refinement (Eq 9).
+//!
+//! Switching too early freezes garbage variance; switching too late starves
+//! mask learning of steps. AutoSwitch picks the step automatically.
+//!
+//! # The variance-concentration test (Algorithm 2)
+//!
+//! AutoSwitch watches how fast `v` is still moving. Each step it samples the
+//! per-coordinate variance change
+//! `Z_t = d⁻¹‖v_t − v_{t−1}‖₁` ([`ZOption::Arithmetic`], Option I) or
+//! `Z_t = exp(d⁻¹ Σᵢ log|v_t − v_{t−1}|ᵢ)` ([`ZOption::Geometric`], Option
+//! II — a geometric mean, robust to a few exploding coordinates), averages
+//! a sliding window of `T_w = ⌊(1−β₂)⁻¹⌋` samples (the natural timescale of
+//! the β₂ exponential moving average), and fires when the window mean drops
+//! below the Adam `ε`: once the average coordinate of `v` moves less than
+//! `ε` per step, the `√v̂ + ε` denominator of Eq 7 is dominated by state
+//! that no longer changes — the sample has *concentrated*, and freezing `v`
+//! loses nothing.
+//!
+//! # The `[T_min, T_max]` clip
+//!
+//! For tight budgets, [`Clip`] bounds the switch step: never before
+//! `T_min` (defaults `0.1·T` — guards against a lucky-quiet early window on
+//! noisy small-batch tasks) and force-fire at `T_max` (defaults `0.5·T` —
+//! guarantees at least half the budget does mask learning even if the test
+//! never concentrates). The fractions follow Geweke's MCMC convergence
+//! diagnostic, which compares the first 10% of a chain against the last
+//! 50%. [`SwitchPolicy::observe`] fires at `t ≥ T_max`, keeping the switch
+//! inside the bound.
+//!
+//! # Baselines (Table 1)
+//!
+//! [`RelativeNormPolicy`] (Eq 10, Agarwal et al. 2021) fires when the
+//! relative change of `‖v‖` drops below 0.5; [`StalenessPolicy`] (Eq 11,
+//! Tang et al. 2021, 1-bit Adam) compares `‖v_t‖₁` against its value
+//! `⌊(1−β₂)⁻¹⌋` steps ago. Table 1 scores all three by *post-switch
+//! stability* ([`post_switch_stability`]): the mean `‖v_{t+1} − v_t‖₁` over
+//! a horizon after the chosen switch point — lower means the frozen
+//! precondition stays truer.
 //!
 //! Inputs are the *telemetry scalars* every training-step artifact emits
 //! (`‖v‖₁, ‖v‖₂, ‖v−v_prev‖₁, Σlog|dv|`), so neither path ever materializes

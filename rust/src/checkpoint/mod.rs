@@ -1,24 +1,42 @@
-//! Binary checkpointing of parameters + optimizer state.
+//! Binary checkpointing of parameters + optimizer state, dense **and**
+//! packed-sparse.
 //!
 //! Format (little-endian):
 //! ```text
-//! magic "SNMC" | version u32 | n_tensors u32 |
+//! magic "SNMC" | version u32 | n_tensors u32 | [n_packed u32 (v2 only)] |
 //!   per tensor: name_len u32 | name bytes | ndim u32 | dims u64… | f32 data…
+//!   per packed tensor (v2 only): name_len u32 | name bytes |
+//!     n u32 | m u32 | ndim u32 | dims u64… |
+//!     n_values u64 | values f32… | n_code_bytes u64 | code bytes…
 //! ```
 //! Tensors are named so checkpoints are robust to reordering; loading
-//! validates shape agreement against the expected layout.
+//! validates shape agreement against the expected layout. A checkpoint with
+//! no packed entries is written as version 1, byte-identical to the legacy
+//! format, so every pre-packing checkpoint stays loadable and vice versa.
+//!
+//! Packed entries store a [`PackedNmTensor`]'s kept values and index codes
+//! verbatim (the compressed export of a learned N:M mask — see
+//! [`crate::sparsity::packed`]); [`Checkpoint::push_packed_model`] /
+//! [`Checkpoint::packed_model`] round-trip a whole mixed dense+packed
+//! parameter list.
 
+use crate::sparsity::{NmRatio, PackedNmTensor, PackedParam};
 use crate::tensor::Tensor;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SNMC";
-const VERSION: u32 = 1;
+/// Dense-only checkpoints (the legacy format).
+const VERSION_DENSE: u32 = 1;
+/// Checkpoints carrying packed N:M entries.
+const VERSION_PACKED: u32 = 2;
 
-/// A named collection of tensors (params, m, v, …).
+/// A named collection of tensors (params, m, v, …) plus packed N:M tensors.
 #[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
     pub entries: Vec<(String, Tensor)>,
+    /// Compressed N:M entries (empty for dense-only checkpoints).
+    pub packed: Vec<(String, PackedNmTensor)>,
 }
 
 impl Checkpoint {
@@ -30,6 +48,11 @@ impl Checkpoint {
         self.entries.push((name.into(), t));
     }
 
+    /// Add a packed N:M tensor under `name`.
+    pub fn push_packed(&mut self, name: impl Into<String>, t: PackedNmTensor) {
+        self.packed.push((name.into(), t));
+    }
+
     /// Add a whole group under `prefix` ("p", "m", "v", …).
     pub fn push_group(&mut self, prefix: &str, tensors: &[Tensor]) {
         for (i, t) in tensors.iter().enumerate() {
@@ -37,15 +60,54 @@ impl Checkpoint {
         }
     }
 
-    /// Extract the group saved by [`push_group`].
+    /// Save a mixed dense/packed parameter list (a packed model export)
+    /// under `prefix`: dense entries land in [`Self::entries`], packed ones
+    /// in [`Self::packed`], both named `prefix.i`.
+    pub fn push_packed_model(&mut self, prefix: &str, params: &[PackedParam]) {
+        for (i, p) in params.iter().enumerate() {
+            match p {
+                PackedParam::Dense(t) => self.push(format!("{prefix}.{i}"), t.clone()),
+                PackedParam::Packed(pk) => self.push_packed(format!("{prefix}.{i}"), pk.clone()),
+            }
+        }
+    }
+
+    /// Parse `prefix.i` names into indices.
+    fn indexed<'a, T>(
+        items: &'a [(String, T)],
+        prefix: &str,
+    ) -> impl Iterator<Item = (usize, &'a T)> + 'a {
+        let prefix = prefix.to_string();
+        items.iter().filter_map(move |(name, t)| {
+            let rest = name.strip_prefix(&prefix)?.strip_prefix('.')?;
+            rest.parse::<usize>().ok().map(|i| (i, t))
+        })
+    }
+
+    /// Extract the group saved by [`push_group`](Self::push_group) — or the
+    /// *dense view* of a [`push_packed_model`](Self::push_packed_model)
+    /// export: packed entries under the prefix are unpacked in place, so a
+    /// mixed dense/packed model reads back as the full masked tensor list
+    /// (no silent index gaps). Use [`packed_model`](Self::packed_model) to
+    /// keep the compressed form.
     pub fn group(&self, prefix: &str) -> Vec<Tensor> {
-        let mut found: Vec<(usize, Tensor)> = self
-            .entries
-            .iter()
-            .filter_map(|(name, t)| {
-                let rest = name.strip_prefix(prefix)?.strip_prefix('.')?;
-                rest.parse::<usize>().ok().map(|i| (i, t.clone()))
-            })
+        let mut found: Vec<(usize, Tensor)> = Self::indexed(&self.entries, prefix)
+            .map(|(i, t)| (i, t.clone()))
+            .chain(Self::indexed(&self.packed, prefix).map(|(i, p)| (i, p.unpack())))
+            .collect();
+        found.sort_by_key(|(i, _)| *i);
+        found.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Reassemble the mixed parameter list saved by
+    /// [`push_packed_model`](Self::push_packed_model), ordered by index.
+    pub fn packed_model(&self, prefix: &str) -> Vec<PackedParam> {
+        let mut found: Vec<(usize, PackedParam)> = Self::indexed(&self.entries, prefix)
+            .map(|(i, t)| (i, PackedParam::Dense(t.clone())))
+            .chain(
+                Self::indexed(&self.packed, prefix)
+                    .map(|(i, p)| (i, PackedParam::Packed(p.clone()))),
+            )
             .collect();
         found.sort_by_key(|(i, _)| *i);
         found.into_iter().map(|(_, t)| t).collect()
@@ -55,19 +117,26 @@ impl Checkpoint {
         self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
     }
 
+    /// Look up a packed entry by name.
+    pub fn get_packed(&self, name: &str) -> Option<&PackedNmTensor> {
+        self.packed.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
             crate::util::ensure_dir(dir)?;
         }
+        let version = if self.packed.is_empty() { VERSION_DENSE } else { VERSION_PACKED };
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
         w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&version.to_le_bytes())?;
         w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        if version >= VERSION_PACKED {
+            w.write_all(&(self.packed.len() as u32).to_le_bytes())?;
+        }
         for (name, t) in &self.entries {
-            let nb = name.as_bytes();
-            w.write_all(&(nb.len() as u32).to_le_bytes())?;
-            w.write_all(nb)?;
+            write_name(&mut w, name)?;
             w.write_all(&(t.ndim() as u32).to_le_bytes())?;
             for &d in t.shape() {
                 w.write_all(&(d as u64).to_le_bytes())?;
@@ -76,6 +145,21 @@ impl Checkpoint {
             for &x in t.data() {
                 w.write_all(&x.to_le_bytes())?;
             }
+        }
+        for (name, p) in &self.packed {
+            write_name(&mut w, name)?;
+            w.write_all(&(p.ratio().n as u32).to_le_bytes())?;
+            w.write_all(&(p.ratio().m as u32).to_le_bytes())?;
+            w.write_all(&(p.shape().len() as u32).to_le_bytes())?;
+            for &d in p.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(&(p.values().len() as u64).to_le_bytes())?;
+            for &x in p.values() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            w.write_all(&(p.codes().len() as u64).to_le_bytes())?;
+            w.write_all(p.codes())?;
         }
         Ok(())
     }
@@ -86,33 +170,85 @@ impl Checkpoint {
         r.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic {magic:?}");
         let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        anyhow::ensure!(
+            version == VERSION_DENSE || version == VERSION_PACKED,
+            "unsupported checkpoint version {version}"
+        );
         let n = read_u32(&mut r)? as usize;
+        let n_packed = if version >= VERSION_PACKED { read_u32(&mut r)? as usize } else { 0 };
         let mut entries = Vec::with_capacity(n);
         for _ in 0..n {
-            let name_len = read_u32(&mut r)? as usize;
-            anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
-            let mut name = vec![0u8; name_len];
-            r.read_exact(&mut name)?;
+            let name = read_name(&mut r)?;
             let ndim = read_u32(&mut r)? as usize;
             anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
-            let mut shape = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                let mut b = [0u8; 8];
-                r.read_exact(&mut b)?;
-                shape.push(u64::from_le_bytes(b) as usize);
-            }
+            let shape = read_dims(&mut r, ndim)?;
             let numel: usize = shape.iter().product();
-            let mut bytes = vec![0u8; numel * 4];
-            r.read_exact(&mut bytes)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            entries.push((String::from_utf8(name)?, Tensor::new(&shape, data)));
+            let data = read_f32s(&mut r, numel)?;
+            entries.push((name, Tensor::new(&shape, data)));
         }
-        Ok(Self { entries })
+        let mut packed = Vec::with_capacity(n_packed);
+        for _ in 0..n_packed {
+            let name = read_name(&mut r)?;
+            let pn = read_u32(&mut r)? as usize;
+            let pm = read_u32(&mut r)? as usize;
+            anyhow::ensure!(pn >= 1 && pn <= pm && pm <= 64, "implausible ratio {pn}:{pm}");
+            let ndim = read_u32(&mut r)? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let shape = read_dims(&mut r, ndim)?;
+            let n_values = read_u64(&mut r)? as usize;
+            let numel: usize = shape.iter().product();
+            anyhow::ensure!(n_values <= numel, "implausible packed value count {n_values}");
+            let values = read_f32s(&mut r, n_values)?;
+            let n_bytes = read_u64(&mut r)? as usize;
+            // exact expected code-stream length, computable from shape+ratio
+            // (the same arithmetic `from_parts` validates against)
+            let cols = shape.last().copied().unwrap_or(0);
+            anyhow::ensure!(cols > 0, "packed entry with empty last axis");
+            let groups = (numel / cols) * (cols / pm + usize::from(cols % pm > 0));
+            let expect_bytes = (groups * pm + 7) / 8;
+            anyhow::ensure!(
+                n_bytes == expect_bytes,
+                "packed code length {n_bytes} != expected {expect_bytes}"
+            );
+            let mut codes = vec![0u8; n_bytes];
+            r.read_exact(&mut codes)?;
+            let t = PackedNmTensor::from_parts(shape, NmRatio::new(pn, pm), values, codes)?;
+            packed.push((name, t));
+        }
+        Ok(Self { entries, packed })
     }
+}
+
+fn write_name(w: &mut impl Write, name: &str) -> anyhow::Result<()> {
+    let nb = name.as_bytes();
+    w.write_all(&(nb.len() as u32).to_le_bytes())?;
+    w.write_all(nb)?;
+    Ok(())
+}
+
+fn read_name(r: &mut impl Read) -> anyhow::Result<String> {
+    let name_len = read_u32(r)? as usize;
+    anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    Ok(String::from_utf8(name)?)
+}
+
+fn read_dims(r: &mut impl Read, ndim: usize) -> anyhow::Result<Vec<usize>> {
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(read_u64(r)? as usize);
+    }
+    Ok(shape)
+}
+
+fn read_f32s(r: &mut impl Read, count: usize) -> anyhow::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
@@ -121,10 +257,17 @@ fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+    use crate::sparsity::{pack_params, NmRatio, PackedNmTensor};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("stepnm_ckpt_{}_{name}", std::process::id()))
@@ -184,5 +327,96 @@ mod tests {
         ck.push("x", Tensor::scalar1(1.0));
         assert!(ck.get("x").is_some());
         assert!(ck.get("y").is_none());
+    }
+
+    #[test]
+    fn dense_only_checkpoints_stay_version_1() {
+        // a packed-capable writer must not change the bytes of dense files
+        let mut ck = Checkpoint::new();
+        ck.push("w", Tensor::new(&[2], vec![1.0, 2.0]));
+        let path = tmp("v1.bin");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..4], b"SNMC");
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_model_roundtrips_bit_exact() {
+        let mut rng = Pcg64::new(4);
+        let params = vec![
+            Tensor::randn(&[8, 16], &mut rng, 0.0, 1.0),
+            Tensor::randn(&[16], &mut rng, 0.0, 1.0),
+            Tensor::randn(&[16, 4], &mut rng, 0.0, 1.0),
+            Tensor::randn(&[4], &mut rng, 0.0, 1.0),
+        ];
+        let ratios = vec![Some(NmRatio::new(2, 4)), None, None, None];
+        let packed = pack_params(&params, &ratios);
+        let mut ck = Checkpoint::new();
+        ck.push_packed_model("p", &packed);
+        assert_eq!(ck.packed.len(), 1);
+        assert_eq!(ck.entries.len(), 3);
+        let path = tmp("pk.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let model = back.packed_model("p");
+        assert_eq!(model.len(), 4);
+        for (orig, got) in packed.iter().zip(&model) {
+            assert_eq!(orig.shape(), got.shape());
+            assert_eq!(orig.unpack(), got.unpack(), "roundtrip must be bit-exact");
+            assert_eq!(
+                orig.as_packed().is_some(),
+                got.as_packed().is_some(),
+                "storage kind must survive"
+            );
+        }
+        // the compressed payload really is smaller than the dense tensor
+        let pk = back.get_packed("p.0").unwrap();
+        assert!(pk.packed_bytes() < pk.dense_bytes());
+        // group() reads the *dense view* of the mixed export — the packed
+        // entry is unpacked into its slot, no silent index gap
+        let dense_view = back.group("p");
+        assert_eq!(dense_view.len(), 4);
+        for (orig, got) in packed.iter().zip(&dense_view) {
+            assert_eq!(orig.unpack(), *got);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Regression: tail-dominated shapes (cols ≪ M) have more code bytes
+    /// than elements; the load-time length check must use the exact
+    /// expected count, not a numel-based plausibility bound.
+    #[test]
+    fn tail_dominated_shapes_roundtrip() {
+        let mut rng = Pcg64::new(8);
+        let w = Tensor::randn(&[100, 3], &mut rng, 0.0, 1.0);
+        let mut ck = Checkpoint::new();
+        ck.push_packed("w", PackedNmTensor::pack(&w, NmRatio::new(2, 32)));
+        let path = tmp("tail.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        // every row is one dense tail group (cols < M): lossless identity
+        assert_eq!(back.get_packed("w").unwrap().unpack(), w);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_packed_codes() {
+        let mut rng = Pcg64::new(6);
+        let w = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
+        let mut ck = Checkpoint::new();
+        ck.push_packed("w", crate::sparsity::PackedNmTensor::pack(&w, NmRatio::new(2, 4)));
+        let path = tmp("corrupt.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // overwrite the trailing code byte with all-ones: its two 4-of-4
+        // nibbles violate the 2-of-4 population check (a plain XOR would
+        // produce the *complement* codes, which are also valid 2-of-4)
+        let last = bytes.len() - 1;
+        bytes[last] = 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -17,8 +17,10 @@
 //! "evaluated with sparsity for fair comparison" protocol (Fig. 4 caption).
 
 pub mod prefetch;
+pub mod serve;
 pub mod session;
 pub mod sweep;
 
+pub use serve::{BatchServer, ServeStats};
 pub use session::{Report, Session};
 pub use sweep::{Sweep, SweepRow};

@@ -1,0 +1,310 @@
+//! The batched packed-inference serving path: pack a trained model **once**,
+//! then serve repeated eval/production batches from the compressed form.
+//!
+//! This is the deployment counterpart of the training loop: STEP learns the
+//! N:M mask, [`BatchServer::pack`] (or [`super::Session::batch_server`])
+//! compresses the weights to [`PackedParam`]s at phase-2 exit, and every
+//! subsequent [`BatchServer::serve`] call runs the sparse kernels of
+//! [`crate::sparsity::packed`] — no masks are recomputed, no dense weight
+//! tensor is ever materialized again. Large batches are sharded row-wise
+//! across scoped threads (each sample's forward is independent, so the
+//! result is bit-identical to the serial path in any thread count).
+//!
+//! `cargo bench --bench substrate` measures this path against the dense
+//! masked forward and records the comparison to `BENCH_inference.json`.
+
+use crate::model::Mlp;
+use crate::runtime::ModelInfo;
+use crate::sparsity::{pack_params, NmRatio, PackedParam};
+use crate::tensor::{accuracy_from_logits, argmax_rows, Tensor};
+
+/// Below this much scalar work (batch rows × stored weight values) a serve
+/// call stays on the calling thread — thread spawn/join costs more than the
+/// whole forward for small batches.
+pub const SERVE_PAR_MIN_WORK: usize = 1 << 22;
+
+/// Cumulative serving counters (throughput accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Batches served so far.
+    pub batches: usize,
+    /// Samples served so far.
+    pub samples: usize,
+}
+
+/// A packed-model inference server for classifier MLPs.
+///
+/// Construction packs the weights once; [`serve`](Self::serve) then runs
+/// forward passes from the compressed form for the lifetime of the server.
+pub struct BatchServer {
+    mlp: Mlp,
+    params: Vec<PackedParam>,
+    /// Total stored weight scalars (threading work estimate).
+    weight_values: usize,
+    stats: ServeStats,
+}
+
+impl BatchServer {
+    /// Serve an already-packed parameter list (e.g. loaded from a
+    /// [`crate::checkpoint::Checkpoint::packed_model`] export). Validates
+    /// the `[w, b, …]` layout against `mlp`.
+    pub fn new(mlp: Mlp, params: Vec<PackedParam>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            params.len() == mlp.n_params(),
+            "packed model has {} params, MLP wants {}",
+            params.len(),
+            mlp.n_params()
+        );
+        for l in 0..mlp.n_layers() {
+            let (fan_in, fan_out) = (mlp.sizes[l], mlp.sizes[l + 1]);
+            anyhow::ensure!(
+                params[2 * l].shape() == &[fan_in, fan_out],
+                "layer {l} weight shape {:?} vs [{fan_in}, {fan_out}]",
+                params[2 * l].shape()
+            );
+            anyhow::ensure!(
+                params[2 * l + 1].as_dense().is_some()
+                    && params[2 * l + 1].shape() == &[fan_out],
+                "layer {l} bias must be dense [{fan_out}]"
+            );
+        }
+        let weight_values = params
+            .iter()
+            .map(|p| match p {
+                PackedParam::Dense(t) => t.numel(),
+                PackedParam::Packed(pk) => pk.n_values(),
+            })
+            .sum();
+        Ok(Self { mlp, params, weight_values, stats: ServeStats::default() })
+    }
+
+    /// Pack dense trained weights once at `ratio` (hidden weights
+    /// compressed, biases + final layer dense) and serve from the result —
+    /// the "pack at phase-2 exit" entry point.
+    pub fn pack(mlp: Mlp, dense: &[Tensor], ratio: NmRatio) -> anyhow::Result<Self> {
+        let ratios = mlp.ratios(ratio);
+        let params = pack_params(dense, &ratios);
+        Self::new(mlp, params)
+    }
+
+    /// The packed parameter list (e.g. for checkpointing via
+    /// [`crate::checkpoint::Checkpoint::push_packed_model`]).
+    pub fn params(&self) -> &[PackedParam] {
+        &self.params
+    }
+
+    /// The served model.
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+
+    /// Cumulative serving counters.
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Stored weight bytes (compressed where packed).
+    pub fn stored_bytes(&self) -> usize {
+        self.params.iter().map(PackedParam::stored_bytes).sum()
+    }
+
+    /// Dense-equivalent weight bytes.
+    pub fn dense_bytes(&self) -> usize {
+        self.params.iter().map(PackedParam::dense_bytes).sum()
+    }
+
+    /// `stored_bytes / dense_bytes` — 0.53× at 2:4 for an all-sparse model.
+    pub fn compression(&self) -> f64 {
+        self.stored_bytes() as f64 / self.dense_bytes().max(1) as f64
+    }
+
+    /// Serve one batch: logits `[batch, n_classes]`.
+    ///
+    /// Batches with at least [`SERVE_PAR_MIN_WORK`] scalar multiply-adds are
+    /// split row-wise across scoped threads; each shard runs the same
+    /// single-sample pipeline, so the output is bit-identical regardless of
+    /// the machine's parallelism.
+    pub fn serve(&mut self, x: &Tensor) -> Tensor {
+        let (rows, dim) = x.as_2d();
+        self.stats.batches += 1;
+        self.stats.samples += rows;
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let work = rows.saturating_mul(self.weight_values);
+        if threads < 2 || rows < 2 || work < SERVE_PAR_MIN_WORK {
+            return self.mlp.forward_packed(&self.params, x);
+        }
+        let n_chunks = threads.min(rows);
+        let chunk = (rows + n_chunks - 1) / n_chunks;
+        let n_out = *self.mlp.sizes.last().expect("MLP has layers");
+        let mut out = Tensor::zeros(&[rows, n_out]);
+        let xd = x.data();
+        let od = out.data_mut();
+        let (mlp, params) = (&self.mlp, &self.params);
+        std::thread::scope(|s| {
+            let mut od_rest: &mut [f32] = od;
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + chunk).min(rows);
+                let (od_chunk, rest) = std::mem::take(&mut od_rest).split_at_mut((r1 - r0) * n_out);
+                od_rest = rest;
+                let xs = &xd[r0 * dim..r1 * dim];
+                let n_rows = r1 - r0;
+                s.spawn(move || {
+                    let xt = Tensor::new(&[n_rows, dim], xs.to_vec());
+                    let y = mlp.forward_packed(params, &xt);
+                    od_chunk.copy_from_slice(y.data());
+                });
+                r0 = r1;
+            }
+        });
+        out
+    }
+
+    /// Serve and argmax: predicted class per row.
+    pub fn classify(&mut self, x: &Tensor) -> Vec<usize> {
+        argmax_rows(&self.serve(x))
+    }
+
+    /// Serve and score against integer labels.
+    pub fn accuracy(&mut self, x: &Tensor, labels: &[usize]) -> f64 {
+        accuracy_from_logits(&self.serve(x), labels)
+    }
+}
+
+/// Reconstruct the pure-Rust [`Mlp`] a manifest model describes — only
+/// models with the `[w, b, …]` classifier layout qualify (the Table-1 MLP
+/// analogs); token models get a clear error instead of silent garbage.
+pub fn mlp_from_model_info(info: &ModelInfo) -> anyhow::Result<Mlp> {
+    anyhow::ensure!(
+        info.kind == "classify",
+        "packed serving supports classifier MLPs (model {:?} has kind {:?})",
+        info.key,
+        info.kind
+    );
+    anyhow::ensure!(
+        !info.params.is_empty() && info.params.len() % 2 == 0,
+        "model {:?}: expected alternating [w, b] params, got {}",
+        info.key,
+        info.params.len()
+    );
+    let mut sizes: Vec<usize> = Vec::with_capacity(info.params.len() / 2 + 1);
+    for l in 0..info.params.len() / 2 {
+        let (_, wshape, _) = &info.params[2 * l];
+        let (_, bshape, _) = &info.params[2 * l + 1];
+        anyhow::ensure!(
+            wshape.len() == 2 && bshape.len() == 1 && bshape[0] == wshape[1],
+            "model {:?} layer {l} is not an MLP [w, b] pair ({wshape:?}, {bshape:?})",
+            info.key
+        );
+        if let Some(&prev) = sizes.last() {
+            anyhow::ensure!(
+                wshape[0] == prev,
+                "model {:?} layer {l}: fan-in {} vs previous fan-out {prev}",
+                info.key,
+                wshape[0]
+            );
+        } else {
+            sizes.push(wshape[0]);
+        }
+        sizes.push(wshape[1]);
+    }
+    anyhow::ensure!(
+        sizes.last() == Some(&info.n_classes),
+        "model {:?}: final fan-out {:?} != n_classes {}",
+        info.key,
+        sizes.last(),
+        info.n_classes
+    );
+    Ok(Mlp { sizes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn serve_matches_dense_masked_forward() {
+        let mlp = Mlp::new(12, &[16, 12], 4);
+        let mut rng = Pcg64::new(21);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let masked = mlp.masked_params(&params, ratio);
+        let mut server = BatchServer::pack(mlp.clone(), &params, ratio).unwrap();
+        for batch in [1usize, 7, 24] {
+            let x = Tensor::randn(&[batch, 12], &mut rng, 0.0, 1.0);
+            assert_eq!(mlp.forward(&masked, &x), server.serve(&x), "batch {batch}");
+        }
+        assert_eq!(server.stats(), ServeStats { batches: 3, samples: 32 });
+        assert!(server.compression() < 1.0);
+        assert!(server.stored_bytes() < server.dense_bytes());
+    }
+
+    #[test]
+    fn threaded_serve_is_bit_identical_to_serial() {
+        // big enough that rows × values crosses SERVE_PAR_MIN_WORK
+        let mlp = Mlp::new(64, &[128, 64], 10);
+        let mut rng = Pcg64::new(22);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let packed = mlp.pack_params(&params, ratio);
+        let mut server = BatchServer::new(mlp.clone(), packed.clone()).unwrap();
+        let batch = 1 + SERVE_PAR_MIN_WORK / server.weight_values;
+        let x = Tensor::randn(&[batch, 64], &mut rng, 0.0, 1.0);
+        let serial = mlp.forward_packed(&packed, &x);
+        let served = server.serve(&x);
+        assert_eq!(serial, served);
+    }
+
+    #[test]
+    fn classify_and_accuracy() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(23);
+        let params = mlp.init(&mut rng);
+        let mut server = BatchServer::pack(mlp.clone(), &params, NmRatio::new(2, 4)).unwrap();
+        let x = Tensor::randn(&[9, 8], &mut rng, 0.0, 1.0);
+        let preds = server.classify(&x);
+        assert_eq!(preds.len(), 9);
+        assert!(preds.iter().all(|&p| p < 3));
+        let acc = server.accuracy(&x, &preds.clone());
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn new_rejects_wrong_layouts() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(24);
+        let params = mlp.init(&mut rng);
+        let packed = mlp.pack_params(&params, NmRatio::new(2, 4));
+        // arity mismatch
+        assert!(BatchServer::new(mlp.clone(), packed[..2].to_vec()).is_err());
+        // wrong shape
+        let other = Mlp::new(8, &[12], 3);
+        assert!(BatchServer::new(other, packed).is_err());
+    }
+
+    #[test]
+    fn mlp_from_model_info_round_trips_mlp_layouts() {
+        let info = ModelInfo {
+            key: "mlp_test".into(),
+            params: vec![
+                ("w0".into(), vec![8, 16], true),
+                ("b0".into(), vec![16], false),
+                ("w1".into(), vec![16, 4], false),
+                ("b1".into(), vec![4], false),
+            ],
+            sparse_indices: vec![0],
+            kind: "classify".into(),
+            n_classes: 4,
+            dim: 8 * 16 + 16 + 16 * 4 + 4,
+            batch: 2,
+            seq: None,
+        };
+        let mlp = mlp_from_model_info(&info).unwrap();
+        assert_eq!(mlp.sizes, vec![8, 16, 4]);
+        // token models are rejected, not mangled
+        let mut lm = info.clone();
+        lm.kind = "lm".into();
+        assert!(mlp_from_model_info(&lm).is_err());
+    }
+}

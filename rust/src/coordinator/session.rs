@@ -515,28 +515,71 @@ impl<'rt> Session<'rt> {
     /// mid-phase-1 checkpoint would corrupt its evaluation (mirrors
     /// `RecipeState::final_sparse_params`).
     pub fn sparse_params(&self) -> Vec<Tensor> {
-        let sparsify = match self.cfg.recipe {
-            RecipeKind::Step | RecipeKind::StepVarianceUpdated => self.in_phase2(),
-            other => other.is_sparse(),
-        };
-        let ns = self.n_vec();
-        let mut si = 0;
         self.params
             .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                if sparsify && self.model.params[i].2 {
-                    let n = ns[si] as usize;
-                    si += 1;
-                    crate::sparsity::apply_nm(
-                        p,
-                        crate::sparsity::NmRatio::new(n, self.cfg.ratio.m),
-                    )
-                } else {
-                    p.clone()
-                }
+            .zip(self.export_ratios())
+            .map(|(p, r)| match r {
+                Some(r) => crate::sparsity::apply_nm(p, r),
+                None => p.clone(),
             })
             .collect()
+    }
+
+    /// Should an export mask the weights? Same rule as
+    /// [`sparse_params`](Self::sparse_params): STEP recipes only after the
+    /// phase switch, other sparse recipes always, dense recipes never.
+    fn sparsify_at_export(&self) -> bool {
+        match self.cfg.recipe {
+            RecipeKind::Step | RecipeKind::StepVarianceUpdated => self.in_phase2(),
+            other => other.is_sparse(),
+        }
+    }
+
+    /// Per-parameter export ratio: `Some(ratio)` for sparse-eligible
+    /// tensors when the recipe exports sparse (respecting per-layer N
+    /// overrides), `None` otherwise — the single source of truth behind
+    /// both [`sparse_params`](Self::sparse_params) and
+    /// [`packed_params`](Self::packed_params).
+    fn export_ratios(&self) -> Vec<Option<crate::sparsity::NmRatio>> {
+        let sparsify = self.sparsify_at_export();
+        let ns = self.n_vec();
+        let mut si = 0;
+        self.model
+            .params
+            .iter()
+            .map(|(_, _, sparse)| {
+                if *sparse {
+                    let n = ns[si] as usize;
+                    si += 1;
+                    if sparsify {
+                        return Some(crate::sparsity::NmRatio::new(n, self.cfg.ratio.m));
+                    }
+                }
+                None
+            })
+            .collect()
+    }
+
+    /// Export the final weights in **compressed** N:M form: sparse-eligible
+    /// tensors become [`PackedNmTensor`](crate::sparsity::PackedNmTensor)s
+    /// storing only kept values + index codes (the MaskLLM-style deployment
+    /// artifact), everything else stays dense. Selection matches
+    /// [`sparse_params`](Self::sparse_params) exactly (both derive from the
+    /// same per-parameter export ratios), so unpacking the result
+    /// reproduces it bit-for-bit. Respects per-layer N overrides
+    /// (DominoSearch) and the dense-until-switch rule for STEP.
+    pub fn packed_params(&self) -> Vec<crate::sparsity::PackedParam> {
+        crate::sparsity::pack_params(&self.params, &self.export_ratios())
+    }
+
+    /// Build a [`BatchServer`](super::serve::BatchServer) from the current
+    /// weights: pack once (typically at phase-2 exit / end of training),
+    /// then serve repeated eval batches from the compressed form. Only
+    /// MLP-family classifier models qualify — token models get a clear
+    /// error.
+    pub fn batch_server(&self) -> anyhow::Result<super::serve::BatchServer> {
+        let mlp = super::serve::mlp_from_model_info(&self.model)?;
+        super::serve::BatchServer::new(mlp, self.packed_params())
     }
 }
 

@@ -20,6 +20,14 @@
 //! are needed (e.g. Table 1's switch-point statistics) — it is bit-compared
 //! against the HLO path by the integration tests.
 //!
+//! Once a mask is learned, the **packed inference engine**
+//! ([`sparsity::packed`], [`coordinator::serve`]) exports the weights in
+//! compressed N:M form (kept values + per-group index codes) and serves
+//! batches through sparse kernels that skip pruned slots — the deployment
+//! step the paper's A100-2:4 motivation assumes. `cargo bench --bench
+//! substrate` records packed-vs-dense forward throughput to
+//! `BENCH_inference.json`.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -64,11 +72,11 @@ pub mod util;
 pub mod prelude {
     pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
     pub use crate::config::{ExperimentConfig, RecipeKind};
-    pub use crate::coordinator::{Report, Session, Sweep};
+    pub use crate::coordinator::{BatchServer, Report, Session, Sweep};
     pub use crate::data::Dataset;
     pub use crate::optim::OptimizerKind;
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{Registry, Runtime};
-    pub use crate::sparsity::{nm_mask, NmRatio};
+    pub use crate::sparsity::{nm_mask, NmRatio, PackedNmTensor, PackedParam};
     pub use crate::tensor::Tensor;
 }

@@ -8,9 +8,10 @@
 //! the manifest conventions) transfer unchanged between the two engines.
 
 use crate::rng::Pcg64;
-use crate::sparsity::NmRatio;
+use crate::sparsity::{packed_matmul, NmRatio, PackedParam};
 use crate::tensor::{
-    add_bias, argmax_rows, cross_entropy_with_grad, matmul, matmul_at, matmul_bt, relu, Tensor,
+    accuracy_from_logits, add_bias, cross_entropy_with_grad, matmul, matmul_at, matmul_bt, relu,
+    Tensor,
 };
 
 /// An MLP classifier: `in_dim → hidden… → n_classes`, ReLU activations.
@@ -73,17 +74,85 @@ impl Mlp {
 
     /// Forward pass: logits `[batch, n_classes]`.
     pub fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
-        let mut h = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+        let reshaped;
+        let x2d: &Tensor = if x.ndim() == 2 {
+            x // layer 0 only reads its input — no defensive copy
+        } else {
+            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+            &reshaped
+        };
+        let mut h: Option<Tensor> = None;
         for l in 0..self.n_layers() {
-            let w = &params[2 * l];
-            let b = &params[2 * l + 1];
-            h = matmul(&h, w);
-            add_bias(&mut h, b);
+            let input = h.as_ref().unwrap_or(x2d);
+            let mut next = matmul(input, &params[2 * l]);
+            add_bias(&mut next, &params[2 * l + 1]);
             if l != self.n_layers() - 1 {
-                h = relu(&h);
+                next = relu(&next);
             }
+            h = Some(next);
         }
-        h
+        h.expect("MLP has at least one layer")
+    }
+
+    /// Forward pass over **packed** weights: logits `[batch, n_classes]`.
+    ///
+    /// The inference twin of [`Mlp::forward`]: hidden weights stored as
+    /// [`PackedNmTensor`](crate::sparsity::PackedNmTensor) run the sparse
+    /// kernels ([`packed_matmul`]) that skip pruned slots, dense parameters
+    /// run the ordinary dense path. Output is bit-for-bit identical to
+    /// `forward` over the dense *masked* weights on finite inputs — the
+    /// integration suite (`rust/tests/packed_inference.rs`) holds the two
+    /// equal across batch sizes.
+    pub fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
+        assert_eq!(params.len(), self.n_params(), "packed param arity");
+        let reshaped;
+        let x2d: &Tensor = if x.ndim() == 2 {
+            x // layer 0 only reads its input — no defensive copy
+        } else {
+            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+            &reshaped
+        };
+        let mut h: Option<Tensor> = None;
+        for l in 0..self.n_layers() {
+            let input = h.as_ref().unwrap_or(x2d);
+            let b = params[2 * l + 1]
+                .as_dense()
+                .expect("bias tensors are never packed");
+            let mut next = match &params[2 * l] {
+                PackedParam::Dense(w) => matmul(input, w),
+                PackedParam::Packed(w) => packed_matmul(input, w),
+            };
+            add_bias(&mut next, b);
+            if l != self.n_layers() - 1 {
+                next = relu(&next);
+            }
+            h = Some(next);
+        }
+        h.expect("MLP has at least one layer")
+    }
+
+    /// The dense **masked** parameter list: `Π ⊙ w` on sparse-eligible
+    /// tensors (via [`crate::sparsity::apply_nm`]), clones elsewhere — the
+    /// baseline every packed path is held bit-identical to.
+    pub fn masked_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<Tensor> {
+        params
+            .iter()
+            .zip(self.sparse_flags())
+            .map(|(p, s)| if s { crate::sparsity::apply_nm(p, ratio) } else { p.clone() })
+            .collect()
+    }
+
+    /// Pack trained parameters for inference: hidden weights are compressed
+    /// at `ratio` (the same selection rule training masks used), biases and
+    /// the final layer stay dense. The one-time export step before serving —
+    /// see [`crate::coordinator::serve::BatchServer`].
+    pub fn pack_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<PackedParam> {
+        crate::sparsity::pack_params(params, &self.ratios(ratio))
+    }
+
+    /// Classification accuracy of a packed model on a batch.
+    pub fn accuracy_packed(&self, params: &[PackedParam], x: &Tensor, labels: &[usize]) -> f64 {
+        accuracy_from_logits(&self.forward_packed(params, x), labels)
     }
 
     /// Mean cross-entropy loss + exact gradients w.r.t. every parameter.
@@ -143,10 +212,7 @@ impl Mlp {
 
     /// Classification accuracy on a batch.
     pub fn accuracy(&self, params: &[Tensor], x: &Tensor, labels: &[usize]) -> f64 {
-        let logits = self.forward(params, x);
-        let preds = argmax_rows(&logits);
-        let correct = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
-        correct as f64 / labels.len().max(1) as f64
+        accuracy_from_logits(&self.forward(params, x), labels)
     }
 }
 
@@ -203,6 +269,27 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_masked() {
+        let mlp = Mlp::new(16, &[24, 16], 5);
+        let mut rng = Pcg64::new(4);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let masked = mlp.masked_params(&params, ratio);
+        let packed = mlp.pack_params(&params, ratio);
+        for batch in [1usize, 5, 8, 11] {
+            let x = Tensor::randn(&[batch, 16], &mut rng, 0.0, 1.0);
+            let dense = mlp.forward(&masked, &x);
+            let sparse = mlp.forward_packed(&packed, &x);
+            assert_eq!(dense, sparse, "batch {batch}");
+            let labels: Vec<usize> = (0..batch).map(|i| i % 5).collect();
+            assert_eq!(
+                mlp.accuracy(&masked, &x, &labels),
+                mlp.accuracy_packed(&packed, &x, &labels)
+            );
+        }
     }
 
     #[test]

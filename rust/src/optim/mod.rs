@@ -24,6 +24,10 @@
 //!   from scalars inside the loop so no `v_old` clone is ever materialized.
 //!   They are bit-for-bit equivalent to composing the primitives (verified
 //!   by `rust/tests/recipe_fused.rs` across all eight recipes).
+//!
+//! Masks themselves are produced by [`crate::sparsity::nm_mask_forward_into`]
+//! (selection + forward product fused into one group loop); once training
+//! ends, [`crate::sparsity::packed`] takes over for inference.
 
 pub mod recipes;
 

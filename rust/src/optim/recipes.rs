@@ -9,18 +9,20 @@
 //! # The fused step pipeline
 //!
 //! [`RecipeState::step`] is **allocation-free in steady state** for every
-//! tensor-sized buffer: masks are written into persistent scratch
-//! ([`nm_mask_into`]), forward weights are built with `copy_from` /
-//! `mul_into` writes into the `scratch_masked` buffers, and the per-tensor
-//! update runs one fused kernel ([`super::masked_adam_step`] and friends)
-//! that combines SR-STE refinement (Eq 9), the optimizer update, and
-//! [`VarStats`] accumulation in a single pass — the `dv` telemetry is
-//! computed from the pre-update `v` scalar inside the loop, so the old
-//! per-step `v_old` clone no longer exists. ASP's cached masks are passed by
-//! reference instead of being deep-cloned every step. Multi-tensor models
-//! above [`PAR_MIN_NUMEL`] total elements update their tensors on scoped
-//! threads (per-tensor partial [`VarStats`] are merged in index order, so
-//! the result is bit-identical to the serial path).
+//! tensor-sized buffer: one pass per tensor ([`nm_mask_forward_into`])
+//! writes this step's mask *and* the forward weights `Π ⊙ w` into the
+//! persistent scratch buffers in the same group loop — there is no separate
+//! whole-tensor product sweep — and the per-tensor update runs one fused
+//! kernel ([`super::masked_adam_step`] and friends) that combines SR-STE
+//! refinement (Eq 9), the optimizer update, and [`VarStats`] accumulation
+//! in a single pass — the `dv` telemetry is computed from the pre-update
+//! `v` scalar inside the loop, so the old per-step `v_old` clone no longer
+//! exists. ASP's cached masks are passed by reference instead of being
+//! deep-cloned every step (its masks are frozen, so it keeps the
+//! cached-mask `mul_into` product). Multi-tensor models above
+//! [`PAR_MIN_NUMEL`] total elements update their tensors on scoped threads
+//! (per-tensor partial [`VarStats`] are merged in index order, so the
+//! result is bit-identical to the serial path).
 //!
 //! [`RecipeState::step_reference`] retains the original unfused pipeline
 //! (clone-heavy, one concern per pass) as the readability oracle; the two
@@ -32,7 +34,7 @@ use super::{
     adam_update, asp_adam_step, masked_adam_step, masked_phase2_step, masked_sgdm_step,
     sgdm_update, srste_refine, step_phase2_update, AdamHp, AdamState, VarStats,
 };
-use crate::sparsity::{nm_mask_into, DecaySchedule, NmRatio};
+use crate::sparsity::{nm_mask_forward_into, nm_mask_into, DecaySchedule, NmRatio};
 use crate::tensor::Tensor;
 
 /// Below this many total parameter scalars the fused engine stays serial —
@@ -282,18 +284,21 @@ impl RecipeState {
         F: FnMut(&[Tensor]) -> (f64, Vec<Tensor>),
     {
         self.t += 1;
-        self.refresh_masks(params);
-        self.write_forward(params);
+        self.prepare_forward(params);
         let (loss, grads) = loss_and_grad(&self.scratch_masked);
         assert_eq!(grads.len(), params.len());
         let stats = self.fused_update(params, &grads);
         (loss, stats)
     }
 
-    /// Recompute this step's masks into the persistent scratch buffers and
-    /// set the per-tensor active flags. ASP caches its masks on first use
-    /// and reuses them by reference forever after.
-    fn refresh_masks(&mut self, params: &[Tensor]) {
+    /// One pass per tensor producing this step's masks *and* the forward
+    /// weights `Π ⊙ w` in the persistent scratch buffers
+    /// ([`nm_mask_forward_into`] writes both in the same group loop — the
+    /// separate whole-tensor `mul_into` sweep the two-pass pipeline needed
+    /// is gone). Dense-this-step tensors get a plain `copy_from`. ASP is
+    /// the exception: its masks are frozen after the first step, so it
+    /// keeps the cached-mask product instead of re-selecting.
+    fn prepare_forward(&mut self, params: &[Tensor]) {
         if matches!(self.recipe, PureRecipe::Asp) {
             if self.asp_masks.is_none() {
                 let masks: Vec<Option<Tensor>> = params
@@ -303,41 +308,35 @@ impl RecipeState {
                     .collect();
                 self.asp_masks = Some(masks);
             }
-            let asp = self.asp_masks.as_ref().expect("just cached");
-            for (active, mask) in self.mask_active.iter_mut().zip(asp) {
-                *active = mask.is_some();
+            let Self { asp_masks, scratch_masked, mask_active, .. } = self;
+            let asp = asp_masks.as_deref().expect("just cached");
+            for (i, (dst, p)) in scratch_masked.iter_mut().zip(params).enumerate() {
+                match &asp[i] {
+                    Some(mask) => {
+                        crate::tensor::mul_into(mask, p, dst);
+                        mask_active[i] = true;
+                    }
+                    None => {
+                        dst.copy_from(p);
+                        mask_active[i] = false;
+                    }
+                }
             }
             return;
         }
         for i in 0..params.len() {
             match self.current_ratio(i) {
                 Some(r) => {
-                    let buf = self.scratch_masks[i]
+                    let mask = self.scratch_masks[i]
                         .as_mut()
                         .expect("sparse param lacks scratch mask");
-                    nm_mask_into(&params[i], r, buf);
+                    nm_mask_forward_into(&params[i], r, mask, &mut self.scratch_masked[i]);
                     self.mask_active[i] = true;
                 }
-                None => self.mask_active[i] = false,
-            }
-        }
-    }
-
-    /// Build the forward weights `Π ⊙ w` (or a plain copy) into the
-    /// persistent `scratch_masked` buffers — no per-step clones.
-    fn write_forward(&mut self, params: &[Tensor]) {
-        let Self { recipe, asp_masks, scratch_masks, scratch_masked, mask_active, .. } = self;
-        let mask_src: &[Option<Tensor>] = if matches!(*recipe, PureRecipe::Asp) {
-            asp_masks.as_deref().expect("ASP masks cached by refresh_masks")
-        } else {
-            &scratch_masks[..]
-        };
-        for (i, (dst, p)) in scratch_masked.iter_mut().zip(params).enumerate() {
-            if mask_active[i] {
-                let mask = mask_src[i].as_ref().expect("active mask missing buffer");
-                crate::tensor::mul_into(mask, p, dst);
-            } else {
-                dst.copy_from(p);
+                None => {
+                    self.scratch_masked[i].copy_from(&params[i]);
+                    self.mask_active[i] = false;
+                }
             }
         }
     }
@@ -361,7 +360,7 @@ impl RecipeState {
         let (hp, lr, t) = (*hp, *lr, *t);
         let mask_src: &[Option<Tensor>] = match kind {
             UpdateKind::AspAdam => {
-                asp_masks.as_deref().expect("ASP masks cached by refresh_masks")
+                asp_masks.as_deref().expect("ASP masks cached by prepare_forward")
             }
             _ => &scratch_masks[..],
         };

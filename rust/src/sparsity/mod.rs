@@ -1,21 +1,42 @@
 //! N:M structured sparsity: mask computation, application, accounting, the
-//! DominoSearch layer-wise ratio assignment, and the Decaying-Mask schedule.
+//! DominoSearch layer-wise ratio assignment, the Decaying-Mask schedule, and
+//! the [`packed`] compressed-storage inference engine.
 //!
 //! Semantics are pinned to the Layer-1 oracle (`python/compile/kernels/ref.py`):
 //! groups of `M` consecutive elements along the **last** axis; keep the `N`
 //! largest by |w|; ties broken toward the *lower* index (matching
 //! `jax.lax.top_k` stability). The integration tests compare this module
 //! bit-for-bit against the `nm_mask` HLO artifact.
+//!
+//! Training-path kernels ([`nm_mask_into`], [`nm_mask_forward_into`]) write
+//! into persistent scratch; deployment packs masks + weights into
+//! [`PackedNmTensor`]s whose kernels skip pruned slots entirely.
 
 pub mod domino;
+pub mod packed;
 pub mod schedule;
 
 pub use domino::{domino_assign, DominoBudget};
+pub use packed::{
+    pack_params, packed_matmul, packed_matmul_into, packed_matvec, PackedNmTensor, PackedParam,
+};
 pub use schedule::{decaying_n, DecaySchedule};
 
 use crate::tensor::Tensor;
 
 /// An N:M ratio (keep `n` of every `m` consecutive weights).
+///
+/// # Examples
+///
+/// ```
+/// use step_nm::sparsity::NmRatio;
+///
+/// let r: NmRatio = "2:4".parse().unwrap();
+/// assert_eq!(r, NmRatio::new(2, 4));
+/// assert_eq!(r.density(), 0.5);
+/// assert_eq!(r.sparsity(), 0.5);
+/// assert!(!r.is_dense());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct NmRatio {
     pub n: usize,
@@ -65,8 +86,22 @@ impl std::str::FromStr for NmRatio {
 
 /// Compute the binary N:M mask of `w` (groups along the last axis).
 ///
-/// Panics if the last axis is not divisible by `m`. The mask tensor has the
-/// same shape as `w` with entries in {0.0, 1.0}.
+/// Panics if the last axis is not divisible by `m`, or if `m > 64` (all
+/// mask kernels share a fixed 64-slot selection buffer; every ratio in the
+/// paper and the HLO artifacts has `m ≤ 32`). The mask tensor has the same
+/// shape as `w` with entries in {0.0, 1.0}.
+///
+/// # Examples
+///
+/// ```
+/// use step_nm::sparsity::{nm_mask, NmRatio};
+/// use step_nm::tensor::Tensor;
+///
+/// // Keep the 2 largest-magnitude entries of every group of 4.
+/// let w = Tensor::new(&[1, 4], vec![0.1, -3.0, 2.0, 0.5]);
+/// let mask = nm_mask(&w, NmRatio::new(2, 4));
+/// assert_eq!(mask.data(), &[0.0, 1.0, 1.0, 0.0]);
+/// ```
 pub fn nm_mask(w: &Tensor, ratio: NmRatio) -> Tensor {
     let mut mask = Tensor::zeros(w.shape());
     nm_mask_into(w, ratio, &mut mask);
@@ -75,56 +110,113 @@ pub fn nm_mask(w: &Tensor, ratio: NmRatio) -> Tensor {
 
 /// Allocation-free variant: writes the mask into `mask` (same shape as `w`).
 ///
-/// Selection is N rounds of scan-max-and-exclude per group — the same
-/// algorithm as the Pallas kernel (`_nm_mask_kernel`), so tie-break behaviour
-/// is identical by construction: strict `>` comparison keeps the first
-/// (lowest-index) maximum.
+/// Selection (the shared `select_keep` rule) is N rounds of
+/// scan-max-and-exclude per group — the same algorithm as the Pallas
+/// kernel (`_nm_mask_kernel`), so
+/// tie-break behaviour is identical by construction: strict `>` comparison
+/// keeps the first (lowest-index) maximum, and an all-NaN remainder falls
+/// back to the lowest unselected index instead of panicking.
 pub fn nm_mask_into(w: &Tensor, ratio: NmRatio, mask: &mut Tensor) {
     let (n, m) = (ratio.n, ratio.m);
     let cols = w.last_dim();
     assert!(cols % m == 0, "last dim {cols} not divisible by M={m}");
+    assert!(m <= 64, "M > 64 not supported by the mask kernels");
     assert_eq!(mask.shape(), w.shape());
     let wd = w.data();
     let md = mask.data_mut();
-    md.fill(0.0);
-    for g in 0..w.numel() / m {
+    let mut keep = [false; 64];
+    for g in 0..wd.len() / m {
         let base = g * m;
-        let group = &wd[base..base + m];
-        let sel = &mut md[base..base + m];
-        if n >= m {
-            sel.fill(1.0);
-            continue;
-        }
-        for _round in 0..n {
-            // `best` starts at the first unselected index so a group whose
-            // remaining candidates are all NaN (NaN fails every `>`) still
-            // selects something — the low-index tie-break extended to NaN —
-            // instead of indexing with usize::MAX and panicking. Any non-NaN
-            // candidate beats `NEG_INFINITY`, so non-NaN behavior (keep the
-            // largest |x|, ties to the lowest index) is unchanged.
-            let mut best = usize::MAX;
-            let mut best_mag = f32::NEG_INFINITY;
-            for (j, &x) in group.iter().enumerate() {
-                if sel[j] == 0.0 {
-                    if best == usize::MAX {
-                        best = j;
-                    }
-                    if x.abs() > best_mag {
-                        best_mag = x.abs();
-                        best = j;
-                    }
-                }
-            }
-            sel[best] = 1.0;
+        select_keep(&wd[base..base + m], n, &mut keep);
+        for (j, s) in md[base..base + m].iter_mut().enumerate() {
+            *s = if keep[j] { 1.0 } else { 0.0 };
         }
     }
 }
 
-/// `Π ⊙ w` in one pass.
+/// Fused mask-selection + forward-weight product: one group loop writes
+/// both the {0,1} mask **and** the masked forward weights `Π ⊙ w`.
+///
+/// Bit-identical to [`nm_mask_into`] followed by [`crate::tensor::mul_into`]
+/// (the forward value is computed as `mask[j] * w[j]`, the exact expression
+/// of the two-pass path; selection is the shared `select_keep` rule), but
+/// touches each group once — this is the kernel the fused recipe engine
+/// ([`crate::optim::RecipeState::step`]) runs every step instead of a mask
+/// pass plus a separate whole-tensor product sweep.
+pub fn nm_mask_forward_into(w: &Tensor, ratio: NmRatio, mask: &mut Tensor, fwd: &mut Tensor) {
+    let (n, m) = (ratio.n, ratio.m);
+    let cols = w.last_dim();
+    assert!(cols % m == 0, "last dim {cols} not divisible by M={m}");
+    assert!(m <= 64, "M > 64 not supported by the mask kernels");
+    assert_eq!(mask.shape(), w.shape());
+    assert_eq!(fwd.shape(), w.shape());
+    let wd = w.data();
+    let md = mask.data_mut();
+    let fd = fwd.data_mut();
+    let mut keep = [false; 64];
+    for g in 0..wd.len() / m {
+        let base = g * m;
+        let group = &wd[base..base + m];
+        select_keep(group, n, &mut keep);
+        for j in 0..m {
+            let s = if keep[j] { 1.0f32 } else { 0.0 };
+            md[base + j] = s;
+            fd[base + j] = s * group[j];
+        }
+    }
+}
+
+/// `Π ⊙ w` in one pass. Like [`nm_mask`], supports `m ≤ 64`.
+///
+/// # Examples
+///
+/// ```
+/// use step_nm::sparsity::{apply_nm, NmRatio};
+/// use step_nm::tensor::Tensor;
+///
+/// let w = Tensor::new(&[1, 4], vec![0.1, -3.0, 2.0, 0.5]);
+/// let sparse = apply_nm(&w, NmRatio::new(2, 4));
+/// assert_eq!(sparse.data(), &[0.0, -3.0, 2.0, 0.0]);
+/// ```
 pub fn apply_nm(w: &Tensor, ratio: NmRatio) -> Tensor {
     let mut out = w.clone();
     apply_nm_inplace(&mut out, ratio);
     out
+}
+
+/// Select the kept slots of one group into `keep[..group.len()]` — the
+/// single-sourced selection rule every N:M kernel shares
+/// ([`nm_mask_into`], [`nm_mask_forward_into`], [`apply_nm_inplace`],
+/// [`packed::PackedNmTensor::pack`]): keep the `n` largest by `|x|`, ties
+/// (and all-NaN remainders) to the lowest unselected index — the Pallas
+/// `_nm_mask_kernel` tie-break, so training masks and packed exports can
+/// never diverge.
+pub(crate) fn select_keep(group: &[f32], n: usize, keep: &mut [bool; 64]) {
+    let m = group.len();
+    debug_assert!(m <= 64);
+    if n >= m {
+        keep[..m].fill(true);
+        return;
+    }
+    keep[..m].fill(false);
+    for _round in 0..n {
+        // NaN-safe fallback: without it, an all-NaN remainder leaves
+        // `best == usize::MAX` and panics on the index below.
+        let mut best = usize::MAX;
+        let mut best_mag = f32::NEG_INFINITY;
+        for (j, &x) in group.iter().enumerate() {
+            if !keep[j] {
+                if best == usize::MAX {
+                    best = j;
+                }
+                if x.abs() > best_mag {
+                    best_mag = x.abs();
+                    best = j;
+                }
+            }
+        }
+        keep[best] = true;
+    }
 }
 
 /// Mask `w` in place (no separate mask tensor — used by inference paths).
@@ -143,25 +235,7 @@ pub fn apply_nm_inplace(w: &mut Tensor, ratio: NmRatio) {
     for g in 0..wd.len() / m {
         let base = g * m;
         let group = &mut wd[base..base + m];
-        keep[..m].fill(false);
-        for _ in 0..n {
-            // Same NaN-safe fallback as `nm_mask_into`: without it, an
-            // all-NaN remainder leaves `best == usize::MAX` and panics.
-            let mut best = usize::MAX;
-            let mut best_mag = f32::NEG_INFINITY;
-            for (j, &x) in group.iter().enumerate() {
-                if !keep[j] {
-                    if best == usize::MAX {
-                        best = j;
-                    }
-                    if x.abs() > best_mag {
-                        best_mag = x.abs();
-                        best = j;
-                    }
-                }
-            }
-            keep[best] = true;
-        }
+        select_keep(group, n, &mut keep);
         for (j, x) in group.iter_mut().enumerate() {
             if !keep[j] {
                 *x = 0.0;
@@ -188,6 +262,20 @@ impl MaskStats {
 }
 
 /// Validate a {0,1} mask against a ratio: every group keeps exactly N.
+///
+/// # Examples
+///
+/// ```
+/// use step_nm::sparsity::{mask_stats, nm_mask, NmRatio};
+/// use step_nm::tensor::Tensor;
+///
+/// let ratio = NmRatio::new(2, 4);
+/// let w = Tensor::new(&[2, 4], vec![1.0, -2.0, 0.5, 3.0, -1.0, 0.1, 4.0, 2.0]);
+/// let stats = mask_stats(&nm_mask(&w, ratio), ratio);
+/// assert!(stats.exact);
+/// assert_eq!(stats.kept, 4);
+/// assert_eq!(stats.density(), 0.5);
+/// ```
 pub fn mask_stats(mask: &Tensor, ratio: NmRatio) -> MaskStats {
     let m = ratio.m;
     let md = mask.data();
@@ -370,5 +458,40 @@ mod tests {
     fn indivisible_last_dim_panics() {
         let w = Tensor::new(&[1, 6], vec![0.0; 6]);
         nm_mask(&w, NmRatio::new(2, 4));
+    }
+
+    /// The fused selection+product kernel must be bit-identical to the
+    /// two-pass pipeline (`nm_mask_into` then `mul_into`) it replaces in the
+    /// recipe engine — including on ties, zeros, and non-finite values.
+    #[test]
+    fn fused_mask_forward_matches_two_pass() {
+        Cases::new(80).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 5, 5);
+            let w = if rng.below(2) == 0 {
+                gen_tensor_with_ties(rng, &[r, c])
+            } else {
+                let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -1.5, 2.0];
+                let data: Vec<f32> =
+                    (0..r * c).map(|_| specials[rng.below(specials.len())]).collect();
+                Tensor::new(&[r, c], data)
+            };
+            let ratio = NmRatio::new(n, m);
+            let mut mask_ref = Tensor::zeros(&[r, c]);
+            nm_mask_into(&w, ratio, &mut mask_ref);
+            let mut fwd_ref = Tensor::zeros(&[r, c]);
+            crate::tensor::mul_into(&mask_ref, &w, &mut fwd_ref);
+            let mut mask_fused = Tensor::zeros(&[r, c]);
+            let mut fwd_fused = Tensor::zeros(&[r, c]);
+            nm_mask_forward_into(&w, ratio, &mut mask_fused, &mut fwd_fused);
+            assert_eq!(mask_ref.data(), mask_fused.data(), "{n}:{m} masks diverge");
+            for i in 0..w.numel() {
+                let (a, b) = (fwd_ref.data()[i], fwd_fused.data()[i]);
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{n}:{m} fwd slot {i}: {a} vs {b}"
+                );
+            }
+        });
     }
 }

@@ -1,0 +1,807 @@
+//! Packed N:M storage and the sparse inference kernels that consume it.
+//!
+//! Everywhere else in the crate, N:M sparsity is *simulated*: forward passes
+//! multiply dense weights by a dense {0,1} mask, so every pruned slot still
+//! costs a multiply-add and 4 bytes of memory traffic. This module is the
+//! deployment half of the paper's pitch — once a mask is learned, the model
+//! is exported to a compressed form that stores **only the kept values**,
+//! and inference runs kernels that *skip* pruned slots instead of
+//! multiplying by them (the CPU analog of what A100 sparse tensor cores do
+//! with 2:4 metadata).
+//!
+//! # Storage format
+//!
+//! [`PackedNmTensor`] stores, per group of `M` consecutive elements along
+//! the last axis:
+//!
+//! * the `N` kept values, in ascending slot order (`values`, f32, raw bits
+//!   preserved — NaN/±inf payloads survive packing), and
+//! * an `M`-bit *index code* whose bit `j` marks slot `j` as kept
+//!   (`codes`, a dense little-endian bitstream, `M` bits per group).
+//!
+//! For 2:4 that is 4 code bits per group — 2 bits per kept slot, the same
+//! metadata budget as the A100's 2-bit column indices — plus 8 value bytes,
+//! i.e. 8.5 bytes instead of 16 (0.53× the dense footprint). Groups never
+//! cross row boundaries; a last axis that is **not** divisible by `M` gets
+//! one trailing partial group per row that is stored dense (every slot
+//! kept), so arbitrary shapes round-trip losslessly.
+//!
+//! # Kernels
+//!
+//! [`packed_matvec`] / [`packed_matmul`] / [`packed_matmul_into`] compute
+//! `x @ W` against a packed `W` **bit-for-bit identically** to the dense
+//! [`crate::tensor::matmul`] over the masked weights (on finite inputs):
+//! contributions accumulate in the same ascending-`k` order, and the terms
+//! they skip are exactly the ones the dense kernel either skips
+//! (`x[k] == 0`) or adds as `±0.0` no-ops (pruned slots). The batched path
+//! transposes 8-row tiles so each kept value becomes one 8-wide FMA across
+//! the batch — half the vector work of the dense masked product at 2:4 —
+//! and streams the packed weights (≈0.53× the bytes) once per tile.
+//!
+//! The serving layer on top of these kernels lives in
+//! [`crate::coordinator::serve`]; `cargo bench --bench substrate` records
+//! packed-vs-dense forward throughput to `BENCH_inference.json`.
+
+use super::{select_keep, NmRatio};
+use crate::tensor::Tensor;
+
+/// Largest group size the packed format supports (index codes are kept in a
+/// `u32` per group).
+pub const MAX_PACKED_M: usize = 32;
+
+/// Batch rows per tile of the batched kernel: each kept value is applied to
+/// `TILE` samples with one contiguous FMA loop (8 f32 = one AVX2 register).
+const TILE: usize = 8;
+
+/// A tensor stored in compressed N:M form: kept values + per-group index
+/// codes (see the [`crate::sparsity::packed`] module docs for the layout).
+///
+/// # Examples
+///
+/// ```
+/// use step_nm::sparsity::{NmRatio, PackedNmTensor};
+/// use step_nm::tensor::Tensor;
+///
+/// let w = Tensor::new(&[1, 8], vec![0.1, -3.0, 2.0, 0.5, 1.0, -1.0, 0.2, 0.0]);
+/// let packed = PackedNmTensor::pack(&w, NmRatio::new(2, 4));
+///
+/// // Only the 2 kept values per group of 4 are stored…
+/// assert_eq!(packed.n_values(), 4);
+/// // …and unpacking reconstructs the masked tensor exactly.
+/// assert_eq!(packed.unpack().data(), &[0.0, -3.0, 2.0, 0.0, 1.0, -1.0, 0.0, 0.0]);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedNmTensor {
+    shape: Vec<usize>,
+    ratio: NmRatio,
+    /// Kept values, group-major, ascending slot order within each group.
+    values: Vec<f32>,
+    /// `M`-bit keep codes, one per group, packed little-endian.
+    codes: Vec<u8>,
+}
+
+/// Append an `m`-bit group code to the little-endian bitstream.
+fn push_bits(codes: &mut Vec<u8>, bitlen: &mut usize, code: u32, m: usize) {
+    for j in 0..m {
+        let pos = *bitlen + j;
+        if pos / 8 == codes.len() {
+            codes.push(0);
+        }
+        if (code >> j) & 1 == 1 {
+            codes[pos / 8] |= 1 << (pos % 8);
+        }
+    }
+    *bitlen += m;
+}
+
+/// Read the `m`-bit group code at `bitpos` from the bitstream.
+#[inline]
+fn read_bits(codes: &[u8], bitpos: usize, m: usize) -> u32 {
+    debug_assert!(m <= MAX_PACKED_M);
+    let byte = bitpos >> 3;
+    let shift = bitpos & 7;
+    let mut win = 0u64;
+    for (k, &b) in codes[byte..].iter().take(5).enumerate() {
+        win |= (b as u64) << (8 * k);
+    }
+    ((win >> shift) & ((1u64 << m) - 1)) as u32
+}
+
+impl PackedNmTensor {
+    /// Pack the N:M-masked form of `w`: selection uses the exact
+    /// [`nm_mask`](super::nm_mask) rule (largest `N` by `|x|`, ties and
+    /// all-NaN remainders to the lowest index), so
+    /// `packed.unpack() == apply_nm(w)` always holds — see
+    /// [`unpack`](Self::unpack) for the doctested round trip.
+    ///
+    /// A last axis not divisible by `M` is legal: each row's trailing
+    /// partial group is stored dense. Panics if `M >` [`MAX_PACKED_M`] or
+    /// the last axis is empty.
+    pub fn pack(w: &Tensor, ratio: NmRatio) -> Self {
+        let (n, m) = (ratio.n, ratio.m);
+        assert!(m <= MAX_PACKED_M, "packed N:M supports M ≤ {MAX_PACKED_M} (got {m})");
+        let cols = w.last_dim();
+        assert!(cols > 0, "cannot pack an empty last axis (shape {:?})", w.shape());
+        let rows = w.rows_2d();
+        let full = cols / m;
+        let tail = cols % m;
+        let wd = w.data();
+        let mut values = Vec::with_capacity(rows * (full * n + tail));
+        let mut codes: Vec<u8> = Vec::new();
+        let mut bitlen = 0usize;
+        let mut keep = [false; 64];
+        for r in 0..rows {
+            let row = &wd[r * cols..(r + 1) * cols];
+            for g in 0..full {
+                let group = &row[g * m..(g + 1) * m];
+                select_keep(group, n, &mut keep);
+                let mut code = 0u32;
+                for (j, &x) in group.iter().enumerate() {
+                    if keep[j] {
+                        code |= 1 << j;
+                        values.push(x);
+                    }
+                }
+                push_bits(&mut codes, &mut bitlen, code, m);
+            }
+            if tail > 0 {
+                // Partial trailing group: stored dense (every slot kept).
+                let mut code = 0u32;
+                for (j, &x) in row[full * m..].iter().enumerate() {
+                    code |= 1 << j;
+                    values.push(x);
+                }
+                push_bits(&mut codes, &mut bitlen, code, m);
+            }
+        }
+        Self { shape: w.shape().to_vec(), ratio, values, codes }
+    }
+
+    /// Rebuild a packed tensor from its serialized parts (the checkpoint
+    /// import path), validating lengths and per-group code populations.
+    pub fn from_parts(
+        shape: Vec<usize>,
+        ratio: NmRatio,
+        values: Vec<f32>,
+        codes: Vec<u8>,
+    ) -> anyhow::Result<Self> {
+        let (n, m) = (ratio.n, ratio.m);
+        anyhow::ensure!(m <= MAX_PACKED_M, "packed N:M supports M ≤ {MAX_PACKED_M} (got {m})");
+        let cols = shape.last().copied().unwrap_or(0);
+        anyhow::ensure!(cols > 0, "packed tensor needs a non-empty last axis (shape {shape:?})");
+        let numel: usize = shape.iter().product();
+        let rows = numel / cols;
+        let full = cols / m;
+        let tail = cols % m;
+        let groups_per_row = full + usize::from(tail > 0);
+        let expect_values = rows * (full * n + tail);
+        let expect_bytes = (rows * groups_per_row * m + 7) / 8;
+        anyhow::ensure!(
+            values.len() == expect_values,
+            "packed values length {} != expected {expect_values} for shape {shape:?} at {ratio}",
+            values.len()
+        );
+        anyhow::ensure!(
+            codes.len() == expect_bytes,
+            "packed code stream {} bytes != expected {expect_bytes}",
+            codes.len()
+        );
+        // Every full group must keep exactly N slots; tail groups keep all.
+        let mut bitpos = 0usize;
+        for _r in 0..rows {
+            for _g in 0..full {
+                let code = read_bits(&codes, bitpos, m);
+                bitpos += m;
+                anyhow::ensure!(
+                    code.count_ones() as usize == n,
+                    "corrupt packed code: group keeps {} of {m}, want {n}",
+                    code.count_ones()
+                );
+            }
+            if tail > 0 {
+                let code = read_bits(&codes, bitpos, m);
+                bitpos += m;
+                anyhow::ensure!(
+                    code == (1u32 << tail) - 1,
+                    "corrupt packed tail code {code:#x} (tail width {tail})"
+                );
+            }
+        }
+        Ok(Self { shape, ratio, values, codes })
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    /// Logical (dense) shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// The N:M ratio this tensor is packed at.
+    pub fn ratio(&self) -> NmRatio {
+        self.ratio
+    }
+
+    /// Stored (kept) value count.
+    pub fn n_values(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Element count of the dense form.
+    pub fn dense_numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Raw kept values (serialization).
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Raw index-code bitstream (serialization).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Payload bytes of the packed form (values + index codes).
+    pub fn packed_bytes(&self) -> usize {
+        self.values.len() * 4 + self.codes.len()
+    }
+
+    /// Payload bytes of the dense form.
+    pub fn dense_bytes(&self) -> usize {
+        self.dense_numel() * 4
+    }
+
+    /// `packed_bytes / dense_bytes` — 8.5/16 = 0.53125 for 2:4.
+    pub fn compression(&self) -> f64 {
+        self.packed_bytes() as f64 / self.dense_bytes().max(1) as f64
+    }
+
+    /// Rows when viewed as 2-D `[rows, last_dim]`.
+    fn rows(&self) -> usize {
+        self.dense_numel() / self.cols()
+    }
+
+    /// Size of the grouped (last) axis.
+    fn cols(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    // ---- unpack -----------------------------------------------------------
+
+    /// Reconstruct the dense masked tensor (`apply_nm` of the packed source).
+    ///
+    /// The round trip is lossless: kept values come back bit-exact (NaN and
+    /// ±inf payloads included), pruned slots come back as `+0.0`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use step_nm::sparsity::{apply_nm, NmRatio, PackedNmTensor};
+    /// use step_nm::tensor::Tensor;
+    /// use step_nm::rng::Pcg64;
+    ///
+    /// let w = Tensor::randn(&[4, 16], &mut Pcg64::new(7), 0.0, 1.0);
+    /// let ratio = NmRatio::new(2, 4);
+    /// let packed = PackedNmTensor::pack(&w, ratio);
+    /// assert_eq!(packed.unpack(), apply_nm(&w, ratio));
+    /// ```
+    pub fn unpack(&self) -> Tensor {
+        let mut out = Tensor::zeros(&self.shape);
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Allocation-free [`unpack`](Self::unpack) into an existing tensor.
+    pub fn unpack_into(&self, out: &mut Tensor) {
+        assert_eq!(
+            out.shape(),
+            self.shape.as_slice(),
+            "unpack_into shape mismatch {:?} vs {:?}",
+            out.shape(),
+            self.shape
+        );
+        let m = self.ratio.m;
+        let cols = self.cols();
+        let rows = self.rows();
+        let full = cols / m;
+        let tail = cols % m;
+        let od = out.data_mut();
+        od.fill(0.0);
+        let mut vc = 0usize;
+        let mut bitpos = 0usize;
+        for r in 0..rows {
+            let row = &mut od[r * cols..(r + 1) * cols];
+            for g in 0..full {
+                let mut code = read_bits(&self.codes, bitpos, m);
+                bitpos += m;
+                let base = g * m;
+                while code != 0 {
+                    let j = code.trailing_zeros() as usize;
+                    row[base + j] = self.values[vc];
+                    vc += 1;
+                    code &= code - 1;
+                }
+            }
+            if tail > 0 {
+                bitpos += m; // tail code is all-ones by construction
+                for x in row[full * m..].iter_mut() {
+                    *x = self.values[vc];
+                    vc += 1;
+                }
+            }
+        }
+        debug_assert_eq!(vc, self.values.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sparse kernels
+// ---------------------------------------------------------------------------
+
+/// `y = x @ W` for packed `W` (logical `[in, out]`), skipping pruned slots.
+///
+/// Bit-identical to the matching row of [`crate::tensor::matmul`] against
+/// `W`'s dense masked form on finite inputs: contributions accumulate in
+/// ascending input order, rows with `x[i] == 0.0` are skipped exactly like
+/// the dense kernel's zero-activation skip, and the pruned-slot terms the
+/// dense kernel adds are `±0.0` no-ops.
+pub fn packed_matvec(x: &[f32], w: &PackedNmTensor, y: &mut [f32]) {
+    let (n, m) = (w.ratio.n, w.ratio.m);
+    let rows = w.rows();
+    let cols = w.cols();
+    assert_eq!(x.len(), rows, "matvec input {} vs weight rows {rows}", x.len());
+    assert_eq!(y.len(), cols, "matvec output {} vs weight cols {cols}", y.len());
+    y.fill(0.0);
+    let full = cols / m;
+    let tail = cols % m;
+    let values_per_row = full * n + tail;
+    let groups_per_row = full + usize::from(tail > 0);
+    let vals = &w.values[..];
+    let codes = &w.codes[..];
+    let mut vc = 0usize;
+    let mut gi = 0usize; // global group index; the code sits at bit gi*m
+    if m == 4 && tail == 0 {
+        // Hot path (2:4 and friends): one nibble of code per group.
+        for &a in x {
+            if a == 0.0 {
+                vc += values_per_row;
+                gi += full;
+                continue;
+            }
+            for chunk in y.chunks_exact_mut(4) {
+                let mut code = (codes[gi >> 1] >> ((gi & 1) * 4)) & 0x0F;
+                gi += 1;
+                while code != 0 {
+                    let j = code.trailing_zeros() as usize;
+                    chunk[j] += a * vals[vc];
+                    vc += 1;
+                    code &= code - 1;
+                }
+            }
+        }
+        return;
+    }
+    for &a in x {
+        if a == 0.0 {
+            vc += values_per_row;
+            gi += groups_per_row;
+            continue;
+        }
+        for g in 0..full {
+            let mut code = read_bits(codes, gi * m, m);
+            gi += 1;
+            let base = g * m;
+            while code != 0 {
+                let j = code.trailing_zeros() as usize;
+                y[base + j] += a * vals[vc];
+                vc += 1;
+                code &= code - 1;
+            }
+        }
+        if tail > 0 {
+            gi += 1;
+            for yj in y[full * m..].iter_mut() {
+                *yj += a * vals[vc];
+                vc += 1;
+            }
+        }
+    }
+}
+
+/// `C = H @ W` for packed `W`: the row-major batched forward kernel.
+pub fn packed_matmul(h: &Tensor, w: &PackedNmTensor) -> Tensor {
+    let (batch, _) = h.as_2d();
+    let mut c = Tensor::zeros(&[batch, w.cols()]);
+    packed_matmul_into(h, w, &mut c);
+    c
+}
+
+/// Allocation-conscious `C = H @ W` into a preallocated output.
+///
+/// Batches of ≥ 8 rows run the tiled kernel: 8 input rows are transposed so
+/// every kept weight value is applied to all 8 samples with one contiguous
+/// FMA loop, and the packed weight stream (values + codes) is read once per
+/// tile instead of once per sample. Remainder rows fall back to
+/// [`packed_matvec`]. Results are bit-identical to per-row
+/// [`packed_matvec`] — and hence to the dense masked matmul.
+pub fn packed_matmul_into(h: &Tensor, w: &PackedNmTensor, out: &mut Tensor) {
+    let (batch, k) = h.as_2d();
+    let (n, m) = (w.ratio.n, w.ratio.m);
+    let rows = w.rows();
+    let cols = w.cols();
+    assert_eq!(k, rows, "inner dims {k} vs {rows}");
+    assert_eq!(
+        out.shape(),
+        &[batch, cols],
+        "out shape {:?} vs [{batch}, {cols}]",
+        out.shape()
+    );
+    let full = cols / m;
+    let tail = cols % m;
+    let values_per_row = full * n + tail;
+    let groups_per_row = full + usize::from(tail > 0);
+    let vals = &w.values[..];
+    let codes = &w.codes[..];
+    let hd = h.data();
+    let od = out.data_mut();
+    let mut b0 = 0usize;
+    if batch >= TILE {
+        let mut xt = vec![0f32; rows * TILE];
+        let mut yt = vec![0f32; cols * TILE];
+        while b0 + TILE <= batch {
+            // Transpose the tile: xt[i][t] = h[b0 + t][i], contiguous in t.
+            for t in 0..TILE {
+                let hrow = &hd[(b0 + t) * k..(b0 + t + 1) * k];
+                for (i, &v) in hrow.iter().enumerate() {
+                    xt[i * TILE + t] = v;
+                }
+            }
+            yt.fill(0.0);
+            // Stream the packed weights once for the whole tile.
+            let mut vc = 0usize;
+            let mut gi = 0usize;
+            for i in 0..rows {
+                let xi = &xt[i * TILE..(i + 1) * TILE];
+                if xi.iter().all(|&v| v == 0.0) {
+                    vc += values_per_row;
+                    gi += groups_per_row;
+                    continue;
+                }
+                if m == 4 && tail == 0 {
+                    for g in 0..full {
+                        let mut code = (codes[gi >> 1] >> ((gi & 1) * 4)) & 0x0F;
+                        gi += 1;
+                        while code != 0 {
+                            let j = g * 4 + code.trailing_zeros() as usize;
+                            let v = vals[vc];
+                            vc += 1;
+                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
+                            for t in 0..TILE {
+                                yj[t] += v * xi[t];
+                            }
+                            code &= code - 1;
+                        }
+                    }
+                } else {
+                    for g in 0..full {
+                        let mut code = read_bits(codes, gi * m, m);
+                        gi += 1;
+                        while code != 0 {
+                            let j = g * m + code.trailing_zeros() as usize;
+                            let v = vals[vc];
+                            vc += 1;
+                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
+                            for t in 0..TILE {
+                                yj[t] += v * xi[t];
+                            }
+                            code &= code - 1;
+                        }
+                    }
+                    if tail > 0 {
+                        gi += 1;
+                        for j in full * m..cols {
+                            let v = vals[vc];
+                            vc += 1;
+                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
+                            for t in 0..TILE {
+                                yj[t] += v * xi[t];
+                            }
+                        }
+                    }
+                }
+            }
+            // Write the tile back row-major.
+            for t in 0..TILE {
+                let orow = &mut od[(b0 + t) * cols..(b0 + t + 1) * cols];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = yt[j * TILE + t];
+                }
+            }
+            b0 += TILE;
+        }
+    }
+    for b in b0..batch {
+        packed_matvec(&hd[b * k..(b + 1) * k], w, &mut od[b * cols..(b + 1) * cols]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// packed parameter lists (whole-model export)
+// ---------------------------------------------------------------------------
+
+/// One parameter of a packed model: sparse-eligible weights are stored
+/// compressed, everything else (biases, final layer) stays dense.
+#[derive(Debug, Clone)]
+pub enum PackedParam {
+    /// A dense tensor (bias / final layer / dense-ratio weight).
+    Dense(Tensor),
+    /// A compressed N:M weight.
+    Packed(PackedNmTensor),
+}
+
+impl PackedParam {
+    /// Logical (dense) shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            PackedParam::Dense(t) => t.shape(),
+            PackedParam::Packed(p) => p.shape(),
+        }
+    }
+
+    /// The dense tensor, if this parameter is stored dense.
+    pub fn as_dense(&self) -> Option<&Tensor> {
+        match self {
+            PackedParam::Dense(t) => Some(t),
+            PackedParam::Packed(_) => None,
+        }
+    }
+
+    /// The packed tensor, if this parameter is stored compressed.
+    pub fn as_packed(&self) -> Option<&PackedNmTensor> {
+        match self {
+            PackedParam::Dense(_) => None,
+            PackedParam::Packed(p) => Some(p),
+        }
+    }
+
+    /// Materialize the dense (masked) form.
+    pub fn unpack(&self) -> Tensor {
+        match self {
+            PackedParam::Dense(t) => t.clone(),
+            PackedParam::Packed(p) => p.unpack(),
+        }
+    }
+
+    /// Stored payload bytes (compressed for packed entries).
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            PackedParam::Dense(t) => t.numel() * 4,
+            PackedParam::Packed(p) => p.packed_bytes(),
+        }
+    }
+
+    /// Payload bytes of the dense form.
+    pub fn dense_bytes(&self) -> usize {
+        match self {
+            PackedParam::Dense(t) => t.numel() * 4,
+            PackedParam::Packed(p) => p.dense_bytes(),
+        }
+    }
+}
+
+/// Pack a parameter list: tensors with a (non-dense) ratio are compressed,
+/// the rest are cloned dense — the export step a trained
+/// [`crate::optim::RecipeState`] or [`crate::coordinator::Session`] runs
+/// once at the end of training ("pack at phase-2 exit").
+pub fn pack_params(params: &[Tensor], ratios: &[Option<NmRatio>]) -> Vec<PackedParam> {
+    assert_eq!(params.len(), ratios.len(), "params/ratios arity mismatch");
+    params
+        .iter()
+        .zip(ratios)
+        .map(|(p, r)| match r {
+            Some(r) if !r.is_dense() => PackedParam::Packed(PackedNmTensor::pack(p, *r)),
+            _ => PackedParam::Dense(p.clone()),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sparsity::{apply_nm, nm_mask};
+    use crate::tensor::{matmul, Tensor};
+    use crate::testutil::{gen_nm, gen_shape_div_m, gen_tensor, gen_tensor_with_ties, Cases};
+
+    #[test]
+    fn pack_unpack_roundtrip_2_4() {
+        let w = Tensor::new(&[1, 8], vec![0.1, -3.0, 2.0, 0.5, 1.0, -1.0, 0.2, 0.0]);
+        let p = PackedNmTensor::pack(&w, NmRatio::new(2, 4));
+        assert_eq!(p.n_values(), 4);
+        assert_eq!(p.unpack(), apply_nm(&w, NmRatio::new(2, 4)));
+    }
+
+    #[test]
+    fn property_roundtrip_matches_apply_nm() {
+        Cases::new(120).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (r, c) = gen_shape_div_m(rng, m, 6, 6);
+            let w = gen_tensor_with_ties(rng, &[r, c]);
+            let ratio = NmRatio::new(n, m);
+            let p = PackedNmTensor::pack(&w, ratio);
+            assert_eq!(p.unpack(), apply_nm(&w, ratio), "{n}:{m} shape ({r},{c})");
+            assert_eq!(p.n_values(), r * c / m * n);
+        });
+    }
+
+    #[test]
+    fn tail_groups_are_stored_dense() {
+        // cols = 10 at M=4: two full groups + a 2-wide dense tail per row
+        let mut rng = Pcg64::new(3);
+        let w = Tensor::randn(&[3, 10], &mut rng, 0.0, 1.0);
+        let ratio = NmRatio::new(1, 4);
+        let p = PackedNmTensor::pack(&w, ratio);
+        assert_eq!(p.n_values(), 3 * (2 * 1 + 2));
+        let back = p.unpack();
+        for r in 0..3 {
+            for g in 0..2 {
+                // full groups: selection identical to nm_mask on the group
+                let group: Vec<f32> =
+                    w.data()[r * 10 + g * 4..r * 10 + g * 4 + 4].to_vec();
+                let mask = nm_mask(&Tensor::new(&[1, 4], group.clone()), ratio);
+                for j in 0..4 {
+                    let expect = if mask.data()[j] != 0.0 { group[j] } else { 0.0 };
+                    assert_eq!(back.data()[r * 10 + g * 4 + j], expect);
+                }
+            }
+            // tail: kept verbatim
+            assert_eq!(&back.data()[r * 10 + 8..r * 10 + 10], &w.data()[r * 10 + 8..r * 10 + 10]);
+        }
+    }
+
+    #[test]
+    fn nonfinite_kept_values_survive_bit_exactly() {
+        let w = Tensor::new(
+            &[2, 4],
+            vec![f32::NAN, 1.0, f32::INFINITY, 0.5, f32::NEG_INFINITY, -0.0, f32::NAN, 3.0],
+        );
+        let ratio = NmRatio::new(2, 4);
+        let p = PackedNmTensor::pack(&w, ratio);
+        let back = p.unpack();
+        let expect = apply_nm(&w, ratio);
+        for i in 0..w.numel() {
+            let (a, b) = (back.data()[i], expect.data()[i]);
+            assert_eq!(a.to_bits(), b.to_bits(), "slot {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let mut rng = Pcg64::new(5);
+        let w = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
+        let p = PackedNmTensor::pack(&w, NmRatio::new(2, 4));
+        let ok = PackedNmTensor::from_parts(
+            p.shape().to_vec(),
+            p.ratio(),
+            p.values().to_vec(),
+            p.codes().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(ok, p);
+        // wrong value count
+        assert!(PackedNmTensor::from_parts(
+            p.shape().to_vec(),
+            p.ratio(),
+            vec![0.0; 3],
+            p.codes().to_vec(),
+        )
+        .is_err());
+        // corrupt code population (a group keeping 3 of 4)
+        let mut bad = p.codes().to_vec();
+        bad[0] |= 0x0F;
+        assert!(PackedNmTensor::from_parts(
+            p.shape().to_vec(),
+            p.ratio(),
+            p.values().to_vec(),
+            bad,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn matvec_matches_dense_masked_bitwise() {
+        Cases::new(60).run(|rng, _| {
+            let (n, m) = gen_nm(rng);
+            let (k, c) = gen_shape_div_m(rng, m, 8, 6);
+            let w = gen_tensor(rng, &[k, c]);
+            let ratio = NmRatio::new(n, m);
+            let masked = apply_nm(&w, ratio);
+            let p = PackedNmTensor::pack(&w, ratio);
+            // x with exact zeros sprinkled in (the ReLU-activation case)
+            let mut x = gen_tensor(rng, &[1, k]);
+            for v in x.data_mut().iter_mut() {
+                if rng.below(3) == 0 {
+                    *v = 0.0;
+                }
+            }
+            let dense = matmul(&x, &masked);
+            let mut y = vec![0f32; c];
+            packed_matvec(x.data(), &p, &mut y);
+            assert_eq!(dense.data(), &y[..], "{n}:{m} ({k},{c})");
+        });
+    }
+
+    #[test]
+    fn batched_matmul_matches_dense_masked_bitwise() {
+        // batches chosen to exercise: pure-matvec (<8), exact tiles, and
+        // tiles + remainder
+        Cases::new(25).run(|rng, case| {
+            let (n, m) = gen_nm(rng);
+            let (k, c) = gen_shape_div_m(rng, m, 6, 5);
+            let w = gen_tensor(rng, &[k, c]);
+            let ratio = NmRatio::new(n, m);
+            let masked = apply_nm(&w, ratio);
+            let p = PackedNmTensor::pack(&w, ratio);
+            let batch = [1, 3, 8, 16, 19, 37][case % 6];
+            let mut h = gen_tensor(rng, &[batch, k]);
+            for v in h.data_mut().iter_mut() {
+                if rng.below(3) == 0 {
+                    *v = 0.0;
+                }
+            }
+            let dense = matmul(&h, &masked);
+            let sparse = packed_matmul(&h, &p);
+            assert_eq!(dense, sparse, "{n}:{m} batch {batch}");
+        });
+    }
+
+    #[test]
+    fn matmul_with_tail_matches_per_row_matvec() {
+        let mut rng = Pcg64::new(11);
+        let w = Tensor::randn(&[6, 11], &mut rng, 0.0, 1.0);
+        let p = PackedNmTensor::pack(&w, NmRatio::new(2, 4));
+        let h = Tensor::randn(&[13, 6], &mut rng, 0.0, 1.0);
+        let out = packed_matmul(&h, &p);
+        for b in 0..13 {
+            let mut y = vec![0f32; 11];
+            packed_matvec(&h.data()[b * 6..(b + 1) * 6], &p, &mut y);
+            assert_eq!(&out.data()[b * 11..(b + 1) * 11], &y[..], "row {b}");
+        }
+        // and the unpacked form agrees with a dense product
+        let dense = matmul(&h, &p.unpack());
+        assert_eq!(dense, out);
+    }
+
+    #[test]
+    fn compression_accounting_2_4() {
+        let w = Tensor::zeros(&[64, 64]);
+        let p = PackedNmTensor::pack(&w, NmRatio::new(2, 4));
+        // 2 f32 values + 4 code bits per group of 4 → 8.5 / 16 bytes
+        assert_eq!(p.packed_bytes(), 64 * 16 * 8 + 64 * 16 / 2);
+        assert!((p.compression() - 8.5 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_params_mixes_dense_and_packed() {
+        let mut rng = Pcg64::new(9);
+        let params = vec![
+            Tensor::randn(&[8, 16], &mut rng, 0.0, 1.0),
+            Tensor::randn(&[16], &mut rng, 0.0, 1.0),
+        ];
+        let ratios = vec![Some(NmRatio::new(2, 4)), None];
+        let packed = pack_params(&params, &ratios);
+        assert!(packed[0].as_packed().is_some());
+        assert!(packed[1].as_dense().is_some());
+        assert_eq!(packed[0].unpack(), apply_nm(&params[0], NmRatio::new(2, 4)));
+        assert_eq!(packed[1].unpack(), params[1]);
+        assert!(packed[0].stored_bytes() < packed[0].dense_bytes());
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_oversized_m() {
+        let w = Tensor::zeros(&[1, 64]);
+        PackedNmTensor::pack(&w, NmRatio::new(1, 64));
+    }
+}

@@ -27,9 +27,12 @@ pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
     zip_map(a, b, |x, y| x * y)
 }
 
-/// `out = a ⊙ b` into a preallocated tensor — the allocation-free Hadamard
-/// the fused recipe engine uses to build forward weights (`Π ⊙ w`) in its
-/// scratch buffers every step.
+/// `out = a ⊙ b` into a preallocated tensor — the allocation-free Hadamard.
+///
+/// The recipe engine's ASP path uses it to apply its *frozen* cached masks
+/// (`Π ⊙ w`) every step; recipes that re-select masks per step use the fused
+/// [`crate::sparsity::nm_mask_forward_into`] instead, which produces the
+/// same product inside the selection loop.
 pub fn mul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     assert_eq!(a.shape(), b.shape(), "shape mismatch {:?} vs {:?}", a.shape(), b.shape());
     assert_eq!(a.shape(), out.shape(), "out shape {:?} vs {:?}", out.shape(), a.shape());
@@ -250,6 +253,15 @@ pub fn cross_entropy_with_grad(logits: &Tensor, labels: &[usize]) -> (f64, Tenso
         }
     }
     (loss / m as f64, grad)
+}
+
+/// Classification accuracy of `[m, n]` logits against integer labels —
+/// the single scoring rule shared by the dense, packed, and served
+/// forward paths (ties break to the lowest class index via [`argmax_rows`]).
+pub fn accuracy_from_logits(logits: &Tensor, labels: &[usize]) -> f64 {
+    let preds = argmax_rows(logits);
+    let correct = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
+    correct as f64 / labels.len().max(1) as f64
 }
 
 /// Row-wise argmax of `[m, n]` logits.
