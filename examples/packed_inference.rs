@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     let mut total = 0usize;
     for batch in data.eval_batches(64) {
         let (x, labels) = unpack_batch(&batch);
-        let logits = server.serve(&x);
+        let logits = server.serve(&x)?;
         assert_eq!(logits, mlp.forward(&sparse, &x), "packed serve must be bit-exact");
         for (p, y) in step_nm::tensor::argmax_rows(&logits).iter().zip(&labels) {
             correct += usize::from(p == y);
@@ -95,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     let h = Harness::quick();
     let xq = Tensor::randn(&[64, 256], &mut rng, 0.0, 1.0);
     let dense = h.run("dense masked forward (b=64)", || mlp.forward(&masked, &xq));
-    let sparse_t = h.run("packed serve         (b=64)", || server.serve(&xq));
+    let sparse_t = h.run("packed serve         (b=64)", || server.serve(&xq).expect("serve"));
     println!(
         "dense {:.3}ms vs packed {:.3}ms per batch ({:.2}x)",
         dense.mean() * 1e3,

@@ -2,10 +2,16 @@
 //! selection, the blocked matmuls, fused optimizer updates, the AutoSwitch
 //! window, the recipe-engine step-throughput suite (fused vs unfused
 //! reference on the Table-1 workload shapes, recorded to
-//! `BENCH_recipes.json`), and the packed-inference suite (compressed N:M
-//! forward vs dense masked forward, recorded to `BENCH_inference.json`).
+//! `BENCH_recipes.json`), the packed-inference suite (compressed N:M
+//! forward vs dense masked forward, recorded to `BENCH_inference.json`),
+//! and the packed fine-tune suite (compact-gradient frozen-mask step vs
+//! dense masked step, recorded to `BENCH_finetune.json`).
+//!
+//! Pass `--smoke` (or set `BENCH_SMOKE=1`) for a reduced-iteration run that
+//! still executes every bit-equality gate and writes all three JSON files —
+//! the CI smoke job uses it to keep the comparison suites honest.
 
-use step_nm::coordinator::BatchServer;
+use step_nm::coordinator::{BatchServer, FinetuneSession};
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
 use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
 use step_nm::model::Mlp;
@@ -13,7 +19,7 @@ use step_nm::optim::{
     adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
 };
 use step_nm::rng::Pcg64;
-use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio};
+use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio, PackedNmTensor};
 use step_nm::tensor::{matmul, matmul_at, matmul_bt, Tensor};
 
 /// An MLP-shaped parameter stack: `[w0, b0, w1, b1, …]`, hidden weights
@@ -44,17 +50,12 @@ fn workload(
 /// isolate the engine (masks + forward weights + update + telemetry),
 /// not the loss closure.
 fn bench_recipe_steps(
+    h: Harness,
     rng: &mut Pcg64,
     shape_name: &str,
     sizes: &[usize],
     out: &mut Vec<Comparison>,
 ) {
-    let h = Harness {
-        warmup: 2,
-        min_iters: 5,
-        max_iters: 200,
-        min_time: std::time::Duration::from_millis(150),
-    };
     print_header(&format!("recipe step throughput — {shape_name} {sizes:?}"));
     let (params, ratios, grads) = workload(rng, sizes);
     let total: usize = params.iter().map(Tensor::numel).sum();
@@ -92,6 +93,21 @@ fn bench_recipe_steps(
             st0.step(&mut p0, |_| (0.0, grads.clone()));
         }
 
+        // in-suite bit-equality gate: one lock-step step through both
+        // pipelines from the settled state (the long 50-step equality lives
+        // in rust/tests/recipe_fused.rs; this keeps the JSON's
+        // outputs_bit_equal flag honest for the exact configs timed here)
+        let mut st_a = st0.clone();
+        let mut p_a = p0.clone();
+        let mut st_b = st0.clone();
+        let mut p_b = p0.clone();
+        let (_, stats_a) = st_a.step(&mut p_a, |_| (0.0, grads.clone()));
+        let (_, stats_b) = st_b.step_reference(&mut p_b, |_| (0.0, grads.clone()));
+        assert_eq!(stats_a, stats_b, "{name}: fused/reference telemetry diverged");
+        for i in 0..p_a.len() {
+            assert_eq!(p_a[i], p_b[i], "{name}: fused/reference params diverged at {i}");
+        }
+
         let mut st_fused = st0.clone();
         let mut p_fused = p0.clone();
         let r_fused = h.run(&format!("fused {name}"), || {
@@ -122,17 +138,12 @@ fn bench_recipe_steps(
 /// bit-identical before anything is timed, so the comparison can never
 /// silently measure two different computations.
 fn bench_packed_inference(
+    h: Harness,
     rng: &mut Pcg64,
     shape_name: &str,
     sizes: &[usize],
     out: &mut Vec<Comparison>,
 ) {
-    let h = Harness {
-        warmup: 2,
-        min_iters: 5,
-        max_iters: 200,
-        min_time: std::time::Duration::from_millis(150),
-    };
     print_header(&format!("packed inference — {shape_name} {sizes:?} @ 2:4"));
     let mlp = Mlp { sizes: sizes.to_vec() };
     let params = mlp.init(rng);
@@ -174,9 +185,13 @@ fn bench_packed_inference(
     // the serving path: pack once, serve repeated batches (threaded shards)
     let mut server = BatchServer::new(mlp.clone(), packed.clone()).expect("server");
     let xb = Tensor::randn(&[128, sizes[0]], rng, 0.0, 1.0);
-    assert_eq!(mlp.forward(&masked, &xb), server.serve(&xb), "serve path diverged");
+    assert_eq!(
+        mlp.forward(&masked, &xb),
+        server.serve(&xb).expect("serve"),
+        "serve path diverged"
+    );
     let r_dense = h.run("dense masked fwd  b=128", || mlp.forward(&masked, &xb));
-    let r_serve = h.run("packed serve      b=128", || server.serve(&xb));
+    let r_serve = h.run("packed serve      b=128", || server.serve(&xb).expect("serve"));
     let cmp = Comparison {
         name: format!("{shape_name}/serve_b128"),
         baseline_mean: r_dense.mean(),
@@ -187,8 +202,137 @@ fn bench_packed_inference(
     out.push(cmp);
 }
 
+/// Packed fine-tune step vs dense-masked fine-tune step (frozen mask) for
+/// one Table-1 MLP shape at 2:4 — `BENCH_finetune.json`.
+///
+/// The baseline is the frozen-mask regime trained the dense way: masked
+/// weights, `Mlp::loss_and_grad` over all coordinates, gradients masked
+/// back onto the support, and `numel`-sized Adam state. The packed side is
+/// a [`FinetuneSession`]: compact gradients, `n_values()`-sized state, the
+/// mask never re-applied because it cannot move. Before anything is timed
+/// the two paths run lock-step steps and the loss bits plus every kept
+/// coordinate are asserted equal — the comparison can never silently
+/// measure two different computations.
+fn bench_packed_finetune(
+    h: Harness,
+    rng: &mut Pcg64,
+    shape_name: &str,
+    sizes: &[usize],
+    out: &mut Vec<Comparison>,
+) {
+    print_header(&format!("packed fine-tune — {shape_name} {sizes:?} @ 2:4"));
+    let mlp = Mlp { sizes: sizes.to_vec() };
+    let params = mlp.init(rng);
+    let ratio = NmRatio::new(2, 4);
+    let batch = 64usize;
+    let n_classes = *sizes.last().expect("shape");
+    let x = Tensor::randn(&[batch, sizes[0]], rng, 0.0, 1.0);
+    let labels: Vec<usize> = (0..batch).map(|i| i % n_classes).collect();
+    let lr = 1e-3f32;
+    let hp = AdamHp::default();
+
+    // packed side: compact gradients + compact Adam state
+    let mut ft = FinetuneSession::pack(mlp.clone(), &params, ratio, lr, hp).expect("finetune");
+
+    // dense-masked baseline state: masked weights + full-size Adam state.
+    // The frozen mask is rebuilt from the packed *codes* (re-selecting via
+    // nm_mask on already-masked weights could tie-break to a different
+    // support on exact-zero kept values), so the gate can never diverge on
+    // selection.
+    let support_mask = |pk: &PackedNmTensor| -> Tensor {
+        let mut mk = Tensor::zeros(pk.shape());
+        let vpr = pk.values_per_row();
+        let cols = pk.shape()[1];
+        for (vc, &j) in pk.col_indices().iter().enumerate() {
+            mk.data_mut()[(vc / vpr) * cols + j as usize] = 1.0;
+        }
+        mk
+    };
+    let masks: Vec<Option<Tensor>> = ft
+        .params()
+        .iter()
+        .map(|p| p.as_packed().map(&support_mask))
+        .collect();
+    let mut dense_w = mlp.masked_params(&params, ratio);
+    let mut dm: Vec<Tensor> = dense_w.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut dv = dm.clone();
+    let mut dt = 0u64;
+    let mut dense_step = |w: &mut [Tensor], m: &mut [Tensor], v: &mut [Tensor], t: u64| -> f64 {
+        let (loss, mut grads) = mlp.loss_and_grad(w, &x, &labels);
+        for (g, mk) in grads.iter_mut().zip(&masks) {
+            if let Some(mk) = mk {
+                // frozen mask: gradients projected onto the kept support
+                for (gd, &kd) in g.data_mut().iter_mut().zip(mk.data()) {
+                    *gd *= kd;
+                }
+            }
+        }
+        for i in 0..w.len() {
+            adam_update(&mut w[i], &mut m[i], &mut v[i], &grads[i], t, lr, hp);
+        }
+        loss
+    };
+
+    println!(
+        "optimizer state: {} packed scalars vs {} dense ({:.1}%)",
+        ft.optimizer_values(),
+        ft.dense_optimizer_values(),
+        100.0 * ft.optimizer_compression()
+    );
+
+    // correctness gate: lock-step bit-equality of loss and kept coordinates
+    for k in 0..3 {
+        dt += 1;
+        let dl = dense_step(&mut dense_w, &mut dm, &mut dv, dt);
+        let pl = ft.step(&x, &labels);
+        assert_eq!(dl.to_bits(), pl.to_bits(), "fine-tune loss diverged at step {k}");
+    }
+    for (i, p) in ft.params().iter().enumerate() {
+        match p.as_packed() {
+            Some(pk) => assert_eq!(pk.unpack(), dense_w[i], "kept coords diverged, param {i}"),
+            None => assert_eq!(*p.as_dense().expect("dense"), dense_w[i], "param {i} diverged"),
+        }
+    }
+
+    let r_dense = h.run("dense masked ft step  b=64", || {
+        dt += 1;
+        dense_step(&mut dense_w, &mut dm, &mut dv, dt)
+    });
+    let r_packed = h.run("packed ft step        b=64", || ft.step(&x, &labels));
+    let cmp = Comparison {
+        name: format!("{shape_name}/finetune_b64"),
+        baseline_mean: r_dense.mean(),
+        fused_mean: r_packed.mean(),
+    };
+    println!("{}", r_dense.row());
+    println!("{}  (packed speedup {:.2}x)", r_packed.row(), cmp.speedup());
+    out.push(cmp);
+}
+
 fn main() {
-    let h = Harness::default();
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var_os("BENCH_SMOKE").is_some();
+    let h = if smoke {
+        println!("[smoke] reduced-iteration mode: timings are not meaningful");
+        Harness {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: std::time::Duration::ZERO,
+        }
+    } else {
+        Harness::default()
+    };
+    let suite_h = if smoke {
+        h
+    } else {
+        Harness {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            min_time: std::time::Duration::from_millis(150),
+        }
+    };
     let mut rng = Pcg64::new(42);
 
     print_header("N:M mask selection (512x512 f32)");
@@ -251,8 +395,8 @@ fn main() {
 
     // ---- recipe-engine step throughput (Table-1 workload shapes) --------
     let mut comparisons = Vec::new();
-    bench_recipe_steps(&mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut comparisons);
-    bench_recipe_steps(&mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut comparisons);
+    bench_recipe_steps(suite_h, &mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut comparisons);
+    bench_recipe_steps(suite_h, &mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut comparisons);
     let mean = comparisons.iter().map(Comparison::speedup).sum::<f64>()
         / comparisons.len().max(1) as f64;
     println!("\nmean fused speedup over reference: {mean:.2}x");
@@ -260,6 +404,7 @@ fn main() {
         "BENCH_recipes.json",
         "recipe step throughput (fused vs reference, Table-1 shapes; engine-only means, closure cost subtracted)",
         &comparisons,
+        true, // in-suite lock-step gate above + recipe_fused.rs (50 steps)
     ) {
         Ok(()) => println!("[json] wrote BENCH_recipes.json"),
         Err(e) => eprintln!("[json] could not write BENCH_recipes.json: {e}"),
@@ -267,8 +412,8 @@ fn main() {
 
     // ---- packed inference throughput (Table-1 shapes, 2:4) --------------
     let mut inference = Vec::new();
-    bench_packed_inference(&mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut inference);
-    bench_packed_inference(&mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut inference);
+    bench_packed_inference(suite_h, &mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut inference);
+    bench_packed_inference(suite_h, &mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut inference);
     let mean = inference.iter().map(Comparison::speedup).sum::<f64>()
         / inference.len().max(1) as f64;
     println!("\nmean packed speedup over dense masked forward: {mean:.2}x");
@@ -276,8 +421,26 @@ fn main() {
         "BENCH_inference.json",
         "packed N:M forward vs dense masked forward (2:4, Table-1 shapes; packed = compressed storage + sparse kernels, serve row = threaded batch serving)",
         &inference,
+        true, // logits asserted bit-identical in-suite before timing
     ) {
         Ok(()) => println!("[json] wrote BENCH_inference.json"),
         Err(e) => eprintln!("[json] could not write BENCH_inference.json: {e}"),
+    }
+
+    // ---- packed fine-tune step throughput (Table-1 shapes, 2:4) ---------
+    let mut finetune = Vec::new();
+    bench_packed_finetune(suite_h, &mut rng, "mlp_cf10", &[3072, 512, 512, 10], &mut finetune);
+    bench_packed_finetune(suite_h, &mut rng, "enc_glue2_ffn", &[512, 2048, 512, 2], &mut finetune);
+    let mean = finetune.iter().map(Comparison::speedup).sum::<f64>()
+        / finetune.len().max(1) as f64;
+    println!("\nmean packed fine-tune speedup over dense masked step: {mean:.2}x");
+    match write_comparison_json(
+        "BENCH_finetune.json",
+        "packed fine-tune step vs dense masked step (2:4, Table-1 shapes; frozen mask — compact grads + n_values Adam state vs masked grads + numel state; loss bits and kept coordinates asserted equal before timing)",
+        &finetune,
+        true, // lock-step bit-equality gate in-suite before timing
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_finetune.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_finetune.json: {e}"),
     }
 }

@@ -152,14 +152,21 @@ impl Comparison {
 /// Write a before/after comparison suite as a JSON document (e.g.
 /// `BENCH_recipes.json`), so future changes can diff throughput trajectories
 /// across commits.
+///
+/// `outputs_bit_equal` records whether the suite asserted bit-identical
+/// outputs between the two paths before timing — the CI smoke job checks
+/// the flag is present and true in every `BENCH_*.json`, so a comparison
+/// can never silently measure two different computations.
 pub fn write_comparison_json(
     path: impl AsRef<std::path::Path>,
     suite: &str,
     rows: &[Comparison],
+    outputs_bit_equal: bool,
 ) -> anyhow::Result<()> {
     use crate::util::json::{Json, JsonObj};
     let mut doc = JsonObj::new();
     doc.insert("suite", Json::Str(suite.to_string()));
+    doc.insert("outputs_bit_equal", Json::Bool(outputs_bit_equal));
     let mut arr = Vec::with_capacity(rows.len());
     for r in rows {
         let mut o = JsonObj::new();
@@ -236,10 +243,11 @@ mod tests {
             Comparison { name: "a".into(), baseline_mean: 0.4, fused_mean: 0.1 },
             Comparison { name: "b".into(), baseline_mean: 0.2, fused_mean: 0.1 },
         ];
-        write_comparison_json(&path, "unit", &rows).unwrap();
+        write_comparison_json(&path, "unit", &rows, true).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = crate::util::json::Json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("suite").as_str(), Some("unit"));
+        assert_eq!(doc.get("outputs_bit_equal").as_bool(), Some(true));
         assert_eq!(doc.get("rows").as_arr().unwrap().len(), 2);
         let mean = doc.get("mean_speedup").as_f64().unwrap();
         assert!((mean - 3.0).abs() < 1e-9, "mean speedup {mean}");

@@ -1,0 +1,532 @@
+//! Frozen-mask fine-tuning **from the compressed form** — the training
+//! counterpart of [`super::serve`].
+//!
+//! STEP's headline workload is LLM fine-tuning: once the mask-learning
+//! phase settles the N:M pattern, the remaining epochs only move the kept
+//! values (SR-STE and MaskLLM run the same regime for BERT/GPT-2). Before
+//! this module, that loop still simulated sparsity — dense weights times a
+//! dense mask, full-size gradients, full-size Adam state. A
+//! [`FinetuneSession`] instead goes **phase-2-exit → pack → fine-tune →
+//! serve without ever re-densifying**:
+//!
+//! * the forward runs the packed kernels ([`crate::sparsity::packed`]),
+//! * the backward produces **compact** gradients
+//!   ([`Mlp::loss_and_grad_packed`]) — pruned coordinates are never
+//!   materialized,
+//! * the optimizer ([`packed_adam_step`] / [`packed_phase2_step`]) updates
+//!   the kept values in place with state sized `n_values()` instead of
+//!   `numel()` (~0.53× the dense optimizer memory at 2:4), and
+//! * the index codes — the learned mask — are structurally immutable for
+//!   the whole session.
+//!
+//! Every step is **bit-for-bit** equal to the dense masked fine-tune step
+//! (masked gradients + dense state) on kept coordinates —
+//! `rust/tests/packed_finetune.rs` holds the two in lock-step, and `cargo
+//! bench --bench substrate` records the step-throughput comparison to
+//! `BENCH_finetune.json`.
+
+use crate::checkpoint::Checkpoint;
+use crate::model::Mlp;
+use crate::optim::{packed_adam_step, packed_phase2_step, AdamHp, RecipeState};
+use crate::sparsity::{pack_params, NmRatio, PackedGrad, PackedParam};
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// Which update family drives the fine-tune.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinetuneMode {
+    /// Plain Adam over the kept values — the SR-STE / MaskLLM-style
+    /// frozen-mask fine-tune (fresh optimizer state).
+    Adam,
+    /// STEP phase-2 momentum with the frozen `v*` preconditioner carried
+    /// over from training (Alg. 1 lines 18–20 restricted to kept slots).
+    Phase2,
+}
+
+/// Cumulative fine-tuning counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FinetuneStats {
+    /// Optimizer steps taken in this session.
+    pub steps: usize,
+    /// Training samples consumed.
+    pub samples: usize,
+}
+
+/// Compact per-parameter state length: kept-slot count for packed weights,
+/// full element count for dense tensors.
+fn stored_len(p: &PackedParam) -> usize {
+    match p {
+        PackedParam::Dense(t) => t.numel(),
+        PackedParam::Packed(pk) => pk.n_values(),
+    }
+}
+
+fn state_zeros(params: &[PackedParam]) -> Vec<Vec<f32>> {
+    params.iter().map(|p| vec![0f32; stored_len(p)]).collect()
+}
+
+/// Decode every packed parameter's column indices once — the codes are
+/// immutable for the session's lifetime, so the backward pass never
+/// re-reads the bitstream.
+fn cols_cache(params: &[PackedParam]) -> Vec<Option<Vec<u32>>> {
+    params
+        .iter()
+        .map(|p| p.as_packed().map(|pk| pk.col_indices()))
+        .collect()
+}
+
+/// Split a `u64` counter into two f32 **bit-patterns** for the checkpoint
+/// meta tensor. The checkpoint writes/reads raw f32 bytes and never does
+/// arithmetic on them, so the round trip is lossless at any counter value
+/// (no 2^24 exact-integer ceiling).
+fn split_u64(x: u64) -> [f32; 2] {
+    [f32::from_bits(x as u32), f32::from_bits((x >> 32) as u32)]
+}
+
+/// Inverse of [`split_u64`].
+fn join_u64(lo: f32, hi: f32) -> u64 {
+    (lo.to_bits() as u64) | ((hi.to_bits() as u64) << 32)
+}
+
+/// A frozen-mask fine-tuning session over a packed model.
+///
+/// Construction packs (or accepts) the compressed weights once;
+/// [`step`](Self::step) then runs packed forward → compact backward →
+/// in-place kept-value update for the lifetime of the session. The mask
+/// (the index-code bitstream) is never touched.
+pub struct FinetuneSession {
+    mlp: Mlp,
+    params: Vec<PackedParam>,
+    mode: FinetuneMode,
+    hp: AdamHp,
+    lr: f32,
+    /// 1-based optimizer step (continues the training counter when the
+    /// session is created from a phase-2 exit).
+    t: u64,
+    /// First-moment state, one compact slice per parameter.
+    m: Vec<Vec<f32>>,
+    /// Second-moment state (Adam mode only; Phase2 reads the frozen `v*`
+    /// instead and carries no `v` at all).
+    v: Option<Vec<Vec<f32>>>,
+    /// Frozen compact `v*` (Phase2 mode only).
+    v_star: Option<Vec<Vec<f32>>>,
+    /// Cached decoded column indices per packed parameter (codes are
+    /// immutable, so this never goes stale).
+    cols: Vec<Option<Vec<u32>>>,
+    stats: FinetuneStats,
+}
+
+impl FinetuneSession {
+    /// Fine-tune an already-packed model (e.g. loaded from a checkpoint)
+    /// with fresh Adam state. Validates the `[w, b, …]` layout.
+    pub fn new(mlp: Mlp, params: Vec<PackedParam>, lr: f32, hp: AdamHp) -> anyhow::Result<Self> {
+        mlp.validate_packed_params(&params)?;
+        let m = state_zeros(&params);
+        let v = Some(state_zeros(&params));
+        let cols = cols_cache(&params);
+        Ok(Self {
+            mlp,
+            params,
+            mode: FinetuneMode::Adam,
+            hp,
+            lr,
+            t: 0,
+            m,
+            v,
+            v_star: None,
+            cols,
+            stats: FinetuneStats::default(),
+        })
+    }
+
+    /// Pack dense trained weights once at `ratio` (hidden weights
+    /// compressed, biases + final layer dense) and fine-tune from the
+    /// result with fresh Adam state.
+    pub fn pack(
+        mlp: Mlp,
+        dense: &[Tensor],
+        ratio: NmRatio,
+        lr: f32,
+        hp: AdamHp,
+    ) -> anyhow::Result<Self> {
+        let params = pack_params(dense, &mlp.ratios(ratio));
+        Self::new(mlp, params, lr, hp)
+    }
+
+    /// The phase-2-exit entry point: continue a STEP run from its
+    /// pure-Rust [`RecipeState`] without ever re-densifying. Packs the
+    /// weights at the recipe's per-parameter ratios, compacts the frozen
+    /// `v*` and the momentum buffers onto the kept slots, and keeps
+    /// stepping the phase-2 update (same step counter, same
+    /// hyperparameters) — now entirely in the compressed form, with the
+    /// mask frozen at its phase-2-exit pattern.
+    pub fn from_phase2_exit(
+        mlp: Mlp,
+        dense: &[Tensor],
+        recipe: &RecipeState,
+        lr: f32,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            recipe.in_phase2(),
+            "fine-tuning continues STEP after the phase switch; call switch_to_phase2 first"
+        );
+        let v_star_dense = recipe.v_star.as_ref().expect("phase 2 carries v*");
+        let params = pack_params(dense, &recipe.ratios);
+        mlp.validate_packed_params(&params)?;
+        let compact = |src: &[Tensor]| -> Vec<Vec<f32>> {
+            params
+                .iter()
+                .zip(src)
+                .map(|(p, s)| match p {
+                    PackedParam::Dense(_) => s.data().to_vec(),
+                    PackedParam::Packed(pk) => pk.compact_like(s),
+                })
+                .collect()
+        };
+        let m = compact(&recipe.m);
+        let v_star = compact(v_star_dense);
+        let cols = cols_cache(&params);
+        Ok(Self {
+            mlp,
+            params,
+            mode: FinetuneMode::Phase2,
+            hp: recipe.hp,
+            lr,
+            t: recipe.t,
+            m,
+            v: None, // phase 2 preconditions with the frozen v*, not v
+            v_star: Some(v_star),
+            cols,
+            stats: FinetuneStats::default(),
+        })
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    /// The fine-tuned model.
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+
+    /// The packed parameter list (codes frozen, values fine-tuned).
+    pub fn params(&self) -> &[PackedParam] {
+        &self.params
+    }
+
+    /// The active update family.
+    pub fn mode(&self) -> FinetuneMode {
+        self.mode
+    }
+
+    /// The 1-based optimizer step counter.
+    pub fn current_step(&self) -> u64 {
+        self.t
+    }
+
+    /// Cumulative fine-tuning counters.
+    pub fn stats(&self) -> FinetuneStats {
+        self.stats
+    }
+
+    /// Optimizer-state scalars this session holds (`m` plus `v` in Adam
+    /// mode, `m` plus the frozen `v*` in Phase2 mode — exactly two compact
+    /// slices per parameter either way).
+    pub fn optimizer_values(&self) -> usize {
+        2 * self.m.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Optimizer-state scalars a dense fine-tune of the same model would
+    /// hold (`numel`-sized `m` and `v`) — the baseline of the ~0.53×
+    /// memory claim at 2:4.
+    pub fn dense_optimizer_values(&self) -> usize {
+        2 * self
+            .params
+            .iter()
+            .map(|p| p.shape().iter().product::<usize>())
+            .sum::<usize>()
+    }
+
+    /// `optimizer_values / dense_optimizer_values`.
+    pub fn optimizer_compression(&self) -> f64 {
+        self.optimizer_values() as f64 / self.dense_optimizer_values().max(1) as f64
+    }
+
+    // ---- the fine-tune loop -----------------------------------------------
+
+    /// One fine-tune step on a labeled batch: packed forward, compact
+    /// backward, in-place kept-value update. Returns the batch loss.
+    ///
+    /// Bit-for-bit equal on kept coordinates to the dense masked step
+    /// (masked gradients + dense optimizer state) — the index codes are
+    /// never read or written by the update.
+    pub fn step(&mut self, x: &Tensor, labels: &[usize]) -> f64 {
+        self.t += 1;
+        let (loss, grads) =
+            self.mlp
+                .loss_and_grad_packed_with_cols(&self.params, &self.cols, x, labels);
+        for (i, grad) in grads.iter().enumerate() {
+            let g: &[f32] = match grad {
+                PackedGrad::Dense(t) => t.data(),
+                PackedGrad::Compact(v) => v,
+            };
+            let w: &mut [f32] = match &mut self.params[i] {
+                PackedParam::Dense(t) => t.data_mut(),
+                PackedParam::Packed(p) => p.values_mut(),
+            };
+            match self.mode {
+                FinetuneMode::Adam => {
+                    let v = self.v.as_mut().expect("Adam carries v");
+                    packed_adam_step(w, &mut self.m[i], &mut v[i], g, self.t, self.lr, self.hp);
+                }
+                FinetuneMode::Phase2 => {
+                    let v_star = self.v_star.as_ref().expect("Phase2 carries v*");
+                    packed_phase2_step(
+                        w,
+                        &mut self.m[i],
+                        &v_star[i],
+                        g,
+                        self.t,
+                        self.lr,
+                        self.hp.beta1,
+                        self.hp.eps,
+                    );
+                }
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.samples += labels.len();
+        loss
+    }
+
+    /// Classification accuracy of the current packed weights on a batch.
+    pub fn accuracy(&self, x: &Tensor, labels: &[usize]) -> f64 {
+        self.mlp.accuracy_packed(&self.params, x, labels)
+    }
+
+    /// Hand the fine-tuned weights to a [`super::serve::BatchServer`] —
+    /// fine-tune → serve without re-densifying (the packed parameters are
+    /// moved, not unpacked).
+    pub fn into_server(self) -> anyhow::Result<super::serve::BatchServer> {
+        super::serve::BatchServer::new(self.mlp, self.params)
+    }
+
+    // ---- checkpointing (format v2, packed entries) ------------------------
+
+    /// Snapshot the whole session — packed weights, compact optimizer
+    /// state, and counters — as a format-v2 checkpoint (the weights stay
+    /// compressed on disk). The counters (`t`, `steps`, `samples`) are
+    /// stored as raw `u64` bit-patterns inside the meta tensor, so they
+    /// round-trip losslessly at any session length.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut ck = Checkpoint::new();
+        ck.push_packed_model("ft.p", &self.params);
+        for (i, m) in self.m.iter().enumerate() {
+            ck.push(format!("ft.m.{i}"), Tensor::new(&[m.len()], m.clone()));
+        }
+        if let Some(v) = &self.v {
+            for (i, v) in v.iter().enumerate() {
+                ck.push(format!("ft.v.{i}"), Tensor::new(&[v.len()], v.clone()));
+            }
+        }
+        if let Some(vs) = &self.v_star {
+            for (i, v) in vs.iter().enumerate() {
+                ck.push(format!("ft.vstar.{i}"), Tensor::new(&[v.len()], v.clone()));
+            }
+        }
+        let mode = match self.mode {
+            FinetuneMode::Adam => 0.0,
+            FinetuneMode::Phase2 => 1.0,
+        };
+        let [t_lo, t_hi] = split_u64(self.t);
+        let [steps_lo, steps_hi] = split_u64(self.stats.steps as u64);
+        let [samples_lo, samples_hi] = split_u64(self.stats.samples as u64);
+        ck.push(
+            "ft.meta",
+            Tensor::new(
+                &[11],
+                vec![
+                    t_lo,
+                    t_hi,
+                    self.lr,
+                    mode,
+                    self.hp.beta1,
+                    self.hp.beta2,
+                    self.hp.eps,
+                    steps_lo,
+                    steps_hi,
+                    samples_lo,
+                    samples_hi,
+                ],
+            ),
+        );
+        ck.save(path)
+    }
+
+    /// Reload a session saved by [`save_checkpoint`](Self::save_checkpoint)
+    /// — weights, optimizer state, counters, and hyperparameters all resume
+    /// exactly (the fine-tune trajectory continues bit-for-bit).
+    pub fn load_checkpoint(mlp: Mlp, path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let ck = Checkpoint::load(path)?;
+        let params = ck.packed_model("ft.p");
+        anyhow::ensure!(!params.is_empty(), "checkpoint carries no ft.p model");
+        mlp.validate_packed_params(&params)?;
+        let meta = ck
+            .get("ft.meta")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing ft.meta"))?;
+        anyhow::ensure!(meta.numel() == 11, "ft.meta must hold 11 scalars");
+        let md = meta.data();
+        let mode = if md[3] == 0.0 { FinetuneMode::Adam } else { FinetuneMode::Phase2 };
+        let hp = AdamHp { beta1: md[4], beta2: md[5], eps: md[6] };
+        let group = |prefix: &str| -> anyhow::Result<Vec<Vec<f32>>> {
+            let g = ck.group(prefix);
+            anyhow::ensure!(
+                g.len() == params.len(),
+                "checkpoint group {prefix:?} has {} entries, model wants {}",
+                g.len(),
+                params.len()
+            );
+            for (t, p) in g.iter().zip(&params) {
+                anyhow::ensure!(
+                    t.numel() == stored_len(p),
+                    "checkpoint group {prefix:?}: state length {} vs stored {}",
+                    t.numel(),
+                    stored_len(p)
+                );
+            }
+            Ok(g.into_iter().map(Tensor::into_data).collect())
+        };
+        let m = group("ft.m")?;
+        let (v, v_star) = match mode {
+            FinetuneMode::Adam => (Some(group("ft.v")?), None),
+            FinetuneMode::Phase2 => (None, Some(group("ft.vstar")?)),
+        };
+        let cols = cols_cache(&params);
+        Ok(Self {
+            mlp,
+            params,
+            mode,
+            hp,
+            lr: md[2],
+            t: join_u64(md[0], md[1]),
+            m,
+            v,
+            v_star,
+            cols,
+            stats: FinetuneStats {
+                steps: join_u64(md[7], md[8]) as usize,
+                samples: join_u64(md[9], md[10]) as usize,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::PureRecipe;
+    use crate::rng::Pcg64;
+
+    fn batchgen(rng: &mut Pcg64, n: usize, dim: usize, classes: usize) -> (Tensor, Vec<usize>) {
+        let x = Tensor::randn(&[n, dim], rng, 0.0, 1.0);
+        let labels = (0..n).map(|i| i % classes).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn finetune_reduces_loss_and_keeps_mask_frozen() {
+        let mlp = Mlp::new(12, &[24], 4);
+        let mut rng = Pcg64::new(41);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let mut ft =
+            FinetuneSession::pack(mlp.clone(), &params, ratio, 5e-2, AdamHp::default()).unwrap();
+        let codes_before: Vec<Vec<u8>> = ft
+            .params()
+            .iter()
+            .filter_map(|p| p.as_packed().map(|pk| pk.codes().to_vec()))
+            .collect();
+        let (x, labels) = batchgen(&mut rng, 32, 12, 4);
+        let first = ft.step(&x, &labels);
+        for _ in 0..120 {
+            ft.step(&x, &labels);
+        }
+        let (last, _grads) = mlp.loss_and_grad_packed(ft.params(), &x, &labels);
+        assert!(last < first * 0.5, "{first} -> {last}");
+        // the mask is structurally frozen: identical code bitstreams
+        let codes_after: Vec<Vec<u8>> = ft
+            .params()
+            .iter()
+            .filter_map(|p| p.as_packed().map(|pk| pk.codes().to_vec()))
+            .collect();
+        assert_eq!(codes_before, codes_after);
+        // and the unpacked weights still satisfy the pattern (≥ half zeros)
+        let pk = ft.params()[0].as_packed().unwrap();
+        let w = pk.unpack();
+        assert!(w.count_zeros() >= w.numel() / 2);
+        assert_eq!(ft.stats().steps, 121);
+        assert_eq!(ft.stats().samples, 121 * 32);
+    }
+
+    #[test]
+    fn optimizer_state_is_compact() {
+        let mlp = Mlp::new(16, &[32, 16], 4);
+        let mut rng = Pcg64::new(43);
+        let params = mlp.init(&mut rng);
+        let ft =
+            FinetuneSession::pack(mlp, &params, NmRatio::new(2, 4), 1e-3, AdamHp::default())
+                .unwrap();
+        assert!(ft.optimizer_values() < ft.dense_optimizer_values());
+        // hidden weights dominate this shape, so the ratio lands near 0.5
+        assert!(ft.optimizer_compression() < 0.7, "{}", ft.optimizer_compression());
+    }
+
+    #[test]
+    fn from_phase2_exit_requires_phase2() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(44);
+        let params = mlp.init(&mut rng);
+        let st = RecipeState::new(
+            PureRecipe::Step { lam: 0.0 },
+            &params,
+            mlp.ratios(NmRatio::new(2, 4)),
+            1e-3,
+            AdamHp::default(),
+        );
+        assert!(FinetuneSession::from_phase2_exit(mlp, &params, &st, 1e-3).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_exactly() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(45);
+        let params = mlp.init(&mut rng);
+        let mut ft =
+            FinetuneSession::pack(mlp.clone(), &params, NmRatio::new(2, 4), 1e-2, AdamHp::default())
+                .unwrap();
+        let (x, labels) = batchgen(&mut rng, 16, 8, 3);
+        for _ in 0..5 {
+            ft.step(&x, &labels);
+        }
+        let path = std::env::temp_dir()
+            .join(format!("stepnm_ft_rt_{}.ckpt", std::process::id()));
+        ft.save_checkpoint(&path).unwrap();
+        let mut back = FinetuneSession::load_checkpoint(mlp, &path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.current_step(), ft.current_step());
+        assert_eq!(back.mode(), ft.mode());
+        assert_eq!(back.stats(), ft.stats(), "counters must survive the checkpoint");
+        // the two sessions continue bit-for-bit in lock step
+        for k in 0..4 {
+            let a = ft.step(&x, &labels);
+            let b = back.step(&x, &labels);
+            assert_eq!(a.to_bits(), b.to_bits(), "step {k}");
+        }
+        for (p, q) in ft.params().iter().zip(back.params()) {
+            match (p, q) {
+                (PackedParam::Packed(a), PackedParam::Packed(b)) => assert_eq!(a, b),
+                (PackedParam::Dense(a), PackedParam::Dense(b)) => assert_eq!(a, b),
+                other => panic!("storage kind changed: {other:?}"),
+            }
+        }
+    }
+}

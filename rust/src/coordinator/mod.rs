@@ -16,11 +16,13 @@
 //! masked eval artifact (`n == m` recovers dense eval), matching the paper's
 //! "evaluated with sparsity for fair comparison" protocol (Fig. 4 caption).
 
+pub mod finetune;
 pub mod prefetch;
 pub mod serve;
 pub mod session;
 pub mod sweep;
 
+pub use finetune::{FinetuneMode, FinetuneSession, FinetuneStats};
 pub use serve::{BatchServer, ServeStats};
 pub use session::{Report, Session};
 pub use sweep::{Sweep, SweepRow};

@@ -49,25 +49,7 @@ impl BatchServer {
     /// [`crate::checkpoint::Checkpoint::packed_model`] export). Validates
     /// the `[w, b, …]` layout against `mlp`.
     pub fn new(mlp: Mlp, params: Vec<PackedParam>) -> anyhow::Result<Self> {
-        anyhow::ensure!(
-            params.len() == mlp.n_params(),
-            "packed model has {} params, MLP wants {}",
-            params.len(),
-            mlp.n_params()
-        );
-        for l in 0..mlp.n_layers() {
-            let (fan_in, fan_out) = (mlp.sizes[l], mlp.sizes[l + 1]);
-            anyhow::ensure!(
-                params[2 * l].shape() == &[fan_in, fan_out],
-                "layer {l} weight shape {:?} vs [{fan_in}, {fan_out}]",
-                params[2 * l].shape()
-            );
-            anyhow::ensure!(
-                params[2 * l + 1].as_dense().is_some()
-                    && params[2 * l + 1].shape() == &[fan_out],
-                "layer {l} bias must be dense [{fan_out}]"
-            );
-        }
+        mlp.validate_packed_params(&params)?;
         let weight_values = params
             .iter()
             .map(|p| match p {
@@ -120,18 +102,32 @@ impl BatchServer {
 
     /// Serve one batch: logits `[batch, n_classes]`.
     ///
+    /// The input is validated **before** any state changes: a batch whose
+    /// feature dimension does not match the model gets a clear error (it
+    /// used to bump the counters and then panic deep inside
+    /// `packed_matmul`), and [`ServeStats`] count only successfully served
+    /// batches. Empty batches are legal and return `[0, n_classes]` logits.
+    ///
     /// Batches with at least [`SERVE_PAR_MIN_WORK`] scalar multiply-adds are
     /// split row-wise across scoped threads; each shard runs the same
-    /// single-sample pipeline, so the output is bit-identical regardless of
+    /// single-sample pipeline over a **borrowed** slice of the batch (no
+    /// per-shard input copy), so the output is bit-identical regardless of
     /// the machine's parallelism.
-    pub fn serve(&mut self, x: &Tensor) -> Tensor {
+    pub fn serve(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
         let (rows, dim) = x.as_2d();
+        anyhow::ensure!(
+            dim == self.mlp.sizes[0],
+            "serve batch feature dim {dim} != model input dim {} (batch shape {:?})",
+            self.mlp.sizes[0],
+            x.shape()
+        );
+        // stats mutate only after validation: failed calls are not counted
         self.stats.batches += 1;
         self.stats.samples += rows;
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let work = rows.saturating_mul(self.weight_values);
         if threads < 2 || rows < 2 || work < SERVE_PAR_MIN_WORK {
-            return self.mlp.forward_packed(&self.params, x);
+            return Ok(self.mlp.forward_packed(&self.params, x));
         }
         let n_chunks = threads.min(rows);
         let chunk = (rows + n_chunks - 1) / n_chunks;
@@ -150,24 +146,24 @@ impl BatchServer {
                 let xs = &xd[r0 * dim..r1 * dim];
                 let n_rows = r1 - r0;
                 s.spawn(move || {
-                    let xt = Tensor::new(&[n_rows, dim], xs.to_vec());
-                    let y = mlp.forward_packed(params, &xt);
+                    // borrowed slice view into the batch — no per-shard copy
+                    let y = mlp.forward_packed_rows(params, xs, n_rows);
                     od_chunk.copy_from_slice(y.data());
                 });
                 r0 = r1;
             }
         });
-        out
+        Ok(out)
     }
 
     /// Serve and argmax: predicted class per row.
-    pub fn classify(&mut self, x: &Tensor) -> Vec<usize> {
-        argmax_rows(&self.serve(x))
+    pub fn classify(&mut self, x: &Tensor) -> anyhow::Result<Vec<usize>> {
+        Ok(argmax_rows(&self.serve(x)?))
     }
 
     /// Serve and score against integer labels.
-    pub fn accuracy(&mut self, x: &Tensor, labels: &[usize]) -> f64 {
-        accuracy_from_logits(&self.serve(x), labels)
+    pub fn accuracy(&mut self, x: &Tensor, labels: &[usize]) -> anyhow::Result<f64> {
+        Ok(accuracy_from_logits(&self.serve(x)?, labels))
     }
 }
 
@@ -233,7 +229,7 @@ mod tests {
         let mut server = BatchServer::pack(mlp.clone(), &params, ratio).unwrap();
         for batch in [1usize, 7, 24] {
             let x = Tensor::randn(&[batch, 12], &mut rng, 0.0, 1.0);
-            assert_eq!(mlp.forward(&masked, &x), server.serve(&x), "batch {batch}");
+            assert_eq!(mlp.forward(&masked, &x), server.serve(&x).unwrap(), "batch {batch}");
         }
         assert_eq!(server.stats(), ServeStats { batches: 3, samples: 32 });
         assert!(server.compression() < 1.0);
@@ -252,7 +248,7 @@ mod tests {
         let batch = 1 + SERVE_PAR_MIN_WORK / server.weight_values;
         let x = Tensor::randn(&[batch, 64], &mut rng, 0.0, 1.0);
         let serial = mlp.forward_packed(&packed, &x);
-        let served = server.serve(&x);
+        let served = server.serve(&x).unwrap();
         assert_eq!(serial, served);
     }
 
@@ -263,11 +259,46 @@ mod tests {
         let params = mlp.init(&mut rng);
         let mut server = BatchServer::pack(mlp.clone(), &params, NmRatio::new(2, 4)).unwrap();
         let x = Tensor::randn(&[9, 8], &mut rng, 0.0, 1.0);
-        let preds = server.classify(&x);
+        let preds = server.classify(&x).unwrap();
         assert_eq!(preds.len(), 9);
         assert!(preds.iter().all(|&p| p < 3));
-        let acc = server.accuracy(&x, &preds.clone());
+        let acc = server.accuracy(&x, &preds.clone()).unwrap();
         assert_eq!(acc, 1.0);
+    }
+
+    /// Regression: a wrong-dimension batch must fail up front with a clear
+    /// error and must NOT bump the serving counters (it used to mutate
+    /// stats and then panic inside `packed_matmul`).
+    #[test]
+    fn serve_rejects_wrong_feature_dim_without_counting() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(25);
+        let params = mlp.init(&mut rng);
+        let mut server = BatchServer::pack(mlp, &params, NmRatio::new(2, 4)).unwrap();
+        let bad = Tensor::randn(&[4, 5], &mut rng, 0.0, 1.0);
+        let err = server.serve(&bad).unwrap_err().to_string();
+        assert!(err.contains("feature dim 5"), "unhelpful error: {err}");
+        assert_eq!(server.stats(), ServeStats::default(), "failed call was counted");
+        // classify/accuracy propagate the same validation
+        assert!(server.classify(&bad).is_err());
+        assert!(server.accuracy(&bad, &[0; 4]).is_err());
+        // and a good batch still serves afterwards
+        let ok = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
+        assert_eq!(server.serve(&ok).unwrap().shape(), &[4, 3]);
+        assert_eq!(server.stats(), ServeStats { batches: 1, samples: 4 });
+    }
+
+    #[test]
+    fn serve_handles_empty_batches() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let mut rng = Pcg64::new(26);
+        let params = mlp.init(&mut rng);
+        let mut server = BatchServer::pack(mlp, &params, NmRatio::new(2, 4)).unwrap();
+        let empty = Tensor::zeros(&[0, 8]);
+        let logits = server.serve(&empty).unwrap();
+        assert_eq!(logits.shape(), &[0, 3]);
+        assert_eq!(server.classify(&empty).unwrap(), Vec::<usize>::new());
+        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 0 });
     }
 
     #[test]

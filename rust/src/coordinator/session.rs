@@ -581,6 +581,19 @@ impl<'rt> Session<'rt> {
         let mlp = super::serve::mlp_from_model_info(&self.model)?;
         super::serve::BatchServer::new(mlp, self.packed_params())
     }
+
+    /// Continue training from the **compressed** form: pack the current
+    /// weights (per the export ratios, so per-layer N overrides and the
+    /// dense-until-switch rule apply) and return a
+    /// [`FinetuneSession`](super::finetune::FinetuneSession) running the
+    /// frozen-mask fine-tuning loop on the packed values — the
+    /// phase-2-exit → pack → fine-tune → serve pipeline. Fresh Adam state
+    /// at the session's hyperparameters; only MLP-family classifier models
+    /// qualify (same rule as [`batch_server`](Self::batch_server)).
+    pub fn finetune_session(&self, lr: f32) -> anyhow::Result<super::finetune::FinetuneSession> {
+        let mlp = super::serve::mlp_from_model_info(&self.model)?;
+        super::finetune::FinetuneSession::new(mlp, self.packed_params(), lr, self.cfg.hp)
+    }
 }
 
 /// The paper-mapped default dataset for each model key (DESIGN.md §4).

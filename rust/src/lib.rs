@@ -24,9 +24,12 @@
 //! ([`sparsity::packed`], [`coordinator::serve`]) exports the weights in
 //! compressed N:M form (kept values + per-group index codes) and serves
 //! batches through sparse kernels that skip pruned slots — the deployment
-//! step the paper's A100-2:4 motivation assumes. `cargo bench --bench
-//! substrate` records packed-vs-dense forward throughput to
-//! `BENCH_inference.json`.
+//! step the paper's A100-2:4 motivation assumes. The **packed backward
+//! pass** ([`coordinator::finetune`]) closes the loop for frozen-mask
+//! fine-tuning: compact gradients and `n_values()`-sized optimizer state,
+//! bit-identical to the dense masked step on kept coordinates. `cargo
+//! bench --bench substrate` records packed-vs-dense throughput to
+//! `BENCH_inference.json` and `BENCH_finetune.json`.
 //!
 //! ## Quick tour
 //!
@@ -72,7 +75,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
     pub use crate::config::{ExperimentConfig, RecipeKind};
-    pub use crate::coordinator::{BatchServer, Report, Session, Sweep};
+    pub use crate::coordinator::{BatchServer, FinetuneSession, Report, Session, Sweep};
     pub use crate::data::Dataset;
     pub use crate::optim::OptimizerKind;
     pub use crate::rng::Pcg64;

@@ -8,10 +8,13 @@
 //! the manifest conventions) transfer unchanged between the two engines.
 
 use crate::rng::Pcg64;
-use crate::sparsity::{packed_matmul, NmRatio, PackedParam};
+use crate::sparsity::{
+    packed_matmul, packed_matmul_at_into, packed_matmul_bt_into, packed_matmul_rows, NmRatio,
+    PackedGrad, PackedParam,
+};
 use crate::tensor::{
-    accuracy_from_logits, add_bias, cross_entropy_with_grad, matmul, matmul_at, matmul_bt, relu,
-    Tensor,
+    accuracy_from_logits, add_bias, cross_entropy_with_grad, matmul, matmul_at, matmul_bt,
+    matmul_rows, relu, Tensor,
 };
 
 /// An MLP classifier: `in_dim → hidden… → n_classes`, ReLU activations.
@@ -104,31 +107,84 @@ impl Mlp {
     /// integration suite (`rust/tests/packed_inference.rs`) holds the two
     /// equal across batch sizes.
     pub fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
+        assert_eq!(
+            x.last_dim(),
+            self.sizes[0],
+            "input feature dim {} vs model input dim {}",
+            x.last_dim(),
+            self.sizes[0]
+        );
+        self.forward_packed_rows(params, x.data(), x.rows_2d())
+    }
+
+    /// Packed forward pass over a **borrowed** row-major slice of `rows`
+    /// samples (`sizes[0]` features each) — the copy-free entry the
+    /// threaded [`BatchServer`](crate::coordinator::serve::BatchServer)
+    /// shards call so no per-shard input tensor is ever materialized.
+    /// [`Mlp::forward_packed`] delegates here.
+    pub fn forward_packed_rows(&self, params: &[PackedParam], xs: &[f32], rows: usize) -> Tensor {
         assert_eq!(params.len(), self.n_params(), "packed param arity");
-        let reshaped;
-        let x2d: &Tensor = if x.ndim() == 2 {
-            x // layer 0 only reads its input — no defensive copy
-        } else {
-            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
-            &reshaped
-        };
-        let mut h: Option<Tensor> = None;
-        for l in 0..self.n_layers() {
-            let input = h.as_ref().unwrap_or(x2d);
+        assert_eq!(
+            xs.len(),
+            rows * self.sizes[0],
+            "input slice {} vs {rows}x{}",
+            xs.len(),
+            self.sizes[0]
+        );
+        // layer 0 reads straight from the borrowed slice
+        let b0 = params[1].as_dense().expect("bias tensors are never packed");
+        let mut h = Tensor::zeros(&[rows, self.sizes[1]]);
+        match &params[0] {
+            PackedParam::Dense(w) => matmul_rows(xs, rows, self.sizes[0], w, &mut h),
+            PackedParam::Packed(w) => packed_matmul_rows(xs, rows, w, &mut h),
+        }
+        add_bias(&mut h, b0);
+        if self.n_layers() > 1 {
+            h = relu(&h);
+        }
+        for l in 1..self.n_layers() {
             let b = params[2 * l + 1]
                 .as_dense()
                 .expect("bias tensors are never packed");
             let mut next = match &params[2 * l] {
-                PackedParam::Dense(w) => matmul(input, w),
-                PackedParam::Packed(w) => packed_matmul(input, w),
+                PackedParam::Dense(w) => matmul(&h, w),
+                PackedParam::Packed(w) => packed_matmul(&h, w),
             };
             add_bias(&mut next, b);
             if l != self.n_layers() - 1 {
                 next = relu(&next);
             }
-            h = Some(next);
+            h = next;
         }
-        h.expect("MLP has at least one layer")
+        h
+    }
+
+    /// Validate a packed parameter list against this MLP's `[w, b, …]`
+    /// layout (arity, weight shapes, dense biases) — the single layout
+    /// check shared by [`BatchServer`](crate::coordinator::serve::BatchServer)
+    /// and [`FinetuneSession`](crate::coordinator::finetune::FinetuneSession)
+    /// construction.
+    pub fn validate_packed_params(&self, params: &[PackedParam]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "packed model has {} params, MLP wants {}",
+            params.len(),
+            self.n_params()
+        );
+        for l in 0..self.n_layers() {
+            let (fan_in, fan_out) = (self.sizes[l], self.sizes[l + 1]);
+            anyhow::ensure!(
+                params[2 * l].shape() == &[fan_in, fan_out],
+                "layer {l} weight shape {:?} vs [{fan_in}, {fan_out}]",
+                params[2 * l].shape()
+            );
+            anyhow::ensure!(
+                params[2 * l + 1].as_dense().is_some()
+                    && params[2 * l + 1].shape() == &[fan_out],
+                "layer {l} bias must be dense [{fan_out}]"
+            );
+        }
+        Ok(())
     }
 
     /// The dense **masked** parameter list: `Π ⊙ w` on sparse-eligible
@@ -165,12 +221,18 @@ impl Mlp {
         labels: &[usize],
     ) -> (f64, Vec<Tensor>) {
         let n_layers = self.n_layers();
-        // forward, caching pre-activations' post-ReLU values
-        let x2 = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
-        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers + 1);
-        acts.push(x2);
+        let reshaped;
+        let x2d: &Tensor = if x.ndim() == 2 {
+            x // layer 0 only reads its input — no defensive copy
+        } else {
+            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+            &reshaped
+        };
+        // forward, caching each layer's post-ReLU output
+        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
-            let mut h = matmul(acts.last().unwrap(), &params[2 * l]);
+            let input = if l == 0 { x2d } else { &acts[l - 1] };
+            let mut h = matmul(input, &params[2 * l]);
             add_bias(&mut h, &params[2 * l + 1]);
             if l != n_layers - 1 {
                 h = relu(&h);
@@ -185,7 +247,7 @@ impl Mlp {
             .map(|_| Tensor::zeros(&[0]))
             .collect();
         for l in (0..n_layers).rev() {
-            let a_in = &acts[l];
+            let a_in: &Tensor = if l == 0 { x2d } else { &acts[l - 1] };
             // dW = a_inᵀ @ delta ; db = colsum(delta)
             grads[2 * l] = matmul_at(a_in, &delta);
             let (rows, cols) = delta.as_2d();
@@ -199,6 +261,130 @@ impl Mlp {
             if l > 0 {
                 // dA = delta @ Wᵀ, gated by the ReLU mask of a_in
                 let mut da = matmul_bt(&delta, &params[2 * l]);
+                for (d, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                delta = da;
+            }
+        }
+        (loss, grads)
+    }
+
+    /// Mean cross-entropy loss + gradients over **packed** parameters — the
+    /// frozen-mask fine-tuning backward pass.
+    ///
+    /// The forward runs the sparse kernels; the backward computes a
+    /// [`PackedGrad::Compact`] for every packed weight via
+    /// [`packed_matmul_at`] (only kept coordinates are ever materialized —
+    /// the gradient of a pruned slot does not exist) and streams the
+    /// compressed weights through [`packed_matmul_bt`] for the activation
+    /// gradient. Dense parameters (biases, final layer) get ordinary dense
+    /// gradients.
+    ///
+    /// **Bit-for-bit** equal to [`Mlp::loss_and_grad`] over the dense
+    /// *masked* parameter list: the loss, every dense gradient, and every
+    /// kept coordinate of every compact gradient carry identical bits
+    /// (`rust/tests/packed_finetune.rs` holds this across ratios, tails,
+    /// and batch sizes).
+    ///
+    /// Decodes each packed weight's index codes per call; a training loop
+    /// should decode once and use
+    /// [`loss_and_grad_packed_with_cols`](Self::loss_and_grad_packed_with_cols)
+    /// — [`FinetuneSession`](crate::coordinator::finetune::FinetuneSession)
+    /// does.
+    pub fn loss_and_grad_packed(
+        &self,
+        params: &[PackedParam],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<PackedGrad>) {
+        let cols: Vec<Option<Vec<u32>>> = params
+            .iter()
+            .map(|p| p.as_packed().map(|pk| pk.col_indices()))
+            .collect();
+        self.loss_and_grad_packed_with_cols(params, &cols, x, labels)
+    }
+
+    /// [`loss_and_grad_packed`](Self::loss_and_grad_packed) with
+    /// caller-cached column indices: `cols[i]` must be
+    /// [`col_indices`](crate::sparsity::PackedNmTensor::col_indices) of
+    /// packed parameter `i` (`None` for dense parameters). The codes are
+    /// immutable during frozen-mask fine-tuning, so the cache is computed
+    /// once per session and the hot loop never re-decodes the bitstream.
+    pub fn loss_and_grad_packed_with_cols(
+        &self,
+        params: &[PackedParam],
+        cols: &[Option<Vec<u32>>],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<PackedGrad>) {
+        assert_eq!(params.len(), self.n_params(), "packed param arity");
+        assert_eq!(params.len(), cols.len(), "cols cache arity");
+        let n_layers = self.n_layers();
+        let reshaped;
+        let x2d: &Tensor = if x.ndim() == 2 {
+            x // layer 0 only reads its input — no defensive copy
+        } else {
+            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
+            &reshaped
+        };
+        // forward, caching each layer's post-ReLU output
+        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let input = if l == 0 { x2d } else { &acts[l - 1] };
+            let b = params[2 * l + 1]
+                .as_dense()
+                .expect("bias tensors are never packed");
+            let mut h = match &params[2 * l] {
+                PackedParam::Dense(w) => matmul(input, w),
+                PackedParam::Packed(w) => packed_matmul(input, w),
+            };
+            add_bias(&mut h, b);
+            if l != n_layers - 1 {
+                h = relu(&h);
+            }
+            acts.push(h);
+        }
+        let logits = acts.last().unwrap();
+        let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
+
+        // backward
+        let mut grads: Vec<PackedGrad> = (0..self.n_params())
+            .map(|_| PackedGrad::Dense(Tensor::zeros(&[0])))
+            .collect();
+        for l in (0..n_layers).rev() {
+            let a_in: &Tensor = if l == 0 { x2d } else { &acts[l - 1] };
+            grads[2 * l] = match &params[2 * l] {
+                PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a_in, &delta)),
+                PackedParam::Packed(w) => {
+                    let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
+                    let mut gv = vec![0f32; w.n_values()];
+                    packed_matmul_at_into(a_in, &delta, w, ci, &mut gv);
+                    PackedGrad::Compact(gv)
+                }
+            };
+            // db = colsum(delta), identical to the dense path
+            let (rows, dcols) = delta.as_2d();
+            let mut db = Tensor::zeros(&[dcols]);
+            for r in 0..rows {
+                for c in 0..dcols {
+                    db.data_mut()[c] += delta.data()[r * dcols + c];
+                }
+            }
+            grads[2 * l + 1] = PackedGrad::Dense(db);
+            if l > 0 {
+                // dA = delta @ Wᵀ (compressed-weight stream), ReLU-gated
+                let mut da = match &params[2 * l] {
+                    PackedParam::Dense(w) => matmul_bt(&delta, w),
+                    PackedParam::Packed(w) => {
+                        let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
+                        let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
+                        packed_matmul_bt_into(&delta, w, ci, &mut out);
+                        out
+                    }
+                };
                 for (d, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
                     if a <= 0.0 {
                         *d = 0.0;
@@ -289,6 +475,46 @@ mod tests {
                 mlp.accuracy(&masked, &x, &labels),
                 mlp.accuracy_packed(&packed, &x, &labels)
             );
+        }
+    }
+
+    #[test]
+    fn forward_packed_rows_matches_forward_packed() {
+        let mlp = Mlp::new(12, &[16, 8], 4);
+        let mut rng = Pcg64::new(6);
+        let params = mlp.init(&mut rng);
+        let packed = mlp.pack_params(&params, NmRatio::new(2, 4));
+        let x = Tensor::randn(&[9, 12], &mut rng, 0.0, 1.0);
+        let whole = mlp.forward_packed(&packed, &x);
+        // a row sub-range through the slice entry, like a serving shard
+        let shard = mlp.forward_packed_rows(&packed, &x.data()[2 * 12..7 * 12], 5);
+        assert_eq!(shard.data(), &whole.data()[2 * 4..7 * 4]);
+    }
+
+    #[test]
+    fn packed_loss_and_grad_matches_dense_masked_oracle() {
+        let mlp = Mlp::new(8, &[16, 12], 3);
+        let mut rng = Pcg64::new(11);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let masked = mlp.masked_params(&params, ratio);
+        let packed = mlp.pack_params(&params, ratio);
+        let x = Tensor::randn(&[10, 8], &mut rng, 0.0, 1.0);
+        let labels: Vec<usize> = (0..10).map(|i| i % 3).collect();
+        let (loss_d, grads_d) = mlp.loss_and_grad(&masked, &x, &labels);
+        let (loss_p, grads_p) = mlp.loss_and_grad_packed(&packed, &x, &labels);
+        assert_eq!(loss_d.to_bits(), loss_p.to_bits());
+        for (i, (gd, gp)) in grads_d.iter().zip(&grads_p).enumerate() {
+            match (&packed[i], gp) {
+                (PackedParam::Packed(pk), PackedGrad::Compact(cv)) => {
+                    // compact grad == dense grad gathered at kept slots
+                    assert_eq!(pk.compact_like(gd), *cv, "param {i}");
+                }
+                (PackedParam::Dense(_), PackedGrad::Dense(gt)) => {
+                    assert_eq!(gd, gt, "param {i}");
+                }
+                other => panic!("param {i}: mismatched grad kind {other:?}"),
+            }
         }
     }
 

@@ -370,6 +370,70 @@ pub fn masked_phase2_step(
     }
 }
 
+// ---------------------------------------------------------------------------
+// packed (compact-state) kernels — the frozen-mask fine-tuning family
+// ---------------------------------------------------------------------------
+
+/// One Adam step over a **compact** value slice — a
+/// [`PackedNmTensor`](crate::sparsity::PackedNmTensor)'s kept values (or
+/// any dense tensor's data): identical scalar arithmetic to
+/// [`adam_update`], so a packed fine-tune step is bit-for-bit equal to the
+/// dense masked step on every kept coordinate. State (`m`, `v`) is sized
+/// `n_values()`, not `numel()` — ~0.53× the dense optimizer memory at 2:4.
+pub fn packed_adam_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    t: u64,
+    lr: f32,
+    hp: AdamHp,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), m.len());
+    debug_assert_eq!(w.len(), v.len());
+    let bc1 = (1.0 - (hp.beta1 as f64).powi(t as i32)) as f32;
+    let bc2 = (1.0 - (hp.beta2 as f64).powi(t as i32)) as f32;
+    let (b1, b2, eps) = (hp.beta1, hp.beta2, hp.eps);
+    for i in 0..w.len() {
+        let gi = g[i];
+        let mi = b1 * m[i] + (1.0 - b1) * gi;
+        let vi = b2 * v[i] + (1.0 - b2) * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        // paper Eq (7): eps OUTSIDE the sqrt in the dense phase
+        w[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+/// One STEP phase-2 step over a compact value slice: momentum
+/// preconditioned by a frozen compact `v*` (Alg. 1 lines 18–20 restricted
+/// to the kept slots — `ε` INSIDE the sqrt, matching
+/// [`step_phase2_update`] scalar for scalar). `v_star` is a shared slice:
+/// fine-tuning cannot touch it.
+pub fn packed_phase2_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    v_star: &[f32],
+    g: &[f32],
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), m.len());
+    debug_assert_eq!(w.len(), v_star.len());
+    let bc1 = (1.0 - (beta1 as f64).powi(t as i32)) as f32;
+    for i in 0..w.len() {
+        let mi = beta1 * m[i] + (1.0 - beta1) * g[i];
+        m[i] = mi;
+        w[i] -= lr * (mi / bc1) / (v_star[i] + eps).sqrt();
+    }
+}
+
 /// Variance-change telemetry produced by one optimizer step — exactly the
 /// four scalars the HLO artifacts emit (`train_steps._var_stats`), so the
 /// AutoSwitch consumes identical inputs on both paths.
@@ -675,6 +739,50 @@ mod tests {
                 );
                 assert_eq!(w_a, w_b, "t={t}");
                 assert_eq!(m_a, m_b);
+            }
+        });
+    }
+
+    /// The compact-slice kernels must be bit-identical to their tensor
+    /// twins on every coordinate (they share the fine-tune oracle story).
+    #[test]
+    fn packed_steps_match_tensor_updates_bitwise() {
+        Cases::new(30).run(|rng, _| {
+            let n = 1 + rng.below(24);
+            let w0 = Tensor::randn(&[n], rng, 0.0, 1.0);
+            let hp = AdamHp::default();
+            // Adam
+            let (mut w_a, mut m_a, mut v_a) =
+                (w0.clone(), Tensor::zeros(&[n]), Tensor::zeros(&[n]));
+            let mut w_b = w0.data().to_vec();
+            let (mut m_b, mut v_b) = (vec![0f32; n], vec![0f32; n]);
+            let mut rng2 = rng.split(5);
+            for t in 1..=4u64 {
+                let g = Tensor::randn(&[n], &mut rng2, 0.0, 0.5);
+                adam_update(&mut w_a, &mut m_a, &mut v_a, &g, t, 1e-2, hp);
+                packed_adam_step(&mut w_b, &mut m_b, &mut v_b, g.data(), t, 1e-2, hp);
+                for i in 0..n {
+                    assert_eq!(w_a.data()[i].to_bits(), w_b[i].to_bits(), "adam t={t} i={i}");
+                    assert_eq!(m_a.data()[i].to_bits(), m_b[i].to_bits());
+                    assert_eq!(v_a.data()[i].to_bits(), v_b[i].to_bits());
+                }
+            }
+            // phase 2 (frozen v*)
+            let v_star = Tensor::randn(&[n], rng, 0.02, 0.01);
+            let (mut w_a, mut m_a) = (w0.clone(), Tensor::zeros(&[n]));
+            let mut w_b = w0.data().to_vec();
+            let mut m_b = vec![0f32; n];
+            let mut rng3 = rng.split(6);
+            for t in 1..=4u64 {
+                let g = Tensor::randn(&[n], &mut rng3, 0.0, 0.5);
+                step_phase2_update(&mut w_a, &mut m_a, &v_star, &g, t, 1e-3, 0.9, 1e-8);
+                packed_phase2_step(
+                    &mut w_b, &mut m_b, v_star.data(), g.data(), t, 1e-3, 0.9, 1e-8,
+                );
+                for i in 0..n {
+                    assert_eq!(w_a.data()[i].to_bits(), w_b[i].to_bits(), "p2 t={t} i={i}");
+                    assert_eq!(m_a.data()[i].to_bits(), m_b[i].to_bits());
+                }
             }
         });
     }

@@ -18,7 +18,9 @@ pub mod schedule;
 
 pub use domino::{domino_assign, DominoBudget};
 pub use packed::{
-    pack_params, packed_matmul, packed_matmul_into, packed_matvec, PackedNmTensor, PackedParam,
+    pack_params, packed_matmul, packed_matmul_at, packed_matmul_at_into, packed_matmul_bt,
+    packed_matmul_bt_into, packed_matmul_into, packed_matmul_rows, packed_matvec, PackedGrad,
+    PackedNmTensor, PackedParam,
 };
 pub use schedule::{decaying_n, DecaySchedule};
 

@@ -115,9 +115,17 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// the allocation-free hot path used by the pure-Rust trainer.
 pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (m, k) = a.as_2d();
-    let (_, n) = b.as_2d();
+    matmul_rows(a.data(), m, k, b, c);
+}
+
+/// `C += A @ B` where `A` is a **borrowed** row-major `[m, k]` slice — the
+/// copy-free twin of [`matmul_into`] used by the serving shards (no tensor
+/// is materialized around a batch sub-range).
+pub fn matmul_rows(ad: &[f32], m: usize, k: usize, b: &Tensor, c: &mut Tensor) {
+    let (k2, n) = b.as_2d();
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    assert_eq!(ad.len(), m * k, "lhs slice {} vs {m}x{k}", ad.len());
     assert_eq!(c.shape(), &[m, n]);
-    let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
     for kb in (0..k).step_by(MM_BLOCK) {
@@ -265,6 +273,12 @@ pub fn accuracy_from_logits(logits: &Tensor, labels: &[usize]) -> f64 {
 }
 
 /// Row-wise argmax of `[m, n]` logits.
+///
+/// NaN candidates are skipped so a NaN early in a row cannot poison the
+/// scan (`x > row[best]` is false for every `x` once `best` points at a
+/// NaN): the winner is the largest *non-NaN* logit, ties to the lowest
+/// index, and an all-NaN row falls back to class 0 — the same
+/// NaN-hardening rule the mask kernels (`nm_mask_into`) follow.
 pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
     let (m, n) = t.as_2d();
     let d = t.data();
@@ -273,7 +287,10 @@ pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
             let row = &d[i * n..(i + 1) * n];
             let mut best = 0;
             for (j, &x) in row.iter().enumerate() {
-                if x > row[best] {
+                if x.is_nan() {
+                    continue;
+                }
+                if row[best].is_nan() || x > row[best] {
                     best = j;
                 }
             }
@@ -387,6 +404,80 @@ mod tests {
     fn argmax_rows_ties_prefer_low_index() {
         let t = Tensor::new(&[1, 3], vec![2.0, 2.0, 1.0]);
         assert_eq!(argmax_rows(&t), vec![0]);
+    }
+
+    #[test]
+    fn argmax_rows_skips_nan_candidates() {
+        // a NaN at row[0] must not poison the scan: the finite max wins
+        let t = Tensor::new(&[1, 4], vec![f32::NAN, 1.0, 5.0, 3.0]);
+        assert_eq!(argmax_rows(&t), vec![2]);
+        // NaN mid-row is skipped too
+        let t = Tensor::new(&[1, 4], vec![1.0, f32::NAN, 0.5, 2.0]);
+        assert_eq!(argmax_rows(&t), vec![3]);
+        // all-NaN row falls back to class 0
+        let t = Tensor::new(&[1, 3], vec![f32::NAN, f32::NAN, f32::NAN]);
+        assert_eq!(argmax_rows(&t), vec![0]);
+        // ±inf are ordinary candidates
+        let t = Tensor::new(&[2, 3], vec![
+            f32::NEG_INFINITY, 0.0, f32::INFINITY,
+            f32::NEG_INFINITY, f32::NEG_INFINITY, -1.0,
+        ]);
+        assert_eq!(argmax_rows(&t), vec![2, 2]);
+    }
+
+    #[test]
+    fn argmax_rows_nan_property_matches_filtered_scan() {
+        crate::testutil::Cases::new(60).run(|rng, _| {
+            let n = rng.range(1, 7);
+            let rows = rng.range(1, 5);
+            let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0, 0.0, 2.5];
+            let data: Vec<f32> =
+                (0..rows * n).map(|_| specials[rng.below(specials.len())]).collect();
+            let t = Tensor::new(&[rows, n], data.clone());
+            let got = argmax_rows(&t);
+            for (i, &g) in got.iter().enumerate() {
+                let row = &data[i * n..(i + 1) * n];
+                // oracle: max over non-NaN entries, ties to lowest index
+                let expect = row
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, x)| !x.is_nan())
+                    .fold(None::<(usize, f32)>, |acc, (j, &x)| match acc {
+                        Some((bj, bx)) if x <= bx => Some((bj, bx)),
+                        _ => Some((j, x)),
+                    })
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                assert_eq!(g, expect, "row {i}: {row:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn accuracy_from_logits_is_nan_hardened() {
+        // row 0: NaN first but class 1 has the largest finite logit
+        // row 1: all-NaN -> class 0 fallback
+        let t = Tensor::new(&[2, 3], vec![
+            f32::NAN, 4.0, 1.0,
+            f32::NAN, f32::NAN, f32::NAN,
+        ]);
+        assert_eq!(accuracy_from_logits(&t, &[1, 0]), 1.0);
+        assert_eq!(accuracy_from_logits(&t, &[0, 1]), 0.0);
+        // empty batch: no division by zero
+        let empty = Tensor::zeros(&[0, 3]);
+        assert_eq!(accuracy_from_logits(&empty, &[]), 0.0);
+    }
+
+    #[test]
+    fn matmul_rows_matches_matmul() {
+        let mut rng = crate::rng::Pcg64::new(9);
+        let a = Tensor::randn(&[5, 7], &mut rng, 0.0, 1.0);
+        let b = Tensor::randn(&[7, 4], &mut rng, 0.0, 1.0);
+        let whole = matmul(&a, &b);
+        // shard rows 1..4 through the slice entry, like a serving worker
+        let mut c = Tensor::zeros(&[3, 4]);
+        matmul_rows(&a.data()[7..4 * 7], 3, 7, &b, &mut c);
+        assert_eq!(c.data(), &whole.data()[4..16]);
     }
 
     #[test]

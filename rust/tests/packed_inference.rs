@@ -209,10 +209,10 @@ fn train_pack_checkpoint_serve_end_to_end() {
     for batch in [1usize, 8, 21] {
         let xq = Tensor::randn(&[batch, 16], &mut rng, 0.0, 1.0);
         let dense = mlp.forward(&sparse, &xq);
-        assert_eq!(dense, server.serve(&xq), "serve batch {batch}");
+        assert_eq!(dense, server.serve(&xq).unwrap(), "serve batch {batch}");
     }
     let acc_dense = mlp.accuracy(&sparse, &x, &labels);
-    let acc_packed = server.accuracy(&x, &labels);
+    let acc_packed = server.accuracy(&x, &labels).unwrap();
     assert_eq!(acc_dense, acc_packed, "eval scores must be identical");
 
     // 4. the learned masks really are N:M-exact in the packed export
