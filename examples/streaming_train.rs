@@ -1,0 +1,128 @@
+//! Streaming mini-batch training, end to end and fully offline: wrap a
+//! CIFAR-analog dataset in a seed-shuffled epoch stream, drive a dense
+//! STEP run (precondition → phase switch → mask learning) with the
+//! [`TrainDriver`], continue as a packed frozen-mask fine-tune over the
+//! same stream — checkpointing every few steps and resuming once to show
+//! the bit-exact continuation — and finish by handing the compressed
+//! weights to a [`BatchServer`].
+//!
+//! ```bash
+//! cargo run --release --example streaming_train
+//! ```
+
+use std::sync::Arc;
+
+use step_nm::coordinator::EarlyStop;
+use step_nm::data::CifarLike;
+use step_nm::model::Mlp;
+use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
+use step_nm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Task + model. The stream fixes a finite 512-example corpus of the
+    //    procedural dataset and reshuffles it every epoch (seeded, so two
+    //    runs — or a run and its resumed twin — see identical batches).
+    let mlp = Mlp::new(192, &[256], 10);
+    let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(10, 192, 1.2, 512, 7));
+    let stream = MiniBatchStream::new(ds, 512, 64, 7)?;
+    println!(
+        "stream: {} examples/epoch, batch {}, {} batches/epoch",
+        stream.n_examples(),
+        stream.batch_size(),
+        stream.batches_per_epoch()
+    );
+
+    // 2. Dense STEP training over epochs: the driver owns the loop — batch
+    //    prefetching on a worker thread, the phase switch before step 20,
+    //    evaluation every 8 steps.
+    let mut rng = Pcg64::new(42);
+    let params = mlp.init(&mut rng);
+    let recipe = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-3,
+        AdamHp::default(),
+    );
+    let mut driver = TrainDriver::new_dense(
+        mlp.clone(),
+        params,
+        recipe,
+        stream.clone(),
+        DriverConfig {
+            epochs: 6,
+            eval_every: 8,
+            switch_at: Some(20),
+            early_stop: Some(EarlyStop { patience: 6, min_delta: 1e-4 }),
+            ..DriverConfig::default()
+        },
+    )?;
+    let report = driver.run()?;
+    println!(
+        "dense STEP: {} steps over {} epochs, switch at step {}, final acc {:.3} (loss {:.4})",
+        report.steps, report.epochs_completed, report.switch_step, report.final_eval.metric,
+        report.final_eval.loss
+    );
+
+    // 3. Continue as a packed frozen-mask fine-tune: pack the phase-2
+    //    export once, then stream more epochs through the compact engine —
+    //    checkpointing every 10 steps.
+    let ckpt = std::env::temp_dir().join("streaming_train_example.ckpt");
+    let masked = driver
+        .recipe()
+        .expect("dense mode")
+        .final_sparse_params(driver.dense_params().expect("dense mode"));
+    let session = FinetuneSession::pack(
+        mlp.clone(),
+        &masked,
+        NmRatio::new(2, 4),
+        5e-4,
+        AdamHp::default(),
+    )?;
+    let mut ft_driver = TrainDriver::new_finetune(
+        session,
+        stream.clone(),
+        DriverConfig {
+            epochs: 2,
+            eval_every: 8,
+            checkpoint_every: 10,
+            checkpoint_path: Some(ckpt.clone()),
+            ..DriverConfig::default()
+        },
+    )?;
+    // train only the first 12 steps, then "crash" ...
+    for _ in 0..12 {
+        ft_driver.step_once()?;
+    }
+    drop(ft_driver);
+    // ... and resume from the step-10 checkpoint: the continuation is
+    // bit-identical to a run that never stopped
+    let mut resumed =
+        TrainDriver::resume_finetune(mlp.clone(), stream.clone(), DriverConfig::epochs(2), &ckpt)?;
+    println!("resumed fine-tune at step {}", resumed.current_step());
+    let ft_report = resumed.run()?;
+    std::fs::remove_file(&ckpt).ok();
+    println!(
+        "packed fine-tune: {} more steps, final acc {:.3} (loss {:.4})",
+        ft_report.losses.len(),
+        ft_report.final_eval.metric,
+        ft_report.final_eval.loss
+    );
+
+    // 4. Hand off to serving: the packed weights move into the BatchServer
+    //    without re-densifying.
+    let mut server = resumed.into_server()?;
+    let eval = stream.eval_batches(64);
+    let mut correct = 0.0;
+    for b in &eval {
+        let (step_nm::data::BatchX::Features(x), step_nm::data::BatchY::Classes(y)) =
+            (&b.x, &b.y)
+        else {
+            unreachable!("CifarLike yields features/classes")
+        };
+        correct += server.accuracy(x, y)? * y.len() as f64;
+    }
+    let n: usize = eval.iter().map(|b| b.y.len()).sum();
+    println!("served eval accuracy: {:.3} over {n} examples", correct / n as f64);
+    Ok(())
+}

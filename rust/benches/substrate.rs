@@ -4,22 +4,27 @@
 //! reference on the Table-1 workload shapes, recorded to
 //! `BENCH_recipes.json`), the packed-inference suite (compressed N:M
 //! forward vs dense masked forward, recorded to `BENCH_inference.json`),
-//! and the packed fine-tune suite (compact-gradient frozen-mask step vs
-//! dense masked step, recorded to `BENCH_finetune.json`).
+//! the packed fine-tune suite (compact-gradient frozen-mask step vs dense
+//! masked step, recorded to `BENCH_finetune.json`), and the streaming-driver
+//! suite (TrainDriver epoch vs manual batch-at-a-time loop, recorded to
+//! `BENCH_train.json`).
 //!
 //! Pass `--smoke` (or set `BENCH_SMOKE=1`) for a reduced-iteration run that
-//! still executes every bit-equality gate and writes all three JSON files —
+//! still executes every bit-equality gate and writes all four JSON files —
 //! the CI smoke job uses it to keep the comparison suites honest.
 
-use step_nm::coordinator::{BatchServer, FinetuneSession};
+use step_nm::coordinator::{BatchServer, DriverConfig, FinetuneSession, TrainDriver};
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
 use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
+use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
 use step_nm::model::Mlp;
 use step_nm::optim::{
     adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
 };
 use step_nm::rng::Pcg64;
-use step_nm::sparsity::{apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio, PackedNmTensor};
+use step_nm::sparsity::{
+    apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio, PackedNmTensor, PackedParam,
+};
 use step_nm::tensor::{matmul, matmul_at, matmul_bt, Tensor};
 
 /// An MLP-shaped parameter stack: `[w0, b0, w1, b1, …]`, hidden weights
@@ -309,6 +314,174 @@ fn bench_packed_finetune(
     out.push(cmp);
 }
 
+/// Feature matrix + class labels of a CIFAR-analog batch.
+fn feat(b: &Batch) -> (&Tensor, &[usize]) {
+    match (&b.x, &b.y) {
+        (BatchX::Features(x), BatchY::Classes(y)) => (x, y),
+        _ => panic!("CifarLike yields features/classes"),
+    }
+}
+
+/// Streaming-driver overhead vs the manual batch-at-a-time loop —
+/// `BENCH_train.json`.
+///
+/// Both sides consume the *same* seed-shuffled epoch stream; the baseline
+/// calls `stream.train_batch(t, bs)` inline and steps the engine by hand,
+/// the driver adds the full loop machinery (prefetch worker, cadences,
+/// phase switching). Before anything is timed the two run several epochs in
+/// lock step and every loss bit + the full parameter state are asserted
+/// equal — then each side times whole epochs from that shared state. The
+/// driver's prefetch overlap should keep its overhead ≤ 5% (speedup ≥
+/// 0.95× — typically ≥ 1× since batch generation overlaps the step).
+fn bench_train_driver(h: Harness, rng: &mut Pcg64, out: &mut Vec<Comparison>) {
+    let (dim, classes) = (64usize, 10usize);
+    let mlp = Mlp::new(dim, &[128], classes);
+    let ds: std::sync::Arc<dyn Dataset> =
+        std::sync::Arc::new(CifarLike::new(classes, dim, 0.8, 128, 7));
+    let stream = MiniBatchStream::new(ds, 256, 32, 7).expect("stream");
+    let bpe = stream.batches_per_epoch();
+    print_header(&format!(
+        "streaming train driver — mlp [{dim}, 128, {classes}], {} ex/epoch, bs {}",
+        stream.n_examples(),
+        stream.batch_size()
+    ));
+
+    // ---- dense recipe mode (STEP through the phase switch) ---------------
+    let params0 = mlp.init(rng);
+    let recipe0 = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params0,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-3,
+        AdamHp::default(),
+    );
+    let switch_at = bpe + 2; // mid second epoch
+    let mut driver = TrainDriver::new_dense(
+        mlp.clone(),
+        params0.clone(),
+        recipe0.clone(),
+        stream.clone(),
+        DriverConfig {
+            epochs: usize::MAX / bpe, // never completes inside the bench
+            switch_at: Some(switch_at),
+            ..DriverConfig::default()
+        },
+    )
+    .expect("driver");
+    let mut st = recipe0;
+    let mut p = params0;
+    let mut t = 0usize;
+    // bit-equality gate: two lock-step epochs before any timing
+    for _ in 0..2 * bpe {
+        t += 1;
+        if t == switch_at {
+            st.switch_to_phase2();
+        }
+        let b = stream.train_batch(t, stream.batch_size());
+        let (x, y) = feat(&b);
+        let (manual_loss, _) = st.step(&mut p, |mp| mlp.loss_and_grad(mp, x, y));
+        let driver_loss = driver.step_once().expect("step").expect("not done");
+        assert_eq!(
+            driver_loss.to_bits(),
+            manual_loss.to_bits(),
+            "driver loss diverged from the manual loop at step {t}"
+        );
+    }
+    assert_eq!(driver.dense_params().expect("dense"), &p[..], "driver params diverged");
+    let r_manual = h.run("manual dense epoch ", || {
+        for _ in 0..bpe {
+            t += 1;
+            let b = stream.train_batch(t, stream.batch_size());
+            let (x, y) = feat(&b);
+            st.step(&mut p, |mp| mlp.loss_and_grad(mp, x, y));
+        }
+    });
+    let r_driver = h.run("driver dense epoch ", || {
+        for _ in 0..bpe {
+            driver.step_once().expect("step").expect("not done");
+        }
+    });
+    let cmp = Comparison {
+        name: "train/dense_epoch".into(),
+        baseline_mean: r_manual.mean(),
+        fused_mean: r_driver.mean(),
+    };
+    println!("{}", r_manual.row());
+    println!(
+        "{}  (driver speedup {:.2}x, overhead {:+.1}%)",
+        r_driver.row(),
+        cmp.speedup(),
+        100.0 * (cmp.fused_mean / cmp.baseline_mean - 1.0)
+    );
+    out.push(cmp);
+
+    // ---- packed fine-tune mode -------------------------------------------
+    let params = mlp.init(rng);
+    let ratio = NmRatio::new(2, 4);
+    let hp = AdamHp::default();
+    let ft0 = FinetuneSession::pack(mlp.clone(), &params, ratio, 1e-3, hp).expect("pack");
+    let mut driver = TrainDriver::new_finetune(
+        ft0,
+        stream.clone(),
+        DriverConfig { epochs: usize::MAX / bpe, ..DriverConfig::default() },
+    )
+    .expect("driver");
+    let mut ft = FinetuneSession::pack(mlp.clone(), &params, ratio, 1e-3, hp).expect("pack");
+    let mut t = 0usize;
+    for _ in 0..2 * bpe {
+        t += 1;
+        let b = stream.train_batch(t, stream.batch_size());
+        let (x, y) = feat(&b);
+        let manual_loss = ft.step(x, y);
+        let driver_loss = driver.step_once().expect("step").expect("not done");
+        assert_eq!(
+            driver_loss.to_bits(),
+            manual_loss.to_bits(),
+            "fine-tune driver loss diverged at step {t}"
+        );
+    }
+    // loss equality pins the state only up to the step before; compare the
+    // packed parameters themselves so the final update is gated too
+    let dp = driver.session().expect("finetune mode").params();
+    for (i, (a, b)) in dp.iter().zip(ft.params()).enumerate() {
+        match (a, b) {
+            (PackedParam::Packed(x), PackedParam::Packed(y)) => {
+                assert_eq!(x, y, "fine-tune driver packed param {i} diverged")
+            }
+            (PackedParam::Dense(x), PackedParam::Dense(y)) => {
+                assert_eq!(x, y, "fine-tune driver dense param {i} diverged")
+            }
+            other => panic!("fine-tune param {i}: storage kind mismatch {other:?}"),
+        }
+    }
+    let r_manual = h.run("manual finetune epoch", || {
+        for _ in 0..bpe {
+            t += 1;
+            let b = stream.train_batch(t, stream.batch_size());
+            let (x, y) = feat(&b);
+            ft.step(x, y);
+        }
+    });
+    let r_driver = h.run("driver finetune epoch", || {
+        for _ in 0..bpe {
+            driver.step_once().expect("step").expect("not done");
+        }
+    });
+    let cmp = Comparison {
+        name: "train/finetune_epoch".into(),
+        baseline_mean: r_manual.mean(),
+        fused_mean: r_driver.mean(),
+    };
+    println!("{}", r_manual.row());
+    println!(
+        "{}  (driver speedup {:.2}x, overhead {:+.1}%)",
+        r_driver.row(),
+        cmp.speedup(),
+        100.0 * (cmp.fused_mean / cmp.baseline_mean - 1.0)
+    );
+    out.push(cmp);
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var_os("BENCH_SMOKE").is_some();
@@ -442,5 +615,23 @@ fn main() {
     ) {
         Ok(()) => println!("[json] wrote BENCH_finetune.json"),
         Err(e) => eprintln!("[json] could not write BENCH_finetune.json: {e}"),
+    }
+
+    // ---- streaming driver vs manual batch-at-a-time loop -----------------
+    let mut train = Vec::new();
+    bench_train_driver(suite_h, &mut rng, &mut train);
+    let mean = train.iter().map(Comparison::speedup).sum::<f64>()
+        / train.len().max(1) as f64;
+    println!(
+        "\nmean driver speedup over the manual loop: {mean:.2}x (>= 0.95x keeps overhead within the 5% budget)"
+    );
+    match write_comparison_json(
+        "BENCH_train.json",
+        "streaming TrainDriver epoch vs manual batch-at-a-time loop (dense STEP recipe + packed fine-tune over a seed-shuffled MiniBatchStream; losses and parameter state asserted bit-equal in lock step before timing; speedup >= 0.95 means driver overhead <= 5%)",
+        &train,
+        true, // two lock-step epochs gated in-suite before timing
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_train.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_train.json: {e}"),
     }
 }

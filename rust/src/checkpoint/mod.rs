@@ -31,6 +31,19 @@ const VERSION_DENSE: u32 = 1;
 /// Checkpoints carrying packed N:M entries.
 const VERSION_PACKED: u32 = 2;
 
+/// Split a `u64` counter into two f32 **bit-patterns** for a checkpoint
+/// meta tensor. The checkpoint writes/reads raw f32 bytes and never does
+/// arithmetic on them, so the round trip is lossless at any counter value
+/// (no 2^24 exact-integer ceiling). Inverse: [`join_u64`].
+pub fn split_u64(x: u64) -> [f32; 2] {
+    [f32::from_bits(x as u32), f32::from_bits((x >> 32) as u32)]
+}
+
+/// Inverse of [`split_u64`].
+pub fn join_u64(lo: f32, hi: f32) -> u64 {
+    (lo.to_bits() as u64) | ((hi.to_bits() as u64) << 32)
+}
+
 /// A named collection of tensors (params, m, v, …) plus packed N:M tensors.
 #[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
@@ -399,6 +412,14 @@ mod tests {
         // every row is one dense tail group (cols < M): lossless identity
         assert_eq!(back.get_packed("w").unwrap().unpack(), w);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn u64_bit_pattern_split_roundtrips() {
+        for x in [0u64, 1, 12_345, (1 << 24) + 1, u32::MAX as u64 + 7, u64::MAX] {
+            let [lo, hi] = split_u64(x);
+            assert_eq!(join_u64(lo, hi), x);
+        }
     }
 
     #[test]

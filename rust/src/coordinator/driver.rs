@@ -1,0 +1,592 @@
+//! The streaming training driver: epoch-structured mini-batch training for
+//! the pure-Rust engines, composed end to end.
+//!
+//! Both training engines — the dense recipe engine
+//! ([`RecipeState::step`]) and the packed frozen-mask fine-tuner
+//! ([`FinetuneSession::step`]) — consume one batch per call and leave the
+//! loop to the caller. [`TrainDriver`] is that loop, built once: a
+//! [`MiniBatchStream`] defines deterministic, seed-shuffled epochs with a
+//! partial tail; the [`Prefetcher`](super::prefetch::Prefetcher) generates
+//! batch `t+1` on a worker thread while step `t` trains; and one
+//! epoch/eval-cadence/checkpoint-every-k/early-stop loop drives either
+//! engine through phase switching, periodic masked evaluation, format-v2
+//! checkpoints, and the final [`BatchServer`] handoff.
+//!
+//! **Determinism contract.** A driver run is bit-for-bit equal — losses,
+//! weights, Adam state, [`VarStats`] telemetry — to a hand-rolled loop
+//! calling the engine directly on `stream.train_batch(t, bs)` for
+//! `t = 1, 2, …`: batches are pure in `(stream, t)` so prefetching cannot
+//! reorder results, evaluation never touches training state, and
+//! checkpoints snapshot everything the trajectory depends on (resuming from
+//! one continues the uninterrupted trajectory exactly).
+//! `rust/tests/train_driver.rs` holds all of this in lock step, and `cargo
+//! bench --bench substrate` gates `BENCH_train.json` on the same equality
+//! before timing driver overhead against the manual loop.
+
+use crate::checkpoint::{join_u64, split_u64, Checkpoint};
+use crate::data::{Batch, BatchX, BatchY, MiniBatchStream};
+use crate::data::Dataset;
+use crate::model::Mlp;
+use crate::optim::{RecipeState, VarStats};
+use crate::tensor::{accuracy_from_logits, cross_entropy_with_grad, Tensor};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::finetune::FinetuneSession;
+use super::prefetch::Prefetcher;
+use super::serve::BatchServer;
+
+/// Stop training when the eval loss has not improved by `min_delta` for
+/// `patience` consecutive evaluations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EarlyStop {
+    pub patience: usize,
+    pub min_delta: f64,
+}
+
+/// Loop shape of one [`TrainDriver`] run. Epoch geometry (example count,
+/// batch size, shuffle seed) lives in the [`MiniBatchStream`]; this holds
+/// everything else.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// Epochs to train (0 = evaluate only).
+    pub epochs: usize,
+    /// Evaluate every k steps (0 = only the final evaluation).
+    pub eval_every: usize,
+    /// Save a checkpoint every k steps (0 = never). Requires
+    /// [`checkpoint_path`](Self::checkpoint_path).
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints land (overwritten in place).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Optional eval-loss early stopping.
+    pub early_stop: Option<EarlyStop>,
+    /// Dense STEP recipes: enter phase 2 *before* the step with this
+    /// 1-based number (so `switch_at: Some(s)` means step `s` is the first
+    /// mask-learning step). Ignored by the fine-tune mode.
+    pub switch_at: Option<usize>,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 1,
+            eval_every: 0,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            early_stop: None,
+            switch_at: None,
+        }
+    }
+}
+
+impl DriverConfig {
+    /// A plain `epochs`-epoch run (no cadences, no early stop).
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs, ..Self::default() }
+    }
+}
+
+/// One evaluation: step it ran at, primary metric (classification
+/// accuracy), mean eval loss.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub metric: f64,
+    pub loss: f64,
+}
+
+/// The full result of a [`TrainDriver::run`].
+#[derive(Debug, Clone)]
+pub struct DriverReport {
+    /// Steps taken over the driver's lifetime (resumed runs count from the
+    /// checkpointed step).
+    pub steps: usize,
+    /// Whole epochs completed.
+    pub epochs_completed: usize,
+    /// Per-step training losses recorded by *this* driver instance.
+    pub losses: Vec<f64>,
+    /// Per-step [`VarStats`] telemetry (zeros in fine-tune mode).
+    pub var_stats: Vec<VarStats>,
+    /// Periodic evaluations (cadence [`DriverConfig::eval_every`]).
+    pub evals: Vec<EvalPoint>,
+    /// The final evaluation, always computed.
+    pub final_eval: EvalPoint,
+    /// 1-based step the STEP phase switch fired at (0 = none).
+    pub switch_step: usize,
+    /// Whether early stopping ended the run before its last epoch.
+    pub stopped_early: bool,
+}
+
+/// Which engine the driver steps.
+enum Mode {
+    /// Dense recipe training (any [`PureRecipe`](crate::optim::PureRecipe),
+    /// STEP phase switch included).
+    Dense {
+        mlp: Mlp,
+        params: Vec<Tensor>,
+        recipe: RecipeState,
+    },
+    /// Packed frozen-mask fine-tuning.
+    Finetune(FinetuneSession),
+}
+
+/// The driver-position half of a checkpoint (`drv.meta`): step counters
+/// plus the early-stop state, so a resumed run stops exactly where the
+/// uninterrupted one would.
+struct DriverMeta {
+    t: usize,
+    switch_step: usize,
+    best_eval_loss: f64,
+    evals_since_best: usize,
+    stopped_early: bool,
+}
+
+/// Pull the feature matrix + class labels out of a batch; the pure-Rust
+/// engines train MLP classifiers, so anything else is a config error.
+fn features_batch(batch: &Batch) -> anyhow::Result<(&Tensor, &[usize])> {
+    let BatchX::Features(x) = &batch.x else {
+        anyhow::bail!("TrainDriver drives the pure-Rust MLP engine; the stream must produce feature batches (token datasets need the PJRT session)")
+    };
+    let BatchY::Classes(y) = &batch.y else {
+        anyhow::bail!("TrainDriver needs class-labeled batches (regression targets are not supported)")
+    };
+    Ok((x, y))
+}
+
+/// A streaming mini-batch training run over one of the pure-Rust engines.
+///
+/// Construct with [`new_dense`](Self::new_dense) /
+/// [`new_finetune`](Self::new_finetune) (or resume a checkpointed run with
+/// [`resume_dense`](Self::resume_dense) /
+/// [`resume_finetune`](Self::resume_finetune)), then either call
+/// [`run`](Self::run) for the whole configured loop or step manually with
+/// [`step_once`](Self::step_once). [`into_server`](Self::into_server) ends
+/// the pipeline: train → (pack) → serve.
+pub struct TrainDriver {
+    mode: Mode,
+    stream: Arc<MiniBatchStream>,
+    prefetcher: Prefetcher,
+    cfg: DriverConfig,
+    /// 1-based global step already completed.
+    t: usize,
+    /// 1-based step the phase switch fired at (0 = none yet).
+    switch_step: usize,
+    losses: Vec<f64>,
+    var_stats: Vec<VarStats>,
+    evals: Vec<EvalPoint>,
+    best_eval_loss: f64,
+    evals_since_best: usize,
+    stopped_early: bool,
+}
+
+impl TrainDriver {
+    fn build(
+        mode: Mode,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+        t: usize,
+        switch_step: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            stream.kind() == "classify",
+            "TrainDriver needs a classification stream, got kind {:?}",
+            stream.kind()
+        );
+        // kind() == "classify" also holds for token classifiers (GLUE
+        // analogs), which the pure-Rust MLP engine cannot train — probe one
+        // example so the config error surfaces at construction, not on the
+        // first step mid-pipeline (the probe is pure, so it cannot perturb
+        // the batch stream)
+        let probe = stream.train_examples(&[0]);
+        anyhow::ensure!(
+            matches!(probe.x, BatchX::Features(_)) && matches!(probe.y, BatchY::Classes(_)),
+            "TrainDriver drives the pure-Rust MLP engine; {:?} produces token batches (token models need the PJRT session)",
+            stream.name()
+        );
+        if cfg.checkpoint_every > 0 {
+            anyhow::ensure!(
+                cfg.checkpoint_path.is_some(),
+                "checkpoint_every set without a checkpoint_path"
+            );
+        }
+        let stream = Arc::new(stream);
+        let ds: Arc<dyn Dataset> = stream.clone();
+        let prefetcher = Prefetcher::new(ds, stream.batch_size());
+        Ok(Self {
+            mode,
+            stream,
+            prefetcher,
+            cfg,
+            t,
+            switch_step,
+            losses: Vec::new(),
+            var_stats: Vec::new(),
+            evals: Vec::new(),
+            best_eval_loss: f64::INFINITY,
+            evals_since_best: 0,
+            stopped_early: false,
+        })
+    }
+
+    /// [`build`](Self::build) from a checkpoint's [`DriverMeta`] — restores
+    /// the step counters and the early-stop state.
+    fn build_resumed(
+        mode: Mode,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+        meta: DriverMeta,
+    ) -> anyhow::Result<Self> {
+        let mut drv = Self::build(mode, stream, cfg, meta.t, meta.switch_step)?;
+        drv.best_eval_loss = meta.best_eval_loss;
+        drv.evals_since_best = meta.evals_since_best;
+        drv.stopped_early = meta.stopped_early;
+        Ok(drv)
+    }
+
+    /// Drive dense recipe training (`RecipeState::step`) over the stream.
+    pub fn new_dense(
+        mlp: Mlp,
+        params: Vec<Tensor>,
+        recipe: RecipeState,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            params.len() == mlp.n_params(),
+            "driver got {} params, MLP wants {}",
+            params.len(),
+            mlp.n_params()
+        );
+        anyhow::ensure!(
+            recipe.m.len() == params.len(),
+            "recipe state sized for {} params, model has {}",
+            recipe.m.len(),
+            params.len()
+        );
+        // a recipe already in phase 2 never re-fires the switch; 0 means
+        // "no switch inside this run", matching the session's convention
+        Self::build(Mode::Dense { mlp, params, recipe }, stream, cfg, 0, 0)
+    }
+
+    /// Drive packed frozen-mask fine-tuning (`FinetuneSession::step`) over
+    /// the stream.
+    pub fn new_finetune(
+        session: FinetuneSession,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+    ) -> anyhow::Result<Self> {
+        Self::build(Mode::Finetune(session), stream, cfg, 0, 0)
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    /// Global steps one full configured run consumes.
+    pub fn total_steps(&self) -> usize {
+        self.stream.steps_for(self.cfg.epochs)
+    }
+
+    /// 1-based global steps completed so far.
+    pub fn current_step(&self) -> usize {
+        self.t
+    }
+
+    /// The epoch stream the driver trains on.
+    pub fn stream(&self) -> &MiniBatchStream {
+        &self.stream
+    }
+
+    /// Per-step training losses recorded by this driver instance.
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+
+    /// Per-step telemetry (zeros in fine-tune mode).
+    pub fn var_stats(&self) -> &[VarStats] {
+        &self.var_stats
+    }
+
+    /// Dense-mode parameters (`None` in fine-tune mode).
+    pub fn dense_params(&self) -> Option<&[Tensor]> {
+        match &self.mode {
+            Mode::Dense { params, .. } => Some(params),
+            Mode::Finetune(_) => None,
+        }
+    }
+
+    /// Dense-mode recipe state (`None` in fine-tune mode).
+    pub fn recipe(&self) -> Option<&RecipeState> {
+        match &self.mode {
+            Mode::Dense { recipe, .. } => Some(recipe),
+            Mode::Finetune(_) => None,
+        }
+    }
+
+    /// Fine-tune session (`None` in dense mode).
+    pub fn session(&self) -> Option<&FinetuneSession> {
+        match &self.mode {
+            Mode::Dense { .. } => None,
+            Mode::Finetune(s) => Some(s),
+        }
+    }
+
+    /// 1-based step the STEP phase switch fired at (0 = none).
+    pub fn switch_step(&self) -> usize {
+        self.switch_step
+    }
+
+    /// Has the run consumed its configured epochs (or stopped early)?
+    pub fn done(&self) -> bool {
+        self.stopped_early || self.t >= self.total_steps()
+    }
+
+    // ---- the loop ---------------------------------------------------------
+
+    /// Run one global step: fire the phase switch if due, fetch the step's
+    /// batch (prefetched), step the engine, then apply the eval /
+    /// checkpoint cadences. Returns the training loss, or `None` once the
+    /// run is complete.
+    pub fn step_once(&mut self) -> anyhow::Result<Option<f64>> {
+        if self.done() {
+            return Ok(None);
+        }
+        let t = self.t + 1;
+        if self.cfg.switch_at == Some(t) {
+            if let Mode::Dense { recipe, .. } = &mut self.mode {
+                if !recipe.in_phase2() {
+                    recipe.switch_to_phase2();
+                    self.switch_step = t;
+                }
+            }
+        }
+        let batch = self.prefetcher.get(t);
+        let (x, labels) = features_batch(&batch)?;
+        let (loss, stats) = match &mut self.mode {
+            Mode::Dense { mlp, params, recipe } => {
+                recipe.step(params, |ws| mlp.loss_and_grad(ws, x, labels))
+            }
+            Mode::Finetune(session) => (session.step(x, labels), VarStats::default()),
+        };
+        self.t = t;
+        self.losses.push(loss);
+        self.var_stats.push(stats);
+        if self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0 {
+            let ev = self.evaluate()?;
+            self.record_eval(ev);
+        }
+        if self.cfg.checkpoint_every > 0 && t % self.cfg.checkpoint_every == 0 {
+            let path = self
+                .cfg
+                .checkpoint_path
+                .clone()
+                .expect("checkpoint_every validated against checkpoint_path");
+            self.save_checkpoint(&path)?;
+        }
+        Ok(Some(loss))
+    }
+
+    /// Run the remaining configured steps and produce the report (the final
+    /// evaluation always runs, even for a zero-epoch config; when the
+    /// cadence eval already ran at the last step it is reused, not
+    /// recomputed).
+    pub fn run(&mut self) -> anyhow::Result<DriverReport> {
+        while self.step_once()?.is_some() {}
+        let final_eval = match self.evals.last() {
+            Some(ev) if ev.step == self.t => *ev,
+            _ => self.evaluate()?,
+        };
+        Ok(DriverReport {
+            steps: self.t,
+            epochs_completed: self.t / self.stream.batches_per_epoch(),
+            losses: self.losses.clone(),
+            var_stats: self.var_stats.clone(),
+            evals: self.evals.clone(),
+            final_eval,
+            switch_step: self.switch_step,
+            stopped_early: self.stopped_early,
+        })
+    }
+
+    /// Evaluate the current weights on the stream's eval split — masked per
+    /// the recipe's export rule in dense mode, through the packed kernels in
+    /// fine-tune mode. Pure: training state, RNG streams, and the batch
+    /// sequence are untouched, so evaluating never perturbs the trajectory.
+    pub fn evaluate(&self) -> anyhow::Result<EvalPoint> {
+        let bs = self.stream.batch_size();
+        let batches = self.stream.eval_batches(bs);
+        anyhow::ensure!(
+            !batches.is_empty(),
+            "eval split produced no batches at batch size {bs}"
+        );
+        // dense mode: mask once per evaluation, not once per batch
+        let dense_eval = match &self.mode {
+            Mode::Dense { params, recipe, .. } => Some(recipe.final_sparse_params(params)),
+            Mode::Finetune(_) => None,
+        };
+        let (mut n, mut loss_sum, mut correct) = (0usize, 0.0f64, 0.0f64);
+        for b in &batches {
+            let (x, labels) = features_batch(b)?;
+            let logits = match &self.mode {
+                Mode::Dense { mlp, .. } => {
+                    mlp.forward(dense_eval.as_ref().expect("dense eval params"), x)
+                }
+                Mode::Finetune(s) => s.mlp().forward_packed(s.params(), x),
+            };
+            let (l, _) = cross_entropy_with_grad(&logits, labels);
+            loss_sum += l * labels.len() as f64;
+            correct += accuracy_from_logits(&logits, labels) * labels.len() as f64;
+            n += labels.len();
+        }
+        Ok(EvalPoint {
+            step: self.t,
+            metric: correct / n as f64,
+            loss: loss_sum / n as f64,
+        })
+    }
+
+    fn record_eval(&mut self, ev: EvalPoint) {
+        self.evals.push(ev);
+        if let Some(es) = self.cfg.early_stop {
+            if ev.loss < self.best_eval_loss - es.min_delta {
+                self.best_eval_loss = ev.loss;
+                self.evals_since_best = 0;
+            } else {
+                self.evals_since_best += 1;
+                if self.evals_since_best >= es.patience {
+                    self.stopped_early = true;
+                }
+            }
+        }
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    /// Snapshot the run: driver position + early-stop state (`drv.meta`)
+    /// plus the full engine state — `drv.w` + the [`RecipeState`] groups in
+    /// dense mode, the `ft.*` session entries in fine-tune mode. Loss/eval
+    /// history is *not* checkpointed; a resumed driver records from its
+    /// resume point (the early-stop counters *are* carried, so a resumed
+    /// run stops at the same step the uninterrupted one would).
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut ck = Checkpoint::new();
+        let [t_lo, t_hi] = split_u64(self.t as u64);
+        let [sw_lo, sw_hi] = split_u64(self.switch_step as u64);
+        let [best_lo, best_hi] = split_u64(self.best_eval_loss.to_bits());
+        let [esb_lo, esb_hi] = split_u64(self.evals_since_best as u64);
+        let mode_id = match &self.mode {
+            Mode::Dense { .. } => 0.0,
+            Mode::Finetune(_) => 1.0,
+        };
+        ck.push(
+            "drv.meta",
+            Tensor::new(
+                &[10],
+                vec![
+                    mode_id,
+                    t_lo,
+                    t_hi,
+                    sw_lo,
+                    sw_hi,
+                    best_lo,
+                    best_hi,
+                    esb_lo,
+                    esb_hi,
+                    if self.stopped_early { 1.0 } else { 0.0 },
+                ],
+            ),
+        );
+        match &self.mode {
+            Mode::Dense { params, recipe, .. } => {
+                ck.push_group("drv.w", params);
+                recipe.write_to(&mut ck, "drv.rs");
+            }
+            Mode::Finetune(session) => session.write_to(&mut ck),
+        }
+        ck.save(path)
+    }
+
+    fn read_meta(ck: &Checkpoint, want_mode: f32) -> anyhow::Result<DriverMeta> {
+        let meta = ck
+            .get("drv.meta")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing drv.meta"))?;
+        anyhow::ensure!(meta.numel() == 10, "drv.meta must hold 10 scalars");
+        let md = meta.data();
+        anyhow::ensure!(
+            md[0] == want_mode,
+            "checkpoint was saved by the {} driver mode",
+            if md[0] == 0.0 { "dense" } else { "fine-tune" }
+        );
+        Ok(DriverMeta {
+            t: join_u64(md[1], md[2]) as usize,
+            switch_step: join_u64(md[3], md[4]) as usize,
+            best_eval_loss: f64::from_bits(join_u64(md[5], md[6])),
+            evals_since_best: join_u64(md[7], md[8]) as usize,
+            stopped_early: md[9] != 0.0,
+        })
+    }
+
+    /// Resume a dense-mode run saved by
+    /// [`save_checkpoint`](Self::save_checkpoint). With the same stream and
+    /// config, the resumed trajectory is **bit-identical** to the
+    /// uninterrupted one (the next step re-enters the epoch structure at
+    /// the saved position).
+    pub fn resume_dense(
+        mlp: Mlp,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+        path: impl AsRef<Path>,
+    ) -> anyhow::Result<Self> {
+        let ck = Checkpoint::load(path)?;
+        let meta = Self::read_meta(&ck, 0.0)?;
+        let params = ck.group("drv.w");
+        anyhow::ensure!(
+            params.len() == mlp.n_params(),
+            "checkpoint carries {} params, MLP wants {}",
+            params.len(),
+            mlp.n_params()
+        );
+        let recipe = RecipeState::read_from(&ck, "drv.rs")?;
+        anyhow::ensure!(
+            recipe.m.len() == params.len(),
+            "checkpoint recipe state arity {} vs params {}",
+            recipe.m.len(),
+            params.len()
+        );
+        Self::build_resumed(Mode::Dense { mlp, params, recipe }, stream, cfg, meta)
+    }
+
+    /// Resume a fine-tune-mode run saved by
+    /// [`save_checkpoint`](Self::save_checkpoint) — same bit-identical
+    /// continuation guarantee as [`resume_dense`](Self::resume_dense).
+    pub fn resume_finetune(
+        mlp: Mlp,
+        stream: MiniBatchStream,
+        cfg: DriverConfig,
+        path: impl AsRef<Path>,
+    ) -> anyhow::Result<Self> {
+        let ck = Checkpoint::load(path)?;
+        let meta = Self::read_meta(&ck, 1.0)?;
+        let session = FinetuneSession::read_from(mlp, &ck)?;
+        Self::build_resumed(Mode::Finetune(session), stream, cfg, meta)
+    }
+
+    // ---- handoff ----------------------------------------------------------
+
+    /// End the pipeline in a [`BatchServer`]: fine-tune mode moves its
+    /// packed weights across without re-densifying; dense mode packs per
+    /// the recipe's export rule (STEP recipes must have switched — a
+    /// phase-1 export is dense and cannot serve compressed). The prefetch
+    /// worker is joined so no thread outlives the driver.
+    pub fn into_server(self) -> anyhow::Result<BatchServer> {
+        let TrainDriver { mode, prefetcher, .. } = self;
+        prefetcher
+            .shutdown()
+            .map_err(|_| anyhow::anyhow!("prefetch worker panicked"))?;
+        match mode {
+            Mode::Dense { mlp, params, recipe } => {
+                let packed = crate::sparsity::pack_params(&params, &recipe.export_ratios());
+                BatchServer::new(mlp, packed)
+            }
+            Mode::Finetune(session) => session.into_server(),
+        }
+    }
+}

@@ -25,7 +25,7 @@
 //! bench --bench substrate` records the step-throughput comparison to
 //! `BENCH_finetune.json`.
 
-use crate::checkpoint::Checkpoint;
+use crate::checkpoint::{join_u64, split_u64, Checkpoint};
 use crate::model::Mlp;
 use crate::optim::{packed_adam_step, packed_phase2_step, AdamHp, RecipeState};
 use crate::sparsity::{pack_params, NmRatio, PackedGrad, PackedParam};
@@ -73,19 +73,6 @@ fn cols_cache(params: &[PackedParam]) -> Vec<Option<Vec<u32>>> {
         .iter()
         .map(|p| p.as_packed().map(|pk| pk.col_indices()))
         .collect()
-}
-
-/// Split a `u64` counter into two f32 **bit-patterns** for the checkpoint
-/// meta tensor. The checkpoint writes/reads raw f32 bytes and never does
-/// arithmetic on them, so the round trip is lossless at any counter value
-/// (no 2^24 exact-integer ceiling).
-fn split_u64(x: u64) -> [f32; 2] {
-    [f32::from_bits(x as u32), f32::from_bits((x >> 32) as u32)]
-}
-
-/// Inverse of [`split_u64`].
-fn join_u64(lo: f32, hi: f32) -> u64 {
-    (lo.to_bits() as u64) | ((hi.to_bits() as u64) << 32)
 }
 
 /// A frozen-mask fine-tuning session over a packed model.
@@ -312,13 +299,12 @@ impl FinetuneSession {
 
     // ---- checkpointing (format v2, packed entries) ------------------------
 
-    /// Snapshot the whole session — packed weights, compact optimizer
-    /// state, and counters — as a format-v2 checkpoint (the weights stay
-    /// compressed on disk). The counters (`t`, `steps`, `samples`) are
-    /// stored as raw `u64` bit-patterns inside the meta tensor, so they
-    /// round-trip losslessly at any session length.
-    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut ck = Checkpoint::new();
+    /// Serialize the whole session — packed weights, compact optimizer
+    /// state, counters, hyperparameters — into `ck` under `ft.*` names.
+    /// [`save_checkpoint`](Self::save_checkpoint) wraps this; the streaming
+    /// [`TrainDriver`](super::driver::TrainDriver) calls it directly so the
+    /// session state and the driver's own position share one file.
+    pub fn write_to(&self, ck: &mut Checkpoint) {
         ck.push_packed_model("ft.p", &self.params);
         for (i, m) in self.m.iter().enumerate() {
             ck.push(format!("ft.m.{i}"), Tensor::new(&[m.len()], m.clone()));
@@ -359,14 +345,24 @@ impl FinetuneSession {
                 ],
             ),
         );
+    }
+
+    /// Snapshot the whole session — packed weights, compact optimizer
+    /// state, and counters — as a format-v2 checkpoint (the weights stay
+    /// compressed on disk). The counters (`t`, `steps`, `samples`) are
+    /// stored as raw `u64` bit-patterns inside the meta tensor, so they
+    /// round-trip losslessly at any session length.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut ck = Checkpoint::new();
+        self.write_to(&mut ck);
         ck.save(path)
     }
 
-    /// Reload a session saved by [`save_checkpoint`](Self::save_checkpoint)
-    /// — weights, optimizer state, counters, and hyperparameters all resume
-    /// exactly (the fine-tune trajectory continues bit-for-bit).
-    pub fn load_checkpoint(mlp: Mlp, path: impl AsRef<Path>) -> anyhow::Result<Self> {
-        let ck = Checkpoint::load(path)?;
+    /// Rebuild a session from the `ft.*` entries written by
+    /// [`write_to`](Self::write_to) — weights, optimizer state, counters,
+    /// and hyperparameters all resume exactly (the fine-tune trajectory
+    /// continues bit-for-bit).
+    pub fn read_from(mlp: Mlp, ck: &Checkpoint) -> anyhow::Result<Self> {
         let params = ck.packed_model("ft.p");
         anyhow::ensure!(!params.is_empty(), "checkpoint carries no ft.p model");
         mlp.validate_packed_params(&params)?;
@@ -417,6 +413,11 @@ impl FinetuneSession {
                 samples: join_u64(md[9], md[10]) as usize,
             },
         })
+    }
+
+    /// Reload a session saved by [`save_checkpoint`](Self::save_checkpoint).
+    pub fn load_checkpoint(mlp: Mlp, path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::read_from(mlp, &Checkpoint::load(path)?)
     }
 }
 

@@ -16,12 +16,14 @@
 //! masked eval artifact (`n == m` recovers dense eval), matching the paper's
 //! "evaluated with sparsity for fair comparison" protocol (Fig. 4 caption).
 
+pub mod driver;
 pub mod finetune;
 pub mod prefetch;
 pub mod serve;
 pub mod session;
 pub mod sweep;
 
+pub use driver::{DriverConfig, DriverReport, EarlyStop, EvalPoint, TrainDriver};
 pub use finetune::{FinetuneMode, FinetuneSession, FinetuneStats};
 pub use serve::{BatchServer, ServeStats};
 pub use session::{Report, Session};

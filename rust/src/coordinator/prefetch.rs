@@ -58,6 +58,19 @@ impl Prefetcher {
         self.inflight = Some(step + 1);
         batch
     }
+
+    /// Tear the prefetcher down deterministically: close both channels and
+    /// join the worker thread, propagating a worker panic if one occurred.
+    ///
+    /// Plain `drop` also stops the worker (its `recv`/`send` fails once the
+    /// channels close) but cannot observe the exit; the driver's drop test
+    /// uses this to assert the thread dies cleanly mid-epoch.
+    pub fn shutdown(self) -> std::thread::Result<()> {
+        let Self { req_tx, batch_rx, _handle, .. } = self;
+        drop(req_tx);
+        drop(batch_rx);
+        _handle.join()
+    }
 }
 
 #[cfg(test)]

@@ -594,6 +594,34 @@ impl<'rt> Session<'rt> {
         let mlp = super::serve::mlp_from_model_info(&self.model)?;
         super::finetune::FinetuneSession::new(mlp, self.packed_params(), lr, self.cfg.hp)
     }
+
+    /// The session's dataset (shared with its prefetch worker).
+    pub fn dataset(&self) -> std::sync::Arc<dyn Dataset> {
+        self.dataset.clone()
+    }
+
+    /// Continue this session as an **epoch-structured streaming fine-tune**:
+    /// pack the current weights ([`finetune_session`](Self::finetune_session))
+    /// and drive the frozen-mask loop with a
+    /// [`TrainDriver`](super::driver::TrainDriver) over a seed-shuffled
+    /// [`MiniBatchStream`](crate::data::MiniBatchStream) of this session's
+    /// dataset (`n_examples` examples per epoch at the session's batch
+    /// size; the shuffle seed derives from the run seed).
+    pub fn finetune_driver(
+        &self,
+        lr: f32,
+        n_examples: usize,
+        cfg: super::driver::DriverConfig,
+    ) -> anyhow::Result<super::driver::TrainDriver> {
+        let session = self.finetune_session(lr)?;
+        let stream = crate::data::MiniBatchStream::new(
+            self.dataset.clone(),
+            n_examples,
+            self.cfg.batch,
+            self.cfg.seed,
+        )?;
+        super::driver::TrainDriver::new_finetune(session, stream, cfg)
+    }
 }
 
 /// The paper-mapped default dataset for each model key (DESIGN.md §4).

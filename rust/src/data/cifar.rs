@@ -122,6 +122,25 @@ impl Dataset for CifarLike {
         }
     }
 
+    fn train_examples(&self, indices: &[usize]) -> Batch {
+        // direct gather: example i has its own RNG stream, so a batch is a
+        // pure function of its index set (order included) and the default
+        // concat path is never needed
+        assert!(!indices.is_empty(), "train_examples needs at least one index");
+        let mut x = vec![0.0f32; indices.len() * self.dim];
+        let mut y = vec![0usize; indices.len()];
+        for (row, &i) in indices.iter().enumerate() {
+            let mut rng = Pcg64::with_stream(self.seed ^ 0xC1FA_E6, i as u64);
+            let c = rng.below(self.n_classes);
+            self.draw_into(&mut rng, c, &mut x[row * self.dim..(row + 1) * self.dim]);
+            y[row] = c;
+        }
+        Batch {
+            x: BatchX::Features(Tensor::new(&[indices.len(), self.dim], x)),
+            y: BatchY::Classes(y),
+        }
+    }
+
     fn eval_batches(&self, batch: usize) -> Vec<Batch> {
         let n = self.eval_y.len();
         let mut out = Vec::new();
@@ -204,6 +223,31 @@ mod tests {
             }
         }
         assert!(correct > 64, "nearest-template acc {correct}/128");
+    }
+
+    #[test]
+    fn train_examples_are_index_pure() {
+        let d = CifarLike::new(6, 24, 0.5, 16, 11);
+        let whole = d.train_examples(&[5, 0, 9]);
+        // each example depends only on its index, not on batch composition
+        for (row, &i) in [5usize, 0, 9].iter().enumerate() {
+            let single = d.train_examples(&[i]);
+            let (BatchX::Features(w), BatchX::Features(s)) = (&whole.x, &single.x) else {
+                panic!()
+            };
+            assert_eq!(&w.data()[row * 24..(row + 1) * 24], s.data(), "example {i}");
+            let (BatchY::Classes(wy), BatchY::Classes(sy)) = (&whole.y, &single.y) else {
+                panic!()
+            };
+            assert_eq!(wy[row], sy[0]);
+        }
+        // and the example corpus differs from the step stream
+        let b = d.train_batch(5, 1);
+        let s = d.train_examples(&[5]);
+        match (&b.x, &s.x) {
+            (BatchX::Features(a), BatchX::Features(c)) => assert_ne!(a, c),
+            _ => panic!(),
+        }
     }
 
     #[test]

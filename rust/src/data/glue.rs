@@ -167,6 +167,25 @@ impl Dataset for GlueTask {
         Batch { x: BatchX::Tokens { ids, batch, seq: self.seq }, y }
     }
 
+    fn train_examples(&self, indices: &[usize]) -> Batch {
+        // direct gather: one RNG stream per example index, so batches are
+        // pure in their index set and epoch shuffles are reproducible
+        assert!(!indices.is_empty(), "train_examples needs at least one index");
+        let mut ids = Vec::with_capacity(indices.len() * self.seq);
+        let mut targets = Vec::with_capacity(indices.len());
+        for &i in indices {
+            let mut rng = Pcg64::with_stream(self.seed ^ 0x61E0_E6, i as u64);
+            let (toks, y) = self.draw(&mut rng);
+            ids.extend(toks);
+            targets.push(y);
+        }
+        let y = match self.kind {
+            TaskKind::Regression => BatchY::Values(targets),
+            _ => BatchY::Classes(targets.into_iter().map(|v| v as usize).collect()),
+        };
+        Batch { x: BatchX::Tokens { ids, batch: indices.len(), seq: self.seq }, y }
+    }
+
     fn eval_batches(&self, batch: usize) -> Vec<Batch> {
         let mut out = Vec::new();
         let mut i = 0;
@@ -232,6 +251,34 @@ impl GlueSuite {
             .collect();
         Self { tasks }
     }
+
+    /// Look a task up by its benchmark name ("sst2", "cola", …).
+    pub fn task(&self, name: &str) -> Option<&GlueTask> {
+        self.tasks.iter().find(|t| t.name == name)
+    }
+
+    /// One epoch-structured [`MiniBatchStream`](super::MiniBatchStream) per
+    /// task — the fine-tuning sweep's dataloaders (each task reshuffles its
+    /// own finite split every epoch, mirroring the per-task fine-tune runs
+    /// of Table 2).
+    pub fn streams(
+        &self,
+        n_examples: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> anyhow::Result<Vec<super::MiniBatchStream>> {
+        self.tasks
+            .iter()
+            .map(|t| {
+                super::MiniBatchStream::new(
+                    std::sync::Arc::new(t.clone()),
+                    n_examples,
+                    batch_size,
+                    seed,
+                )
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -293,6 +340,26 @@ mod tests {
         // class 0 should co-occur with markers[0] far more than class 1
         assert!(hits[0][1] * 2 > hits[0][0], "{hits:?}");
         assert!(hits[1][1] * 2 < hits[1][0] * 3, "{hits:?}");
+    }
+
+    #[test]
+    fn train_examples_are_index_pure_and_suite_streams_build() {
+        let t = GlueTask::new("sst2", TaskKind::Binary, 128, 12, 32, 0.05, 21);
+        let whole = t.train_examples(&[7, 2]);
+        let single = t.train_examples(&[2]);
+        let (BatchX::Tokens { ids: w, .. }, BatchX::Tokens { ids: s, .. }) =
+            (&whole.x, &single.x)
+        else {
+            panic!()
+        };
+        assert_eq!(&w[12..24], &s[..], "example 2 must not depend on batch position");
+
+        let suite = GlueSuite::standard(128, 12, 3);
+        let streams = suite.streams(20, 8, 1).unwrap();
+        assert_eq!(streams.len(), 9);
+        assert_eq!(streams[0].batches_per_epoch(), 3);
+        assert!(suite.task("cola").is_some());
+        assert!(suite.task("nope").is_none());
     }
 
     #[test]

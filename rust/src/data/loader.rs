@@ -1,0 +1,276 @@
+//! Epoch-structured mini-batch streaming over any [`Dataset`].
+//!
+//! The paper's workloads (CIFAR, GLUE, WMT analogs) are epoch-structured:
+//! a finite training split, reshuffled every epoch, consumed in mini-batches
+//! with a partial tail. The recipe engines, by contrast, consume one batch
+//! per *step*. [`MiniBatchStream`] bridges the two: it fixes a finite
+//! example corpus of a dataset (via [`Dataset::train_examples`]), shuffles
+//! the index set `0..n` once per epoch with a seeded Fisher–Yates
+//! permutation, and exposes the resulting batch sequence under the ordinary
+//! [`Dataset`] step interface — so the coordinator's
+//! [`Prefetcher`](crate::coordinator::prefetch::Prefetcher) double-buffers
+//! epoch batches exactly as it does procedural ones, and results cannot
+//! depend on *when* a batch was generated.
+//!
+//! Determinism contract: batch `t` (1-based) is a pure function of
+//! `(dataset, n_examples, batch_size, seed, t)`. Epoch `e = (t-1) / ⌈n/b⌉`
+//! draws its permutation from `Pcg64::with_stream(seed ^ SHUFFLE_TAG, e)`,
+//! so two streams over the same dataset agree batch-for-batch — the
+//! property the lock-step driver tests (`rust/tests/train_driver.rs`) and
+//! the `BENCH_train.json` bit-equality gate rely on.
+
+use super::{Batch, Dataset};
+use crate::rng::Pcg64;
+use std::sync::{Arc, Mutex};
+
+/// Stream id separating epoch permutations from every other consumer of the
+/// dataset seed.
+const SHUFFLE_TAG: u64 = 0x0E70_C4A7;
+
+/// A deterministic, seed-shuffled epoch stream of mini-batches over a
+/// finite example corpus of a [`Dataset`].
+///
+/// Implements [`Dataset`] itself: `train_batch(t, _)` returns the `t`-th
+/// global mini-batch of the epoch structure (the per-call batch-size
+/// argument is ignored — the stream's configured batch size and the
+/// partial-tail rule decide every batch's size), and the eval set passes
+/// through to the inner dataset. Epochs continue indefinitely; the driver
+/// bounds how many are consumed.
+pub struct MiniBatchStream {
+    ds: Arc<dyn Dataset>,
+    n_examples: usize,
+    batch_size: usize,
+    seed: u64,
+    shuffle: bool,
+    /// Memo of the most recent epoch's permutation. Purely a cost cache:
+    /// the permutation is a pure function of `(seed, epoch)`, so a cold
+    /// cache (fresh clone, epoch jump) regenerates identical bits — only
+    /// the O(n) Fisher–Yates work per *batch* is saved (batches within an
+    /// epoch hit the memo).
+    order_cache: Mutex<Option<(usize, Arc<Vec<usize>>)>>,
+}
+
+impl Clone for MiniBatchStream {
+    fn clone(&self) -> Self {
+        Self {
+            ds: self.ds.clone(),
+            n_examples: self.n_examples,
+            batch_size: self.batch_size,
+            seed: self.seed,
+            shuffle: self.shuffle,
+            order_cache: Mutex::new(None),
+        }
+    }
+}
+
+impl MiniBatchStream {
+    /// A shuffled epoch stream over the first `n_examples` examples of
+    /// `ds`'s corpus, chunked to `batch_size` with a partial tail.
+    pub fn new(
+        ds: Arc<dyn Dataset>,
+        n_examples: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(n_examples >= 1, "MiniBatchStream needs at least one example");
+        anyhow::ensure!(batch_size >= 1, "MiniBatchStream needs batch_size >= 1");
+        Ok(Self {
+            ds,
+            n_examples,
+            batch_size,
+            seed,
+            shuffle: true,
+            order_cache: Mutex::new(None),
+        })
+    }
+
+    /// Disable per-epoch shuffling: every epoch replays indices `0..n` in
+    /// order (ablation / debugging aid).
+    pub fn sequential(mut self) -> Self {
+        self.shuffle = false;
+        self
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.n_examples
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Batches per epoch: `⌈n_examples / batch_size⌉` (the last batch is
+    /// partial when the division is inexact).
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.n_examples + self.batch_size - 1) / self.batch_size
+    }
+
+    /// Global steps a run of `epochs` epochs consumes.
+    pub fn steps_for(&self, epochs: usize) -> usize {
+        epochs * self.batches_per_epoch()
+    }
+
+    /// The example visitation order of epoch `e` (0-based): a seeded
+    /// permutation of `0..n_examples`, or the identity when shuffling is
+    /// disabled. Every index appears exactly once per epoch.
+    pub fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        if self.shuffle {
+            Pcg64::with_stream(self.seed ^ SHUFFLE_TAG, epoch as u64).permutation(self.n_examples)
+        } else {
+            (0..self.n_examples).collect()
+        }
+    }
+
+    /// [`epoch_order`](Self::epoch_order) through the per-epoch memo.
+    fn epoch_order_cached(&self, epoch: usize) -> Arc<Vec<usize>> {
+        let mut guard = self.order_cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((e, order)) = guard.as_ref() {
+            if *e == epoch {
+                return order.clone();
+            }
+        }
+        let order = Arc::new(self.epoch_order(epoch));
+        *guard = Some((epoch, order.clone()));
+        order
+    }
+
+    /// The example indices of batch `b` (0-based) within epoch `e`.
+    pub fn batch_indices(&self, epoch: usize, b: usize) -> Vec<usize> {
+        assert!(b < self.batches_per_epoch(), "batch {b} out of epoch range");
+        let order = self.epoch_order_cached(epoch);
+        let lo = b * self.batch_size;
+        let hi = (lo + self.batch_size).min(self.n_examples);
+        order[lo..hi].to_vec()
+    }
+
+    /// Map a 1-based global step to its `(epoch, batch-in-epoch)` position.
+    pub fn position(&self, step: usize) -> (usize, usize) {
+        assert!(step >= 1, "global steps are 1-based");
+        let idx = step - 1;
+        let bpe = self.batches_per_epoch();
+        (idx / bpe, idx % bpe)
+    }
+
+    /// The inner dataset.
+    pub fn dataset(&self) -> &Arc<dyn Dataset> {
+        &self.ds
+    }
+}
+
+impl std::fmt::Debug for MiniBatchStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MiniBatchStream")
+            .field("dataset", &self.ds.name())
+            .field("n_examples", &self.n_examples)
+            .field("batch_size", &self.batch_size)
+            .field("seed", &self.seed)
+            .field("shuffle", &self.shuffle)
+            .finish()
+    }
+}
+
+impl Dataset for MiniBatchStream {
+    /// The `step`-th (1-based) mini-batch of the epoch structure. The
+    /// `batch` argument is ignored (see the type-level docs); callers that
+    /// care should pass [`Self::batch_size`].
+    fn train_batch(&self, step: usize, _batch: usize) -> Batch {
+        let (epoch, b) = self.position(step);
+        self.ds.train_examples(&self.batch_indices(epoch, b))
+    }
+
+    fn train_examples(&self, indices: &[usize]) -> Batch {
+        self.ds.train_examples(indices)
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        self.ds.eval_batches(batch)
+    }
+
+    fn kind(&self) -> &'static str {
+        self.ds.kind()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "{}~epochs(n={}, bs={}{})",
+            self.ds.name(),
+            self.n_examples,
+            self.batch_size,
+            if self.shuffle { "" } else { ", sequential" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{BatchX, BatchY, CifarLike};
+
+    fn stream(n: usize, bs: usize) -> MiniBatchStream {
+        let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(4, 12, 0.4, 16, 3));
+        MiniBatchStream::new(ds, n, bs, 9).unwrap()
+    }
+
+    #[test]
+    fn epoch_order_is_a_permutation_and_epoch_pure() {
+        let s = stream(17, 4);
+        for e in 0..3 {
+            let order = s.epoch_order(e);
+            let mut seen = vec![false; 17];
+            for &i in &order {
+                assert!(!seen[i], "epoch {e}: index {i} repeated");
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&x| x), "epoch {e}: index missing");
+            assert_eq!(order, s.epoch_order(e), "epoch order must be pure");
+        }
+        assert_ne!(s.epoch_order(0), s.epoch_order(1), "epochs must reshuffle");
+    }
+
+    #[test]
+    fn batches_cover_the_epoch_with_partial_tail() {
+        let s = stream(10, 4);
+        assert_eq!(s.batches_per_epoch(), 3);
+        let sizes: Vec<usize> = (1..=3)
+            .map(|t| s.train_batch(t, s.batch_size()).x.batch_size())
+            .collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        // the three batches together visit epoch 0's order exactly
+        let mut visited = Vec::new();
+        for b in 0..3 {
+            visited.extend(s.batch_indices(0, b));
+        }
+        assert_eq!(visited, s.epoch_order(0));
+    }
+
+    #[test]
+    fn train_batch_matches_direct_gather() {
+        let s = stream(9, 4);
+        // step 5 = epoch 1, batch 1
+        assert_eq!(s.position(5), (1, 1));
+        let batch = s.train_batch(5, 4);
+        let direct = s.dataset().train_examples(&s.batch_indices(1, 1));
+        match (&batch.x, &direct.x) {
+            (BatchX::Features(a), BatchX::Features(b)) => assert_eq!(a, b),
+            _ => panic!(),
+        }
+        match (&batch.y, &direct.y) {
+            (BatchY::Classes(a), BatchY::Classes(b)) => assert_eq!(a, b),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sequential_replays_identity_order() {
+        let s = stream(6, 4).sequential();
+        assert_eq!(s.epoch_order(0), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.epoch_order(7), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn constructor_rejects_degenerate_shapes() {
+        let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(4, 12, 0.4, 16, 3));
+        assert!(MiniBatchStream::new(ds.clone(), 0, 4, 1).is_err());
+        assert!(MiniBatchStream::new(ds, 4, 0, 1).is_err());
+    }
+}

@@ -10,11 +10,13 @@
 pub mod cifar;
 pub mod corpus;
 pub mod glue;
+pub mod loader;
 pub mod translate;
 
 pub use cifar::CifarLike;
 pub use corpus::SyntheticCorpus;
 pub use glue::{GlueSuite, GlueTask, TaskKind};
+pub use loader::MiniBatchStream;
 pub use translate::TranslatePairs;
 
 use crate::tensor::Tensor;
@@ -69,6 +71,11 @@ pub struct Batch {
     pub y: BatchY,
 }
 
+/// Stream tag separating the example-index corpus from the per-step batch
+/// stream (see [`Dataset::train_examples`]). XORed into the step id, so a
+/// dataset's example `i` never aliases its step-`i` batch.
+const EXAMPLE_STREAM_TAG: usize = 0x5EED_BA7C;
+
 /// A dataset that can serve seeded train batches and a fixed eval set.
 ///
 /// `Send + Sync` so the coordinator's prefetch worker can generate batch
@@ -79,6 +86,27 @@ pub trait Dataset: Send + Sync {
     /// data streams, which is what makes the Fig. 1/4 comparisons paired.
     fn train_batch(&self, step: usize, batch: usize) -> Batch;
 
+    /// Assemble one batch from explicit training-example indices — the entry
+    /// point epoch-structured streaming ([`MiniBatchStream`]) uses.
+    ///
+    /// Example `i` must be deterministic in `(self, i)` and independent of
+    /// batch composition: gathering `[0, 1]` equals concatenating the
+    /// gathers of `[0]` and `[1]`. That index-purity is what makes shuffled
+    /// epochs reproducible and lets a prefetch worker rebuild any batch from
+    /// its indices alone.
+    ///
+    /// The default draws each index as a single-example batch from a
+    /// dedicated deterministic stream and concatenates; datasets override it
+    /// with a direct (single-allocation) gather.
+    fn train_examples(&self, indices: &[usize]) -> Batch {
+        assert!(!indices.is_empty(), "train_examples needs at least one index");
+        let parts: Vec<Batch> = indices
+            .iter()
+            .map(|&i| self.train_batch(i ^ EXAMPLE_STREAM_TAG, 1))
+            .collect();
+        concat_batches(&parts)
+    }
+
     /// The fixed evaluation set, chunked to `batch`.
     fn eval_batches(&self, batch: usize) -> Vec<Batch>;
 
@@ -87,6 +115,81 @@ pub trait Dataset: Send + Sync {
 
     /// Human-readable name for logs/results.
     fn name(&self) -> String;
+}
+
+/// Concatenate batches of the same modality along the batch dimension
+/// (features/tokens stacked row-wise, targets appended in order). Backs the
+/// default [`Dataset::train_examples`]; panics on mixed modalities — a
+/// single dataset only ever emits one.
+pub fn concat_batches(parts: &[Batch]) -> Batch {
+    assert!(!parts.is_empty(), "concat_batches over no batches");
+    if parts.len() == 1 {
+        return parts[0].clone();
+    }
+    let x = match &parts[0].x {
+        BatchX::Features(t0) => {
+            let dim = t0.last_dim();
+            let total: usize = parts.iter().map(|b| b.x.batch_size()).sum();
+            let mut data = Vec::with_capacity(total * dim);
+            for b in parts {
+                let BatchX::Features(t) = &b.x else {
+                    panic!("concat_batches: mixed feature/token inputs")
+                };
+                assert_eq!(t.last_dim(), dim, "concat_batches: feature dim mismatch");
+                data.extend_from_slice(t.data());
+            }
+            BatchX::Features(Tensor::new(&[total, dim], data))
+        }
+        BatchX::Tokens { seq, .. } => {
+            let seq = *seq;
+            let mut ids = Vec::new();
+            let mut total = 0;
+            for b in parts {
+                let BatchX::Tokens { ids: i, batch, seq: s } = &b.x else {
+                    panic!("concat_batches: mixed feature/token inputs")
+                };
+                assert_eq!(*s, seq, "concat_batches: sequence length mismatch");
+                ids.extend_from_slice(i);
+                total += batch;
+            }
+            BatchX::Tokens { ids, batch: total, seq }
+        }
+    };
+    let y = match &parts[0].y {
+        BatchY::Classes(_) => BatchY::Classes(
+            parts
+                .iter()
+                .flat_map(|b| match &b.y {
+                    BatchY::Classes(v) => v.clone(),
+                    _ => panic!("concat_batches: mixed target kinds"),
+                })
+                .collect(),
+        ),
+        BatchY::Values(_) => BatchY::Values(
+            parts
+                .iter()
+                .flat_map(|b| match &b.y {
+                    BatchY::Values(v) => v.clone(),
+                    _ => panic!("concat_batches: mixed target kinds"),
+                })
+                .collect(),
+        ),
+        BatchY::Tokens { seq, .. } => {
+            let seq = *seq;
+            let mut ids = Vec::new();
+            let mut total = 0;
+            for b in parts {
+                let BatchY::Tokens { ids: i, batch, seq: s } = &b.y else {
+                    panic!("concat_batches: mixed target kinds")
+                };
+                assert_eq!(*s, seq, "concat_batches: target sequence length mismatch");
+                ids.extend_from_slice(i);
+                total += batch;
+            }
+            BatchY::Tokens { ids, batch: total, seq }
+        }
+    };
+    Batch { x, y }
 }
 
 #[cfg(test)]
@@ -107,5 +210,56 @@ mod tests {
             y: BatchY::Tokens { ids: vec![0; 6], batch: 2, seq: 3 },
         };
         assert_eq!(b.x.batch_size(), 2);
+    }
+
+    #[test]
+    fn concat_batches_stacks_features_and_classes() {
+        let a = Batch {
+            x: BatchX::Features(Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])),
+            y: BatchY::Classes(vec![0, 1]),
+        };
+        let b = Batch {
+            x: BatchX::Features(Tensor::new(&[1, 3], vec![7.0, 8.0, 9.0])),
+            y: BatchY::Classes(vec![2]),
+        };
+        let c = concat_batches(&[a, b]);
+        let BatchX::Features(x) = &c.x else { panic!() };
+        assert_eq!(x.shape(), &[3, 3]);
+        assert_eq!(&x.data()[6..], &[7.0, 8.0, 9.0]);
+        let BatchY::Classes(y) = &c.y else { panic!() };
+        assert_eq!(y, &[0, 1, 2]);
+    }
+
+    #[test]
+    fn concat_batches_stacks_tokens() {
+        let a = Batch {
+            x: BatchX::Tokens { ids: vec![1, 2, 3, 4], batch: 2, seq: 2 },
+            y: BatchY::Tokens { ids: vec![2, 3, 4, 5], batch: 2, seq: 2 },
+        };
+        let b = Batch {
+            x: BatchX::Tokens { ids: vec![9, 8], batch: 1, seq: 2 },
+            y: BatchY::Tokens { ids: vec![8, 7], batch: 1, seq: 2 },
+        };
+        let c = concat_batches(&[a, b]);
+        let BatchX::Tokens { ids, batch, seq } = &c.x else { panic!() };
+        assert_eq!((*batch, *seq), (3, 2));
+        assert_eq!(ids, &[1, 2, 3, 4, 9, 8]);
+        assert_eq!(c.y.len(), 3);
+    }
+
+    /// The default `train_examples` must be index-pure: gathering a batch of
+    /// indices equals concatenating per-index gathers (epoch shuffling
+    /// depends on this).
+    #[test]
+    fn default_train_examples_is_index_pure() {
+        let ds = SyntheticCorpus::new(64, 8, 4_000, 1_000, 5);
+        let whole = ds.train_examples(&[3, 11, 0]);
+        let parts: Vec<Batch> =
+            [3usize, 11, 0].iter().map(|&i| ds.train_examples(&[i])).collect();
+        let rebuilt = concat_batches(&parts);
+        match (&whole.x, &rebuilt.x) {
+            (BatchX::Tokens { ids: a, .. }, BatchX::Tokens { ids: b, .. }) => assert_eq!(a, b),
+            _ => panic!(),
+        }
     }
 }

@@ -75,8 +75,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
     pub use crate::config::{ExperimentConfig, RecipeKind};
-    pub use crate::coordinator::{BatchServer, FinetuneSession, Report, Session, Sweep};
-    pub use crate::data::Dataset;
+    pub use crate::coordinator::{
+        BatchServer, DriverConfig, FinetuneSession, Report, Session, Sweep, TrainDriver,
+    };
+    pub use crate::data::{Dataset, MiniBatchStream};
     pub use crate::optim::OptimizerKind;
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{Registry, Runtime};

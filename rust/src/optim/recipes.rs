@@ -34,6 +34,7 @@ use super::{
     adam_update, asp_adam_step, masked_adam_step, masked_phase2_step, masked_sgdm_step,
     sgdm_update, srste_refine, step_phase2_update, AdamHp, AdamState, VarStats,
 };
+use crate::checkpoint::{join_u64, split_u64, Checkpoint};
 use crate::sparsity::{nm_mask_forward_into, nm_mask_into, DecaySchedule, NmRatio};
 use crate::tensor::Tensor;
 
@@ -87,6 +88,43 @@ impl PureRecipe {
     /// Does this recipe apply masks during training?
     pub fn is_sparse(&self) -> bool {
         !matches!(self, PureRecipe::DenseAdam | PureRecipe::DenseSgdm { .. })
+    }
+
+    /// Encode the recipe as `[id, a, b]` scalars for a checkpoint meta
+    /// tensor (`a`/`b` carry λ / momentum where the variant has them).
+    /// Inverse: [`PureRecipe::from_code`].
+    pub fn code(&self) -> [f32; 3] {
+        match *self {
+            PureRecipe::DenseAdam => [0.0, 0.0, 0.0],
+            PureRecipe::DenseSgdm { momentum } => [1.0, momentum, 0.0],
+            PureRecipe::SrSteAdam { lam } => [2.0, lam, 0.0],
+            PureRecipe::SrSteSgdm { lam, momentum } => [3.0, lam, momentum],
+            PureRecipe::Asp => [4.0, 0.0, 0.0],
+            PureRecipe::Step { lam } => [5.0, lam, 0.0],
+            PureRecipe::StepVarianceUpdated { lam } => [6.0, lam, 0.0],
+            PureRecipe::DecayingMask { lam } => [7.0, lam, 0.0],
+        }
+    }
+
+    /// Decode a recipe written by [`PureRecipe::code`].
+    pub fn from_code(id: f32, a: f32, b: f32) -> anyhow::Result<Self> {
+        // reject non-finite/fractional ids up front: `NaN as i32` saturates
+        // to 0, which would silently decode a corrupt meta as DenseAdam
+        anyhow::ensure!(
+            id.is_finite() && id.fract() == 0.0 && (0.0..=7.0).contains(&id),
+            "unknown recipe code {id}"
+        );
+        Ok(match id as i32 {
+            0 => PureRecipe::DenseAdam,
+            1 => PureRecipe::DenseSgdm { momentum: a },
+            2 => PureRecipe::SrSteAdam { lam: a },
+            3 => PureRecipe::SrSteSgdm { lam: a, momentum: b },
+            4 => PureRecipe::Asp,
+            5 => PureRecipe::Step { lam: a },
+            6 => PureRecipe::StepVarianceUpdated { lam: a },
+            7 => PureRecipe::DecayingMask { lam: a },
+            other => anyhow::bail!("unknown recipe code {other}"),
+        })
     }
 
     /// SR-STE λ composed into this recipe (0 where Eq 9 does not apply).
@@ -533,6 +571,199 @@ impl RecipeState {
             .collect()
     }
 
+    /// Per-parameter **export** ratio: `Some(r)` exactly where
+    /// [`final_sparse_params`](Self::final_sparse_params) would mask — so
+    /// `pack_params(params, &st.export_ratios())` is the compressed twin of
+    /// that export (STEP recipes stay dense until the phase switch; the
+    /// streaming driver uses this for its `BatchServer` handoff).
+    pub fn export_ratios(&self) -> Vec<Option<NmRatio>> {
+        let sparsify = self.sparsify_at_export();
+        self.ratios
+            .iter()
+            .map(|r| if sparsify { *r } else { None })
+            .collect()
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    /// Serialize the full recipe state into `ck` under `{prefix}.*` names:
+    /// recipe id + hyperparameters + counters in `{prefix}.meta`, the
+    /// per-parameter ratio table in `{prefix}.ratios`, the optimizer groups
+    /// `{prefix}.m` / `{prefix}.v` (+ `{prefix}.vstar` in STEP phase 2),
+    /// and ASP's frozen masks as `{prefix}.asp.i`. Parameters themselves
+    /// live outside this state — the caller saves them alongside.
+    ///
+    /// [`read_from`](Self::read_from) restores the state so a training
+    /// trajectory continues **bit-for-bit** (scratch buffers are rebuilt;
+    /// they are fully overwritten every step and carry no information).
+    pub fn write_to(&self, ck: &mut Checkpoint, prefix: &str) {
+        let [id, a, b] = self.recipe.code();
+        let [t_lo, t_hi] = split_u64(self.t);
+        let phase = match self.phase {
+            Phase::Precondition => 0.0,
+            Phase::MaskLearning => 1.0,
+        };
+        let sched = self.schedule;
+        ck.push(
+            format!("{prefix}.meta"),
+            Tensor::new(
+                &[15],
+                vec![
+                    id,
+                    a,
+                    b,
+                    self.lr,
+                    self.hp.beta1,
+                    self.hp.beta2,
+                    self.hp.eps,
+                    t_lo,
+                    t_hi,
+                    phase,
+                    if sched.is_some() { 1.0 } else { 0.0 },
+                    sched.map_or(0.0, |s| s.m as f32),
+                    sched.map_or(0.0, |s| s.target_n as f32),
+                    sched.map_or(0.0, |s| s.start_step as f32),
+                    sched.map_or(0.0, |s| s.decay_interval as f32),
+                ],
+            ),
+        );
+        let mut ratios = Vec::with_capacity(2 * self.ratios.len());
+        for r in &self.ratios {
+            ratios.push(r.map_or(0.0, |r| r.n as f32));
+            ratios.push(r.map_or(0.0, |r| r.m as f32));
+        }
+        ck.push(format!("{prefix}.ratios"), Tensor::new(&[2 * self.ratios.len()], ratios));
+        ck.push_group(&format!("{prefix}.m"), &self.m);
+        ck.push_group(&format!("{prefix}.v"), &self.v);
+        if let Some(vs) = &self.v_star {
+            ck.push_group(&format!("{prefix}.vstar"), vs);
+        }
+        if let Some(masks) = &self.asp_masks {
+            for (i, mask) in masks.iter().enumerate() {
+                if let Some(mask) = mask {
+                    ck.push(format!("{prefix}.asp.{i}"), mask.clone());
+                }
+            }
+        }
+    }
+
+    /// Rebuild a state saved by [`write_to`](Self::write_to).
+    pub fn read_from(ck: &Checkpoint, prefix: &str) -> anyhow::Result<Self> {
+        let meta = ck
+            .get(&format!("{prefix}.meta"))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {prefix}.meta"))?;
+        anyhow::ensure!(meta.numel() == 15, "{prefix}.meta must hold 15 scalars");
+        let md = meta.data();
+        let recipe = PureRecipe::from_code(md[0], md[1], md[2])?;
+        let hp = AdamHp { beta1: md[4], beta2: md[5], eps: md[6] };
+        let phase = if md[9] == 0.0 { Phase::Precondition } else { Phase::MaskLearning };
+        // validate before the constructors: DecaySchedule::new and
+        // NmRatio::new assert their invariants, and a corrupt checkpoint
+        // must surface as Err, not a panic
+        let schedule = if md[10] != 0.0 {
+            let (sm, stn, sss, sdi) = (md[11], md[12], md[13], md[14]);
+            anyhow::ensure!(
+                sm.is_finite()
+                    && stn.is_finite()
+                    && sss.is_finite()
+                    && sdi.is_finite()
+                    && sm >= 1.0
+                    && (1.0..=sm).contains(&stn)
+                    && sss >= 0.0
+                    && sdi >= 1.0,
+                "{prefix}.meta carries an invalid decay schedule [{sm}, {stn}, {sss}, {sdi}]"
+            );
+            Some(DecaySchedule::new(sm as usize, stn as usize, sss as usize, sdi as usize))
+        } else {
+            None
+        };
+
+        let m = ck.group(&format!("{prefix}.m"));
+        anyhow::ensure!(!m.is_empty(), "checkpoint carries no {prefix}.m group");
+        let p = m.len();
+        let v = ck.group(&format!("{prefix}.v"));
+        anyhow::ensure!(v.len() == p, "{prefix}.v has {} entries, want {p}", v.len());
+        for (a, b) in m.iter().zip(&v) {
+            anyhow::ensure!(a.shape() == b.shape(), "{prefix}: m/v shape mismatch");
+        }
+        let vs = ck.group(&format!("{prefix}.vstar"));
+        anyhow::ensure!(
+            vs.is_empty() || vs.len() == p,
+            "{prefix}.vstar has {} entries, want {p}",
+            vs.len()
+        );
+        if !vs.is_empty() {
+            for (a, b) in vs.iter().zip(&m) {
+                anyhow::ensure!(a.shape() == b.shape(), "{prefix}: v*/m shape mismatch");
+            }
+        }
+        let v_star = if vs.is_empty() { None } else { Some(vs) };
+        anyhow::ensure!(
+            !(phase == Phase::MaskLearning
+                && v_star.is_none()
+                && matches!(recipe, PureRecipe::Step { .. })),
+            "{prefix}: STEP phase 2 without a saved v*"
+        );
+
+        let rt = ck
+            .get(&format!("{prefix}.ratios"))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {prefix}.ratios"))?;
+        anyhow::ensure!(rt.numel() == 2 * p, "{prefix}.ratios must hold {} scalars", 2 * p);
+        let ratios: Vec<Option<NmRatio>> = rt
+            .data()
+            .chunks(2)
+            .map(|nm| -> anyhow::Result<Option<NmRatio>> {
+                let (n, m) = (nm[0], nm[1]);
+                if n == 0.0 && m == 0.0 {
+                    return Ok(None); // dense parameter
+                }
+                anyhow::ensure!(
+                    n.is_finite() && m.is_finite() && n >= 1.0 && m >= n,
+                    "{prefix}.ratios carries an invalid pair {n}:{m}"
+                );
+                Ok(Some(NmRatio::new(n as usize, m as usize)))
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let asp: Vec<Option<Tensor>> = (0..p)
+            .map(|i| ck.get(&format!("{prefix}.asp.{i}")).cloned())
+            .collect();
+        for (i, mask) in asp.iter().enumerate() {
+            if let Some(mask) = mask {
+                anyhow::ensure!(
+                    mask.shape() == m[i].shape(),
+                    "{prefix}.asp.{i}: mask shape {:?} vs parameter shape {:?}",
+                    mask.shape(),
+                    m[i].shape()
+                );
+            }
+        }
+        let asp_masks = asp.iter().any(Option::is_some).then_some(asp);
+
+        let scratch_masks = ratios
+            .iter()
+            .zip(&m)
+            .map(|(r, t)| r.map(|_| Tensor::zeros(t.shape())))
+            .collect();
+        let scratch_masked: Vec<Tensor> = m.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        Ok(Self {
+            recipe,
+            hp,
+            lr: md[3],
+            t: join_u64(md[7], md[8]),
+            ratios,
+            m,
+            v,
+            v_star,
+            phase,
+            asp_masks,
+            schedule,
+            scratch_masks,
+            scratch_masked,
+            mask_active: vec![false; p],
+        })
+    }
+
     /// Masks for this step as owned clones (ASP reuses its first
     /// sparse-step masks) — the unfused oracle's mask path.
     fn compute_masks_cloned(&mut self, params: &[Tensor]) -> Vec<Option<Tensor>> {
@@ -755,6 +986,50 @@ mod tests {
                 fp2[0].count_zeros() >= fp2[0].numel() / 2,
                 "{recipe:?}: phase-2 export must satisfy 2:4"
             );
+        }
+    }
+
+    /// A state written to a checkpoint and read back must continue the
+    /// trajectory bit-for-bit (the driver's dense resume path).
+    #[test]
+    fn recipe_state_checkpoint_roundtrip_continues_bitwise() {
+        let recipes = [
+            PureRecipe::DenseAdam,
+            PureRecipe::DenseSgdm { momentum: 0.9 },
+            PureRecipe::SrSteAdam { lam: 2e-4 },
+            PureRecipe::Asp,
+            PureRecipe::Step { lam: 2e-4 },
+            PureRecipe::DecayingMask { lam: 2e-4 },
+        ];
+        for recipe in recipes {
+            let (mut params, target, mut st) = setup(recipe);
+            if matches!(recipe, PureRecipe::DecayingMask { .. }) {
+                st = st.with_schedule(DecaySchedule::new(4, 2, 2, 4));
+            }
+            for _ in 0..6 {
+                st.step(&mut params, quad_loss(&target));
+            }
+            if matches!(recipe, PureRecipe::Step { .. }) {
+                st.switch_to_phase2();
+                st.step(&mut params, quad_loss(&target));
+            }
+            let mut ck = Checkpoint::new();
+            st.write_to(&mut ck, "rs");
+            let mut back = RecipeState::read_from(&ck, "rs").unwrap();
+            assert_eq!(back.t, st.t, "{recipe:?}");
+            assert_eq!(back.recipe, recipe);
+            let mut p2 = params.clone();
+            for t in 0..4 {
+                let (la, sa) = st.step(&mut params, quad_loss(&target));
+                let (lb, sb) = back.step(&mut p2, quad_loss(&target));
+                assert_eq!(la.to_bits(), lb.to_bits(), "{recipe:?} t={t}");
+                assert_eq!(sa, sb, "{recipe:?} t={t}");
+            }
+            for i in 0..params.len() {
+                assert_eq!(params[i], p2[i], "{recipe:?} param {i}");
+                assert_eq!(st.m[i], back.m[i], "{recipe:?} m {i}");
+                assert_eq!(st.v[i], back.v[i], "{recipe:?} v {i}");
+            }
         }
     }
 

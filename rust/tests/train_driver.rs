@@ -1,0 +1,610 @@
+//! Lock-step oracle suite for the streaming training driver.
+//!
+//! The [`TrainDriver`] promises that epoch-structured, prefetched,
+//! eval/checkpoint-instrumented training is **bit-for-bit** equal to a
+//! hand-rolled loop calling `RecipeState::step` / `FinetuneSession::step`
+//! on the same deterministic batches. This suite holds that promise across
+//! both engine modes and ratios (2:4, 1:4), plus the layers underneath it:
+//! prefetcher purity under skipped/out-of-order requests and clean worker
+//! teardown, `MiniBatchStream` edge geometry (oversized batches, partial
+//! tails, single-example corpora, zero-epoch runs, exact per-epoch
+//! coverage), and mid-epoch checkpoint-resume continuing the uninterrupted
+//! trajectory exactly (format-v2, extending `packed_finetune.rs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use step_nm::coordinator::prefetch::Prefetcher;
+use step_nm::coordinator::{DriverConfig, EarlyStop, FinetuneSession, TrainDriver};
+use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
+use step_nm::model::Mlp;
+use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::{NmRatio, PackedParam};
+use step_nm::tensor::Tensor;
+
+const DIM: usize = 16;
+const CLASSES: usize = 4;
+
+fn small_stream(n_examples: usize, batch_size: usize, seed: u64) -> MiniBatchStream {
+    let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(CLASSES, DIM, 0.6, 64, seed));
+    MiniBatchStream::new(ds, n_examples, batch_size, seed).unwrap()
+}
+
+fn xy(b: &Batch) -> (&Tensor, &[usize]) {
+    let (BatchX::Features(x), BatchY::Classes(y)) = (&b.x, &b.y) else {
+        panic!("CifarLike yields features/classes")
+    };
+    (x, y)
+}
+
+fn assert_packed_eq(a: &[PackedParam], b: &[PackedParam], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: arity");
+    for (i, (p, q)) in a.iter().zip(b).enumerate() {
+        match (p, q) {
+            (PackedParam::Packed(x), PackedParam::Packed(y)) => {
+                assert_eq!(x, y, "{ctx}: packed param {i}")
+            }
+            (PackedParam::Dense(x), PackedParam::Dense(y)) => {
+                assert_eq!(x, y, "{ctx}: dense param {i}")
+            }
+            other => panic!("{ctx}: storage kind changed at {i}: {other:?}"),
+        }
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("stepnm_driver_{}_{name}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------------
+// lock-step oracles
+// ---------------------------------------------------------------------------
+
+/// A dense-recipe driver run over K epochs — with evaluation cadence firing
+/// mid-run — must be bit-for-bit equal to a manual RecipeState::step loop
+/// over the same stream: losses, VarStats telemetry, weights, Adam state,
+/// and the frozen v*, at 2:4 and 1:4.
+#[test]
+fn dense_driver_is_bit_identical_to_manual_loop() {
+    for (n, m) in [(2usize, 4usize), (1, 4)] {
+        let mlp = Mlp::new(DIM, &[16], CLASSES);
+        let mut rng = Pcg64::new(5);
+        let params0 = mlp.init(&mut rng);
+        let recipe0 = RecipeState::new(
+            PureRecipe::Step { lam: 2e-4 },
+            &params0,
+            mlp.ratios(NmRatio::new(n, m)),
+            1e-2,
+            AdamHp::default(),
+        );
+        let stream = small_stream(20, 8, 11); // 3 batches/epoch, tail of 4
+        let epochs = 3;
+        let switch_at = 5;
+
+        let mut driver = TrainDriver::new_dense(
+            mlp.clone(),
+            params0.clone(),
+            recipe0.clone(),
+            stream.clone(),
+            DriverConfig {
+                epochs,
+                eval_every: 2,
+                switch_at: Some(switch_at),
+                ..DriverConfig::default()
+            },
+        )
+        .unwrap();
+        let report = driver.run().unwrap();
+
+        // the oracle: a hand-rolled batch-at-a-time loop, same stream
+        let mut st = recipe0;
+        let mut p = params0;
+        let mut losses = Vec::new();
+        let mut stats = Vec::new();
+        for t in 1..=stream.steps_for(epochs) {
+            if t == switch_at {
+                st.switch_to_phase2();
+            }
+            let b = stream.train_batch(t, stream.batch_size());
+            let (x, y) = xy(&b);
+            let (loss, s) = st.step(&mut p, |mp| mlp.loss_and_grad(mp, x, y));
+            losses.push(loss);
+            stats.push(s);
+        }
+
+        let ctx = format!("{n}:{m}");
+        assert_eq!(report.steps, losses.len(), "{ctx}: step count");
+        assert_eq!(report.switch_step, switch_at, "{ctx}: switch step");
+        for (i, (a, b)) in report.losses.iter().zip(&losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss at step {}", i + 1);
+        }
+        assert_eq!(report.var_stats, stats, "{ctx}: VarStats trajectory");
+        assert_eq!(driver.dense_params().unwrap(), &p[..], "{ctx}: weights");
+        let rec = driver.recipe().unwrap();
+        assert_eq!(rec.t, st.t, "{ctx}: step counter");
+        assert_eq!(rec.m, st.m, "{ctx}: first-moment state");
+        assert_eq!(rec.v, st.v, "{ctx}: second-moment state");
+        assert_eq!(rec.v_star, st.v_star, "{ctx}: frozen v*");
+        assert!(rec.in_phase2(), "{ctx}: driver must have crossed the switch");
+    }
+}
+
+/// The packed fine-tune driver must match a manual FinetuneSession::step
+/// loop the same way: losses and the full packed parameter state, at 2:4
+/// and 1:4.
+#[test]
+fn finetune_driver_is_bit_identical_to_manual_loop() {
+    for (n, m) in [(2usize, 4usize), (1, 4)] {
+        let mlp = Mlp::new(DIM, &[16], CLASSES);
+        let mut rng = Pcg64::new(8);
+        let params = mlp.init(&mut rng);
+        let ratio = NmRatio::new(n, m);
+        let hp = AdamHp::default();
+        // packing is deterministic, so two sessions from the same dense
+        // weights start bit-identical
+        let ft_driver = FinetuneSession::pack(mlp.clone(), &params, ratio, 5e-3, hp).unwrap();
+        let mut ft_manual = FinetuneSession::pack(mlp.clone(), &params, ratio, 5e-3, hp).unwrap();
+        let stream = small_stream(10, 4, 21); // 3 batches/epoch, tail of 2
+        let epochs = 2;
+
+        let mut driver = TrainDriver::new_finetune(
+            ft_driver,
+            stream.clone(),
+            DriverConfig { epochs, eval_every: 2, ..DriverConfig::default() },
+        )
+        .unwrap();
+        let report = driver.run().unwrap();
+
+        let mut losses = Vec::new();
+        for t in 1..=stream.steps_for(epochs) {
+            let b = stream.train_batch(t, stream.batch_size());
+            let (x, y) = xy(&b);
+            losses.push(ft_manual.step(x, y));
+        }
+
+        let ctx = format!("{n}:{m}");
+        assert_eq!(report.steps, losses.len(), "{ctx}: step count");
+        for (i, (a, b)) in report.losses.iter().zip(&losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: loss at step {}", i + 1);
+        }
+        let session = driver.session().unwrap();
+        assert_packed_eq(session.params(), ft_manual.params(), &ctx);
+        assert_eq!(session.current_step(), ft_manual.current_step(), "{ctx}: counter");
+        assert_eq!(session.stats(), ft_manual.stats(), "{ctx}: counters");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// prefetcher properties
+// ---------------------------------------------------------------------------
+
+/// Prefetched batches must be bit-equal to direct train_batch calls under
+/// in-order, skipped, and backwards (stale in-flight discard) request
+/// patterns — over the epoch stream, where batch identity is what keeps
+/// the driver deterministic.
+#[test]
+fn prefetcher_matches_direct_generation_under_any_request_order() {
+    let stream = small_stream(12, 4, 31);
+    let ds: Arc<dyn Dataset> = Arc::new(stream.clone());
+    let mut pf = Prefetcher::new(ds.clone(), 4);
+    let mut check = |pf: &mut Prefetcher, step: usize| {
+        let got = pf.get(step);
+        let want = ds.train_batch(step, 4);
+        let (gx, gy) = xy(&got);
+        let (wx, wy) = xy(&want);
+        assert_eq!(gx, wx, "step {step}: features");
+        assert_eq!(gy, wy, "step {step}: labels");
+    };
+    // in-order (the steady-state driver pattern)
+    for t in 1..=5 {
+        check(&mut pf, t);
+    }
+    // skip ahead: 6 is in flight, ask for 9
+    check(&mut pf, 9);
+    // jump backwards: 10 is in flight, ask for 2 (stale result discarded)
+    check(&mut pf, 2);
+    check(&mut pf, 3);
+    // and far forward again
+    check(&mut pf, 11);
+    pf.shutdown().expect("worker exits cleanly");
+}
+
+/// Dropping the prefetcher (or the whole driver) mid-epoch must terminate
+/// the worker thread: its dataset handle is released, and an explicit
+/// shutdown join reports a clean exit.
+#[test]
+fn prefetch_worker_exits_cleanly_when_dropped_mid_epoch() {
+    // plain drop with a request in flight
+    let ds: Arc<dyn Dataset> = Arc::new(CifarLike::new(CLASSES, DIM, 0.5, 32, 3));
+    let mut pf = Prefetcher::new(ds.clone(), 4);
+    pf.get(1);
+    pf.get(2);
+    drop(pf);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Arc::strong_count(&ds) > 1 {
+        assert!(
+            Instant::now() < deadline,
+            "prefetch worker still holds the dataset after drop"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // a whole driver dropped mid-epoch joins the same way
+    let base: Arc<dyn Dataset> = Arc::new(CifarLike::new(CLASSES, DIM, 0.5, 32, 9));
+    let stream = MiniBatchStream::new(base.clone(), 20, 4, 9).unwrap(); // 5 batches/epoch
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(2);
+    let params = mlp.init(&mut rng);
+    let recipe = RecipeState::new(
+        PureRecipe::SrSteAdam { lam: 2e-4 },
+        &params,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-2,
+        AdamHp::default(),
+    );
+    let mut driver =
+        TrainDriver::new_dense(mlp, params, recipe, stream.clone(), DriverConfig::epochs(4))
+            .unwrap();
+    driver.step_once().unwrap();
+    driver.step_once().unwrap(); // mid-epoch: 2 of 5 batches consumed
+    drop(driver);
+    // ours + our stream clone remain; the driver's stream Arc (shared with
+    // its worker) must be gone once the worker exits
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Arc::strong_count(&base) > 2 {
+        assert!(
+            Instant::now() < deadline,
+            "driver drop did not release the prefetch worker"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stream edge geometry
+// ---------------------------------------------------------------------------
+
+/// Oversized batches, partial tails, single-example corpora, and zero-epoch
+/// runs must all hold the loader's invariants: no panics, and every example
+/// index visited exactly once per epoch.
+#[test]
+fn stream_edge_cases_cover_each_epoch_exactly() {
+    // batch_size > n_examples: one partial batch per epoch
+    let s = small_stream(3, 8, 1);
+    assert_eq!(s.batches_per_epoch(), 1);
+    for t in 1..=4 {
+        assert_eq!(s.train_batch(t, s.batch_size()).x.batch_size(), 3, "step {t}");
+    }
+
+    // single-example corpus
+    let s1 = small_stream(1, 4, 2);
+    assert_eq!(s1.batches_per_epoch(), 1);
+    let b = s1.train_batch(7, 4);
+    assert_eq!(b.x.batch_size(), 1);
+    assert_eq!(s1.epoch_order(6), vec![0]);
+
+    // non-divisible tail + exact coverage under shuffling
+    let s = small_stream(11, 4, 3); // 4 + 4 + 3
+    assert_eq!(s.batches_per_epoch(), 3);
+    for epoch in 0..3 {
+        let mut seen = Vec::new();
+        let mut sizes = Vec::new();
+        for b in 0..3 {
+            let idx = s.batch_indices(epoch, b);
+            sizes.push(idx.len());
+            seen.extend(idx);
+        }
+        assert_eq!(sizes, vec![4, 4, 3], "epoch {epoch}: batch sizes");
+        seen.sort_unstable();
+        assert_eq!(seen, (0..11).collect::<Vec<_>>(), "epoch {epoch}: coverage");
+    }
+    assert_ne!(s.epoch_order(0), s.epoch_order(1), "epochs must reshuffle");
+
+    // zero-epoch run: the driver takes no steps but still evaluates
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(4);
+    let params = mlp.init(&mut rng);
+    let recipe = RecipeState::new(
+        PureRecipe::DenseAdam,
+        &params,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-2,
+        AdamHp::default(),
+    );
+    let mut driver = TrainDriver::new_dense(
+        mlp,
+        params.clone(),
+        recipe,
+        small_stream(8, 4, 5),
+        DriverConfig::epochs(0),
+    )
+    .unwrap();
+    let report = driver.run().unwrap();
+    assert_eq!(report.steps, 0);
+    assert!(report.losses.is_empty());
+    assert_eq!(report.epochs_completed, 0);
+    assert!(report.final_eval.loss.is_finite());
+    assert_eq!(driver.dense_params().unwrap(), &params[..], "no step may move weights");
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint-resume
+// ---------------------------------------------------------------------------
+
+/// Kill a packed fine-tune run mid-epoch, resume from its last checkpoint,
+/// and the resumed trajectory — losses and final packed weights — must be
+/// bit-identical to the uninterrupted run (format-v2 on disk, extending
+/// packed_finetune.rs's coverage to the driver layer).
+#[test]
+fn finetune_driver_resumes_bit_identically_from_mid_epoch_checkpoint() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(13);
+    let params = mlp.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let hp = AdamHp::default();
+    let stream = small_stream(12, 4, 17); // 3 batches/epoch
+    let epochs = 3; // 9 steps total
+
+    // the uninterrupted reference run
+    let ft = FinetuneSession::pack(mlp.clone(), &params, ratio, 5e-3, hp).unwrap();
+    let mut uninterrupted =
+        TrainDriver::new_finetune(ft, stream.clone(), DriverConfig::epochs(epochs)).unwrap();
+    let full = uninterrupted.run().unwrap();
+    assert_eq!(full.steps, 9);
+
+    // the killed run: checkpoint at step 4 (mid second epoch), then drop
+    let path = tmp("ft_resume.ckpt");
+    let ft = FinetuneSession::pack(mlp.clone(), &params, ratio, 5e-3, hp).unwrap();
+    let mut killed = TrainDriver::new_finetune(
+        ft,
+        stream.clone(),
+        DriverConfig {
+            epochs,
+            checkpoint_every: 4,
+            checkpoint_path: Some(path.clone()),
+            ..DriverConfig::default()
+        },
+    )
+    .unwrap();
+    for _ in 0..4 {
+        killed.step_once().unwrap();
+    }
+    drop(killed);
+
+    // resume and finish
+    let mut resumed =
+        TrainDriver::resume_finetune(mlp.clone(), stream.clone(), DriverConfig::epochs(epochs), &path)
+            .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.current_step(), 4, "resume re-enters at the checkpointed step");
+    let rest = resumed.run().unwrap();
+    assert_eq!(rest.steps, 9);
+    assert_eq!(rest.losses.len(), 5, "resumed driver records from its resume point");
+    for (i, (a, b)) in full.losses[4..].iter().zip(&rest.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-resume loss {} diverged", i + 5);
+    }
+    assert_packed_eq(
+        resumed.session().unwrap().params(),
+        uninterrupted.session().unwrap().params(),
+        "resume",
+    );
+    assert_eq!(
+        resumed.session().unwrap().current_step(),
+        uninterrupted.session().unwrap().current_step()
+    );
+}
+
+/// The dense mode resumes the same way: a STEP run checkpointed *after* the
+/// phase switch continues its phase-2 trajectory (frozen v* included)
+/// bit-for-bit.
+#[test]
+fn dense_driver_resumes_bit_identically_across_the_phase_switch() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(19);
+    let params0 = mlp.init(&mut rng);
+    let recipe0 = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params0,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-2,
+        AdamHp::default(),
+    );
+    let stream = small_stream(12, 4, 23); // 3 batches/epoch
+    let epochs = 3;
+    let cfg_base = DriverConfig { epochs, switch_at: Some(2), ..DriverConfig::default() };
+
+    let mut uninterrupted = TrainDriver::new_dense(
+        mlp.clone(),
+        params0.clone(),
+        recipe0.clone(),
+        stream.clone(),
+        cfg_base.clone(),
+    )
+    .unwrap();
+    let full = uninterrupted.run().unwrap();
+    assert_eq!(full.switch_step, 2);
+
+    let path = tmp("dense_resume.ckpt");
+    let mut killed = TrainDriver::new_dense(
+        mlp.clone(),
+        params0,
+        recipe0,
+        stream.clone(),
+        DriverConfig {
+            checkpoint_every: 5,
+            checkpoint_path: Some(path.clone()),
+            ..cfg_base.clone()
+        },
+    )
+    .unwrap();
+    for _ in 0..5 {
+        killed.step_once().unwrap();
+    }
+    drop(killed);
+
+    let mut resumed =
+        TrainDriver::resume_dense(mlp.clone(), stream.clone(), cfg_base, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.current_step(), 5);
+    assert!(resumed.recipe().unwrap().in_phase2(), "phase survives the checkpoint");
+    let rest = resumed.run().unwrap();
+    for (i, (a, b)) in full.losses[5..].iter().zip(&rest.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-resume loss {} diverged", i + 6);
+    }
+    assert_eq!(
+        resumed.dense_params().unwrap(),
+        uninterrupted.dense_params().unwrap(),
+        "final weights"
+    );
+    assert_eq!(
+        resumed.recipe().unwrap().v_star,
+        uninterrupted.recipe().unwrap().v_star,
+        "frozen v*"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// loop features
+// ---------------------------------------------------------------------------
+
+/// Early stopping fires on a stalled eval loss and halts the run before its
+/// configured epochs.
+#[test]
+fn early_stop_halts_a_stalled_run() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(29);
+    let params = mlp.init(&mut rng);
+    // lr = 0: the trajectory cannot improve, so eval loss stalls immediately
+    let recipe = RecipeState::new(
+        PureRecipe::DenseAdam,
+        &params,
+        mlp.ratios(NmRatio::new(2, 4)),
+        0.0,
+        AdamHp::default(),
+    );
+    let mut driver = TrainDriver::new_dense(
+        mlp,
+        params,
+        recipe,
+        small_stream(12, 4, 31),
+        DriverConfig {
+            epochs: 5, // 15 steps if never stopped
+            eval_every: 1,
+            early_stop: Some(EarlyStop { patience: 2, min_delta: 0.0 }),
+            ..DriverConfig::default()
+        },
+    )
+    .unwrap();
+    let report = driver.run().unwrap();
+    assert!(report.stopped_early);
+    // eval 1 sets the best, evals 2 and 3 exhaust patience
+    assert_eq!(report.steps, 3);
+    assert_eq!(report.evals.len(), 3);
+}
+
+/// The early-stop counters (best eval loss, evals since best) survive a
+/// checkpoint: a resumed run stops at exactly the step the uninterrupted
+/// run does, instead of resetting its patience window.
+#[test]
+fn early_stop_state_survives_checkpoint_resume() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(43);
+    let params = mlp.init(&mut rng);
+    let mk_recipe = |params: &[Tensor]| {
+        // lr = 0: eval loss stalls, so the stop step is fully determined by
+        // the patience accounting
+        RecipeState::new(
+            PureRecipe::DenseAdam,
+            params,
+            mlp.ratios(NmRatio::new(2, 4)),
+            0.0,
+            AdamHp::default(),
+        )
+    };
+    let stream = small_stream(12, 4, 47);
+    let cfg = DriverConfig {
+        epochs: 5, // 15 steps if never stopped
+        eval_every: 1,
+        early_stop: Some(EarlyStop { patience: 3, min_delta: 0.0 }),
+        ..DriverConfig::default()
+    };
+
+    let mut uninterrupted = TrainDriver::new_dense(
+        mlp.clone(),
+        params.clone(),
+        mk_recipe(&params),
+        stream.clone(),
+        cfg.clone(),
+    )
+    .unwrap();
+    let full = uninterrupted.run().unwrap();
+    assert!(full.stopped_early);
+    assert_eq!(full.steps, 4, "eval 1 sets best, evals 2-4 exhaust patience");
+
+    // kill after 2 steps (1 non-improving eval already on the books)
+    let path = tmp("earlystop_resume.ckpt");
+    let mut killed = TrainDriver::new_dense(
+        mlp.clone(),
+        params.clone(),
+        mk_recipe(&params),
+        stream.clone(),
+        DriverConfig {
+            checkpoint_every: 2,
+            checkpoint_path: Some(path.clone()),
+            ..cfg.clone()
+        },
+    )
+    .unwrap();
+    for _ in 0..2 {
+        killed.step_once().unwrap();
+    }
+    drop(killed);
+
+    let mut resumed = TrainDriver::resume_dense(mlp, stream, cfg, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let rest = resumed.run().unwrap();
+    assert!(rest.stopped_early);
+    assert_eq!(
+        rest.steps, full.steps,
+        "resumed run must stop at the same step as the uninterrupted one"
+    );
+}
+
+/// The end of the pipeline: a dense STEP run hands off to a BatchServer
+/// whose packed serving path is bit-identical to the masked dense forward
+/// of the driver's final export.
+#[test]
+fn driver_handoff_serves_the_final_masked_weights() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(37);
+    let params = mlp.init(&mut rng);
+    let recipe = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-2,
+        AdamHp::default(),
+    );
+    let stream = small_stream(16, 8, 41);
+    let mut driver = TrainDriver::new_dense(
+        mlp.clone(),
+        params,
+        recipe,
+        stream.clone(),
+        DriverConfig { epochs: 2, switch_at: Some(2), ..DriverConfig::default() },
+    )
+    .unwrap();
+    driver.run().unwrap();
+    let masked = driver
+        .recipe()
+        .unwrap()
+        .final_sparse_params(driver.dense_params().unwrap());
+    let mut server = driver.into_server().unwrap();
+    let eval = stream.eval_batches(8);
+    let (x, labels) = xy(&eval[0]);
+    let served = server.serve(x).unwrap();
+    assert_eq!(served, mlp.forward(&masked, x), "served logits");
+    let acc = server.accuracy(x, labels).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
