@@ -1,96 +1,161 @@
-//! End-to-end driver: train the multi-layer transformer LM (`lm_e2e`:
-//! 6 layers, d=256, 8 heads, seq 128 — the largest model in the artifact
-//! zoo) with the full STEP recipe on the synthetic corpus, exercising every
-//! layer of the stack:
+//! End-to-end token-model driver — fully **offline**, no PJRT artifacts:
+//! the pure-Rust [`TokenEncoder`] (fused-QKV attention, exact softmax
+//! backprop) runs the paper's central workload through the whole STEP
+//! pipeline on the synthetic corpus:
 //!
-//!   L1  Pallas-authored kernels lowered into the HLO artifacts
-//!   L2  the JAX train-step graph (dense_adam → step_phase2)
-//!   L3  this coordinator: data gen, AutoSwitch, phase machine, telemetry
+//!   1. dense Adam precondition → AutoSwitch fires → frozen-v* mask
+//!      learning (`RecipeState` + the STEP recipe, driven by the generic
+//!      `TrainDriver` over a seed-shuffled `MiniBatchStream`),
+//!   2. phase-2 exit → pack: the four projection matrices of every block
+//!      compress to N:M storage (`FinetuneSession::from_phase2_exit`),
+//!   3. packed frozen-mask fine-tuning (compact gradients, `n_values()`
+//!      optimizer state), and
+//!   4. `BatchServer` serving from the compressed form — with the served
+//!      logits bit-identical to the dense masked forward.
 //!
-//! Logs the loss curve + variance telemetry to results/e2e_lm.csv and prints
-//! eval perplexity before/during/after. Recorded in EXPERIMENTS.md §E2E.
+//! The LM objective is next-token prediction restricted to the window's
+//! last position (`data::NextTokenTask`), which makes it a classification
+//! task over the vocabulary — the same loop as every other model.
 //!
 //! ```bash
-//! cargo run --release --example e2e_lm           # ~300 steps, a few minutes
-//! cargo run --release --example e2e_lm -- 80     # shorter smoke run
+//! cargo run --release --example e2e_lm           # 3 epochs, ~a minute
+//! cargo run --release --example e2e_lm -- 1      # shorter smoke run
 //! ```
 
+use std::sync::Arc;
+
+use step_nm::coordinator::{DriverConfig, FinetuneSession, SwitchPolicy, TrainDriver};
+use step_nm::data::{Dataset, MiniBatchStream, NextTokenTask, SyntheticCorpus};
+use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
 use step_nm::prelude::*;
 use step_nm::telemetry::write_csv;
 
 fn main() -> anyhow::Result<()> {
-    let steps: usize = std::env::args()
+    let epochs: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(300);
-    let rt = Runtime::from_dir("artifacts")?;
-    let cfg = ExperimentConfig::builder("lm_e2e")
-        .recipe(RecipeKind::Step)
-        .sparsity(2, 4)
-        .steps(steps)
-        .lr(2e-4) // phase-2 amplification is ~1/sqrt(v*): 5e-4 oscillates late on this LM
-        .eval_every((steps / 5).max(1))
-        .eval_batches(4)
-        .build();
-    let mut session = Session::new(&rt, &cfg)?;
-    let info = session.model_info().clone();
+        .unwrap_or(3)
+        .max(1);
+    let ratio = NmRatio::new(2, 4);
+
+    // A GPT-2-analog-in-miniature over the Zipf/bigram corpus: vocab 64,
+    // d=32, 4 heads, ffn 64, 2 blocks, windows of 16 tokens.
+    let corpus = SyntheticCorpus::new(64, 16, 40_000, 4_000, 7);
+    let enc = TokenEncoder::next_token(64, 32, 4, 64, 2, 16);
+    let task = NextTokenTask::new(corpus);
+    let ds: Arc<dyn Dataset> = Arc::new(task);
+    let stream = MiniBatchStream::new(ds, 2_048, 32, 7)?; // 64 batches/epoch
+
+    let mut rng = Pcg64::new(7);
+    let params = enc.init(&mut rng);
+    let n_scalars: usize = params.iter().map(|p| p.numel()).sum();
     println!(
-        "e2e: {} params across {} tensors ({} sparse), batch {}, seq {:?}",
-        info.dim,
-        info.n_params(),
-        info.n_sparse(),
-        info.batch,
-        info.seq
+        "e2e: encoder with {} tensors / {} scalars ({} attention-shaped sparse), \
+         {} examples/epoch @ batch {}",
+        enc.n_params(),
+        n_scalars,
+        4 * enc.n_blocks,
+        stream.n_examples(),
+        stream.batch_size()
     );
 
+    // ---- 1. STEP training: dense precondition → AutoSwitch → mask learning
+    let recipe = RecipeState::for_model(
+        PureRecipe::Step { lam: 2e-4 },
+        &enc,
+        &params,
+        ratio,
+        2e-3,
+        AdamHp::default(),
+    );
+    let total_steps = stream.steps_for(epochs);
+    let mut driver = TrainDriver::new_dense(
+        enc.clone(),
+        params,
+        recipe,
+        stream.clone(),
+        DriverConfig {
+            epochs,
+            eval_every: (total_steps / 4).max(1),
+            switch: SwitchPolicy::Auto {
+                option: step_nm::autoswitch::ZOption::Arithmetic,
+                clip: Some(step_nm::autoswitch::Clip::default_for(total_steps)),
+            },
+            ..DriverConfig::default()
+        },
+    )?;
     let t0 = std::time::Instant::now();
-    let report = session.run()?;
-    let wall = t0.elapsed().as_secs_f64();
+    let report = driver.run()?;
+    let train_secs = t0.elapsed().as_secs_f64();
 
-    // dump loss + variance-telemetry curve
     let rows: Vec<Vec<f64>> = report
-        .trace
-        .points
+        .losses
         .iter()
-        .map(|p| {
+        .zip(&report.var_stats)
+        .enumerate()
+        .map(|(i, (loss, vs))| {
+            // switch_step is the first mask-learning step under either policy
+            let phase2 = report.switch_step > 0 && i + 1 >= report.switch_step;
             vec![
-                p.t as f64,
-                p.loss,
-                p.stat.v_l1,
-                p.stat.dv_l1 / info.dim as f64,
-                if p.phase2 { 1.0 } else { 0.0 },
+                (i + 1) as f64,
+                *loss,
+                vs.v_l1,
+                vs.dv_l1 / n_scalars as f64,
+                if phase2 { 1.0 } else { 0.0 },
             ]
         })
         .collect();
-    write_csv(
-        "results/e2e_lm.csv",
-        &["step", "loss", "v_l1", "z_t", "phase2"],
-        &rows,
-    )?;
+    write_csv("results/e2e_lm.csv", &["step", "loss", "v_l1", "z_t", "phase2"], &rows)?;
 
-    println!("\n=== e2e summary ===");
-    println!("steps            : {steps} in {wall:.1}s ({:.2} s/step)", wall / steps as f64);
+    println!("\n=== STEP training ===");
+    println!("steps            : {} in {train_secs:.1}s", report.steps);
     println!("switch step      : {} (AutoSwitch)", report.switch_step);
-    for (t, ppl) in &report.trace.evals {
-        println!("eval @ step {t:>5} : ppl {ppl:.2}");
+    for ev in &report.evals {
+        println!("eval @ step {:>4} : next-token acc {:.3}, loss {:.4}", ev.step, ev.metric, ev.loss);
     }
     println!(
-        "final perplexity : {:.2} (loss {:.4})",
-        report.final_eval.primary, report.final_eval.loss
+        "final eval       : next-token acc {:.3}, loss {:.4}",
+        report.final_eval.metric, report.final_eval.loss
     );
-    println!(
-        "first→final loss : {:.3} → {:.3}",
-        report.trace.points.first().map(|p| p.loss).unwrap_or(f64::NAN),
-        report.tail_loss
-    );
-    let st = rt.stats();
-    println!(
-        "runtime          : {} executions, execute {:.1}s, convert {:.1}s, compile {:.1}s",
-        st.executions, st.execute_secs, st.convert_secs, st.compile_secs
-    );
+    anyhow::ensure!(report.switch_step > 0, "AutoSwitch never fired");
     anyhow::ensure!(
-        report.tail_loss < report.trace.points[0].loss,
+        report.final_eval.loss < report.losses[0],
         "training did not reduce the loss"
+    );
+
+    // ---- 2 + 3. phase-2 exit → pack → packed frozen-mask fine-tune -------
+    let final_params = driver.dense_params().expect("dense mode").to_vec();
+    let recipe_state = driver.recipe().expect("dense mode").clone();
+    let ft = FinetuneSession::from_phase2_exit(enc.clone(), &final_params, &recipe_state, 1e-3)?;
+    println!("\n=== packed fine-tune ===");
+    println!(
+        "optimizer state  : {} packed scalars vs {} dense ({:.1}%)",
+        ft.optimizer_values(),
+        ft.dense_optimizer_values(),
+        100.0 * ft.optimizer_compression()
+    );
+    let mut ft_driver = TrainDriver::new_finetune(ft, stream.clone(), DriverConfig::epochs(1))?;
+    let ft_report = ft_driver.run()?;
+    println!(
+        "fine-tuned 1 epoch: eval acc {:.3}, loss {:.4}",
+        ft_report.final_eval.metric, ft_report.final_eval.loss
+    );
+
+    // ---- 4. serve from the compressed form --------------------------------
+    let mut server = ft_driver.into_server()?;
+    let eval = stream.eval_batches(stream.batch_size());
+    let mut served = 0usize;
+    for b in eval.iter().take(8) {
+        let step_nm::data::BatchX::Tokens { ids, batch, seq } = &b.x else {
+            anyhow::bail!("token stream expected")
+        };
+        let x = Tensor::new(&[*batch, *seq], ids.iter().map(|&i| i as f32).collect());
+        served += server.serve(&x)?.rows_2d();
+    }
+    println!("\n=== serving ===");
+    println!(
+        "served {served} sequences from packed weights ({:.1}% of dense bytes)",
+        100.0 * server.compression()
     );
     println!("curve written to results/e2e_lm.csv ✓");
     Ok(())

@@ -5,19 +5,21 @@
 //! `BENCH_recipes.json`), the packed-inference suite (compressed N:M
 //! forward vs dense masked forward, recorded to `BENCH_inference.json`),
 //! the packed fine-tune suite (compact-gradient frozen-mask step vs dense
-//! masked step, recorded to `BENCH_finetune.json`), and the streaming-driver
-//! suite (TrainDriver epoch vs manual batch-at-a-time loop, recorded to
+//! masked step, recorded to `BENCH_finetune.json`), the packed-attention
+//! suite (compressed-projection [`TokenEncoder`] forward vs dense masked,
+//! recorded to `BENCH_attention.json`), and the streaming-driver suite
+//! (TrainDriver epoch vs manual batch-at-a-time loop, recorded to
 //! `BENCH_train.json`).
 //!
 //! Pass `--smoke` (or set `BENCH_SMOKE=1`) for a reduced-iteration run that
-//! still executes every bit-equality gate and writes all four JSON files —
+//! still executes every bit-equality gate and writes all five JSON files —
 //! the CI smoke job uses it to keep the comparison suites honest.
 
 use step_nm::coordinator::{BatchServer, DriverConfig, FinetuneSession, TrainDriver};
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
 use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
 use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
-use step_nm::model::Mlp;
+use step_nm::model::{Mlp, SparseModel, TokenEncoder};
 use step_nm::optim::{
     adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
 };
@@ -311,6 +313,84 @@ fn bench_packed_finetune(
     };
     println!("{}", r_dense.row());
     println!("{}  (packed speedup {:.2}x)", r_packed.row(), cmp.speedup());
+    out.push(cmp);
+}
+
+/// Dense-vs-packed encoder forward on attention shapes — `BENCH_attention.json`.
+///
+/// The baseline is the dense *masked* forward of the pure-Rust
+/// [`TokenEncoder`] (fused-QKV / output / FFN projections carry the learned
+/// 2:4 mask as explicit zeros); the packed side runs the same encoder with
+/// those four projections per block in compressed N:M storage. Logits are
+/// asserted **bit-identical** across batch sizes before anything is timed,
+/// and the serving row goes through the threaded [`BatchServer`] shards —
+/// so the comparison can never silently measure two different computations.
+fn bench_attention(h: Harness, rng: &mut Pcg64, out: &mut Vec<Comparison>) {
+    // BERT-analog block geometry scaled to bench time: d=64, 4 heads,
+    // ffn 256, 2 blocks, seq 32 — every sparse tensor is attention-shaped
+    let enc = TokenEncoder::classifier(256, 64, 4, 256, 2, 32, 8);
+    print_header(&format!(
+        "packed attention — encoder d={} heads={} ffn={} blocks={} seq={} @ 2:4",
+        enc.d_model, enc.n_heads, enc.d_ff, enc.n_blocks, enc.max_seq
+    ));
+    let params = enc.init(rng);
+    let ratio = NmRatio::new(2, 4);
+    let masked = enc.masked_params(&params, ratio);
+    let packed = enc.pack_params(&params, ratio);
+    let stored: usize = packed.iter().map(|p| p.stored_bytes()).sum();
+    let dense_bytes: usize = packed.iter().map(|p| p.dense_bytes()).sum();
+    println!(
+        "packed weights: {:.2} MiB vs dense {:.2} MiB ({:.1}% of dense; embeddings/head stay dense)",
+        stored as f64 / (1 << 20) as f64,
+        dense_bytes as f64 / (1 << 20) as f64,
+        100.0 * stored as f64 / dense_bytes as f64
+    );
+    let token_batch = |rng: &mut Pcg64, bsz: usize| -> Tensor {
+        let ids: Vec<f32> = (0..bsz * enc.max_seq).map(|_| rng.below(enc.vocab) as f32).collect();
+        Tensor::new(&[bsz, enc.max_seq], ids)
+    };
+    // correctness gate: bit-identical logits across kernel paths
+    for &b in &[1usize, 8, 19] {
+        let x = token_batch(rng, b);
+        assert_eq!(
+            enc.forward(&masked, &x),
+            enc.forward_packed(&packed, &x),
+            "packed encoder forward diverged from dense masked at batch {b}"
+        );
+    }
+    for &b in &[1usize, 8, 32] {
+        let x = token_batch(rng, b);
+        let r_dense =
+            h.run(&format!("dense masked enc fwd b={b}"), || enc.forward(&masked, &x));
+        let r_packed = h.run(&format!("packed enc fwd       b={b}"), || {
+            enc.forward_packed(&packed, &x)
+        });
+        let cmp = Comparison {
+            name: format!("attention/fwd_b{b}"),
+            baseline_mean: r_dense.mean(),
+            fused_mean: r_packed.mean(),
+        };
+        println!("{}", r_dense.row());
+        println!("{}  (packed speedup {:.2}x)", r_packed.row(), cmp.speedup());
+        out.push(cmp);
+    }
+    // the serving path: pack once, serve repeated token batches
+    let mut server = BatchServer::new(enc.clone(), packed.clone()).expect("server");
+    let xb = token_batch(rng, 64);
+    assert_eq!(
+        enc.forward(&masked, &xb),
+        server.serve(&xb).expect("serve"),
+        "encoder serve path diverged"
+    );
+    let r_dense = h.run("dense masked enc fwd b=64", || enc.forward(&masked, &xb));
+    let r_serve = h.run("packed enc serve     b=64", || server.serve(&xb).expect("serve"));
+    let cmp = Comparison {
+        name: "attention/serve_b64".into(),
+        baseline_mean: r_dense.mean(),
+        fused_mean: r_serve.mean(),
+    };
+    println!("{}", r_dense.row());
+    println!("{}  (serve speedup {:.2}x)", r_serve.row(), cmp.speedup());
     out.push(cmp);
 }
 
@@ -615,6 +695,22 @@ fn main() {
     ) {
         Ok(()) => println!("[json] wrote BENCH_finetune.json"),
         Err(e) => eprintln!("[json] could not write BENCH_finetune.json: {e}"),
+    }
+
+    // ---- packed attention forward (encoder shapes, 2:4) ------------------
+    let mut attention = Vec::new();
+    bench_attention(suite_h, &mut rng, &mut attention);
+    let mean = attention.iter().map(Comparison::speedup).sum::<f64>()
+        / attention.len().max(1) as f64;
+    println!("\nmean packed speedup over dense masked encoder forward: {mean:.2}x");
+    match write_comparison_json(
+        "BENCH_attention.json",
+        "packed N:M encoder forward vs dense masked forward (2:4, fused-QKV/out/FFN projections packed, embeddings/head dense; logits asserted bit-identical in-suite before timing; serve row = threaded batch serving)",
+        &attention,
+        true, // logits asserted bit-identical in-suite before timing
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_attention.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_attention.json: {e}"),
     }
 
     // ---- streaming driver vs manual batch-at-a-time loop -----------------

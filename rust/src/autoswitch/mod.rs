@@ -169,6 +169,27 @@ impl AutoSwitch {
         }
     }
 
+    /// The sliding-window samples, oldest first — the checkpointing
+    /// accessor the streaming driver uses so an Auto-switch run resumes
+    /// with its window intact.
+    pub fn window_samples(&self) -> Vec<f64> {
+        self.samples.iter().copied().collect()
+    }
+
+    /// The running window sum. Checkpoints must store it verbatim: the sum
+    /// carries pop-front subtraction drift, so recomputing it from the
+    /// samples would not be bit-identical to the uninterrupted run.
+    pub fn window_sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Restore a window written by [`window_samples`](Self::window_samples)
+    /// / [`window_sum`](Self::window_sum).
+    pub fn restore_window(&mut self, samples: &[f64], sum: f64) {
+        self.samples = samples.iter().copied().collect();
+        self.sum = sum;
+    }
+
     fn z_of(&self, stat: SwitchStat) -> f64 {
         match self.option {
             ZOption::Arithmetic => stat.dv_l1 / self.d,

@@ -12,6 +12,22 @@
 //! engine through phase switching, periodic masked evaluation, format-v2
 //! checkpoints, and the final [`BatchServer`] handoff.
 //!
+//! The driver is generic over [`SparseModel`]: the MLP analogs consume
+//! feature batches, the [`TokenEncoder`](crate::model::TokenEncoder)
+//! consumes token batches (ids are carried losslessly into the model's f32
+//! input tensor) — same loop, same guarantees.
+//!
+//! **Phase switching.** STEP's dense phase ends either at a fixed step
+//! ([`SwitchPolicy::At`], the hand-tuned baseline) or when the paper's
+//! AutoSwitch variance-concentration test fires on the live [`VarStats`]
+//! telemetry ([`SwitchPolicy::Auto`], Algorithm 2): each precondition step
+//! feeds the detector, and when it fires the recipe freezes `v*` so mask
+//! learning starts at the next step — exactly the semantics of running
+//! [`AutoSwitch`] by hand over `RecipeState::step`, which
+//! `rust/tests/train_driver.rs` pins in lock step. The detector's sliding
+//! window is checkpointed (`drv.asw`), so resumed Auto runs fire at the
+//! same step as uninterrupted ones.
+//!
 //! **Determinism contract.** A driver run is bit-for-bit equal — losses,
 //! weights, Adam state, [`VarStats`] telemetry — to a hand-rolled loop
 //! calling the engine directly on `stream.train_batch(t, bs)` for
@@ -23,12 +39,14 @@
 //! bench --bench substrate` gates `BENCH_train.json` on the same equality
 //! before timing driver overhead against the manual loop.
 
+use crate::autoswitch::{AutoSwitch, Clip, SwitchPolicy as SwitchDetector, ZOption};
 use crate::checkpoint::{join_u64, split_u64, Checkpoint};
 use crate::data::{Batch, BatchX, BatchY, MiniBatchStream};
 use crate::data::Dataset;
-use crate::model::Mlp;
-use crate::optim::{RecipeState, VarStats};
+use crate::model::{Mlp, SparseModel};
+use crate::optim::{PureRecipe, RecipeState, VarStats};
 use crate::tensor::{accuracy_from_logits, cross_entropy_with_grad, Tensor};
+use std::borrow::Cow;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -42,6 +60,31 @@ use super::serve::BatchServer;
 pub struct EarlyStop {
     pub patience: usize,
     pub min_delta: f64,
+}
+
+/// When a dense STEP run leaves its precondition phase.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SwitchPolicy {
+    /// Never switch inside this run (non-STEP recipes, or a recipe that
+    /// already switched before the driver was built).
+    #[default]
+    None,
+    /// Enter phase 2 *before* the step with this 1-based number (so
+    /// `At(s)` means step `s` is the first mask-learning step) — the
+    /// hand-tuned baseline. [`DriverConfig::switch_at`] is shorthand.
+    At(usize),
+    /// Consult the paper's [`AutoSwitch`] (Algorithm 2) on each
+    /// precondition step's variance telemetry; when it fires at step `t`,
+    /// `v` is frozen as `v*` and step `t + 1` starts mask learning —
+    /// identical semantics to running the detector by hand between engine
+    /// steps. `eps` and the window length come from the recipe's Adam
+    /// hyperparameters, `d` from the model's parameter count.
+    Auto {
+        /// Which Z_t estimator Algorithm 2 averages.
+        option: ZOption,
+        /// Optional `[T_min, T_max]` bound for tight budgets.
+        clip: Option<Clip>,
+    },
 }
 
 /// Loop shape of one [`TrainDriver`] run. Epoch geometry (example count,
@@ -60,10 +103,12 @@ pub struct DriverConfig {
     pub checkpoint_path: Option<PathBuf>,
     /// Optional eval-loss early stopping.
     pub early_stop: Option<EarlyStop>,
-    /// Dense STEP recipes: enter phase 2 *before* the step with this
-    /// 1-based number (so `switch_at: Some(s)` means step `s` is the first
-    /// mask-learning step). Ignored by the fine-tune mode.
+    /// Shorthand for `switch: SwitchPolicy::At(s)` (kept as the common
+    /// fixed-step spelling; setting both is a configuration error).
+    /// Ignored by the fine-tune mode.
     pub switch_at: Option<usize>,
+    /// Full phase-switch policy (fixed step or AutoSwitch-driven).
+    pub switch: SwitchPolicy,
 }
 
 impl Default for DriverConfig {
@@ -75,6 +120,7 @@ impl Default for DriverConfig {
             checkpoint_path: None,
             early_stop: None,
             switch_at: None,
+            switch: SwitchPolicy::None,
         }
     }
 }
@@ -111,23 +157,29 @@ pub struct DriverReport {
     pub evals: Vec<EvalPoint>,
     /// The final evaluation, always computed.
     pub final_eval: EvalPoint,
-    /// 1-based step the STEP phase switch fired at (0 = none).
+    /// 1-based **first mask-learning step** (0 = no switch) — the same
+    /// convention under both [`SwitchPolicy::At`] (the configured step) and
+    /// [`SwitchPolicy::Auto`] (the step after the detector fired), so a
+    /// recorded Auto run replays exactly as `SwitchPolicy::At(switch_step)`
+    /// whenever the detector fired before the run's final step (a fire *on*
+    /// the final step yields `switch_step = steps + 1`: `v*` is frozen but
+    /// no mask-learning step executed inside this run).
     pub switch_step: usize,
     /// Whether early stopping ended the run before its last epoch.
     pub stopped_early: bool,
 }
 
 /// Which engine the driver steps.
-enum Mode {
-    /// Dense recipe training (any [`PureRecipe`](crate::optim::PureRecipe),
-    /// STEP phase switch included).
+enum Mode<M: SparseModel> {
+    /// Dense recipe training (any [`PureRecipe`], STEP phase switch
+    /// included).
     Dense {
-        mlp: Mlp,
+        model: M,
         params: Vec<Tensor>,
         recipe: RecipeState,
     },
     /// Packed frozen-mask fine-tuning.
-    Finetune(FinetuneSession),
+    Finetune(FinetuneSession<M>),
 }
 
 /// The driver-position half of a checkpoint (`drv.meta`): step counters
@@ -141,14 +193,21 @@ struct DriverMeta {
     stopped_early: bool,
 }
 
-/// Pull the feature matrix + class labels out of a batch; the pure-Rust
-/// engines train MLP classifiers, so anything else is a config error.
-fn features_batch(batch: &Batch) -> anyhow::Result<(&Tensor, &[usize])> {
-    let BatchX::Features(x) = &batch.x else {
-        anyhow::bail!("TrainDriver drives the pure-Rust MLP engine; the stream must produce feature batches (token datasets need the PJRT session)")
+/// Pull the model input + class labels out of a batch. Feature batches are
+/// borrowed as-is; token batches carry their ids losslessly into an f32
+/// tensor `[batch, seq]` (the token models' input convention). Targets must
+/// be classes — wrap LM corpora in
+/// [`NextTokenTask`](crate::data::NextTokenTask) first.
+fn model_batch(batch: &Batch) -> anyhow::Result<(Cow<'_, Tensor>, &[usize])> {
+    let x: Cow<'_, Tensor> = match &batch.x {
+        BatchX::Features(t) => Cow::Borrowed(t),
+        BatchX::Tokens { ids, batch: b, seq } => Cow::Owned(Tensor::new(
+            &[*b, *seq],
+            ids.iter().map(|&i| i as f32).collect(),
+        )),
     };
     let BatchY::Classes(y) = &batch.y else {
-        anyhow::bail!("TrainDriver needs class-labeled batches (regression targets are not supported)")
+        anyhow::bail!("TrainDriver needs class-labeled batches (wrap LM corpora in data::NextTokenTask; regression targets are not supported)")
     };
     Ok((x, y))
 }
@@ -162,14 +221,18 @@ fn features_batch(batch: &Batch) -> anyhow::Result<(&Tensor, &[usize])> {
 /// [`run`](Self::run) for the whole configured loop or step manually with
 /// [`step_once`](Self::step_once). [`into_server`](Self::into_server) ends
 /// the pipeline: train → (pack) → serve.
-pub struct TrainDriver {
-    mode: Mode,
+pub struct TrainDriver<M: SparseModel = Mlp> {
+    mode: Mode<M>,
     stream: Arc<MiniBatchStream>,
     prefetcher: Prefetcher,
     cfg: DriverConfig,
+    /// The resolved phase-switch policy (`switch_at` folded in).
+    switch_policy: SwitchPolicy,
+    /// Live AutoSwitch detector ([`SwitchPolicy::Auto`], dense mode only).
+    autoswitch: Option<AutoSwitch>,
     /// 1-based global step already completed.
     t: usize,
-    /// 1-based step the phase switch fired at (0 = none yet).
+    /// 1-based first mask-learning step (0 = none yet).
     switch_step: usize,
     losses: Vec<f64>,
     var_stats: Vec<VarStats>,
@@ -179,9 +242,9 @@ pub struct TrainDriver {
     stopped_early: bool,
 }
 
-impl TrainDriver {
+impl<M: SparseModel> TrainDriver<M> {
     fn build(
-        mode: Mode,
+        mode: Mode<M>,
         stream: MiniBatchStream,
         cfg: DriverConfig,
         t: usize,
@@ -192,23 +255,60 @@ impl TrainDriver {
             "TrainDriver needs a classification stream, got kind {:?}",
             stream.kind()
         );
-        // kind() == "classify" also holds for token classifiers (GLUE
-        // analogs), which the pure-Rust MLP engine cannot train — probe one
-        // example so the config error surfaces at construction, not on the
-        // first step mid-pipeline (the probe is pure, so it cannot perturb
-        // the batch stream)
+        // probe one example so a config error (regression targets, token
+        // targets without a NextTokenTask wrapper, a batch the model rejects
+        // — wrong width, or non-token features fed to a token model) surfaces
+        // at construction, not on the first step mid-pipeline (the probe is
+        // pure, so it cannot perturb the batch stream)
         let probe = stream.train_examples(&[0]);
-        anyhow::ensure!(
-            matches!(probe.x, BatchX::Features(_)) && matches!(probe.y, BatchY::Classes(_)),
-            "TrainDriver drives the pure-Rust MLP engine; {:?} produces token batches (token models need the PJRT session)",
-            stream.name()
-        );
+        let (px, _) = model_batch(&probe).map_err(|e| {
+            anyhow::anyhow!("stream {:?} is not drivable: {e}", stream.name())
+        })?;
+        let model: &M = match &mode {
+            Mode::Dense { model, .. } => model,
+            Mode::Finetune(session) => session.model(),
+        };
+        model.validate_input(&px).map_err(|e| {
+            anyhow::anyhow!("stream {:?} does not fit the model: {e}", stream.name())
+        })?;
         if cfg.checkpoint_every > 0 {
             anyhow::ensure!(
                 cfg.checkpoint_path.is_some(),
                 "checkpoint_every set without a checkpoint_path"
             );
         }
+        let switch_policy = match (cfg.switch_at, cfg.switch) {
+            (Some(_), p) if p != SwitchPolicy::None => {
+                anyhow::bail!("set either switch_at or switch, not both")
+            }
+            (Some(s), _) => SwitchPolicy::At(s),
+            (None, p) => p,
+        };
+        let autoswitch = match (&switch_policy, &mode) {
+            (SwitchPolicy::Auto { option, clip }, Mode::Dense { params, recipe, .. }) => {
+                anyhow::ensure!(
+                    matches!(
+                        recipe.recipe,
+                        PureRecipe::Step { .. } | PureRecipe::StepVarianceUpdated { .. }
+                    ),
+                    "SwitchPolicy::Auto drives the STEP phase switch; recipe {:?} has no precondition phase",
+                    recipe.recipe.name()
+                );
+                let d: usize = params.iter().map(Tensor::numel).sum();
+                let mut asw =
+                    AutoSwitch::new(d, recipe.hp.eps as f64, recipe.hp.beta2 as f64, *option);
+                if let Some(c) = clip {
+                    asw = asw.with_clip(*c);
+                }
+                Some(asw)
+            }
+            (SwitchPolicy::Auto { .. }, Mode::Finetune(_)) => {
+                anyhow::bail!(
+                    "SwitchPolicy::Auto applies to dense STEP training; fine-tune mode has no phase switch"
+                )
+            }
+            _ => None,
+        };
         let stream = Arc::new(stream);
         let ds: Arc<dyn Dataset> = stream.clone();
         let prefetcher = Prefetcher::new(ds, stream.batch_size());
@@ -217,6 +317,8 @@ impl TrainDriver {
             stream,
             prefetcher,
             cfg,
+            switch_policy,
+            autoswitch,
             t,
             switch_step,
             losses: Vec::new(),
@@ -231,7 +333,7 @@ impl TrainDriver {
     /// [`build`](Self::build) from a checkpoint's [`DriverMeta`] — restores
     /// the step counters and the early-stop state.
     fn build_resumed(
-        mode: Mode,
+        mode: Mode<M>,
         stream: MiniBatchStream,
         cfg: DriverConfig,
         meta: DriverMeta,
@@ -245,17 +347,17 @@ impl TrainDriver {
 
     /// Drive dense recipe training (`RecipeState::step`) over the stream.
     pub fn new_dense(
-        mlp: Mlp,
+        model: M,
         params: Vec<Tensor>,
         recipe: RecipeState,
         stream: MiniBatchStream,
         cfg: DriverConfig,
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(
-            params.len() == mlp.n_params(),
-            "driver got {} params, MLP wants {}",
+            params.len() == model.n_params(),
+            "driver got {} params, model wants {}",
             params.len(),
-            mlp.n_params()
+            model.n_params()
         );
         anyhow::ensure!(
             recipe.m.len() == params.len(),
@@ -265,13 +367,13 @@ impl TrainDriver {
         );
         // a recipe already in phase 2 never re-fires the switch; 0 means
         // "no switch inside this run", matching the session's convention
-        Self::build(Mode::Dense { mlp, params, recipe }, stream, cfg, 0, 0)
+        Self::build(Mode::Dense { model, params, recipe }, stream, cfg, 0, 0)
     }
 
     /// Drive packed frozen-mask fine-tuning (`FinetuneSession::step`) over
     /// the stream.
     pub fn new_finetune(
-        session: FinetuneSession,
+        session: FinetuneSession<M>,
         stream: MiniBatchStream,
         cfg: DriverConfig,
     ) -> anyhow::Result<Self> {
@@ -322,14 +424,15 @@ impl TrainDriver {
     }
 
     /// Fine-tune session (`None` in dense mode).
-    pub fn session(&self) -> Option<&FinetuneSession> {
+    pub fn session(&self) -> Option<&FinetuneSession<M>> {
         match &self.mode {
             Mode::Dense { .. } => None,
             Mode::Finetune(s) => Some(s),
         }
     }
 
-    /// 1-based step the STEP phase switch fired at (0 = none).
+    /// 1-based first mask-learning step (0 = no switch yet) — see
+    /// [`DriverReport::switch_step`].
     pub fn switch_step(&self) -> usize {
         self.switch_step
     }
@@ -341,16 +444,16 @@ impl TrainDriver {
 
     // ---- the loop ---------------------------------------------------------
 
-    /// Run one global step: fire the phase switch if due, fetch the step's
-    /// batch (prefetched), step the engine, then apply the eval /
-    /// checkpoint cadences. Returns the training loss, or `None` once the
-    /// run is complete.
+    /// Run one global step: fire the fixed phase switch if due, fetch the
+    /// step's batch (prefetched), step the engine, feed the AutoSwitch
+    /// detector (if configured), then apply the eval / checkpoint cadences.
+    /// Returns the training loss, or `None` once the run is complete.
     pub fn step_once(&mut self) -> anyhow::Result<Option<f64>> {
         if self.done() {
             return Ok(None);
         }
         let t = self.t + 1;
-        if self.cfg.switch_at == Some(t) {
+        if self.switch_policy == SwitchPolicy::At(t) {
             if let Mode::Dense { recipe, .. } = &mut self.mode {
                 if !recipe.in_phase2() {
                     recipe.switch_to_phase2();
@@ -359,13 +462,26 @@ impl TrainDriver {
             }
         }
         let batch = self.prefetcher.get(t);
-        let (x, labels) = features_batch(&batch)?;
+        let (x, labels) = model_batch(&batch)?;
         let (loss, stats) = match &mut self.mode {
-            Mode::Dense { mlp, params, recipe } => {
-                recipe.step(params, |ws| mlp.loss_and_grad(ws, x, labels))
+            Mode::Dense { model, params, recipe } => {
+                recipe.step(params, |ws| model.loss_and_grad(ws, &x, labels))
             }
-            Mode::Finetune(session) => (session.step(x, labels), VarStats::default()),
+            Mode::Finetune(session) => (session.step(&x, labels), VarStats::default()),
         };
+        // AutoSwitch consumes this step's telemetry during the precondition
+        // phase; firing at step t freezes v* so step t+1 starts mask
+        // learning — exactly the manual observe-after-step loop.
+        // switch_step records t+1, keeping one convention across policies:
+        // "the first mask-learning step" (same as `SwitchPolicy::At(s)`).
+        if let Some(asw) = self.autoswitch.as_mut() {
+            if let Mode::Dense { recipe, .. } = &mut self.mode {
+                if !recipe.in_phase2() && asw.observe(t, stats.into()) {
+                    recipe.switch_to_phase2();
+                    self.switch_step = t + 1;
+                }
+            }
+        }
         self.t = t;
         self.losses.push(loss);
         self.var_stats.push(stats);
@@ -424,12 +540,12 @@ impl TrainDriver {
         };
         let (mut n, mut loss_sum, mut correct) = (0usize, 0.0f64, 0.0f64);
         for b in &batches {
-            let (x, labels) = features_batch(b)?;
+            let (x, labels) = model_batch(b)?;
             let logits = match &self.mode {
-                Mode::Dense { mlp, .. } => {
-                    mlp.forward(dense_eval.as_ref().expect("dense eval params"), x)
+                Mode::Dense { model, .. } => {
+                    model.forward(dense_eval.as_ref().expect("dense eval params"), &x)
                 }
-                Mode::Finetune(s) => s.mlp().forward_packed(s.params(), x),
+                Mode::Finetune(s) => s.model().forward_packed(s.params(), &x),
             };
             let (l, _) = cross_entropy_with_grad(&logits, labels);
             loss_sum += l * labels.len() as f64;
@@ -462,10 +578,12 @@ impl TrainDriver {
 
     /// Snapshot the run: driver position + early-stop state (`drv.meta`)
     /// plus the full engine state — `drv.w` + the [`RecipeState`] groups in
-    /// dense mode, the `ft.*` session entries in fine-tune mode. Loss/eval
-    /// history is *not* checkpointed; a resumed driver records from its
-    /// resume point (the early-stop counters *are* carried, so a resumed
-    /// run stops at the same step the uninterrupted one would).
+    /// dense mode, the `ft.*` session entries in fine-tune mode — and, for
+    /// [`SwitchPolicy::Auto`] runs, the detector's sliding window
+    /// (`drv.asw`) so a resume fires at the same step. Loss/eval history is
+    /// *not* checkpointed; a resumed driver records from its resume point
+    /// (the early-stop counters *are* carried, so a resumed run stops at
+    /// the same step the uninterrupted one would).
     pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let mut ck = Checkpoint::new();
         let [t_lo, t_hi] = split_u64(self.t as u64);
@@ -494,6 +612,21 @@ impl TrainDriver {
                 ],
             ),
         );
+        if let Some(asw) = &self.autoswitch {
+            // [sum, s_0, s_1, …] as raw f64 bit patterns (two f32 slots each)
+            let samples = asw.window_samples();
+            let mut data = Vec::with_capacity(2 * (samples.len() + 1));
+            let [lo, hi] = split_u64(asw.window_sum().to_bits());
+            data.push(lo);
+            data.push(hi);
+            for s in samples {
+                let [lo, hi] = split_u64(s.to_bits());
+                data.push(lo);
+                data.push(hi);
+            }
+            let len = data.len();
+            ck.push("drv.asw", Tensor::new(&[len], data));
+        }
         match &self.mode {
             Mode::Dense { params, recipe, .. } => {
                 ck.push_group("drv.w", params);
@@ -524,13 +657,45 @@ impl TrainDriver {
         })
     }
 
+    /// Restore the AutoSwitch window saved as `drv.asw` (no-op when the
+    /// resumed config does not use [`SwitchPolicy::Auto`] or the checkpoint
+    /// predates the detector).
+    fn restore_autoswitch(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        let Some(asw) = self.autoswitch.as_mut() else {
+            return Ok(());
+        };
+        let Some(saved) = ck.get("drv.asw") else {
+            return Ok(());
+        };
+        let d = saved.data();
+        anyhow::ensure!(
+            d.len() >= 2 && d.len() % 2 == 0,
+            "drv.asw must hold f64 bit-pattern pairs, got {} scalars",
+            d.len()
+        );
+        let sum = f64::from_bits(join_u64(d[0], d[1]));
+        let samples: Vec<f64> = d[2..]
+            .chunks_exact(2)
+            .map(|c| f64::from_bits(join_u64(c[0], c[1])))
+            .collect();
+        anyhow::ensure!(
+            samples.len() <= asw.window_len(),
+            "drv.asw carries {} samples, window holds {}",
+            samples.len(),
+            asw.window_len()
+        );
+        asw.restore_window(&samples, sum);
+        Ok(())
+    }
+
     /// Resume a dense-mode run saved by
     /// [`save_checkpoint`](Self::save_checkpoint). With the same stream and
     /// config, the resumed trajectory is **bit-identical** to the
     /// uninterrupted one (the next step re-enters the epoch structure at
-    /// the saved position).
+    /// the saved position; an Auto-switch run re-arms the detector from its
+    /// saved window).
     pub fn resume_dense(
-        mlp: Mlp,
+        model: M,
         stream: MiniBatchStream,
         cfg: DriverConfig,
         path: impl AsRef<Path>,
@@ -539,10 +704,10 @@ impl TrainDriver {
         let meta = Self::read_meta(&ck, 0.0)?;
         let params = ck.group("drv.w");
         anyhow::ensure!(
-            params.len() == mlp.n_params(),
-            "checkpoint carries {} params, MLP wants {}",
+            params.len() == model.n_params(),
+            "checkpoint carries {} params, model wants {}",
             params.len(),
-            mlp.n_params()
+            model.n_params()
         );
         let recipe = RecipeState::read_from(&ck, "drv.rs")?;
         anyhow::ensure!(
@@ -551,21 +716,24 @@ impl TrainDriver {
             recipe.m.len(),
             params.len()
         );
-        Self::build_resumed(Mode::Dense { mlp, params, recipe }, stream, cfg, meta)
+        let mut drv =
+            Self::build_resumed(Mode::Dense { model, params, recipe }, stream, cfg, meta)?;
+        drv.restore_autoswitch(&ck)?;
+        Ok(drv)
     }
 
     /// Resume a fine-tune-mode run saved by
     /// [`save_checkpoint`](Self::save_checkpoint) — same bit-identical
     /// continuation guarantee as [`resume_dense`](Self::resume_dense).
     pub fn resume_finetune(
-        mlp: Mlp,
+        model: M,
         stream: MiniBatchStream,
         cfg: DriverConfig,
         path: impl AsRef<Path>,
     ) -> anyhow::Result<Self> {
         let ck = Checkpoint::load(path)?;
         let meta = Self::read_meta(&ck, 1.0)?;
-        let session = FinetuneSession::read_from(mlp, &ck)?;
+        let session = FinetuneSession::read_from(model, &ck)?;
         Self::build_resumed(Mode::Finetune(session), stream, cfg, meta)
     }
 
@@ -576,15 +744,15 @@ impl TrainDriver {
     /// the recipe's export rule (STEP recipes must have switched — a
     /// phase-1 export is dense and cannot serve compressed). The prefetch
     /// worker is joined so no thread outlives the driver.
-    pub fn into_server(self) -> anyhow::Result<BatchServer> {
+    pub fn into_server(self) -> anyhow::Result<BatchServer<M>> {
         let TrainDriver { mode, prefetcher, .. } = self;
         prefetcher
             .shutdown()
             .map_err(|_| anyhow::anyhow!("prefetch worker panicked"))?;
         match mode {
-            Mode::Dense { mlp, params, recipe } => {
+            Mode::Dense { model, params, recipe } => {
                 let packed = crate::sparsity::pack_params(&params, &recipe.export_ratios());
-                BatchServer::new(mlp, packed)
+                BatchServer::new(model, packed)
             }
             Mode::Finetune(session) => session.into_server(),
         }

@@ -11,22 +11,24 @@
 //!
 //! * the forward runs the packed kernels ([`crate::sparsity::packed`]),
 //! * the backward produces **compact** gradients
-//!   ([`Mlp::loss_and_grad_packed`]) — pruned coordinates are never
-//!   materialized,
+//!   ([`SparseModel::loss_and_grad_packed_with_cols`]) — pruned coordinates
+//!   are never materialized,
 //! * the optimizer ([`packed_adam_step`] / [`packed_phase2_step`]) updates
 //!   the kept values in place with state sized `n_values()` instead of
 //!   `numel()` (~0.53× the dense optimizer memory at 2:4), and
 //! * the index codes — the learned mask — are structurally immutable for
 //!   the whole session.
 //!
-//! Every step is **bit-for-bit** equal to the dense masked fine-tune step
-//! (masked gradients + dense state) on kept coordinates —
+//! The session is generic over [`SparseModel`], so the MLP analogs and the
+//! [`TokenEncoder`](crate::model::TokenEncoder) fine-tune through the same
+//! loop. Every step is **bit-for-bit** equal to the dense masked fine-tune
+//! step (masked gradients + dense state) on kept coordinates —
 //! `rust/tests/packed_finetune.rs` holds the two in lock-step, and `cargo
 //! bench --bench substrate` records the step-throughput comparison to
 //! `BENCH_finetune.json`.
 
 use crate::checkpoint::{join_u64, split_u64, Checkpoint};
-use crate::model::Mlp;
+use crate::model::{Mlp, SparseModel};
 use crate::optim::{packed_adam_step, packed_phase2_step, AdamHp, RecipeState};
 use crate::sparsity::{pack_params, NmRatio, PackedGrad, PackedParam};
 use crate::tensor::Tensor;
@@ -81,8 +83,8 @@ fn cols_cache(params: &[PackedParam]) -> Vec<Option<Vec<u32>>> {
 /// [`step`](Self::step) then runs packed forward → compact backward →
 /// in-place kept-value update for the lifetime of the session. The mask
 /// (the index-code bitstream) is never touched.
-pub struct FinetuneSession {
-    mlp: Mlp,
+pub struct FinetuneSession<M: SparseModel = Mlp> {
+    model: M,
     params: Vec<PackedParam>,
     mode: FinetuneMode,
     hp: AdamHp,
@@ -103,16 +105,16 @@ pub struct FinetuneSession {
     stats: FinetuneStats,
 }
 
-impl FinetuneSession {
+impl<M: SparseModel> FinetuneSession<M> {
     /// Fine-tune an already-packed model (e.g. loaded from a checkpoint)
-    /// with fresh Adam state. Validates the `[w, b, …]` layout.
-    pub fn new(mlp: Mlp, params: Vec<PackedParam>, lr: f32, hp: AdamHp) -> anyhow::Result<Self> {
-        mlp.validate_packed_params(&params)?;
+    /// with fresh Adam state. Validates the layout.
+    pub fn new(model: M, params: Vec<PackedParam>, lr: f32, hp: AdamHp) -> anyhow::Result<Self> {
+        model.validate_packed_params(&params)?;
         let m = state_zeros(&params);
         let v = Some(state_zeros(&params));
         let cols = cols_cache(&params);
         Ok(Self {
-            mlp,
+            model,
             params,
             mode: FinetuneMode::Adam,
             hp,
@@ -126,18 +128,18 @@ impl FinetuneSession {
         })
     }
 
-    /// Pack dense trained weights once at `ratio` (hidden weights
-    /// compressed, biases + final layer dense) and fine-tune from the
-    /// result with fresh Adam state.
+    /// Pack dense trained weights once at `ratio` (sparse-eligible tensors
+    /// compressed, everything else dense) and fine-tune from the result
+    /// with fresh Adam state.
     pub fn pack(
-        mlp: Mlp,
+        model: M,
         dense: &[Tensor],
         ratio: NmRatio,
         lr: f32,
         hp: AdamHp,
     ) -> anyhow::Result<Self> {
-        let params = pack_params(dense, &mlp.ratios(ratio));
-        Self::new(mlp, params, lr, hp)
+        let params = pack_params(dense, &model.ratios(ratio));
+        Self::new(model, params, lr, hp)
     }
 
     /// The phase-2-exit entry point: continue a STEP run from its
@@ -148,7 +150,7 @@ impl FinetuneSession {
     /// hyperparameters) — now entirely in the compressed form, with the
     /// mask frozen at its phase-2-exit pattern.
     pub fn from_phase2_exit(
-        mlp: Mlp,
+        model: M,
         dense: &[Tensor],
         recipe: &RecipeState,
         lr: f32,
@@ -159,7 +161,7 @@ impl FinetuneSession {
         );
         let v_star_dense = recipe.v_star.as_ref().expect("phase 2 carries v*");
         let params = pack_params(dense, &recipe.ratios);
-        mlp.validate_packed_params(&params)?;
+        model.validate_packed_params(&params)?;
         let compact = |src: &[Tensor]| -> Vec<Vec<f32>> {
             params
                 .iter()
@@ -174,7 +176,7 @@ impl FinetuneSession {
         let v_star = compact(v_star_dense);
         let cols = cols_cache(&params);
         Ok(Self {
-            mlp,
+            model,
             params,
             mode: FinetuneMode::Phase2,
             hp: recipe.hp,
@@ -191,8 +193,8 @@ impl FinetuneSession {
     // ---- accessors --------------------------------------------------------
 
     /// The fine-tuned model.
-    pub fn mlp(&self) -> &Mlp {
-        &self.mlp
+    pub fn model(&self) -> &M {
+        &self.model
     }
 
     /// The packed parameter list (codes frozen, values fine-tuned).
@@ -249,7 +251,7 @@ impl FinetuneSession {
     pub fn step(&mut self, x: &Tensor, labels: &[usize]) -> f64 {
         self.t += 1;
         let (loss, grads) =
-            self.mlp
+            self.model
                 .loss_and_grad_packed_with_cols(&self.params, &self.cols, x, labels);
         for (i, grad) in grads.iter().enumerate() {
             let g: &[f32] = match grad {
@@ -287,14 +289,14 @@ impl FinetuneSession {
 
     /// Classification accuracy of the current packed weights on a batch.
     pub fn accuracy(&self, x: &Tensor, labels: &[usize]) -> f64 {
-        self.mlp.accuracy_packed(&self.params, x, labels)
+        self.model.accuracy_packed(&self.params, x, labels)
     }
 
     /// Hand the fine-tuned weights to a [`super::serve::BatchServer`] —
     /// fine-tune → serve without re-densifying (the packed parameters are
     /// moved, not unpacked).
-    pub fn into_server(self) -> anyhow::Result<super::serve::BatchServer> {
-        super::serve::BatchServer::new(self.mlp, self.params)
+    pub fn into_server(self) -> anyhow::Result<super::serve::BatchServer<M>> {
+        super::serve::BatchServer::new(self.model, self.params)
     }
 
     // ---- checkpointing (format v2, packed entries) ------------------------
@@ -362,10 +364,10 @@ impl FinetuneSession {
     /// [`write_to`](Self::write_to) — weights, optimizer state, counters,
     /// and hyperparameters all resume exactly (the fine-tune trajectory
     /// continues bit-for-bit).
-    pub fn read_from(mlp: Mlp, ck: &Checkpoint) -> anyhow::Result<Self> {
+    pub fn read_from(model: M, ck: &Checkpoint) -> anyhow::Result<Self> {
         let params = ck.packed_model("ft.p");
         anyhow::ensure!(!params.is_empty(), "checkpoint carries no ft.p model");
-        mlp.validate_packed_params(&params)?;
+        model.validate_packed_params(&params)?;
         let meta = ck
             .get("ft.meta")
             .ok_or_else(|| anyhow::anyhow!("checkpoint missing ft.meta"))?;
@@ -398,7 +400,7 @@ impl FinetuneSession {
         };
         let cols = cols_cache(&params);
         Ok(Self {
-            mlp,
+            model,
             params,
             mode,
             hp,
@@ -416,8 +418,8 @@ impl FinetuneSession {
     }
 
     /// Reload a session saved by [`save_checkpoint`](Self::save_checkpoint).
-    pub fn load_checkpoint(mlp: Mlp, path: impl AsRef<Path>) -> anyhow::Result<Self> {
-        Self::read_from(mlp, &Checkpoint::load(path)?)
+    pub fn load_checkpoint(model: M, path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::read_from(model, &Checkpoint::load(path)?)
     }
 }
 

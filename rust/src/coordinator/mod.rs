@@ -23,7 +23,7 @@ pub mod serve;
 pub mod session;
 pub mod sweep;
 
-pub use driver::{DriverConfig, DriverReport, EarlyStop, EvalPoint, TrainDriver};
+pub use driver::{DriverConfig, DriverReport, EarlyStop, EvalPoint, SwitchPolicy, TrainDriver};
 pub use finetune::{FinetuneMode, FinetuneSession, FinetuneStats};
 pub use serve::{BatchServer, ServeStats};
 pub use session::{Report, Session};

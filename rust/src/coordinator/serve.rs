@@ -10,11 +10,16 @@
 //! across scoped threads (each sample's forward is independent, so the
 //! result is bit-identical to the serial path in any thread count).
 //!
+//! The server is generic over [`SparseModel`]: MLP classifiers and
+//! [`TokenEncoder`](crate::model::TokenEncoder) sequence models serve
+//! through the same machinery. Manifest checkpoints resolve to a concrete
+//! model via [`crate::model::model_from_info`].
+//!
 //! `cargo bench --bench substrate` measures this path against the dense
-//! masked forward and records the comparison to `BENCH_inference.json`.
+//! masked forward and records the comparison to `BENCH_inference.json`
+//! (MLP shapes) and `BENCH_attention.json` (encoder shapes).
 
-use crate::model::Mlp;
-use crate::runtime::ModelInfo;
+use crate::model::{Mlp, SparseModel};
 use crate::sparsity::{pack_params, NmRatio, PackedParam};
 use crate::tensor::{accuracy_from_logits, argmax_rows, Tensor};
 
@@ -32,24 +37,24 @@ pub struct ServeStats {
     pub samples: usize,
 }
 
-/// A packed-model inference server for classifier MLPs.
+/// A packed-model inference server.
 ///
 /// Construction packs the weights once; [`serve`](Self::serve) then runs
 /// forward passes from the compressed form for the lifetime of the server.
-pub struct BatchServer {
-    mlp: Mlp,
+pub struct BatchServer<M: SparseModel = Mlp> {
+    model: M,
     params: Vec<PackedParam>,
     /// Total stored weight scalars (threading work estimate).
     weight_values: usize,
     stats: ServeStats,
 }
 
-impl BatchServer {
+impl<M: SparseModel> BatchServer<M> {
     /// Serve an already-packed parameter list (e.g. loaded from a
     /// [`crate::checkpoint::Checkpoint::packed_model`] export). Validates
-    /// the `[w, b, …]` layout against `mlp`.
-    pub fn new(mlp: Mlp, params: Vec<PackedParam>) -> anyhow::Result<Self> {
-        mlp.validate_packed_params(&params)?;
+    /// the layout against `model`.
+    pub fn new(model: M, params: Vec<PackedParam>) -> anyhow::Result<Self> {
+        model.validate_packed_params(&params)?;
         let weight_values = params
             .iter()
             .map(|p| match p {
@@ -57,16 +62,16 @@ impl BatchServer {
                 PackedParam::Packed(pk) => pk.n_values(),
             })
             .sum();
-        Ok(Self { mlp, params, weight_values, stats: ServeStats::default() })
+        Ok(Self { model, params, weight_values, stats: ServeStats::default() })
     }
 
-    /// Pack dense trained weights once at `ratio` (hidden weights
-    /// compressed, biases + final layer dense) and serve from the result —
-    /// the "pack at phase-2 exit" entry point.
-    pub fn pack(mlp: Mlp, dense: &[Tensor], ratio: NmRatio) -> anyhow::Result<Self> {
-        let ratios = mlp.ratios(ratio);
+    /// Pack dense trained weights once at `ratio` (sparse-eligible tensors
+    /// compressed, everything else dense) and serve from the result — the
+    /// "pack at phase-2 exit" entry point.
+    pub fn pack(model: M, dense: &[Tensor], ratio: NmRatio) -> anyhow::Result<Self> {
+        let ratios = model.ratios(ratio);
         let params = pack_params(dense, &ratios);
-        Self::new(mlp, params)
+        Self::new(model, params)
     }
 
     /// The packed parameter list (e.g. for checkpointing via
@@ -76,8 +81,8 @@ impl BatchServer {
     }
 
     /// The served model.
-    pub fn mlp(&self) -> &Mlp {
-        &self.mlp
+    pub fn model(&self) -> &M {
+        &self.model
     }
 
     /// Cumulative serving counters.
@@ -100,13 +105,13 @@ impl BatchServer {
         self.stored_bytes() as f64 / self.dense_bytes().max(1) as f64
     }
 
-    /// Serve one batch: logits `[batch, n_classes]`.
+    /// Serve one batch: logits `[batch, out_dim]`.
     ///
     /// The input is validated **before** any state changes: a batch whose
-    /// feature dimension does not match the model gets a clear error (it
-    /// used to bump the counters and then panic deep inside
-    /// `packed_matmul`), and [`ServeStats`] count only successfully served
-    /// batches. Empty batches are legal and return `[0, n_classes]` logits.
+    /// trailing dimension the model rejects gets a clear error (it used to
+    /// bump the counters and then panic deep inside `packed_matmul`), and
+    /// [`ServeStats`] count only successfully served batches. Empty batches
+    /// are legal and return `[0, out_dim]` logits.
     ///
     /// Batches with at least [`SERVE_PAR_MIN_WORK`] scalar multiply-adds are
     /// split row-wise across scoped threads; each shard runs the same
@@ -115,27 +120,24 @@ impl BatchServer {
     /// the machine's parallelism.
     pub fn serve(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
         let (rows, dim) = x.as_2d();
-        anyhow::ensure!(
-            dim == self.mlp.sizes[0],
-            "serve batch feature dim {dim} != model input dim {} (batch shape {:?})",
-            self.mlp.sizes[0],
-            x.shape()
-        );
+        self.model.validate_input(x).map_err(|e| {
+            anyhow::anyhow!("serve {e} (batch shape {:?})", x.shape())
+        })?;
         // stats mutate only after validation: failed calls are not counted
         self.stats.batches += 1;
         self.stats.samples += rows;
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let work = rows.saturating_mul(self.weight_values);
         if threads < 2 || rows < 2 || work < SERVE_PAR_MIN_WORK {
-            return Ok(self.mlp.forward_packed(&self.params, x));
+            return Ok(self.model.forward_packed(&self.params, x));
         }
         let n_chunks = threads.min(rows);
         let chunk = (rows + n_chunks - 1) / n_chunks;
-        let n_out = *self.mlp.sizes.last().expect("MLP has layers");
+        let n_out = self.model.out_dim();
         let mut out = Tensor::zeros(&[rows, n_out]);
         let xd = x.data();
         let od = out.data_mut();
-        let (mlp, params) = (&self.mlp, &self.params);
+        let (model, params) = (&self.model, &self.params);
         std::thread::scope(|s| {
             let mut od_rest: &mut [f32] = od;
             let mut r0 = 0usize;
@@ -147,7 +149,7 @@ impl BatchServer {
                 let n_rows = r1 - r0;
                 s.spawn(move || {
                     // borrowed slice view into the batch — no per-shard copy
-                    let y = mlp.forward_packed_rows(params, xs, n_rows);
+                    let y = model.forward_packed_rows(params, xs, n_rows, dim);
                     od_chunk.copy_from_slice(y.data());
                 });
                 r0 = r1;
@@ -167,56 +169,10 @@ impl BatchServer {
     }
 }
 
-/// Reconstruct the pure-Rust [`Mlp`] a manifest model describes — only
-/// models with the `[w, b, …]` classifier layout qualify (the Table-1 MLP
-/// analogs); token models get a clear error instead of silent garbage.
-pub fn mlp_from_model_info(info: &ModelInfo) -> anyhow::Result<Mlp> {
-    anyhow::ensure!(
-        info.kind == "classify",
-        "packed serving supports classifier MLPs (model {:?} has kind {:?})",
-        info.key,
-        info.kind
-    );
-    anyhow::ensure!(
-        !info.params.is_empty() && info.params.len() % 2 == 0,
-        "model {:?}: expected alternating [w, b] params, got {}",
-        info.key,
-        info.params.len()
-    );
-    let mut sizes: Vec<usize> = Vec::with_capacity(info.params.len() / 2 + 1);
-    for l in 0..info.params.len() / 2 {
-        let (_, wshape, _) = &info.params[2 * l];
-        let (_, bshape, _) = &info.params[2 * l + 1];
-        anyhow::ensure!(
-            wshape.len() == 2 && bshape.len() == 1 && bshape[0] == wshape[1],
-            "model {:?} layer {l} is not an MLP [w, b] pair ({wshape:?}, {bshape:?})",
-            info.key
-        );
-        if let Some(&prev) = sizes.last() {
-            anyhow::ensure!(
-                wshape[0] == prev,
-                "model {:?} layer {l}: fan-in {} vs previous fan-out {prev}",
-                info.key,
-                wshape[0]
-            );
-        } else {
-            sizes.push(wshape[0]);
-        }
-        sizes.push(wshape[1]);
-    }
-    anyhow::ensure!(
-        sizes.last() == Some(&info.n_classes),
-        "model {:?}: final fan-out {:?} != n_classes {}",
-        info.key,
-        sizes.last(),
-        info.n_classes
-    );
-    Ok(Mlp { sizes })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::TokenEncoder;
     use crate::rng::Pcg64;
 
     #[test]
@@ -314,28 +270,36 @@ mod tests {
         assert!(BatchServer::new(other, packed).is_err());
     }
 
+    /// Token models serve through the same server: packed logits equal the
+    /// dense masked forward, and shorter-than-max sequences are accepted.
     #[test]
-    fn mlp_from_model_info_round_trips_mlp_layouts() {
-        let info = ModelInfo {
-            key: "mlp_test".into(),
-            params: vec![
-                ("w0".into(), vec![8, 16], true),
-                ("b0".into(), vec![16], false),
-                ("w1".into(), vec![16, 4], false),
-                ("b1".into(), vec![4], false),
-            ],
-            sparse_indices: vec![0],
-            kind: "classify".into(),
-            n_classes: 4,
-            dim: 8 * 16 + 16 + 16 * 4 + 4,
-            batch: 2,
-            seq: None,
-        };
-        let mlp = mlp_from_model_info(&info).unwrap();
-        assert_eq!(mlp.sizes, vec![8, 16, 4]);
-        // token models are rejected, not mangled
-        let mut lm = info.clone();
-        lm.kind = "lm".into();
-        assert!(mlp_from_model_info(&lm).is_err());
+    fn encoder_server_serves_token_batches() {
+        let enc = TokenEncoder::classifier(17, 8, 2, 12, 1, 6, 3);
+        let mut rng = Pcg64::new(27);
+        let params = SparseModel::init(&enc, &mut rng);
+        let ratio = NmRatio::new(2, 4);
+        let masked = enc.masked_params(&params, ratio);
+        let mut server = BatchServer::pack(enc.clone(), &params, ratio).unwrap();
+        for seq in [3usize, 6] {
+            let ids: Vec<f32> = (0..5 * seq).map(|_| rng.below(17) as f32).collect();
+            let x = Tensor::new(&[5, seq], ids);
+            assert_eq!(
+                SparseModel::forward(&enc, &masked, &x),
+                server.serve(&x).unwrap(),
+                "seq {seq}"
+            );
+        }
+        // too-long sequences are rejected up front
+        let too_long = Tensor::zeros(&[2, 9]);
+        assert!(server.serve(&too_long).is_err());
+        // malformed ids (out-of-vocab, fractional, NaN) error out instead of
+        // panicking mid-forward, and are never counted
+        for bad_id in [99.0f32, 1.5, f32::NAN] {
+            let mut bad = Tensor::zeros(&[2, 4]);
+            bad.data_mut()[3] = bad_id;
+            let err = server.serve(&bad).unwrap_err().to_string();
+            assert!(err.contains("token id"), "unhelpful error: {err}");
+        }
+        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 10 });
     }
 }

@@ -574,12 +574,17 @@ impl<'rt> Session<'rt> {
 
     /// Build a [`BatchServer`](super::serve::BatchServer) from the current
     /// weights: pack once (typically at phase-2 exit / end of training),
-    /// then serve repeated eval batches from the compressed form. Only
-    /// MLP-family classifier models qualify — token models get a clear
-    /// error.
-    pub fn batch_server(&self) -> anyhow::Result<super::serve::BatchServer> {
-        let mlp = super::serve::mlp_from_model_info(&self.model)?;
-        super::serve::BatchServer::new(mlp, self.packed_params())
+    /// then serve repeated eval batches from the compressed form. The
+    /// manifest layout resolves to a concrete pure-Rust model via
+    /// [`model_from_info`](crate::model::model_from_info) — MLP classifier
+    /// layouts serve as [`Mlp`](crate::model::Mlp), fused-QKV token layouts
+    /// as [`TokenEncoder`](crate::model::TokenEncoder); unrecognized
+    /// layouts get a clear error.
+    pub fn batch_server(
+        &self,
+    ) -> anyhow::Result<super::serve::BatchServer<crate::model::AnyModel>> {
+        let model = crate::model::model_from_info(&self.model)?;
+        super::serve::BatchServer::new(model, self.packed_params())
     }
 
     /// Continue training from the **compressed** form: pack the current
@@ -588,11 +593,15 @@ impl<'rt> Session<'rt> {
     /// [`FinetuneSession`](super::finetune::FinetuneSession) running the
     /// frozen-mask fine-tuning loop on the packed values — the
     /// phase-2-exit → pack → fine-tune → serve pipeline. Fresh Adam state
-    /// at the session's hyperparameters; only MLP-family classifier models
-    /// qualify (same rule as [`batch_server`](Self::batch_server)).
-    pub fn finetune_session(&self, lr: f32) -> anyhow::Result<super::finetune::FinetuneSession> {
-        let mlp = super::serve::mlp_from_model_info(&self.model)?;
-        super::finetune::FinetuneSession::new(mlp, self.packed_params(), lr, self.cfg.hp)
+    /// at the session's hyperparameters; the model resolves through
+    /// [`model_from_info`](crate::model::model_from_info) (same rule as
+    /// [`batch_server`](Self::batch_server)).
+    pub fn finetune_session(
+        &self,
+        lr: f32,
+    ) -> anyhow::Result<super::finetune::FinetuneSession<crate::model::AnyModel>> {
+        let model = crate::model::model_from_info(&self.model)?;
+        super::finetune::FinetuneSession::new(model, self.packed_params(), lr, self.cfg.hp)
     }
 
     /// The session's dataset (shared with its prefetch worker).
@@ -612,7 +621,7 @@ impl<'rt> Session<'rt> {
         lr: f32,
         n_examples: usize,
         cfg: super::driver::DriverConfig,
-    ) -> anyhow::Result<super::driver::TrainDriver> {
+    ) -> anyhow::Result<super::driver::TrainDriver<crate::model::AnyModel>> {
         let session = self.finetune_session(lr)?;
         let stream = crate::data::MiniBatchStream::new(
             self.dataset.clone(),

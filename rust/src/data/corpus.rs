@@ -134,6 +134,72 @@ impl Dataset for SyntheticCorpus {
     }
 }
 
+/// Next-token prediction reframed as sequence classification: each window
+/// of a [`SyntheticCorpus`] becomes `(token ids [batch, seq], the token
+/// following the window)` — i.e. the LM objective restricted to the last
+/// position, which is exactly what the pure-Rust
+/// [`TokenEncoder`](crate::model::TokenEncoder) with a last-token head
+/// trains. `kind()` is `"classify"`, so the
+/// [`TrainDriver`](crate::coordinator::driver::TrainDriver) and
+/// [`MiniBatchStream`](super::MiniBatchStream) drive it unchanged.
+#[derive(Debug, Clone)]
+pub struct NextTokenTask {
+    corpus: SyntheticCorpus,
+}
+
+impl NextTokenTask {
+    pub fn new(corpus: SyntheticCorpus) -> Self {
+        Self { corpus }
+    }
+
+    /// The wrapped corpus.
+    pub fn corpus(&self) -> &SyntheticCorpus {
+        &self.corpus
+    }
+
+    /// Classification width = the corpus vocabulary.
+    pub fn vocab(&self) -> usize {
+        self.corpus.vocab
+    }
+
+    /// Convert an LM batch: `y` keeps only the last position of each row —
+    /// the corpus targets are next-token shifted, so that entry is the
+    /// token *following* the window.
+    fn convert(b: Batch) -> Batch {
+        let BatchY::Tokens { ids, batch, seq } = b.y else {
+            panic!("SyntheticCorpus yields token targets")
+        };
+        let labels = (0..batch).map(|r| ids[r * seq + seq - 1] as usize).collect();
+        Batch { x: b.x, y: BatchY::Classes(labels) }
+    }
+}
+
+impl Dataset for NextTokenTask {
+    fn train_batch(&self, step: usize, batch: usize) -> Batch {
+        Self::convert(self.corpus.train_batch(step, batch))
+    }
+
+    fn train_examples(&self, indices: &[usize]) -> Batch {
+        Self::convert(self.corpus.train_examples(indices))
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        self.corpus
+            .eval_batches(batch)
+            .into_iter()
+            .map(Self::convert)
+            .collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        "classify"
+    }
+
+    fn name(&self) -> String {
+        format!("next_token({})", self.corpus.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

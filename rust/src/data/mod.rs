@@ -14,7 +14,7 @@ pub mod loader;
 pub mod translate;
 
 pub use cifar::CifarLike;
-pub use corpus::SyntheticCorpus;
+pub use corpus::{NextTokenTask, SyntheticCorpus};
 pub use glue::{GlueSuite, GlueTask, TaskKind};
 pub use loader::MiniBatchStream;
 pub use translate::TranslatePairs;

@@ -18,7 +18,13 @@
 //! The crate additionally contains a *pure-Rust* experiment engine
 //! ([`model`], [`optim`]) used where thousands of steps across many seeds
 //! are needed (e.g. Table 1's switch-point statistics) — it is bit-compared
-//! against the HLO path by the integration tests.
+//! against the HLO path by the integration tests. The model layer is the
+//! [`model::SparseModel`] trait: the MLP analogs ([`model::Mlp`]) and a
+//! pure-Rust attention encoder ([`model::TokenEncoder`] — fused-QKV
+//! attention with exact softmax backprop, the paper's BERT/GPT-2 workload
+//! family) run the identical train → STEP switch → pack → packed
+//! fine-tune → serve pipeline, with manifest checkpoints resolved by
+//! [`model::model_from_info`].
 //!
 //! Once a mask is learned, the **packed inference engine**
 //! ([`sparsity::packed`], [`coordinator::serve`]) exports the weights in
@@ -78,7 +84,8 @@ pub mod prelude {
     pub use crate::coordinator::{
         BatchServer, DriverConfig, FinetuneSession, Report, Session, Sweep, TrainDriver,
     };
-    pub use crate::data::{Dataset, MiniBatchStream};
+    pub use crate::data::{Dataset, MiniBatchStream, NextTokenTask};
+    pub use crate::model::{model_from_info, AnyModel, Mlp, SparseModel, TokenEncoder};
     pub use crate::optim::OptimizerKind;
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{Registry, Runtime};

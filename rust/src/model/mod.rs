@@ -1,196 +1,164 @@
-//! Pure-Rust MLP with exact backprop — the fast-CPU substrate for the
-//! many-seed / many-step experiments (Table 1 traces, Theorem-1 checks,
-//! Fig. 7's switch-ratio sweep) where per-step PJRT dispatch would dominate.
+//! The pure-Rust model zoo behind one interface: [`SparseModel`].
 //!
-//! The layout mirrors `python/compile/models.mlp`: parameters are the flat
-//! ordered list `[fc0_w, fc0_b, fc1_w, fc1_b, …]` with hidden weight
-//! matrices sparse-eligible and the final layer dense, so recipe code (and
-//! the manifest conventions) transfer unchanged between the two engines.
+//! Every downstream layer of the STEP pipeline — the recipe engine
+//! ([`crate::optim::RecipeState`]), the packed frozen-mask fine-tuner
+//! ([`crate::coordinator::finetune::FinetuneSession`]), the streaming
+//! driver ([`crate::coordinator::driver::TrainDriver`]), and the batch
+//! server ([`crate::coordinator::serve::BatchServer`]) — is generic over
+//! this trait, so the same train → STEP switch → pack → packed fine-tune →
+//! serve pipeline runs any model that can state its parameter layout and
+//! compute exact dense + packed gradients:
+//!
+//! * [`Mlp`] — the ReLU classifier of the Table-1 vision analogs (hidden
+//!   weights sparse-eligible, head dense).
+//! * [`TokenEncoder`] — a pure-Rust attention encoder (fused-QKV attention
+//!   with exact softmax backprop, FFN, residuals; all projection matrices
+//!   sparse-eligible, embeddings/biases/head dense) — the paper's central
+//!   BERT/GPT-2 workload family.
+//! * [`AnyModel`] — the runtime dispatch over both, resolved from a
+//!   manifest [`ModelInfo`] by [`model_from_info`].
+//!
+//! The **bit-identity contract** is part of the trait: for finite inputs,
+//! `forward_packed` over packed parameters must equal `forward` over the
+//! dense *masked* parameter list bit-for-bit, and
+//! `loss_and_grad_packed_with_cols` must reproduce the dense masked
+//! `loss_and_grad` on every kept coordinate. Both implementations satisfy
+//! it by running the identical code path with only the matmul kernels
+//! swapped (the kernel-level equalities live in
+//! [`crate::sparsity::packed`]).
+
+pub mod encoder;
+pub mod mlp;
+
+pub use encoder::{Pool, TokenEncoder};
+pub use mlp::Mlp;
 
 use crate::rng::Pcg64;
-use crate::sparsity::{
-    packed_matmul, packed_matmul_at_into, packed_matmul_bt_into, packed_matmul_rows, NmRatio,
-    PackedGrad, PackedParam,
-};
-use crate::tensor::{
-    accuracy_from_logits, add_bias, cross_entropy_with_grad, matmul, matmul_at, matmul_bt,
-    matmul_rows, relu, Tensor,
-};
+use crate::runtime::ModelInfo;
+use crate::sparsity::{NmRatio, PackedGrad, PackedParam};
+use crate::tensor::{accuracy_from_logits, Tensor};
 
-/// An MLP classifier: `in_dim → hidden… → n_classes`, ReLU activations.
-#[derive(Debug, Clone)]
-pub struct Mlp {
-    pub sizes: Vec<usize>,
-}
+/// A model the whole STEP pipeline can drive: dense training, N:M mask
+/// learning, packed inference, and packed frozen-mask fine-tuning.
+///
+/// Parameters are a flat ordered `Vec<Tensor>`; [`sparse_flags`]
+/// (per-tensor N:M eligibility) is the single source the mask, pack, and
+/// export layers derive their ratio vectors from.
+///
+/// [`sparse_flags`]: SparseModel::sparse_flags
+///
+/// # Examples
+///
+/// Downstream code stays model-agnostic — this generic step runs unchanged
+/// over the MLP and the token encoder:
+///
+/// ```
+/// use step_nm::model::{Mlp, SparseModel, TokenEncoder};
+/// use step_nm::rng::Pcg64;
+/// use step_nm::sparsity::NmRatio;
+/// use step_nm::tensor::Tensor;
+///
+/// fn masked_loss<M: SparseModel>(model: &M, x: &Tensor, labels: &[usize]) -> f64 {
+///     let params = model.init(&mut Pcg64::new(0));
+///     let masked = model.masked_params(&params, NmRatio::new(2, 4));
+///     model.loss_and_grad(&masked, x, labels).0
+/// }
+///
+/// let mlp = Mlp::new(8, &[16], 3);
+/// let x = Tensor::randn(&[2, 8], &mut Pcg64::new(1), 0.0, 1.0);
+/// assert!(masked_loss(&mlp, &x, &[0, 2]) > 0.0);
+///
+/// let enc = TokenEncoder::classifier(10, 8, 2, 16, 1, 4, 3);
+/// let ids = Tensor::new(&[2, 4], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+/// assert!(masked_loss(&enc, &ids, &[0, 2]) > 0.0);
+/// ```
+pub trait SparseModel: Clone + Send + Sync {
+    /// Number of parameter tensors.
+    fn n_params(&self) -> usize;
 
-impl Mlp {
-    pub fn new(in_dim: usize, hidden: &[usize], n_classes: usize) -> Self {
-        let mut sizes = vec![in_dim];
-        sizes.extend_from_slice(hidden);
-        sizes.push(n_classes);
-        Self { sizes }
+    /// Nominal trailing input dimension (feature width for MLPs, `max_seq`
+    /// for token models) — see [`check_input_dim`](Self::check_input_dim)
+    /// for the serve-time validation rule.
+    fn in_dim(&self) -> usize;
+
+    /// Logit width (`n_classes`, or the vocabulary for next-token heads).
+    fn out_dim(&self) -> usize;
+
+    /// Seeded parameter init, in layout order.
+    fn init(&self, rng: &mut Pcg64) -> Vec<Tensor>;
+
+    /// Per-tensor N:M eligibility (the model zoo convention: projection /
+    /// hidden weights yes; embeddings, biases, heads no).
+    fn sparse_flags(&self) -> Vec<bool>;
+
+    /// Forward pass: logits `[batch, out_dim]`.
+    fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor;
+
+    /// Mean cross-entropy loss + exact gradients w.r.t. every parameter.
+    fn loss_and_grad(&self, params: &[Tensor], x: &Tensor, labels: &[usize])
+        -> (f64, Vec<Tensor>);
+
+    /// Forward over **packed** parameters — bit-identical to [`forward`]
+    /// over the dense masked list on finite inputs.
+    ///
+    /// [`forward`]: SparseModel::forward
+    fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor;
+
+    /// Packed loss + gradients with a caller-cached column-index decode
+    /// (`cols[i]` = `col_indices()` of packed parameter `i`, `None` for
+    /// dense) — compact gradients for packed weights, dense otherwise.
+    fn loss_and_grad_packed_with_cols(
+        &self,
+        params: &[PackedParam],
+        cols: &[Option<Vec<u32>>],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<PackedGrad>);
+
+    /// Validate a packed parameter list against this model's layout.
+    fn validate_packed_params(&self, params: &[PackedParam]) -> anyhow::Result<()>;
+
+    // ---- provided ---------------------------------------------------------
+
+    /// Serve-time input validation: accept a batch whose trailing dimension
+    /// is `dim`? Default: must equal [`in_dim`](Self::in_dim) exactly
+    /// (token models override to accept shorter sequences).
+    fn check_input_dim(&self, dim: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dim == self.in_dim(),
+            "batch feature dim {dim} does not match model input dim {}",
+            self.in_dim()
+        );
+        Ok(())
     }
 
-    pub fn n_layers(&self) -> usize {
-        self.sizes.len() - 1
-    }
-
-    /// Number of parameter tensors (2 per layer: weight, bias).
-    pub fn n_params(&self) -> usize {
-        2 * self.n_layers()
+    /// Full serve-time batch validation: reject any input the model would
+    /// panic on, as an error. The default checks the trailing dimension;
+    /// token models additionally validate every id, so
+    /// [`BatchServer`](crate::coordinator::serve::BatchServer) can hold its
+    /// "failed calls error out and are never counted" contract for every
+    /// model family.
+    fn validate_input(&self, x: &Tensor) -> anyhow::Result<()> {
+        self.check_input_dim(x.last_dim())
     }
 
     /// Total scalar parameter count.
-    pub fn dim(&self) -> usize {
+    fn dim(&self) -> usize {
         self.init(&mut Pcg64::new(0)).iter().map(|t| t.numel()).sum()
     }
 
-    /// Fan-in-scaled init matching `models._init_param` (weights ~
-    /// N(0, 1/fan_in), biases zero).
-    pub fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
-        let mut out = Vec::with_capacity(self.n_params());
-        for l in 0..self.n_layers() {
-            let (fan_in, fan_out) = (self.sizes[l], self.sizes[l + 1]);
-            let scale = 1.0 / (fan_in as f32).sqrt();
-            out.push(Tensor::randn(&[fan_in, fan_out], rng, 0.0, scale));
-            out.push(Tensor::zeros(&[fan_out]));
-        }
-        out
-    }
-
-    /// Sparse-eligibility per parameter tensor: hidden weights yes, last
-    /// layer and biases no — matching the Python model zoo.
-    pub fn sparse_flags(&self) -> Vec<bool> {
-        let n = self.n_layers();
-        (0..self.n_params())
-            .map(|i| i % 2 == 0 && i / 2 != n - 1)
-            .collect()
-    }
-
     /// Uniform ratio vector from the flags (`None` = dense tensor).
-    pub fn ratios(&self, ratio: NmRatio) -> Vec<Option<NmRatio>> {
+    fn ratios(&self, ratio: NmRatio) -> Vec<Option<NmRatio>> {
         self.sparse_flags()
             .into_iter()
             .map(|s| if s { Some(ratio) } else { None })
             .collect()
     }
 
-    /// Forward pass: logits `[batch, n_classes]`.
-    pub fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
-        let reshaped;
-        let x2d: &Tensor = if x.ndim() == 2 {
-            x // layer 0 only reads its input — no defensive copy
-        } else {
-            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
-            &reshaped
-        };
-        let mut h: Option<Tensor> = None;
-        for l in 0..self.n_layers() {
-            let input = h.as_ref().unwrap_or(x2d);
-            let mut next = matmul(input, &params[2 * l]);
-            add_bias(&mut next, &params[2 * l + 1]);
-            if l != self.n_layers() - 1 {
-                next = relu(&next);
-            }
-            h = Some(next);
-        }
-        h.expect("MLP has at least one layer")
-    }
-
-    /// Forward pass over **packed** weights: logits `[batch, n_classes]`.
-    ///
-    /// The inference twin of [`Mlp::forward`]: hidden weights stored as
-    /// [`PackedNmTensor`](crate::sparsity::PackedNmTensor) run the sparse
-    /// kernels ([`packed_matmul`]) that skip pruned slots, dense parameters
-    /// run the ordinary dense path. Output is bit-for-bit identical to
-    /// `forward` over the dense *masked* weights on finite inputs — the
-    /// integration suite (`rust/tests/packed_inference.rs`) holds the two
-    /// equal across batch sizes.
-    pub fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
-        assert_eq!(
-            x.last_dim(),
-            self.sizes[0],
-            "input feature dim {} vs model input dim {}",
-            x.last_dim(),
-            self.sizes[0]
-        );
-        self.forward_packed_rows(params, x.data(), x.rows_2d())
-    }
-
-    /// Packed forward pass over a **borrowed** row-major slice of `rows`
-    /// samples (`sizes[0]` features each) — the copy-free entry the
-    /// threaded [`BatchServer`](crate::coordinator::serve::BatchServer)
-    /// shards call so no per-shard input tensor is ever materialized.
-    /// [`Mlp::forward_packed`] delegates here.
-    pub fn forward_packed_rows(&self, params: &[PackedParam], xs: &[f32], rows: usize) -> Tensor {
-        assert_eq!(params.len(), self.n_params(), "packed param arity");
-        assert_eq!(
-            xs.len(),
-            rows * self.sizes[0],
-            "input slice {} vs {rows}x{}",
-            xs.len(),
-            self.sizes[0]
-        );
-        // layer 0 reads straight from the borrowed slice
-        let b0 = params[1].as_dense().expect("bias tensors are never packed");
-        let mut h = Tensor::zeros(&[rows, self.sizes[1]]);
-        match &params[0] {
-            PackedParam::Dense(w) => matmul_rows(xs, rows, self.sizes[0], w, &mut h),
-            PackedParam::Packed(w) => packed_matmul_rows(xs, rows, w, &mut h),
-        }
-        add_bias(&mut h, b0);
-        if self.n_layers() > 1 {
-            h = relu(&h);
-        }
-        for l in 1..self.n_layers() {
-            let b = params[2 * l + 1]
-                .as_dense()
-                .expect("bias tensors are never packed");
-            let mut next = match &params[2 * l] {
-                PackedParam::Dense(w) => matmul(&h, w),
-                PackedParam::Packed(w) => packed_matmul(&h, w),
-            };
-            add_bias(&mut next, b);
-            if l != self.n_layers() - 1 {
-                next = relu(&next);
-            }
-            h = next;
-        }
-        h
-    }
-
-    /// Validate a packed parameter list against this MLP's `[w, b, …]`
-    /// layout (arity, weight shapes, dense biases) — the single layout
-    /// check shared by [`BatchServer`](crate::coordinator::serve::BatchServer)
-    /// and [`FinetuneSession`](crate::coordinator::finetune::FinetuneSession)
-    /// construction.
-    pub fn validate_packed_params(&self, params: &[PackedParam]) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            params.len() == self.n_params(),
-            "packed model has {} params, MLP wants {}",
-            params.len(),
-            self.n_params()
-        );
-        for l in 0..self.n_layers() {
-            let (fan_in, fan_out) = (self.sizes[l], self.sizes[l + 1]);
-            anyhow::ensure!(
-                params[2 * l].shape() == &[fan_in, fan_out],
-                "layer {l} weight shape {:?} vs [{fan_in}, {fan_out}]",
-                params[2 * l].shape()
-            );
-            anyhow::ensure!(
-                params[2 * l + 1].as_dense().is_some()
-                    && params[2 * l + 1].shape() == &[fan_out],
-                "layer {l} bias must be dense [{fan_out}]"
-            );
-        }
-        Ok(())
-    }
-
     /// The dense **masked** parameter list: `Π ⊙ w` on sparse-eligible
-    /// tensors (via [`crate::sparsity::apply_nm`]), clones elsewhere — the
-    /// baseline every packed path is held bit-identical to.
-    pub fn masked_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<Tensor> {
+    /// tensors, clones elsewhere — the oracle every packed path is held
+    /// bit-identical to.
+    fn masked_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<Tensor> {
         params
             .iter()
             .zip(self.sparse_flags())
@@ -198,103 +166,17 @@ impl Mlp {
             .collect()
     }
 
-    /// Pack trained parameters for inference: hidden weights are compressed
-    /// at `ratio` (the same selection rule training masks used), biases and
-    /// the final layer stay dense. The one-time export step before serving —
-    /// see [`crate::coordinator::serve::BatchServer`].
-    pub fn pack_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<PackedParam> {
+    /// Pack trained parameters for inference at `ratio` (sparse-eligible
+    /// tensors compressed, everything else dense).
+    fn pack_params(&self, params: &[Tensor], ratio: NmRatio) -> Vec<PackedParam> {
         crate::sparsity::pack_params(params, &self.ratios(ratio))
     }
 
-    /// Classification accuracy of a packed model on a batch.
-    pub fn accuracy_packed(&self, params: &[PackedParam], x: &Tensor, labels: &[usize]) -> f64 {
-        accuracy_from_logits(&self.forward_packed(params, x), labels)
-    }
-
-    /// Mean cross-entropy loss + exact gradients w.r.t. every parameter.
+    /// [`loss_and_grad_packed_with_cols`] with a per-call decode (training
+    /// loops should cache the decode instead — `FinetuneSession` does).
     ///
-    /// Returns `(loss, grads)` where `grads[i]` matches `params[i]`'s shape.
-    pub fn loss_and_grad(
-        &self,
-        params: &[Tensor],
-        x: &Tensor,
-        labels: &[usize],
-    ) -> (f64, Vec<Tensor>) {
-        let n_layers = self.n_layers();
-        let reshaped;
-        let x2d: &Tensor = if x.ndim() == 2 {
-            x // layer 0 only reads its input — no defensive copy
-        } else {
-            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
-            &reshaped
-        };
-        // forward, caching each layer's post-ReLU output
-        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers);
-        for l in 0..n_layers {
-            let input = if l == 0 { x2d } else { &acts[l - 1] };
-            let mut h = matmul(input, &params[2 * l]);
-            add_bias(&mut h, &params[2 * l + 1]);
-            if l != n_layers - 1 {
-                h = relu(&h);
-            }
-            acts.push(h);
-        }
-        let logits = acts.last().unwrap();
-        let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
-
-        // backward
-        let mut grads: Vec<Tensor> = (0..self.n_params())
-            .map(|_| Tensor::zeros(&[0]))
-            .collect();
-        for l in (0..n_layers).rev() {
-            let a_in: &Tensor = if l == 0 { x2d } else { &acts[l - 1] };
-            // dW = a_inᵀ @ delta ; db = colsum(delta)
-            grads[2 * l] = matmul_at(a_in, &delta);
-            let (rows, cols) = delta.as_2d();
-            let mut db = Tensor::zeros(&[cols]);
-            for r in 0..rows {
-                for c in 0..cols {
-                    db.data_mut()[c] += delta.data()[r * cols + c];
-                }
-            }
-            grads[2 * l + 1] = db;
-            if l > 0 {
-                // dA = delta @ Wᵀ, gated by the ReLU mask of a_in
-                let mut da = matmul_bt(&delta, &params[2 * l]);
-                for (d, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
-                    if a <= 0.0 {
-                        *d = 0.0;
-                    }
-                }
-                delta = da;
-            }
-        }
-        (loss, grads)
-    }
-
-    /// Mean cross-entropy loss + gradients over **packed** parameters — the
-    /// frozen-mask fine-tuning backward pass.
-    ///
-    /// The forward runs the sparse kernels; the backward computes a
-    /// [`PackedGrad::Compact`] for every packed weight via
-    /// [`packed_matmul_at`] (only kept coordinates are ever materialized —
-    /// the gradient of a pruned slot does not exist) and streams the
-    /// compressed weights through [`packed_matmul_bt`] for the activation
-    /// gradient. Dense parameters (biases, final layer) get ordinary dense
-    /// gradients.
-    ///
-    /// **Bit-for-bit** equal to [`Mlp::loss_and_grad`] over the dense
-    /// *masked* parameter list: the loss, every dense gradient, and every
-    /// kept coordinate of every compact gradient carry identical bits
-    /// (`rust/tests/packed_finetune.rs` holds this across ratios, tails,
-    /// and batch sizes).
-    ///
-    /// Decodes each packed weight's index codes per call; a training loop
-    /// should decode once and use
-    /// [`loss_and_grad_packed_with_cols`](Self::loss_and_grad_packed_with_cols)
-    /// — [`FinetuneSession`](crate::coordinator::finetune::FinetuneSession)
-    /// does.
-    pub fn loss_and_grad_packed(
+    /// [`loss_and_grad_packed_with_cols`]: SparseModel::loss_and_grad_packed_with_cols
+    fn loss_and_grad_packed(
         &self,
         params: &[PackedParam],
         x: &Tensor,
@@ -307,234 +189,263 @@ impl Mlp {
         self.loss_and_grad_packed_with_cols(params, &cols, x, labels)
     }
 
-    /// [`loss_and_grad_packed`](Self::loss_and_grad_packed) with
-    /// caller-cached column indices: `cols[i]` must be
-    /// [`col_indices`](crate::sparsity::PackedNmTensor::col_indices) of
-    /// packed parameter `i` (`None` for dense parameters). The codes are
-    /// immutable during frozen-mask fine-tuning, so the cache is computed
-    /// once per session and the hot loop never re-decodes the bitstream.
-    pub fn loss_and_grad_packed_with_cols(
+    /// Packed forward over a **borrowed** row-major slice of `rows` samples
+    /// of `dim` trailing features each — the threaded
+    /// [`BatchServer`](crate::coordinator::serve::BatchServer) shard entry.
+    /// The default materializes one tensor around the shard; models with a
+    /// copy-free path (the MLP) override it.
+    fn forward_packed_rows(
+        &self,
+        params: &[PackedParam],
+        xs: &[f32],
+        rows: usize,
+        dim: usize,
+    ) -> Tensor {
+        assert_eq!(xs.len(), rows * dim, "shard slice {} vs {rows}x{dim}", xs.len());
+        let x = Tensor::new(&[rows, dim], xs.to_vec());
+        self.forward_packed(params, &x)
+    }
+
+    /// Classification accuracy on a batch.
+    fn accuracy(&self, params: &[Tensor], x: &Tensor, labels: &[usize]) -> f64 {
+        accuracy_from_logits(&self.forward(params, x), labels)
+    }
+
+    /// Classification accuracy of a packed model on a batch.
+    fn accuracy_packed(&self, params: &[PackedParam], x: &Tensor, labels: &[usize]) -> f64 {
+        accuracy_from_logits(&self.forward_packed(params, x), labels)
+    }
+}
+
+/// Runtime model dispatch: the concrete model a manifest [`ModelInfo`]
+/// resolves to (see [`model_from_info`]). Implements [`SparseModel`] by
+/// delegation, so `Session::batch_server` / `finetune_session` serve both
+/// families through one type.
+#[derive(Debug, Clone)]
+pub enum AnyModel {
+    Mlp(Mlp),
+    Encoder(TokenEncoder),
+}
+
+macro_rules! any_delegate {
+    ($self:ident, $m:ident, $body:expr) => {
+        match $self {
+            AnyModel::Mlp($m) => $body,
+            AnyModel::Encoder($m) => $body,
+        }
+    };
+}
+
+impl SparseModel for AnyModel {
+    fn n_params(&self) -> usize {
+        any_delegate!(self, m, SparseModel::n_params(m))
+    }
+
+    fn in_dim(&self) -> usize {
+        any_delegate!(self, m, SparseModel::in_dim(m))
+    }
+
+    fn out_dim(&self) -> usize {
+        any_delegate!(self, m, SparseModel::out_dim(m))
+    }
+
+    fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        any_delegate!(self, m, SparseModel::init(m, rng))
+    }
+
+    fn sparse_flags(&self) -> Vec<bool> {
+        any_delegate!(self, m, SparseModel::sparse_flags(m))
+    }
+
+    fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
+        any_delegate!(self, m, SparseModel::forward(m, params, x))
+    }
+
+    fn loss_and_grad(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<Tensor>) {
+        any_delegate!(self, m, SparseModel::loss_and_grad(m, params, x, labels))
+    }
+
+    fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
+        any_delegate!(self, m, SparseModel::forward_packed(m, params, x))
+    }
+
+    fn loss_and_grad_packed_with_cols(
         &self,
         params: &[PackedParam],
         cols: &[Option<Vec<u32>>],
         x: &Tensor,
         labels: &[usize],
     ) -> (f64, Vec<PackedGrad>) {
-        assert_eq!(params.len(), self.n_params(), "packed param arity");
-        assert_eq!(params.len(), cols.len(), "cols cache arity");
-        let n_layers = self.n_layers();
-        let reshaped;
-        let x2d: &Tensor = if x.ndim() == 2 {
-            x // layer 0 only reads its input — no defensive copy
-        } else {
-            reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
-            &reshaped
-        };
-        // forward, caching each layer's post-ReLU output
-        let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers);
-        for l in 0..n_layers {
-            let input = if l == 0 { x2d } else { &acts[l - 1] };
-            let b = params[2 * l + 1]
-                .as_dense()
-                .expect("bias tensors are never packed");
-            let mut h = match &params[2 * l] {
-                PackedParam::Dense(w) => matmul(input, w),
-                PackedParam::Packed(w) => packed_matmul(input, w),
-            };
-            add_bias(&mut h, b);
-            if l != n_layers - 1 {
-                h = relu(&h);
-            }
-            acts.push(h);
-        }
-        let logits = acts.last().unwrap();
-        let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
-
-        // backward
-        let mut grads: Vec<PackedGrad> = (0..self.n_params())
-            .map(|_| PackedGrad::Dense(Tensor::zeros(&[0])))
-            .collect();
-        for l in (0..n_layers).rev() {
-            let a_in: &Tensor = if l == 0 { x2d } else { &acts[l - 1] };
-            grads[2 * l] = match &params[2 * l] {
-                PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a_in, &delta)),
-                PackedParam::Packed(w) => {
-                    let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
-                    let mut gv = vec![0f32; w.n_values()];
-                    packed_matmul_at_into(a_in, &delta, w, ci, &mut gv);
-                    PackedGrad::Compact(gv)
-                }
-            };
-            // db = colsum(delta), identical to the dense path
-            let (rows, dcols) = delta.as_2d();
-            let mut db = Tensor::zeros(&[dcols]);
-            for r in 0..rows {
-                for c in 0..dcols {
-                    db.data_mut()[c] += delta.data()[r * dcols + c];
-                }
-            }
-            grads[2 * l + 1] = PackedGrad::Dense(db);
-            if l > 0 {
-                // dA = delta @ Wᵀ (compressed-weight stream), ReLU-gated
-                let mut da = match &params[2 * l] {
-                    PackedParam::Dense(w) => matmul_bt(&delta, w),
-                    PackedParam::Packed(w) => {
-                        let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
-                        let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
-                        packed_matmul_bt_into(&delta, w, ci, &mut out);
-                        out
-                    }
-                };
-                for (d, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
-                    if a <= 0.0 {
-                        *d = 0.0;
-                    }
-                }
-                delta = da;
-            }
-        }
-        (loss, grads)
+        any_delegate!(
+            self,
+            m,
+            SparseModel::loss_and_grad_packed_with_cols(m, params, cols, x, labels)
+        )
     }
 
-    /// Classification accuracy on a batch.
-    pub fn accuracy(&self, params: &[Tensor], x: &Tensor, labels: &[usize]) -> f64 {
-        accuracy_from_logits(&self.forward(params, x), labels)
+    fn validate_packed_params(&self, params: &[PackedParam]) -> anyhow::Result<()> {
+        any_delegate!(self, m, SparseModel::validate_packed_params(m, params))
+    }
+
+    fn check_input_dim(&self, dim: usize) -> anyhow::Result<()> {
+        any_delegate!(self, m, SparseModel::check_input_dim(m, dim))
+    }
+
+    fn validate_input(&self, x: &Tensor) -> anyhow::Result<()> {
+        any_delegate!(self, m, SparseModel::validate_input(m, x))
+    }
+
+    fn forward_packed_rows(
+        &self,
+        params: &[PackedParam],
+        xs: &[f32],
+        rows: usize,
+        dim: usize,
+    ) -> Tensor {
+        any_delegate!(self, m, SparseModel::forward_packed_rows(m, params, xs, rows, dim))
+    }
+}
+
+/// Resolve a manifest model description to a concrete pure-Rust model —
+/// the dispatcher behind `Session::batch_server` / `finetune_session`.
+///
+/// Classifier layouts with alternating `[w, b]` pairs resolve to [`Mlp`];
+/// token-model layouts (`tok_emb` / `pos_emb_h<heads>` followed by
+/// fused-QKV blocks and a dense head, kind `"classify"` or `"lm"`) resolve
+/// to [`TokenEncoder`]. Anything else — including the legacy separate-QKV
+/// manifest layout, which the pure-Rust encoder does not model — gets an
+/// error naming both attempts instead of silent garbage.
+pub fn model_from_info(info: &ModelInfo) -> anyhow::Result<AnyModel> {
+    let mlp_err = if info.kind == "classify" {
+        match Mlp::from_model_info(info) {
+            Ok(mlp) => return Ok(AnyModel::Mlp(mlp)),
+            Err(e) => Some(e),
+        }
+    } else {
+        None
+    };
+    match TokenEncoder::from_model_info(info) {
+        Ok(enc) => Ok(AnyModel::Encoder(enc)),
+        Err(enc_err) => match mlp_err {
+            Some(mlp_err) => Err(anyhow::anyhow!(
+                "model {:?} matches neither pure-Rust layout (MLP: {mlp_err}; encoder: {enc_err})",
+                info.key
+            )),
+            None => Err(enc_err),
+        },
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testutil::Cases;
 
     #[test]
-    fn shapes_and_flags() {
-        let mlp = Mlp::new(8, &[16, 12], 3);
-        assert_eq!(mlp.n_layers(), 3);
-        assert_eq!(mlp.n_params(), 6);
-        assert_eq!(
-            mlp.sparse_flags(),
-            vec![true, false, true, false, false, false]
-        );
-        let p = mlp.init(&mut Pcg64::new(0));
-        assert_eq!(p[0].shape(), &[8, 16]);
-        assert_eq!(p[5].shape(), &[3]);
+    fn model_from_info_dispatches_mlp_layouts() {
+        let info = ModelInfo {
+            key: "mlp_test".into(),
+            params: vec![
+                ("w0".into(), vec![8, 16], true),
+                ("b0".into(), vec![16], false),
+                ("w1".into(), vec![16, 4], false),
+                ("b1".into(), vec![4], false),
+            ],
+            sparse_indices: vec![0],
+            kind: "classify".into(),
+            n_classes: 4,
+            dim: 8 * 16 + 16 + 16 * 4 + 4,
+            batch: 2,
+            seq: None,
+        };
+        let AnyModel::Mlp(mlp) = model_from_info(&info).unwrap() else {
+            panic!("MLP layout must dispatch to Mlp");
+        };
+        assert_eq!(mlp.sizes, vec![8, 16, 4]);
+    }
+
+    /// LM-family layouts dispatch to the encoder — this used to be the
+    /// `mlp_from_model_info(&lm).is_err()` rejection test.
+    #[test]
+    fn model_from_info_dispatches_lm_layouts_to_the_encoder() {
+        let enc = TokenEncoder::next_token(32, 8, 2, 16, 2, 6);
+        let info = enc.model_info("lm_test", 4);
+        assert_eq!(info.kind, "lm");
+        let AnyModel::Encoder(back) = model_from_info(&info).unwrap() else {
+            panic!("LM layout must dispatch to TokenEncoder");
+        };
+        assert_eq!(back.vocab, enc.vocab);
+        assert_eq!(back.pool, Pool::Last);
+        assert_eq!(back.n_heads, enc.n_heads);
+
+        // token classifiers (GLUE analogs) dispatch to the encoder too
+        let cls = TokenEncoder::classifier(16, 8, 4, 12, 1, 5, 3);
+        let cinfo = cls.model_info("enc_test", 4);
+        assert_eq!(cinfo.kind, "classify");
+        let AnyModel::Encoder(cback) = model_from_info(&cinfo).unwrap() else {
+            panic!("token classifier layout must dispatch to TokenEncoder");
+        };
+        assert_eq!(cback.pool, Pool::First);
+        assert_eq!(cback.n_out, 3);
     }
 
     #[test]
-    fn forward_shapes() {
-        let mlp = Mlp::new(8, &[16], 3);
-        let p = mlp.init(&mut Pcg64::new(1));
-        let x = Tensor::randn(&[5, 8], &mut Pcg64::new(2), 0.0, 1.0);
-        let y = mlp.forward(&p, &x);
-        assert_eq!(y.shape(), &[5, 3]);
+    fn model_from_info_rejects_foreign_layouts_with_both_attempts() {
+        // a classify layout that is neither an [w, b] MLP nor an encoder
+        let info = ModelInfo {
+            key: "weird".into(),
+            params: vec![("w".into(), vec![4, 4, 4], true)],
+            sparse_indices: vec![0],
+            kind: "classify".into(),
+            n_classes: 4,
+            dim: 64,
+            batch: 1,
+            seq: None,
+        };
+        let err = model_from_info(&info).unwrap_err().to_string();
+        assert!(err.contains("neither"), "unhelpful error: {err}");
+        // legacy separate-QKV LM layouts (wq/wk/wv + LayerNorm) still error
+        let lm = ModelInfo {
+            key: "lm_legacy".into(),
+            params: vec![
+                ("tok_emb".into(), vec![32, 8], false),
+                ("pos_emb".into(), vec![6, 8], false), // no head-count tag
+                ("l0_wq".into(), vec![8, 8], true),
+                ("l0_wk".into(), vec![8, 8], true),
+                ("l0_wv".into(), vec![8, 8], true),
+                ("l0_wo".into(), vec![8, 8], true),
+                ("l0_fc1_w".into(), vec![8, 32], true),
+                ("l0_fc1_b".into(), vec![32], false),
+                ("l0_fc2_w".into(), vec![32, 8], true),
+                ("l0_fc2_b".into(), vec![8], false),
+                ("head_w".into(), vec![8, 32], false),
+                ("head_b".into(), vec![32], false),
+            ],
+            sparse_indices: vec![2, 3, 4, 5, 6, 8],
+            kind: "lm".into(),
+            n_classes: 32,
+            dim: 0,
+            batch: 1,
+            seq: Some(6),
+        };
+        assert!(model_from_info(&lm).is_err());
     }
 
     #[test]
-    fn gradients_match_finite_differences() {
-        Cases::new(4).run(|rng, _| {
-            let mlp = Mlp::new(4, &[6], 3);
-            let params = mlp.init(rng);
-            let x = Tensor::randn(&[3, 4], rng, 0.0, 1.0);
-            let labels = vec![rng.below(3), rng.below(3), rng.below(3)];
-            let (loss, grads) = mlp.loss_and_grad(&params, &x, &labels);
-            let eps = 1e-3f32;
-            // probe a handful of random coordinates of each tensor
-            for (pi, g) in grads.iter().enumerate() {
-                for _probe in 0..4 {
-                    let idx = rng.below(g.numel());
-                    let mut pp = params.clone();
-                    pp[pi].data_mut()[idx] += eps;
-                    let (l2, _) = mlp.loss_and_grad(&pp, &x, &labels);
-                    let fd = (l2 - loss) / eps as f64;
-                    let an = g.data()[idx] as f64;
-                    assert!(
-                        (fd - an).abs() < 5e-2 * (1.0 + an.abs()),
-                        "param {pi} idx {idx}: fd {fd} vs {an}"
-                    );
-                }
-            }
-        });
-    }
-
-    #[test]
-    fn packed_forward_matches_dense_masked() {
-        let mlp = Mlp::new(16, &[24, 16], 5);
-        let mut rng = Pcg64::new(4);
-        let params = mlp.init(&mut rng);
-        let ratio = NmRatio::new(2, 4);
-        let masked = mlp.masked_params(&params, ratio);
-        let packed = mlp.pack_params(&params, ratio);
-        for batch in [1usize, 5, 8, 11] {
-            let x = Tensor::randn(&[batch, 16], &mut rng, 0.0, 1.0);
-            let dense = mlp.forward(&masked, &x);
-            let sparse = mlp.forward_packed(&packed, &x);
-            assert_eq!(dense, sparse, "batch {batch}");
-            let labels: Vec<usize> = (0..batch).map(|i| i % 5).collect();
-            assert_eq!(
-                mlp.accuracy(&masked, &x, &labels),
-                mlp.accuracy_packed(&packed, &x, &labels)
-            );
-        }
-    }
-
-    #[test]
-    fn forward_packed_rows_matches_forward_packed() {
-        let mlp = Mlp::new(12, &[16, 8], 4);
-        let mut rng = Pcg64::new(6);
-        let params = mlp.init(&mut rng);
-        let packed = mlp.pack_params(&params, NmRatio::new(2, 4));
-        let x = Tensor::randn(&[9, 12], &mut rng, 0.0, 1.0);
-        let whole = mlp.forward_packed(&packed, &x);
-        // a row sub-range through the slice entry, like a serving shard
-        let shard = mlp.forward_packed_rows(&packed, &x.data()[2 * 12..7 * 12], 5);
-        assert_eq!(shard.data(), &whole.data()[2 * 4..7 * 4]);
-    }
-
-    #[test]
-    fn packed_loss_and_grad_matches_dense_masked_oracle() {
-        let mlp = Mlp::new(8, &[16, 12], 3);
-        let mut rng = Pcg64::new(11);
-        let params = mlp.init(&mut rng);
-        let ratio = NmRatio::new(2, 4);
-        let masked = mlp.masked_params(&params, ratio);
-        let packed = mlp.pack_params(&params, ratio);
-        let x = Tensor::randn(&[10, 8], &mut rng, 0.0, 1.0);
-        let labels: Vec<usize> = (0..10).map(|i| i % 3).collect();
-        let (loss_d, grads_d) = mlp.loss_and_grad(&masked, &x, &labels);
-        let (loss_p, grads_p) = mlp.loss_and_grad_packed(&packed, &x, &labels);
-        assert_eq!(loss_d.to_bits(), loss_p.to_bits());
-        for (i, (gd, gp)) in grads_d.iter().zip(&grads_p).enumerate() {
-            match (&packed[i], gp) {
-                (PackedParam::Packed(pk), PackedGrad::Compact(cv)) => {
-                    // compact grad == dense grad gathered at kept slots
-                    assert_eq!(pk.compact_like(gd), *cv, "param {i}");
-                }
-                (PackedParam::Dense(_), PackedGrad::Dense(gt)) => {
-                    assert_eq!(gd, gt, "param {i}");
-                }
-                other => panic!("param {i}: mismatched grad kind {other:?}"),
-            }
-        }
-    }
-
-    #[test]
-    fn training_reduces_loss() {
-        let mut rng = Pcg64::new(3);
-        let mlp = Mlp::new(10, &[32], 4);
-        let mut params = mlp.init(&mut rng);
-        // fixed synthetic batch: learn to classify by cluster
-        let x = Tensor::randn(&[64, 10], &mut rng, 0.0, 1.0);
-        let labels: Vec<usize> = (0..64).map(|i| i % 4).collect();
-        let (first, _) = mlp.loss_and_grad(&params, &x, &labels);
-        for _ in 0..200 {
-            let (_, grads) = mlp.loss_and_grad(&params, &x, &labels);
-            for (p, g) in params.iter_mut().zip(&grads) {
-                crate::tensor::axpy(p, -0.5, g);
-            }
-        }
-        let (last, _) = mlp.loss_and_grad(&params, &x, &labels);
-        assert!(last < first * 0.5, "{first} -> {last}");
-        assert!(mlp.accuracy(&params, &x, &labels) > 0.8);
+    fn any_model_delegates_the_pipeline_surface() {
+        let any = AnyModel::Mlp(Mlp::new(8, &[16], 3));
+        assert_eq!(any.n_params(), 4);
+        assert_eq!(any.in_dim(), 8);
+        assert_eq!(any.out_dim(), 3);
+        let params = any.init(&mut Pcg64::new(0));
+        let packed = any.pack_params(&params, NmRatio::new(2, 4));
+        any.validate_packed_params(&packed).unwrap();
+        let x = Tensor::randn(&[3, 8], &mut Pcg64::new(1), 0.0, 1.0);
+        let masked = any.masked_params(&params, NmRatio::new(2, 4));
+        assert_eq!(any.forward(&masked, &x), any.forward_packed(&packed, &x));
     }
 }

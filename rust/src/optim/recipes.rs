@@ -261,6 +261,21 @@ impl RecipeState {
         }
     }
 
+    /// [`RecipeState::new`] for a [`SparseModel`](crate::model::SparseModel):
+    /// the ratio vector is derived from the model's own sparse-eligibility
+    /// flags, so recipe training is layout-agnostic — the MLP and the token
+    /// encoder train through the identical engine.
+    pub fn for_model<M: crate::model::SparseModel>(
+        recipe: PureRecipe,
+        model: &M,
+        params: &[Tensor],
+        ratio: NmRatio,
+        lr: f32,
+        hp: AdamHp,
+    ) -> Self {
+        Self::new(recipe, params, model.ratios(ratio), lr, hp)
+    }
+
     /// Attach the decaying-mask schedule (required for `DecayingMask`).
     pub fn with_schedule(mut self, s: DecaySchedule) -> Self {
         self.schedule = Some(s);

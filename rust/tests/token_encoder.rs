@@ -1,0 +1,403 @@
+//! The token-model oracle suite: the pure-Rust attention encoder
+//! ([`TokenEncoder`]) must run the whole STEP pipeline with the same
+//! bit-identity guarantees the MLP path has.
+//!
+//! 1. Exact backprop: the encoder's analytic gradients (attention softmax
+//!    included) match finite differences on every parameter family.
+//! 2. Packed twin: forward, loss, and every gradient coordinate over
+//!    packed N:M weights are **bit-for-bit** equal to the dense *masked*
+//!    oracle on finite inputs.
+//! 3. N:M masks + pack/unpack hold on attention-shaped tensors: fused-QKV
+//!    `[d, 3d]` matrices, head dims not a multiple of M, ragged tails.
+//! 4. End to end: RecipeState STEP training (through the phase switch,
+//!    driven by the generic `TrainDriver`) → pack → `FinetuneSession`
+//!    packed fine-tune (lock-step bit-equal to the dense masked fine-tune)
+//!    → `BatchServer` serving the dense masked logits exactly.
+
+use std::sync::Arc;
+
+use step_nm::coordinator::{BatchServer, DriverConfig, FinetuneSession, SwitchPolicy, TrainDriver};
+use step_nm::data::{Batch, BatchX, BatchY, Dataset, MiniBatchStream, NextTokenTask, SyntheticCorpus};
+use step_nm::model::{SparseModel, TokenEncoder};
+use step_nm::optim::{adam_update, AdamHp, PureRecipe, RecipeState};
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::{mask_stats, nm_mask, NmRatio, PackedNmTensor, PackedParam};
+use step_nm::tensor::Tensor;
+
+/// Shapes small enough for finite differences, big enough that every code
+/// path (multi-head split, multi-block residuals, 2:4 and 2:8 groups) is
+/// exercised — every projection's last dim divides 8, so the dense masked
+/// oracle (`apply_nm` needs whole groups) runs at both ratios.
+fn tiny_encoder() -> TokenEncoder {
+    TokenEncoder::classifier(13, 8, 2, 16, 2, 6, 3)
+}
+
+fn token_batch(rng: &mut Pcg64, vocab: usize, bsz: usize, seq: usize) -> Tensor {
+    let data: Vec<f32> = (0..bsz * seq).map(|_| rng.below(vocab) as f32).collect();
+    Tensor::new(&[bsz, seq], data)
+}
+
+/// Token x as the f32 id tensor + class labels of a converted LM batch.
+fn token_xy(b: &Batch) -> (Tensor, Vec<usize>) {
+    let BatchX::Tokens { ids, batch, seq } = &b.x else {
+        panic!("NextTokenTask yields token inputs")
+    };
+    let BatchY::Classes(y) = &b.y else {
+        panic!("NextTokenTask yields class labels")
+    };
+    let x = Tensor::new(&[*batch, *seq], ids.iter().map(|&i| i as f32).collect());
+    (x, y.clone())
+}
+
+// ---------------------------------------------------------------------------
+// 1. exact backprop
+// ---------------------------------------------------------------------------
+
+/// Analytic gradients — through the softmax/attention backward — match
+/// finite differences on probed coordinates of every parameter tensor
+/// (embeddings, fused QKV, output/FFN projections, head).
+#[test]
+fn encoder_gradients_match_finite_differences() {
+    let enc = tiny_encoder();
+    let mut rng = Pcg64::new(51);
+    let params = enc.init(&mut rng);
+    let x = token_batch(&mut rng, enc.vocab, 3, 5);
+    let labels = vec![0usize, 2, 1];
+    let (loss, grads) = enc.loss_and_grad(&params, &x, &labels);
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(grads.len(), enc.n_params());
+    let eps = 1e-3f32;
+    for (pi, g) in grads.iter().enumerate() {
+        assert_eq!(g.shape(), params[pi].shape(), "param {pi} grad shape");
+        for probe in 0..4 {
+            let idx = rng.below(g.numel());
+            // central difference: O(ε²) truncation, robust near ReLU kinks
+            let mut pp = params.clone();
+            pp[pi].data_mut()[idx] += eps;
+            let (l_plus, _) = enc.loss_and_grad(&pp, &x, &labels);
+            pp[pi].data_mut()[idx] -= 2.0 * eps;
+            let (l_minus, _) = enc.loss_and_grad(&pp, &x, &labels);
+            let fd = (l_plus - l_minus) / (2.0 * eps as f64);
+            let an = g.data()[idx] as f64;
+            assert!(
+                (fd - an).abs() < 5e-2 * (1.0 + an.abs()),
+                "param {pi} idx {idx} probe {probe}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. packed twin bit-identity
+// ---------------------------------------------------------------------------
+
+/// Packed forward logits carry identical bits to the dense masked forward
+/// across batch sizes, sequence lengths, and ratios.
+#[test]
+fn packed_encoder_forward_matches_dense_masked_bitwise() {
+    let enc = tiny_encoder();
+    let mut rng = Pcg64::new(53);
+    let params = enc.init(&mut rng);
+    for (n, m) in [(2usize, 4usize), (1, 4)] {
+        let ratio = NmRatio::new(n, m);
+        let masked = enc.masked_params(&params, ratio);
+        let packed = enc.pack_params(&params, ratio);
+        enc.validate_packed_params(&packed).unwrap();
+        // the four projections per block really are compressed
+        let n_packed = packed.iter().filter(|p| p.as_packed().is_some()).count();
+        assert_eq!(n_packed, 4 * enc.n_blocks, "{n}:{m}");
+        for (bsz, seq) in [(1usize, 6usize), (5, 6), (4, 3), (7, 1)] {
+            let x = token_batch(&mut rng, enc.vocab, bsz, seq);
+            let dense = enc.forward(&masked, &x);
+            let sparse = enc.forward_packed(&packed, &x);
+            assert_eq!(dense, sparse, "{n}:{m} batch {bsz} seq {seq}");
+            let labels: Vec<usize> = (0..bsz).map(|i| i % enc.n_out).collect();
+            assert_eq!(
+                enc.accuracy(&masked, &x, &labels),
+                enc.accuracy_packed(&packed, &x, &labels)
+            );
+        }
+    }
+}
+
+/// Packed loss + gradients: the loss bits, every dense gradient, and every
+/// kept coordinate of every compact gradient equal the dense masked oracle.
+#[test]
+fn packed_encoder_loss_and_grad_matches_dense_masked_oracle() {
+    let enc = tiny_encoder();
+    let mut rng = Pcg64::new(57);
+    let params = enc.init(&mut rng);
+    for (n, m) in [(2usize, 4usize), (2, 8)] {
+        let ratio = NmRatio::new(n, m);
+        let masked = enc.masked_params(&params, ratio);
+        let packed = enc.pack_params(&params, ratio);
+        let x = token_batch(&mut rng, enc.vocab, 6, 6);
+        let labels: Vec<usize> = (0..6).map(|i| i % enc.n_out).collect();
+        let (loss_d, grads_d) = enc.loss_and_grad(&masked, &x, &labels);
+        let (loss_p, grads_p) = enc.loss_and_grad_packed(&packed, &x, &labels);
+        assert_eq!(loss_d.to_bits(), loss_p.to_bits(), "{n}:{m} loss");
+        for (i, (gd, gp)) in grads_d.iter().zip(&grads_p).enumerate() {
+            match (&packed[i], gp) {
+                (PackedParam::Packed(pk), step_nm::sparsity::PackedGrad::Compact(cv)) => {
+                    assert_eq!(pk.compact_like(gd), *cv, "{n}:{m} param {i}");
+                }
+                (PackedParam::Dense(_), step_nm::sparsity::PackedGrad::Dense(gt)) => {
+                    assert_eq!(gd, gt, "{n}:{m} param {i}");
+                }
+                other => panic!("{n}:{m} param {i}: mismatched grad kind {other:?}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. attention-shaped N:M masks and packing
+// ---------------------------------------------------------------------------
+
+/// Fused-QKV matrices `[d, 3d]`: exact N-per-group masks, head dims that do
+/// not divide M (d_h = 3 vs M = 4), and non-multiple-of-M tails all
+/// round-trip the packed form losslessly.
+#[test]
+fn attention_shaped_tensors_mask_and_pack_roundtrip() {
+    let mut rng = Pcg64::new(61);
+    // d = 6, 3d = 18: head dim 3 (two heads) not a multiple of M = 4, and
+    // each 18-wide row carries a ragged 2-wide tail group
+    let qkv = Tensor::randn(&[6, 18], &mut rng, 0.0, 1.0);
+    let ratio = NmRatio::new(2, 4);
+    let pk = PackedNmTensor::pack(&qkv, ratio);
+    let unpacked = pk.unpack();
+    // kept slots carry the original bits, pruned slots are exactly zero
+    let mask = {
+        // mask groups only cover whole M-groups; the ragged tail (cols 16..18)
+        // is stored dense by the packed form — compare per coordinate
+        let mut kept = 0usize;
+        for r in 0..6 {
+            for c in 0..18 {
+                let (orig, got) = (qkv.get(&[r, c]), unpacked.get(&[r, c]));
+                if got != 0.0 || orig == 0.0 {
+                    assert_eq!(orig.to_bits(), got.to_bits(), "kept slot ({r},{c})");
+                    kept += 1;
+                }
+            }
+        }
+        assert!(kept >= 6 * (8 + 2), "tail groups stay dense");
+        kept
+    };
+    // the dense-stored tail means density > n/m but < 1
+    assert!(mask < 6 * 18);
+    assert!(pk.packed_bytes() < pk.dense_bytes());
+
+    // a divisible fused-QKV shape gets exact N:M statistics
+    let qkv24 = Tensor::randn(&[8, 24], &mut rng, 0.0, 1.0);
+    for (n, m) in [(2usize, 4usize), (4, 8), (2, 8)] {
+        let r = NmRatio::new(n, m);
+        let stats = mask_stats(&nm_mask(&qkv24, r), r);
+        assert!(stats.exact, "{n}:{m} on [8, 24]");
+        let pk = PackedNmTensor::pack(&qkv24, r);
+        let up = pk.unpack();
+        assert_eq!(up.count_zeros(), 8 * 24 - 8 * 24 * n / m, "{n}:{m}");
+        // unpack equals the mask product bit-for-bit
+        let masked = step_nm::sparsity::apply_nm(&qkv24, r);
+        assert_eq!(up, masked, "{n}:{m}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. the full pipeline
+// ---------------------------------------------------------------------------
+
+/// The generic driver trains the encoder with the STEP recipe bit-identically
+/// to a manual RecipeState loop over the same token stream — losses,
+/// weights, Adam state, and the frozen v* all match across the phase switch —
+/// and the final server hands back the dense masked logits exactly.
+#[test]
+fn encoder_step_training_driver_matches_manual_loop_and_serves() {
+    let corpus = SyntheticCorpus::new(24, 6, 4_000, 1_200, 71);
+    let enc = TokenEncoder::next_token(24, 8, 2, 12, 1, 6);
+    let task: Arc<dyn Dataset> = Arc::new(NextTokenTask::new(corpus));
+    let stream = MiniBatchStream::new(task, 24, 8, 71).unwrap(); // 3 batches/epoch
+    let mut rng = Pcg64::new(73);
+    let params0 = enc.init(&mut rng);
+    let recipe0 = RecipeState::for_model(
+        PureRecipe::Step { lam: 2e-4 },
+        &enc,
+        &params0,
+        NmRatio::new(2, 4),
+        1e-2,
+        AdamHp::default(),
+    );
+    let epochs = 3;
+    let switch_at = 4;
+    let mut driver = TrainDriver::new_dense(
+        enc.clone(),
+        params0.clone(),
+        recipe0.clone(),
+        stream.clone(),
+        DriverConfig {
+            epochs,
+            eval_every: 3,
+            switch: SwitchPolicy::At(switch_at),
+            ..DriverConfig::default()
+        },
+    )
+    .unwrap();
+    let report = driver.run().unwrap();
+    assert_eq!(report.switch_step, switch_at);
+    assert!(report.final_eval.loss.is_finite());
+
+    // manual oracle over the identical stream
+    let mut st = recipe0;
+    let mut p = params0;
+    for t in 1..=stream.steps_for(epochs) {
+        if t == switch_at {
+            st.switch_to_phase2();
+        }
+        let b = stream.train_batch(t, stream.batch_size());
+        let (x, y) = token_xy(&b);
+        let (loss, _) = st.step(&mut p, |ws| enc.loss_and_grad(ws, &x, &y));
+        assert_eq!(
+            report.losses[t - 1].to_bits(),
+            loss.to_bits(),
+            "loss diverged at step {t}"
+        );
+    }
+    assert_eq!(driver.dense_params().unwrap(), &p[..], "weights");
+    let rec = driver.recipe().unwrap();
+    assert_eq!(rec.m, st.m, "first-moment state");
+    assert_eq!(rec.v_star, st.v_star, "frozen v*");
+    assert!(rec.in_phase2());
+
+    // handoff: the server's packed logits equal the dense masked forward of
+    // the driver's final export
+    let masked = driver
+        .recipe()
+        .unwrap()
+        .final_sparse_params(driver.dense_params().unwrap());
+    let mut server = driver.into_server().unwrap();
+    let eval = stream.eval_batches(8);
+    let (x, labels) = token_xy(&eval[0]);
+    let served = server.serve(&x).unwrap();
+    assert_eq!(served, enc.forward(&masked, &x), "served logits");
+    let acc = server.accuracy(&x, &labels).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+/// Packed frozen-mask fine-tuning of the encoder is bit-identical to the
+/// dense masked fine-tune (masked weights, support-projected gradients,
+/// dense Adam state) — loss bits every step, kept coordinates at the end —
+/// and the fine-tuned weights serve through `into_server`.
+#[test]
+fn encoder_packed_finetune_matches_dense_masked_step() {
+    let enc = TokenEncoder::classifier(15, 8, 2, 12, 2, 5, 4);
+    let mut rng = Pcg64::new(79);
+    let params = enc.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let (lr, hp) = (5e-3f32, AdamHp::default());
+    let mut ft = FinetuneSession::pack(enc.clone(), &params, ratio, lr, hp).unwrap();
+
+    // frozen support masks rebuilt from the packed codes (re-selecting via
+    // nm_mask on already-masked weights could tie-break differently on
+    // exact-zero kept values)
+    let support_mask = |pk: &PackedNmTensor| -> Tensor {
+        let mut mk = Tensor::zeros(pk.shape());
+        let vpr = pk.values_per_row();
+        let cols = pk.shape()[1];
+        for (vc, &j) in pk.col_indices().iter().enumerate() {
+            mk.data_mut()[(vc / vpr) * cols + j as usize] = 1.0;
+        }
+        mk
+    };
+    let masks: Vec<Option<Tensor>> = ft
+        .params()
+        .iter()
+        .map(|p| p.as_packed().map(&support_mask))
+        .collect();
+    let mut dense_w = enc.masked_params(&params, ratio);
+    let mut dm: Vec<Tensor> = dense_w.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut dv = dm.clone();
+
+    let x = token_batch(&mut rng, enc.vocab, 10, 5);
+    let labels: Vec<usize> = (0..10).map(|i| i % 4).collect();
+    for t in 1..=12u64 {
+        let (dl, mut grads) = enc.loss_and_grad(&dense_w, &x, &labels);
+        for (g, mk) in grads.iter_mut().zip(&masks) {
+            if let Some(mk) = mk {
+                for (gd, &kd) in g.data_mut().iter_mut().zip(mk.data()) {
+                    *gd *= kd;
+                }
+            }
+        }
+        for i in 0..dense_w.len() {
+            adam_update(&mut dense_w[i], &mut dm[i], &mut dv[i], &grads[i], t, lr, hp);
+        }
+        let pl = ft.step(&x, &labels);
+        assert_eq!(dl.to_bits(), pl.to_bits(), "fine-tune loss diverged at step {t}");
+    }
+    for (i, p) in ft.params().iter().enumerate() {
+        match p.as_packed() {
+            Some(pk) => assert_eq!(pk.unpack(), dense_w[i], "kept coords diverged, param {i}"),
+            None => assert_eq!(*p.as_dense().unwrap(), dense_w[i], "param {i} diverged"),
+        }
+    }
+
+    // fine-tune → serve without re-densifying
+    let final_params: Vec<Tensor> = ft
+        .params()
+        .iter()
+        .map(|p| p.unpack())
+        .collect();
+    let mut server: BatchServer<TokenEncoder> = ft.into_server().unwrap();
+    let served = server.serve(&x).unwrap();
+    assert_eq!(served, enc.forward(&final_params, &x), "served fine-tuned logits");
+}
+
+/// `from_phase2_exit` continues a STEP encoder run in the compressed form:
+/// the packed phase-2 fine-tune keeps reducing the loss and the mask
+/// (index codes) never moves.
+#[test]
+fn encoder_phase2_exit_finetune_continues_compressed() {
+    let enc = TokenEncoder::classifier(11, 8, 2, 8, 1, 4, 3);
+    let mut rng = Pcg64::new(83);
+    let mut params = enc.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let mut st = RecipeState::for_model(
+        PureRecipe::Step { lam: 0.0 },
+        &enc,
+        &params,
+        ratio,
+        5e-3,
+        AdamHp::default(),
+    );
+    let x = token_batch(&mut rng, enc.vocab, 16, 4);
+    let labels: Vec<usize> = (0..16).map(|i| i % 3).collect();
+    for _ in 0..6 {
+        st.step(&mut params, |ws| enc.loss_and_grad(ws, &x, &labels));
+    }
+    st.switch_to_phase2();
+    for _ in 0..6 {
+        st.step(&mut params, |ws| enc.loss_and_grad(ws, &x, &labels));
+    }
+    let mut ft = FinetuneSession::from_phase2_exit(enc.clone(), &params, &st, 5e-3).unwrap();
+    assert_eq!(ft.current_step(), st.t, "step counter continues");
+    let codes_before: Vec<Vec<u8>> = ft
+        .params()
+        .iter()
+        .filter_map(|p| p.as_packed().map(|pk| pk.codes().to_vec()))
+        .collect();
+    assert_eq!(codes_before.len(), 4 * enc.n_blocks);
+    let first = ft.step(&x, &labels);
+    for _ in 0..60 {
+        ft.step(&x, &labels);
+    }
+    let last = {
+        let (l, _) = enc.loss_and_grad_packed(ft.params(), &x, &labels);
+        l
+    };
+    assert!(last < first, "packed phase-2 fine-tune must keep improving: {first} -> {last}");
+    let codes_after: Vec<Vec<u8>> = ft
+        .params()
+        .iter()
+        .filter_map(|p| p.as_packed().map(|pk| pk.codes().to_vec()))
+        .collect();
+    assert_eq!(codes_before, codes_after, "mask must stay frozen");
+}

@@ -14,8 +14,9 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use step_nm::autoswitch::{AutoSwitch, Clip, SwitchPolicy as SwitchDetector, ZOption};
 use step_nm::coordinator::prefetch::Prefetcher;
-use step_nm::coordinator::{DriverConfig, EarlyStop, FinetuneSession, TrainDriver};
+use step_nm::coordinator::{DriverConfig, EarlyStop, FinetuneSession, SwitchPolicy, TrainDriver};
 use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
 use step_nm::model::Mlp;
 use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
@@ -607,4 +608,163 @@ fn driver_handoff_serves_the_final_masked_weights() {
     assert_eq!(served, mlp.forward(&masked, x), "served logits");
     let acc = server.accuracy(x, labels).unwrap();
     assert!((0.0..=1.0).contains(&acc));
+}
+
+// ---------------------------------------------------------------------------
+// AutoSwitch-driven phase switching
+// ---------------------------------------------------------------------------
+
+/// `SwitchPolicy::Auto` must be bit-identical to hand-rolling the loop with
+/// an `AutoSwitch` consulted after every precondition step: same switch
+/// step, same losses, same weights/Adam state/frozen v* — under both a
+/// clip-forced fire and whatever the variance test does before it.
+#[test]
+fn auto_switch_driver_is_bit_identical_to_manual_autoswitch_loop() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(53);
+    let params0 = mlp.init(&mut rng);
+    let recipe0 = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params0,
+        mlp.ratios(NmRatio::new(2, 4)),
+        1e-2,
+        AdamHp::default(),
+    );
+    let stream = small_stream(20, 8, 59); // 3 batches/epoch
+    let epochs = 4; // 12 steps
+    let clip = Clip { t_min: 2, t_max: 6 }; // guarantees a mid-run fire
+    let option = ZOption::Arithmetic;
+
+    let mut driver = TrainDriver::new_dense(
+        mlp.clone(),
+        params0.clone(),
+        recipe0.clone(),
+        stream.clone(),
+        DriverConfig {
+            epochs,
+            switch: SwitchPolicy::Auto { option, clip: Some(clip) },
+            ..DriverConfig::default()
+        },
+    )
+    .unwrap();
+    let report = driver.run().unwrap();
+
+    // manual oracle: step, then observe; a fire freezes v* so the NEXT
+    // step is the first mask-learning step (which is what switch_step
+    // records, matching the SwitchPolicy::At convention)
+    let d: usize = params0.iter().map(Tensor::numel).sum();
+    let hp = AdamHp::default();
+    let mut asw =
+        AutoSwitch::new(d, hp.eps as f64, hp.beta2 as f64, option).with_clip(clip);
+    let mut st = recipe0;
+    let mut p = params0;
+    let mut switch_step = 0usize;
+    let mut losses = Vec::new();
+    for t in 1..=stream.steps_for(epochs) {
+        let b = stream.train_batch(t, stream.batch_size());
+        let (x, y) = xy(&b);
+        let (loss, stats) = st.step(&mut p, |mp| mlp.loss_and_grad(mp, x, y));
+        if !st.in_phase2() && asw.observe(t, stats.into()) {
+            st.switch_to_phase2();
+            switch_step = t + 1;
+        }
+        losses.push(loss);
+    }
+
+    assert!(
+        switch_step > 0 && switch_step <= clip.t_max + 1,
+        "oracle must fire in-clip"
+    );
+    assert_eq!(report.switch_step, switch_step, "switch step");
+    for (i, (a, b)) in report.losses.iter().zip(&losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss at step {}", i + 1);
+    }
+    assert_eq!(driver.dense_params().unwrap(), &p[..], "weights");
+    let rec = driver.recipe().unwrap();
+    assert_eq!(rec.m, st.m, "first-moment state");
+    assert_eq!(rec.v, st.v, "second-moment state");
+    assert_eq!(rec.v_star, st.v_star, "frozen v*");
+    assert!(rec.in_phase2());
+}
+
+/// An Auto-switch run checkpointed mid-precondition resumes with the
+/// detector's sliding window intact: the resumed run fires at the same
+/// step and continues bit-identically to the uninterrupted one.
+#[test]
+fn auto_switch_state_survives_checkpoint_resume() {
+    let mlp = Mlp::new(DIM, &[16], CLASSES);
+    let mut rng = Pcg64::new(67);
+    let params0 = mlp.init(&mut rng);
+    let mk_recipe = |params: &[Tensor]| {
+        RecipeState::new(
+            PureRecipe::Step { lam: 2e-4 },
+            params,
+            mlp.ratios(NmRatio::new(2, 4)),
+            1e-2,
+            AdamHp::default(),
+        )
+    };
+    let stream = small_stream(16, 4, 71); // 4 batches/epoch
+    let cfg = DriverConfig {
+        epochs: 3, // 12 steps
+        switch: SwitchPolicy::Auto {
+            option: ZOption::Arithmetic,
+            clip: Some(Clip { t_min: 2, t_max: 7 }),
+        },
+        ..DriverConfig::default()
+    };
+
+    let mut uninterrupted = TrainDriver::new_dense(
+        mlp.clone(),
+        params0.clone(),
+        mk_recipe(&params0),
+        stream.clone(),
+        cfg.clone(),
+    )
+    .unwrap();
+    let full = uninterrupted.run().unwrap();
+    assert!(full.switch_step >= 3, "fire after the checkpoint for a meaningful test");
+
+    // kill after 3 steps — still in the precondition phase, window non-empty
+    let path = tmp("auto_resume.ckpt");
+    let mut killed = TrainDriver::new_dense(
+        mlp.clone(),
+        params0.clone(),
+        mk_recipe(&params0),
+        stream.clone(),
+        DriverConfig {
+            checkpoint_every: 3,
+            checkpoint_path: Some(path.clone()),
+            ..cfg.clone()
+        },
+    )
+    .unwrap();
+    for _ in 0..3 {
+        killed.step_once().unwrap();
+    }
+    assert!(!killed.recipe().unwrap().in_phase2(), "must checkpoint before the fire");
+    drop(killed);
+
+    let mut resumed =
+        TrainDriver::resume_dense(mlp.clone(), stream.clone(), cfg, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.current_step(), 3);
+    let rest = resumed.run().unwrap();
+    assert_eq!(
+        rest.switch_step, full.switch_step,
+        "resumed detector must fire at the same step"
+    );
+    for (i, (a, b)) in full.losses[3..].iter().zip(&rest.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-resume loss {} diverged", i + 4);
+    }
+    assert_eq!(
+        resumed.dense_params().unwrap(),
+        uninterrupted.dense_params().unwrap(),
+        "final weights"
+    );
+    assert_eq!(
+        resumed.recipe().unwrap().v_star,
+        uninterrupted.recipe().unwrap().v_star,
+        "frozen v*"
+    );
 }
