@@ -1,0 +1,555 @@
+//! A lightweight Rust tokenizer for the `nm-lint` static-analysis pass.
+//!
+//! This is **not** a full Rust lexer — it is exactly the subset the rule
+//! engine in [`super::rules`] needs: identifiers, numbers, string/char
+//! literals (including raw strings), lifetimes, and punctuation, with line
+//! numbers attached to every token. Comments are skipped but scanned for
+//! `// nm-lint: allow(<rule>): <justification>` suppression directives.
+//!
+//! On top of the flat token stream it derives two structural views the
+//! rules key on:
+//!
+//! * [`fn_spans`] — every `fn` item with its name, visibility, and the
+//!   token range of its body (brace-matched), so rules can scope
+//!   themselves to "inside `forward_packed*`" or "this kernel function";
+//! * [`test_spans`] — token ranges covered by `#[cfg(test)] mod … { … }`
+//!   blocks and `#[test]` functions, so production-path rules skip test
+//!   code (tests may `unwrap()` freely).
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+    Punct,
+}
+
+/// One token: kind + source text + 1-based line number.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// A parsed `// nm-lint: allow(<rule>): <justification>` directive.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// Line the comment sits on. It covers findings of `rule` on this line
+    /// and the next one (so it can trail the offending line or precede it).
+    pub line: u32,
+    pub rule: String,
+    pub justification: String,
+}
+
+/// Lexer output: tokens plus the suppression directives found in comments.
+#[derive(Debug, Default)]
+pub struct LexOut {
+    pub toks: Vec<Tok>,
+    pub suppressions: Vec<Suppression>,
+    /// Malformed directives: `(line, what is wrong)`.
+    pub bad_suppressions: Vec<(u32, String)>,
+}
+
+/// Punctuation sequences kept as single tokens (longest match first).
+/// `<` and `>` stay single-char so generic-depth tracking works on `>>`.
+const MULTI_PUNCT: &[&str] = &[
+    "::", "->", "=>", "..=", "..", "+=", "-=", "*=", "/=", "%=", "==", "!=", "<=", ">=", "&&",
+    "||",
+];
+
+/// Tokenize `src`, collecting suppression directives along the way.
+pub fn lex(src: &str) -> LexOut {
+    let b = src.as_bytes();
+    let mut out = LexOut::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                scan_directive(&src[start..i], line, &mut out);
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // block comment, nesting allowed
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let (txt, nl) = scan_string(b, &mut i);
+                line += nl;
+                out.toks.push(Tok { kind: TokKind::Str, text: txt, line });
+            }
+            b'r' | b'b' if is_raw_string_start(b, i) => {
+                let (txt, nl) = scan_raw_string(b, &mut i);
+                line += nl;
+                out.toks.push(Tok { kind: TokKind::Str, text: txt, line });
+            }
+            b'\'' => {
+                // lifetime vs char literal
+                if is_char_literal(b, i) {
+                    let (txt, nl) = scan_char(b, &mut i);
+                    line += nl;
+                    out.toks.push(Tok { kind: TokKind::CharLit, text: txt, line });
+                } else {
+                    let start = i;
+                    i += 1;
+                    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                        i += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: src[start..i].to_string(),
+                        line,
+                    });
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d == b'_' || d.is_ascii_alphanumeric() {
+                        i += 1;
+                    } else if d == b'.'
+                        && b.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        i += 1; // decimal point (but not `0..n` ranges)
+                    } else {
+                        break;
+                    }
+                }
+                out.toks.push(Tok { kind: TokKind::Num, text: src[start..i].to_string(), line });
+            }
+            _ => {
+                let rest = &src[i..];
+                let multi = MULTI_PUNCT.iter().find(|p| rest.starts_with(**p));
+                let text = match multi {
+                    Some(p) => {
+                        i += p.len();
+                        (*p).to_string()
+                    }
+                    None => {
+                        // one (possibly multi-byte) character of punctuation
+                        let ch = rest.chars().next().unwrap_or('?');
+                        i += ch.len_utf8();
+                        ch.to_string()
+                    }
+                };
+                out.toks.push(Tok { kind: TokKind::Punct, text, line });
+            }
+        }
+    }
+    out
+}
+
+/// `r"…"`, `r#"…"#`, `br#"…"#`, `b"…"` detection at position `i`.
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) == Some(&b'r') {
+        j += 1;
+        while b.get(j) == Some(&b'#') {
+            j += 1;
+        }
+        return b.get(j) == Some(&b'"');
+    }
+    // plain byte string b"…"
+    b[i] == b'b' && b.get(i + 1) == Some(&b'"')
+}
+
+fn scan_raw_string(b: &[u8], i: &mut usize) -> (String, u32) {
+    let start = *i;
+    if b[*i] == b'b' {
+        *i += 1;
+    }
+    if b.get(*i) == Some(&b'r') {
+        *i += 1;
+    }
+    let mut hashes = 0usize;
+    while b.get(*i) == Some(&b'#') {
+        hashes += 1;
+        *i += 1;
+    }
+    let mut nl = 0u32;
+    if b.get(*i) == Some(&b'"') {
+        *i += 1;
+        if hashes == 0 {
+            // plain b"…" / r"…": ends at the next unescaped quote (raw
+            // strings have no escapes; byte strings do)
+            while *i < b.len() && b[*i] != b'"' {
+                if b[*i] == b'\n' {
+                    nl += 1;
+                }
+                if b[*i] == b'\\' && start != *i && b[start] == b'b' && hashes == 0 {
+                    *i += 1; // byte-string escape
+                }
+                *i += 1;
+            }
+            *i = (*i + 1).min(b.len());
+        } else {
+            // find `"` followed by `hashes` hashes
+            'outer: while *i < b.len() {
+                if b[*i] == b'\n' {
+                    nl += 1;
+                }
+                if b[*i] == b'"' {
+                    let mut k = 0;
+                    while k < hashes && b.get(*i + 1 + k) == Some(&b'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        *i += 1 + hashes;
+                        break 'outer;
+                    }
+                }
+                *i += 1;
+            }
+        }
+    }
+    (String::from_utf8_lossy(&b[start..*i]).into_owned(), nl)
+}
+
+fn scan_string(b: &[u8], i: &mut usize) -> (String, u32) {
+    let start = *i;
+    *i += 1;
+    let mut nl = 0u32;
+    while *i < b.len() {
+        match b[*i] {
+            b'\\' => *i += 2,
+            b'"' => {
+                *i += 1;
+                break;
+            }
+            b'\n' => {
+                nl += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..(*i).min(b.len())]).into_owned(), nl)
+}
+
+/// `'x'`, `'\n'`, `'\u{1F600}'` — distinguished from lifetimes (`'a`).
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some(b'\\') => true,
+        Some(c) if *c != b'\'' => b.get(i + 2) == Some(&b'\''),
+        _ => false,
+    }
+}
+
+fn scan_char(b: &[u8], i: &mut usize) -> (String, u32) {
+    let start = *i;
+    *i += 1; // opening '
+    let mut nl = 0u32;
+    while *i < b.len() {
+        match b[*i] {
+            b'\\' => *i += 2,
+            b'\'' => {
+                *i += 1;
+                break;
+            }
+            b'\n' => {
+                nl += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+    }
+    (String::from_utf8_lossy(&b[start..(*i).min(b.len())]).into_owned(), nl)
+}
+
+/// Parse an `nm-lint:` directive out of a line comment, if present.
+///
+/// Only comments whose text *starts* with `nm-lint:` count — prose that
+/// merely mentions the directive syntax (docs, error messages) is ignored.
+fn scan_directive(comment: &str, line: u32, out: &mut LexOut) {
+    let body = comment.trim_start_matches('/').trim_start();
+    let Some(rest) = body.strip_prefix("nm-lint:") else { return };
+    let rest = rest.trim_start();
+    let Some(args) = rest.strip_prefix("allow") else {
+        out.bad_suppressions
+            .push((line, format!("unknown nm-lint directive {rest:?} (expected `allow(...)`)")));
+        return;
+    };
+    let args = args.trim_start();
+    let Some(close) = args.find(')') else {
+        out.bad_suppressions.push((line, "unclosed `allow(` directive".to_string()));
+        return;
+    };
+    let rule = args
+        .strip_prefix('(')
+        .map(|a| a[..close.saturating_sub(1)].trim().to_string())
+        .unwrap_or_default();
+    if rule.is_empty() {
+        out.bad_suppressions.push((line, "empty rule name in `allow(...)`".to_string()));
+        return;
+    }
+    let after = args[close + 1..].trim_start();
+    let justification = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if justification.is_empty() {
+        out.bad_suppressions.push((
+            line,
+            format!("suppression of `{rule}` lacks a justification (`allow({rule}): <why>`)"),
+        ));
+        return;
+    }
+    out.suppressions.push(Suppression {
+        line,
+        rule,
+        justification: justification.to_string(),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// structural views
+// ---------------------------------------------------------------------------
+
+/// One `fn` item: name, visibility, and the token range of its body
+/// (`body_start` is the index of the opening `{`, `body_end` of the
+/// matching `}`; both are `usize::MAX` for bodyless trait declarations).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub is_pub: bool,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token index of the `fn` keyword.
+    pub kw_idx: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+impl FnSpan {
+    /// Does token index `i` fall inside this function's body?
+    pub fn contains(&self, i: usize) -> bool {
+        self.body_start != usize::MAX && i >= self.body_start && i <= self.body_end
+    }
+}
+
+/// Extract every `fn` item (including nested ones) from the token stream.
+pub fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident("fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue; // `fn(` type position, e.g. `Fn(usize) -> T`
+        }
+        // visibility: look back over `pub`, `pub(crate)`, `const`, `unsafe`,
+        // `extern "C"`, `async`
+        let mut is_pub = false;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let tb = &toks[j];
+            if tb.is_ident("pub") {
+                is_pub = true;
+                break;
+            }
+            let skip = tb.is_ident("const")
+                || tb.is_ident("unsafe")
+                || tb.is_ident("async")
+                || tb.is_ident("extern")
+                || tb.kind == TokKind::Str
+                || tb.is_punct(")")
+                || tb.is_ident("crate")
+                || tb.is_ident("super")
+                || tb.is_punct("(");
+            if !skip {
+                break;
+            }
+        }
+        // find the body `{`: first `{` at paren/angle depth 0 after the name
+        let mut paren = 0i32;
+        let mut angle = 0i32;
+        let mut k = i + 2;
+        let mut body_start = usize::MAX;
+        while k < toks.len() {
+            let tk = &toks[k];
+            if tk.kind == TokKind::Punct {
+                match tk.text.as_str() {
+                    "(" | "[" => paren += 1,
+                    ")" | "]" => paren -= 1,
+                    "<" => angle += 1,
+                    ">" => angle = (angle - 1).max(0),
+                    "{" if paren == 0 && angle == 0 => {
+                        body_start = k;
+                        break;
+                    }
+                    ";" if paren == 0 => break, // trait declaration, no body
+                    _ => {}
+                }
+            }
+            k += 1;
+        }
+        let body_end = if body_start == usize::MAX {
+            usize::MAX
+        } else {
+            match_brace(toks, body_start)
+        };
+        spans.push(FnSpan {
+            name: name_tok.text.clone(),
+            is_pub,
+            line: t.line,
+            kw_idx: i,
+            body_start,
+            body_end,
+        });
+    }
+    spans
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+pub fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Token ranges covered by `#[cfg(test)] mod … { … }` blocks and `#[test]`
+/// (or `#[cfg(test)]`) functions.
+pub fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_punct("#") || !toks.get(i + 1).is_some_and(|t| t.is_punct("[")) {
+            i += 1;
+            continue;
+        }
+        // accumulate the attribute stack on this item
+        let mut is_test_attr = false;
+        let mut j = i;
+        while j < toks.len()
+            && toks[j].is_punct("#")
+            && toks.get(j + 1).is_some_and(|t| t.is_punct("["))
+        {
+            let close = match_square(toks, j + 1);
+            let attr: Vec<&str> =
+                toks[j + 2..close].iter().map(|t| t.text.as_str()).collect();
+            let is_cfg_test = attr.first() == Some(&"cfg")
+                && attr.contains(&"test")
+                && !attr.contains(&"not");
+            let is_plain_test = attr == ["test"];
+            if is_cfg_test || is_plain_test {
+                is_test_attr = true;
+            }
+            j = close + 1;
+        }
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // the attributed item: mod → its brace span; fn → its body span
+        let mut k = j;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_ident("mod") || t.is_ident("fn") {
+                // scan to the opening brace of the item
+                let mut b = k;
+                while b < toks.len() && !toks[b].is_punct("{") {
+                    if toks[b].is_punct(";") {
+                        b = usize::MAX;
+                        break;
+                    }
+                    b += 1;
+                }
+                if b != usize::MAX && b < toks.len() {
+                    spans.push((j, match_brace(toks, b)));
+                }
+                break;
+            }
+            if t.is_punct("{") || t.is_punct(";") {
+                break; // something else (const, static, use …)
+            }
+            k += 1;
+        }
+        i = j;
+    }
+    spans
+}
+
+fn match_square(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}

@@ -1,0 +1,325 @@
+//! `nm-lint` — the in-repo static-analysis pass that enforces the
+//! bit-identity and panic-freedom contracts.
+//!
+//! Every layer built since PR 1 rests on an invariant the compiler cannot
+//! see: packed kernels, threaded paths, and resumed runs must be
+//! **bit-identical** to the dense masked oracle, and the serve path must
+//! degrade to `anyhow::Result` errors instead of aborting threads. The
+//! dynamic side of that contract lives in the lock-step tests and the
+//! `BENCH_*.json` bit-equality gates; this module is the static side — a
+//! self-contained (offline, zero-dependency) source analyzer with its own
+//! lightweight Rust tokenizer ([`lexer`]) and a rule engine ([`rules`])
+//! covering five families:
+//!
+//! 1. **`float-determinism`** — reassociation-prone constructs
+//!    (`.sum()`/`.fold()` over float iterators, `.rev()` feeding
+//!    accumulators, `mul_add` mixed with split multiply-adds) in the
+//!    kernel modules;
+//! 2. **`ordered-iteration`** — `HashMap`/`HashSet` iteration in modules
+//!    whose output is serialized (BENCH JSON, checkpoints, `VarStats`);
+//! 3. **`panic-freedom`** — `unwrap`/`expect`/`panic!`/direct indexing on
+//!    the serve path (`coordinator::serve` and the `forward_packed*`
+//!    call chain);
+//! 4. **`thread-discipline`** — thread spawns only in allow-listed modules;
+//! 5. **`test-coverage`** — every public kernel entry point referenced
+//!    from `rust/tests/`.
+//!
+//! Run it with `cargo run --bin nm-lint`; it scans `rust/src`,
+//! `rust/benches`, and `examples`, writes machine-readable `ANALYSIS.json`
+//! plus `file:line` findings on stdout, and exits nonzero when a finding is
+//! not grandfathered by the checked-in `ANALYSIS_baseline.json`. Silence a
+//! justified finding inline with
+//! `// nm-lint: allow(<rule>): <justification>` (covering its own line and
+//! the next); suppressions without a justification are themselves findings.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use lexer::FnSpan;
+use report::{Baseline, Finding, Report};
+use rules::FileCx;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+pub use report::{fingerprint_all, Finding as LintFinding};
+
+/// One source file handed to the analyzer: repo-relative `/`-separated
+/// path + contents. Construct these directly in tests to lint fixtures.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    pub fn new(path: impl Into<String>, text: impl Into<String>) -> Self {
+        Self { path: path.into(), text: text.into() }
+    }
+}
+
+/// The repo's module map — which paths the rules scope to.
+pub mod config {
+    use super::lexer::{FnSpan, Tok};
+
+    /// Modules whose accumulation order IS the bit-identity contract.
+    pub const KERNEL_MODULES: &[&str] = &[
+        "rust/src/sparsity/packed.rs",
+        "rust/src/sparsity/mod.rs",
+        "rust/src/optim/mod.rs",
+        "rust/src/tensor/ops.rs",
+        "rust/src/model/mlp.rs",
+        "rust/src/model/encoder.rs",
+    ];
+
+    /// Modules allowed to spawn threads (each owns a deterministic merge).
+    pub const THREAD_ALLOWLIST: &[&str] = &[
+        "rust/src/coordinator/prefetch.rs",
+        "rust/src/coordinator/serve.rs",
+        "rust/src/optim/",
+    ];
+
+    /// Path prefixes whose output is serialized (checkpoints, BENCH JSON,
+    /// telemetry) — hash-order iteration here leaks into bytes on disk.
+    const ORDER_SENSITIVE_PATHS: &[&str] = &[
+        "rust/src/util/",
+        "rust/src/checkpoint/",
+        "rust/src/telemetry/",
+        "rust/src/bench",
+        "rust/benches/",
+        "rust/src/experiments/",
+        "rust/src/coordinator/",
+        "rust/src/runtime/",
+    ];
+
+    /// Content markers that make any file order-sensitive: it builds JSON,
+    /// writes checkpoints, or merges `VarStats`.
+    const ORDER_SENSITIVE_IDENTS: &[&str] =
+        &["Json", "JsonObj", "Checkpoint", "VarStats", "write_comparison_json"];
+
+    /// `Session` methods on the training/eval hot loop (the PJRT serve
+    /// surface): panics here abort a run mid-stream.
+    const SESSION_HOT_FNS: &[&str] =
+        &["step", "evaluate", "step_artifact", "n_vec", "batch_values"];
+
+    /// Files carrying the `forward_packed*` call chain.
+    const PACKED_CHAIN_FILES: &[&str] = &[
+        "rust/src/model/mod.rs",
+        "rust/src/model/mlp.rs",
+        "rust/src/model/encoder.rs",
+        "rust/src/sparsity/packed.rs",
+        "rust/src/coordinator/finetune.rs",
+    ];
+
+    pub fn is_kernel_module(path: &str) -> bool {
+        KERNEL_MODULES.contains(&path)
+    }
+
+    pub fn threads_allowed(path: &str) -> bool {
+        THREAD_ALLOWLIST.iter().any(|p| path == *p || path.starts_with(p))
+    }
+
+    pub fn is_order_sensitive(path: &str, toks: &[Tok]) -> bool {
+        ORDER_SENSITIVE_PATHS.iter().any(|p| path.starts_with(p))
+            || toks.iter().any(|t| {
+                t.kind == super::lexer::TokKind::Ident
+                    && ORDER_SENSITIVE_IDENTS.contains(&t.text.as_str())
+            })
+    }
+
+    /// Is `f` (in `path`) on the serve path for panic-freedom purposes?
+    ///
+    /// * everything in `coordinator/serve.rs`;
+    /// * the `Session` hot-loop methods in `coordinator/session.rs`;
+    /// * in the packed-chain files: any fn whose name mentions `packed`, or
+    ///   whose body calls a `packed_*` kernel (one-hop chain closure).
+    pub fn in_serve_path(path: &str, f: &FnSpan, toks: &[Tok]) -> bool {
+        if path == "rust/src/coordinator/serve.rs" {
+            return true;
+        }
+        if path == "rust/src/coordinator/session.rs" {
+            return SESSION_HOT_FNS.contains(&f.name.as_str());
+        }
+        if PACKED_CHAIN_FILES.contains(&path) {
+            if f.name.contains("packed") {
+                return true;
+            }
+            if f.body_start != usize::MAX {
+                return toks[f.body_start..=f.body_end.min(toks.len() - 1)]
+                    .iter()
+                    .any(|t| {
+                        t.kind == super::lexer::TokKind::Ident
+                            && (t.text.starts_with("packed_")
+                                || t.text.starts_with("forward_packed"))
+                    });
+            }
+        }
+        false
+    }
+
+    /// Direct-indexing checks apply only on the coordinator serve surface,
+    /// where inputs are externally controlled; inside the packed kernels the
+    /// bounds come from layout validation at pack time.
+    pub fn index_checked(path: &str, _f: &FnSpan) -> bool {
+        path == "rust/src/coordinator/serve.rs" || path == "rust/src/coordinator/session.rs"
+    }
+
+    /// Public kernel entry points rule 5 demands direct tests for.
+    pub fn is_kernel_entry(name: &str) -> bool {
+        name.starts_with("packed_")
+            || name.ends_with("_into")
+            || (name.starts_with("masked_") && name.ends_with("_step"))
+    }
+}
+
+/// Everything loaded for one run: lint subjects + the `rust/tests/`
+/// reference corpus rule 5 checks against.
+#[derive(Debug, Default)]
+pub struct AnalysisInput {
+    pub files: Vec<SourceFile>,
+    pub test_corpus: Vec<SourceFile>,
+}
+
+/// Run the full rule set over `input` and return the report (findings
+/// already fingerprinted and suppression-filtered).
+pub fn analyze(input: &AnalysisInput) -> Report {
+    // rule 5's reference set: every identifier appearing in rust/tests/
+    let mut test_idents: BTreeSet<String> = BTreeSet::new();
+    for tf in &input.test_corpus {
+        for t in lexer::lex(&tf.text).toks {
+            if t.kind == lexer::TokKind::Ident {
+                test_idents.insert(t.text);
+            }
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut lines_by_file: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let mut suppressed = 0usize;
+
+    for file in &input.files {
+        let lexed = lexer::lex(&file.text);
+        let fns: Vec<FnSpan> = lexer::fn_spans(&lexed.toks);
+        let tests = lexer::test_spans(&lexed.toks);
+        let cx = FileCx { path: &file.path, toks: &lexed.toks, fns: &fns, tests: &tests };
+
+        let mut file_findings: Vec<Finding> = Vec::new();
+        rules::float_determinism(&cx, &mut file_findings);
+        rules::ordered_iteration(&cx, &mut file_findings);
+        rules::panic_freedom(&cx, &mut file_findings);
+        rules::thread_discipline(&cx, &mut file_findings);
+        rules::test_coverage(&cx, &test_idents, &mut file_findings);
+
+        // malformed suppressions are findings; valid ones with unknown rule
+        // names too (a typo must not silently disable a rule)
+        for (line, why) in &lexed.bad_suppressions {
+            file_findings.push(Finding::new(
+                rules::INVALID_SUPPRESSION,
+                &file.path,
+                *line,
+                why.clone(),
+            ));
+        }
+        for s in &lexed.suppressions {
+            if !rules::ALL_RULES.contains(&s.rule.as_str()) {
+                file_findings.push(Finding::new(
+                    rules::INVALID_SUPPRESSION,
+                    &file.path,
+                    s.line,
+                    format!(
+                        "`allow({})` names an unknown rule (known: {})",
+                        s.rule,
+                        rules::ALL_RULES.join(", ")
+                    ),
+                ));
+            }
+        }
+
+        // apply suppressions: a directive covers its own line and the next
+        file_findings.retain(|f| {
+            let hit = lexed.suppressions.iter().any(|s| {
+                s.rule == f.rule && (s.line == f.line || s.line + 1 == f.line)
+            });
+            if hit {
+                suppressed += 1;
+            }
+            !hit
+        });
+
+        findings.append(&mut file_findings);
+        lines_by_file.insert(
+            file.path.clone(),
+            file.text.lines().map(|l| l.to_string()).collect(),
+        );
+    }
+
+    fingerprint_all(&mut findings, |file, line| {
+        lines_by_file
+            .get(file)
+            .and_then(|ls| ls.get(line.saturating_sub(1) as usize))
+            .cloned()
+            .unwrap_or_default()
+    });
+
+    Report { findings, files_scanned: input.files.len(), suppressed }
+}
+
+/// Load the standard scan roots (`rust/src`, `rust/benches`, `examples`)
+/// plus the `rust/tests/` reference corpus from a repo checkout.
+/// Directory walks are sorted, so the report is byte-stable across runs.
+pub fn load_tree(root: &Path) -> anyhow::Result<AnalysisInput> {
+    let mut input = AnalysisInput::default();
+    for sub in ["rust/src", "rust/benches", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, root, &mut input.files)?;
+        }
+    }
+    let tests = root.join("rust/tests");
+    if tests.is_dir() {
+        collect_rs(&tests, root, &mut input.test_corpus)?;
+    }
+    anyhow::ensure!(
+        !input.files.is_empty(),
+        "no .rs files under {} (is --root pointing at the repo?)",
+        root.display()
+    );
+    Ok(input)
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> anyhow::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+            out.push(SourceFile { path: rel, text });
+        }
+    }
+    Ok(())
+}
+
+/// Convenience for the binary and tests: analyze a checkout and split the
+/// findings against a baseline (pass `None` to treat everything as new).
+pub fn run_on_tree(
+    root: &Path,
+    baseline: Option<&Baseline>,
+) -> anyhow::Result<(Report, usize)> {
+    let input = load_tree(root)?;
+    let report = analyze(&input);
+    let empty = Baseline::default();
+    let new = report.new_findings(baseline.unwrap_or(&empty)).len();
+    Ok((report, new))
+}

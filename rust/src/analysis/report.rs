@@ -1,0 +1,182 @@
+//! Findings, the machine-readable `ANALYSIS.json` report, and the
+//! checked-in `ANALYSIS_baseline.json` ratchet.
+//!
+//! A finding's identity is its **fingerprint** — `rule | file | normalized
+//! source line | occurrence ordinal` — deliberately excluding the line
+//! *number*, so unrelated edits that shift code up or down do not turn
+//! grandfathered findings into "new" ones. The baseline is a plain set of
+//! fingerprints: CI fails on any finding whose fingerprint is not in it,
+//! which ratchets the tree toward zero without blocking on day-one debt.
+
+use crate::util::json::{Json, JsonObj};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One rule violation, anchored at `file:line`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// Trimmed source line (filled in by the driver once lines are known).
+    pub snippet: String,
+    /// Stable identity for baseline matching (filled by [`fingerprint_all`]).
+    pub fingerprint: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: u32, message: String) -> Self {
+        Self {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            snippet: String::new(),
+            fingerprint: String::new(),
+        }
+    }
+}
+
+/// Collapse whitespace runs so formatting churn doesn't change identity.
+fn normalize(snippet: &str) -> String {
+    let mut out = String::with_capacity(snippet.len());
+    let mut last_ws = false;
+    for c in snippet.trim().chars() {
+        if c.is_whitespace() {
+            if !last_ws {
+                out.push(' ');
+            }
+            last_ws = true;
+        } else {
+            out.push(c);
+            last_ws = false;
+        }
+    }
+    out
+}
+
+/// Sort findings, attach snippets, and assign occurrence-numbered
+/// fingerprints. `line_of` maps `(file, 1-based line)` to source text.
+pub fn fingerprint_all(findings: &mut [Finding], line_of: impl Fn(&str, u32) -> String) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    let mut seen: BTreeMap<String, u32> = BTreeMap::new();
+    for f in findings.iter_mut() {
+        f.snippet = normalize(&line_of(&f.file, f.line));
+        let key = format!("{}|{}|{}", f.rule, f.file, f.snippet);
+        let occ = seen.entry(key.clone()).or_insert(0);
+        f.fingerprint = format!("{key}|{occ}");
+        *occ += 1;
+    }
+}
+
+/// The full result of one analyzer run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings silenced by a valid inline suppression.
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// Findings whose fingerprints are not in `baseline` (the ones that
+    /// fail CI). With an empty baseline this is every finding.
+    pub fn new_findings<'a>(&'a self, baseline: &Baseline) -> Vec<&'a Finding> {
+        self.findings
+            .iter()
+            .filter(|f| !baseline.fingerprints.contains(&f.fingerprint))
+            .collect()
+    }
+
+    /// Render `ANALYSIS.json`. `baseline` marks which findings are
+    /// grandfathered; pass an empty baseline to mark everything new.
+    pub fn to_json(&self, baseline: &Baseline) -> String {
+        let mut root = JsonObj::new();
+        root.insert("tool", Json::Str("nm-lint".to_string()));
+        root.insert("version", Json::Num(1.0));
+        root.insert("files_scanned", Json::Num(self.files_scanned as f64));
+        root.insert(
+            "rules",
+            Json::Arr(
+                super::rules::ALL_RULES
+                    .iter()
+                    .map(|r| Json::Str((*r).to_string()))
+                    .collect(),
+            ),
+        );
+        root.insert("total_findings", Json::Num(self.findings.len() as f64));
+        root.insert("suppressed", Json::Num(self.suppressed as f64));
+        let new = self.new_findings(baseline);
+        root.insert("new_findings", Json::Num(new.len() as f64));
+        root.insert(
+            "grandfathered",
+            Json::Num((self.findings.len() - new.len()) as f64),
+        );
+        let mut counts = JsonObj::new();
+        for rule in super::rules::ALL_RULES {
+            let n = self.findings.iter().filter(|f| f.rule == *rule).count();
+            counts.insert(rule, Json::Num(n as f64));
+        }
+        root.insert("by_rule", Json::Obj(counts));
+        let arr = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = JsonObj::new();
+                o.insert("rule", Json::Str(f.rule.to_string()));
+                o.insert("file", Json::Str(f.file.clone()));
+                o.insert("line", Json::Num(f.line as f64));
+                o.insert("message", Json::Str(f.message.clone()));
+                o.insert("snippet", Json::Str(f.snippet.clone()));
+                o.insert("fingerprint", Json::Str(f.fingerprint.clone()));
+                o.insert(
+                    "baseline",
+                    Json::Bool(baseline.fingerprints.contains(&f.fingerprint)),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("findings", Json::Arr(arr));
+        Json::Obj(root).to_string()
+    }
+
+    /// Render a baseline file grandfathering every current finding.
+    pub fn to_baseline_json(&self) -> String {
+        let mut root = JsonObj::new();
+        root.insert("tool", Json::Str("nm-lint".to_string()));
+        root.insert("version", Json::Num(1.0));
+        let fps = self
+            .findings
+            .iter()
+            .map(|f| Json::Str(f.fingerprint.clone()))
+            .collect();
+        root.insert("fingerprints", Json::Arr(fps));
+        Json::Obj(root).to_string()
+    }
+}
+
+/// The grandfathered-finding set loaded from `ANALYSIS_baseline.json`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub fingerprints: BTreeSet<String>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let doc = Json::parse(text)?;
+        let arr = doc
+            .get("fingerprints")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("baseline lacks a `fingerprints` array"))?;
+        let mut fingerprints = BTreeSet::new();
+        for v in arr {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("non-string baseline fingerprint"))?;
+            fingerprints.insert(s.to_string());
+        }
+        Ok(Self { fingerprints })
+    }
+}

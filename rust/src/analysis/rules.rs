@@ -1,0 +1,472 @@
+//! The `nm-lint` rule families.
+//!
+//! Every rule is a token-level heuristic scoped by the repo's module map
+//! ([`super::config`]): the analyzer cannot type-check, so each rule trades
+//! a small false-positive rate (absorbed by inline suppressions or the
+//! checked-in baseline) for zero build-time dependencies. The five families
+//! enforce the two contracts everything since PR 1 rests on:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `float-determinism`  | packed/threaded kernels stay bit-identical to the dense masked oracle — no reassociation-prone constructs |
+//! | `ordered-iteration`  | serialized output (BENCH JSON, checkpoints, `VarStats` merges) never depends on `HashMap`/`HashSet` iteration order |
+//! | `panic-freedom`      | the serve path returns `anyhow::Result`, it never aborts a serving thread |
+//! | `thread-discipline`  | threads spawn only in the allow-listed modules (prefetch, serve, optim) |
+//! | `test-coverage`      | every public kernel entry point is referenced from `rust/tests/` |
+
+use super::config;
+use super::lexer::{FnSpan, Tok, TokKind};
+use super::report::Finding;
+use std::collections::BTreeSet;
+
+/// Canonical rule names (these are what `allow(<rule>)` takes).
+pub const FLOAT_DETERMINISM: &str = "float-determinism";
+pub const ORDERED_ITERATION: &str = "ordered-iteration";
+pub const PANIC_FREEDOM: &str = "panic-freedom";
+pub const THREAD_DISCIPLINE: &str = "thread-discipline";
+pub const TEST_COVERAGE: &str = "test-coverage";
+/// Meta-rule: malformed or unknown suppression directives are findings too.
+pub const INVALID_SUPPRESSION: &str = "invalid-suppression";
+
+/// All suppressible rule families.
+pub const ALL_RULES: &[&str] = &[
+    FLOAT_DETERMINISM,
+    ORDERED_ITERATION,
+    PANIC_FREEDOM,
+    THREAD_DISCIPLINE,
+    TEST_COVERAGE,
+    INVALID_SUPPRESSION,
+];
+
+/// Everything the rules need to know about one source file.
+pub struct FileCx<'a> {
+    /// Repo-relative path, `/`-separated.
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    pub fns: &'a [FnSpan],
+    /// Token ranges of test code (skipped by rules 1–4).
+    pub tests: &'a [(usize, usize)],
+}
+
+impl<'a> FileCx<'a> {
+    pub fn in_test(&self, idx: usize) -> bool {
+        self.tests.iter().any(|&(a, b)| idx >= a && idx <= b)
+    }
+
+    /// Innermost function containing token `idx`.
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.contains(idx))
+            .min_by_key(|f| f.body_end.saturating_sub(f.body_start))
+    }
+
+    /// Statement bounds around token `idx`: the token range between the
+    /// nearest `;`/`{`/`}` on each side (exclusive). Heuristic, not a
+    /// parse — good enough to ask "does this statement also contain X".
+    pub fn stmt_bounds(&self, idx: usize) -> (usize, usize) {
+        let is_break = |t: &Tok| t.is_punct(";") || t.is_punct("{") || t.is_punct("}");
+        let mut a = idx;
+        while a > 0 && !is_break(&self.toks[a - 1]) {
+            a -= 1;
+        }
+        let mut b = idx;
+        while b + 1 < self.toks.len() && !is_break(&self.toks[b + 1]) {
+            b += 1;
+        }
+        (a, b)
+    }
+}
+
+/// Identifiers that mark an integer-valued iterator chain — `.sum()` over
+/// element counts is order-safe (integer addition is associative).
+const INT_MARKERS: &[&str] = &[
+    "numel", "len", "count", "n_values", "values_per_row", "shape", "sizes", "n_layers", "usize",
+    "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+];
+
+/// Rule 1 — `float-determinism`: flag reassociation-prone constructs in the
+/// kernel modules (the files whose accumulation order IS the bit-identity
+/// contract).
+pub fn float_determinism(cx: &FileCx, out: &mut Vec<Finding>) {
+    if !config::is_kernel_module(cx.path) {
+        return;
+    }
+    let toks = cx.toks;
+    for i in 0..toks.len() {
+        if cx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        let dot_call = i > 0 && toks[i - 1].is_punct(".");
+        if dot_call && (t.is_ident("sum") || t.is_ident("fold") || t.is_ident("product")) {
+            let (a, b) = cx.stmt_bounds(i);
+            let int_stmt = toks[a..=b]
+                .iter()
+                .any(|t| t.kind == TokKind::Ident && INT_MARKERS.contains(&t.text.as_str()));
+            if int_stmt {
+                continue;
+            }
+            out.push(Finding::new(
+                FLOAT_DETERMINISM,
+                cx.path,
+                t.line,
+                format!(
+                    "`.{}()` over a float iterator reassociates the accumulation; kernels \
+                     must use an explicit ascending-index loop (bit-identity contract)",
+                    t.text
+                ),
+            ));
+        }
+        if dot_call && t.is_ident("rev") {
+            let (a, b) = cx.stmt_bounds(i);
+            let feeds_accum = toks[a..=b].iter().any(|s| {
+                s.is_ident("sum")
+                    || s.is_ident("fold")
+                    || s.is_ident("product")
+                    || s.is_punct("+=")
+                    || s.is_punct("*=")
+            });
+            if feeds_accum {
+                out.push(Finding::new(
+                    FLOAT_DETERMINISM,
+                    cx.path,
+                    t.line,
+                    "`.rev()` feeding an accumulator reverses the accumulation order the \
+                     dense oracle fixed; iterate ascending"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    // mul_add mixed with split multiply-accumulate in the same kernel fn:
+    // fma rounds once, `a * b + c` rounds twice — mixing them in one kernel
+    // silently breaks lane-for-lane reproducibility.
+    for f in cx.fns {
+        if f.body_start == usize::MAX || cx.in_test(f.body_start) {
+            continue;
+        }
+        let body = &toks[f.body_start..=f.body_end.min(toks.len() - 1)];
+        let mul_adds: Vec<u32> = body
+            .iter()
+            .enumerate()
+            .filter(|(k, t)| t.is_ident("mul_add") && *k > 0 && body[k - 1].is_punct("."))
+            .map(|(_, t)| t.line)
+            .collect();
+        if mul_adds.is_empty() {
+            continue;
+        }
+        // a statement with `*` and `+`/`+=` but no `mul_add` of its own is a
+        // split multiply-accumulate
+        let mut has_split = false;
+        let mut s = 0usize;
+        while s < body.len() {
+            let mut e = s;
+            while e + 1 < body.len() && !body[e].is_punct(";") {
+                e += 1;
+            }
+            let stmt = &body[s..=e];
+            let star = stmt.iter().any(|t| t.is_punct("*"));
+            let plus = stmt.iter().any(|t| t.is_punct("+") || t.is_punct("+="));
+            let fused = stmt.iter().any(|t| t.is_ident("mul_add"));
+            if star && plus && !fused {
+                has_split = true;
+                break;
+            }
+            s = e + 1;
+        }
+        if has_split {
+            for line in mul_adds {
+                out.push(Finding::new(
+                    FLOAT_DETERMINISM,
+                    cx.path,
+                    line,
+                    format!(
+                        "`mul_add` mixed with split multiply-add in kernel `{}`: fused and \
+                         unfused rounding differ — pick one form per kernel",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Iterator methods whose result order follows the map's internal order.
+const MAP_ITER_METHODS: &[&str] = &[
+    "iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "into_keys",
+    "into_values",
+];
+
+/// Rule 2 — `ordered-iteration`: in order-sensitive modules, iterating a
+/// `HashMap`/`HashSet` leaks nondeterministic order into serialized output.
+pub fn ordered_iteration(cx: &FileCx, out: &mut Vec<Finding>) {
+    let toks = cx.toks;
+    let has_hash = toks
+        .iter()
+        .any(|t| t.is_ident("HashMap") || t.is_ident("HashSet"));
+    if !has_hash || !config::is_order_sensitive(cx.path, toks) {
+        return;
+    }
+    // collect identifiers bound to a HashMap/HashSet in this file
+    let mut bound: BTreeSet<String> = BTreeSet::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        let (a, _) = cx.stmt_bounds(i);
+        let seg = &toks[a..i];
+        // `let [mut] name …` binding
+        if let Some(let_pos) = seg.iter().position(|t| t.is_ident("let")) {
+            let mut np = let_pos + 1;
+            if seg.get(np).is_some_and(|t| t.is_ident("mut")) {
+                np += 1;
+            }
+            if let Some(name) = seg.get(np).filter(|t| t.kind == TokKind::Ident) {
+                bound.insert(name.text.clone());
+                continue;
+            }
+        }
+        // `name: …HashMap<…>` struct field / fn param / ascription — walk
+        // back to the nearest field/param separator (`,`/`(`/`)` as well as
+        // statement breaks) and look for an `ident :` pair
+        let sep = |t: &Tok| {
+            t.is_punct(";")
+                || t.is_punct("{")
+                || t.is_punct("}")
+                || t.is_punct(",")
+                || t.is_punct("(")
+                || t.is_punct(")")
+        };
+        let mut p = i;
+        while p > 0 && !sep(&toks[p - 1]) {
+            p -= 1;
+        }
+        let mut field = &toks[p..i];
+        while field.first().is_some_and(|t| t.is_ident("pub")) {
+            field = &field[1..];
+        }
+        if field.len() >= 2 && field[0].kind == TokKind::Ident && field[1].is_punct(":") {
+            bound.insert(field[0].text.clone());
+        }
+    }
+    for i in 0..toks.len() {
+        if cx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || !bound.contains(&t.text) {
+            continue;
+        }
+        // method-chain scan: `name.iter()`, `name.borrow().keys()`, …
+        let mut k = i + 1;
+        let mut hops = 0;
+        while hops < 12 && k + 1 < toks.len() && toks[k].is_punct(".") {
+            let m = &toks[k + 1];
+            if m.kind == TokKind::Ident && MAP_ITER_METHODS.contains(&m.text.as_str()) {
+                // blessed pattern: collect-then-sort re-establishes a
+                // deterministic order (the sort may sit in the same
+                // statement or the immediately following one)
+                let (sa, sb) = cx.stmt_bounds(k + 1);
+                let scan_end = if sb + 2 < toks.len() {
+                    cx.stmt_bounds(sb + 2).1
+                } else {
+                    sb
+                };
+                if toks[sa..=scan_end.min(toks.len() - 1)]
+                    .iter()
+                    .any(|t| t.kind == TokKind::Ident && t.text.starts_with("sort"))
+                {
+                    break;
+                }
+                out.push(Finding::new(
+                    ORDERED_ITERATION,
+                    cx.path,
+                    m.line,
+                    format!(
+                        "iteration over hash-ordered `{}` in an order-sensitive module; \
+                         use BTreeMap/BTreeSet or an index-ordered merge so serialized \
+                         output is byte-stable",
+                        t.text
+                    ),
+                ));
+                break;
+            }
+            // skip over `method ( … )` to continue the chain
+            k += 2;
+            if toks.get(k).is_some_and(|t| t.is_punct("(")) {
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    match toks[k].text.as_str() {
+                        "(" => depth += 1,
+                        ")" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                k += 1;
+            }
+            hops += 1;
+        }
+        // `for … in [&[mut]] name` loop header
+        let (a, b) = cx.stmt_bounds(i);
+        let seg = &toks[a..=b];
+        let has_for = seg.iter().any(|t| t.is_ident("for"));
+        let in_before = seg
+            .iter()
+            .position(|t| t.is_ident("in"))
+            .is_some_and(|p| a + p < i);
+        if has_for && in_before {
+            out.push(Finding::new(
+                ORDERED_ITERATION,
+                cx.path,
+                t.line,
+                format!(
+                    "`for … in {}` iterates hash order in an order-sensitive module; \
+                     use BTreeMap/BTreeSet or sort the keys first",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Macros that abort the thread.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Identifiers before `[` that start a slice pattern or array literal, not
+/// an index expression (`let [a, b] = …`, `vec![…]`, `in [1, 2]`, …).
+const NOT_INDEXING_BEFORE: &[&str] = &["vec", "let", "mut", "else", "in", "return", "match"];
+
+/// Rule 3 — `panic-freedom`: the serve path (BatchServer::serve and the
+/// `forward_packed*` call chain, plus the Session hot loop) must propagate
+/// `anyhow::Result` — a malformed request must never abort a serving thread.
+pub fn panic_freedom(cx: &FileCx, out: &mut Vec<Finding>) {
+    let toks = cx.toks;
+    for i in 0..toks.len() {
+        if cx.in_test(i) {
+            continue;
+        }
+        let Some(f) = cx.enclosing_fn(i) else { continue };
+        if !config::in_serve_path(cx.path, f, toks) {
+            continue;
+        }
+        let t = &toks[i];
+        let dot_call = i > 0 && toks[i - 1].is_punct(".");
+        if dot_call && (t.is_ident("unwrap") || t.is_ident("expect")) {
+            out.push(Finding::new(
+                PANIC_FREEDOM,
+                cx.path,
+                t.line,
+                format!(
+                    "`.{}()` can abort a serving thread (fn `{}` is on the serve path); \
+                     propagate `anyhow::Result` instead",
+                    t.text, f.name
+                ),
+            ));
+        }
+        if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|n| n.is_punct("!"))
+        {
+            out.push(Finding::new(
+                PANIC_FREEDOM,
+                cx.path,
+                t.line,
+                format!(
+                    "`{}!` aborts the serving thread (fn `{}`); return an error instead",
+                    t.text, f.name
+                ),
+            ));
+        }
+        // direct indexing — only on the coordinator serve surface, where
+        // inputs are externally controlled. (Inside the packed kernels the
+        // bounds are established by layout validation at pack time and
+        // indexing is the kernel idiom.)
+        if config::index_checked(cx.path, f)
+            && t.is_punct("[")
+            && i > 0
+            && (matches!(toks[i - 1].kind, TokKind::Ident)
+                || toks[i - 1].is_punct(")")
+                || toks[i - 1].is_punct("]")
+                || toks[i - 1].is_punct("?"))
+            && !(toks[i - 1].kind == TokKind::Ident
+                && NOT_INDEXING_BEFORE.contains(&toks[i - 1].text.as_str()))
+        {
+            out.push(Finding::new(
+                PANIC_FREEDOM,
+                cx.path,
+                t.line,
+                format!(
+                    "direct indexing can panic on malformed input (fn `{}` is on the \
+                     serve path); use a checked access or suppress with a bounds \
+                     justification",
+                    f.name
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 4 — `thread-discipline`: `thread::spawn` / `thread::scope` only in
+/// the allow-listed modules (prefetch, serve, optim) — everywhere else a
+/// thread is an accumulation-order hazard waiting for a merge.
+pub fn thread_discipline(cx: &FileCx, out: &mut Vec<Finding>) {
+    if config::threads_allowed(cx.path) {
+        return;
+    }
+    let toks = cx.toks;
+    for i in 2..toks.len() {
+        if cx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if (t.is_ident("spawn") || t.is_ident("scope"))
+            && toks[i - 1].is_punct("::")
+            && toks[i - 2].is_ident("thread")
+        {
+            out.push(Finding::new(
+                THREAD_DISCIPLINE,
+                cx.path,
+                t.line,
+                format!(
+                    "`thread::{}` outside the allow-listed modules ({}); deterministic \
+                     merges live in prefetch/serve/optim — route threading through them",
+                    t.text,
+                    config::THREAD_ALLOWLIST.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 5 — `test-coverage`: every public kernel entry point
+/// (`packed_*`, `masked_*_step`, `*_into`) must be referenced from at
+/// least one file under `rust/tests/`.
+pub fn test_coverage(cx: &FileCx, test_idents: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    if !config::is_kernel_module(cx.path) {
+        return;
+    }
+    for f in cx.fns {
+        if !f.is_pub || cx.in_test(f.kw_idx) || !config::is_kernel_entry(&f.name) {
+            continue;
+        }
+        if !test_idents.contains(&f.name) {
+            out.push(Finding::new(
+                TEST_COVERAGE,
+                cx.path,
+                f.line,
+                format!(
+                    "public kernel entry `{}` is never referenced from rust/tests/ — \
+                     bit-identity kernels need a direct oracle test",
+                    f.name
+                ),
+            ));
+        }
+    }
+}

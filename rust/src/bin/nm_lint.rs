@@ -1,0 +1,156 @@
+//! `nm-lint` — run the in-repo static-analysis pass and ratchet against
+//! the checked-in baseline.
+//!
+//! ```text
+//! cargo run --bin nm-lint                    # scan, write ANALYSIS.json, ratchet
+//! cargo run --bin nm-lint -- --update-baseline   # grandfather current findings
+//! cargo run --bin nm-lint -- --no-baseline       # fail on ANY finding
+//! cargo run --bin nm-lint -- --root <dir>        # scan another checkout
+//! ```
+//!
+//! Exit codes: `0` clean (or every finding grandfathered), `1` new
+//! findings, `2` usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use step_nm::analysis::{self, report::Baseline};
+
+struct Opts {
+    root: PathBuf,
+    json_out: Option<PathBuf>,
+    baseline_path: Option<PathBuf>,
+    update_baseline: bool,
+    no_baseline: bool,
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(".")),
+        json_out: None,
+        baseline_path: None,
+        update_baseline: false,
+        no_baseline: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                opts.root =
+                    PathBuf::from(args.next().ok_or("--root needs a directory argument")?)
+            }
+            "--json" => {
+                opts.json_out =
+                    Some(PathBuf::from(args.next().ok_or("--json needs a path argument")?))
+            }
+            "--baseline" => {
+                opts.baseline_path = Some(PathBuf::from(
+                    args.next().ok_or("--baseline needs a path argument")?,
+                ))
+            }
+            "--update-baseline" => opts.update_baseline = true,
+            "--no-baseline" => opts.no_baseline = true,
+            "--help" | "-h" => {
+                println!(
+                    "nm-lint: static analysis for the bit-identity and panic-freedom \
+                     contracts\n\nUSAGE:\n  nm-lint [--root DIR] [--json PATH] \
+                     [--baseline PATH] [--update-baseline] [--no-baseline]"
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument {other:?} (try --help)")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("nm-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let json_out = opts.json_out.clone().unwrap_or_else(|| opts.root.join("ANALYSIS.json"));
+    let baseline_path = opts
+        .baseline_path
+        .clone()
+        .unwrap_or_else(|| opts.root.join("ANALYSIS_baseline.json"));
+
+    let input = match analysis::load_tree(&opts.root) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("nm-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = analysis::analyze(&input);
+
+    if opts.update_baseline {
+        if let Err(e) = std::fs::write(&baseline_path, report.to_baseline_json() + "\n") {
+            eprintln!("nm-lint: writing {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "nm-lint: baseline updated — {} finding(s) grandfathered into {}",
+            report.findings.len(),
+            baseline_path.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let baseline = if opts.no_baseline {
+        Baseline::default()
+    } else {
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => match Baseline::parse(&text) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("nm-lint: bad baseline {}: {e}", baseline_path.display());
+                    return ExitCode::from(2);
+                }
+            },
+            Err(_) => Baseline::default(), // no baseline file: everything is new
+        }
+    };
+
+    if let Err(e) = std::fs::write(&json_out, report.to_json(&baseline) + "\n") {
+        eprintln!("nm-lint: writing {}: {e}", json_out.display());
+        return ExitCode::from(2);
+    }
+
+    let new = report.new_findings(&baseline);
+    for f in &report.findings {
+        let tag = if baseline.fingerprints.contains(&f.fingerprint) {
+            "grandfathered"
+        } else {
+            "NEW"
+        };
+        println!("{}:{}: [{}] ({tag}) {}", f.file, f.line, f.rule, f.message);
+        if !f.snippet.is_empty() {
+            println!("    > {}", f.snippet);
+        }
+    }
+    println!(
+        "nm-lint: {} file(s), {} finding(s) ({} new, {} grandfathered, {} suppressed) → {}",
+        report.files_scanned,
+        report.findings.len(),
+        new.len(),
+        report.findings.len() - new.len(),
+        report.suppressed,
+        json_out.display()
+    );
+    if new.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "nm-lint: {} new finding(s) not in {} — fix them or suppress with \
+             `// nm-lint: allow(<rule>): <justification>`",
+            new.len(),
+            baseline_path.display()
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -264,10 +264,12 @@ impl<M: SparseModel> FinetuneSession<M> {
             };
             match self.mode {
                 FinetuneMode::Adam => {
+                    // nm-lint: allow(panic-freedom): constructors and the checkpoint loader pair Adam mode with v state
                     let v = self.v.as_mut().expect("Adam carries v");
                     packed_adam_step(w, &mut self.m[i], &mut v[i], g, self.t, self.lr, self.hp);
                 }
                 FinetuneMode::Phase2 => {
+                    // nm-lint: allow(panic-freedom): constructors and the checkpoint loader pair Phase2 mode with v*
                     let v_star = self.v_star.as_ref().expect("Phase2 carries v*");
                     packed_phase2_step(
                         w,

@@ -19,6 +19,11 @@
 //! masked forward and records the comparison to `BENCH_inference.json`
 //! (MLP shapes) and `BENCH_attention.json` (encoder shapes).
 
+// The serve path carries the panic-freedom contract: a malformed request
+// must surface as an `anyhow::Result` error, never abort a serving thread.
+// `nm-lint` enforces the same contract one level up (rule `panic-freedom`).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::model::{Mlp, SparseModel};
 use crate::sparsity::{pack_params, NmRatio, PackedParam};
 use crate::tensor::{accuracy_from_logits, argmax_rows, Tensor};
@@ -145,6 +150,7 @@ impl<M: SparseModel> BatchServer<M> {
                 let r1 = (r0 + chunk).min(rows);
                 let (od_chunk, rest) = std::mem::take(&mut od_rest).split_at_mut((r1 - r0) * n_out);
                 od_rest = rest;
+                // nm-lint: allow(panic-freedom): r1 <= rows and xd.len() == rows * dim from as_2d
                 let xs = &xd[r0 * dim..r1 * dim];
                 let n_rows = r1 - r0;
                 s.spawn(move || {
@@ -170,6 +176,7 @@ impl<M: SparseModel> BatchServer<M> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::TokenEncoder;

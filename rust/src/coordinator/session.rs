@@ -213,10 +213,10 @@ impl<'rt> Session<'rt> {
     // ------------------------------------------------------------------
 
     /// The step artifact to run at the current (phase, step).
-    fn step_artifact(&self) -> String {
+    fn step_artifact(&self) -> anyhow::Result<String> {
         let model = &self.cfg.model;
         let m = self.cfg.ratio.m;
-        match self.cfg.recipe {
+        Ok(match self.cfg.recipe {
             RecipeKind::Dense => format!("{model}__dense_adam"),
             RecipeKind::DenseSgdm => format!("{model}__dense_sgdm"),
             RecipeKind::Ste | RecipeKind::SrSte => format!("{model}__srste_adam_m{m}"),
@@ -235,30 +235,36 @@ impl<'rt> Session<'rt> {
             RecipeKind::DecayingMask => {
                 // dense warmup, then schedule-driven N through the srste
                 // artifact (N is a runtime input)
-                let n = self.schedule.expect("schedule").n_at(self.t);
+                let n = self.decay_schedule()?.n_at(self.t);
                 if n >= m {
                     format!("{model}__dense_adam")
                 } else {
                     format!("{model}__srste_adam_m{m}")
                 }
             }
-        }
+        })
+    }
+
+    /// The decay schedule (always constructed for `DecayingMask` sessions;
+    /// surfaced as an error rather than a panic on the hot loop).
+    fn decay_schedule(&self) -> anyhow::Result<DecaySchedule> {
+        self.schedule.ok_or_else(|| {
+            anyhow::anyhow!("DecayingMask session is missing its decay schedule")
+        })
     }
 
     /// N per sparse tensor fed to the mask kernels this step.
-    fn n_vec(&self) -> Vec<i32> {
+    fn n_vec(&self) -> anyhow::Result<Vec<i32>> {
         let uniform = match self.cfg.recipe {
-            RecipeKind::DecayingMask => self
-                .schedule
-                .expect("schedule")
-                .n_at(self.t)
-                .min(self.cfg.ratio.m) as i32,
+            RecipeKind::DecayingMask => {
+                self.decay_schedule()?.n_at(self.t).min(self.cfg.ratio.m) as i32
+            }
             _ => self.cfg.ratio.n as i32,
         };
-        match &self.layer_ns {
+        Ok(match &self.layer_ns {
             Some(ns) => ns.clone(),
             None => vec![uniform; self.model.n_sparse()],
-        }
+        })
     }
 
     fn batch_values(&self, batch: &Batch) -> (Value, Value) {
@@ -281,7 +287,7 @@ impl<'rt> Session<'rt> {
     /// Run one training step; returns (loss, stats).
     pub fn step(&mut self) -> anyhow::Result<(f64, SwitchStat)> {
         self.t += 1;
-        let artifact = self.step_artifact();
+        let artifact = self.step_artifact()?;
         // prefetched: batch t+1 generates on the worker while the device
         // runs step t (results identical — batches are (dataset, step)-pure)
         let batch = {
@@ -300,7 +306,7 @@ impl<'rt> Session<'rt> {
         let lr_s = Tensor::scalar1(self.cfg.lr);
         let t_s = Tensor::scalar1(self.t as f32);
         let lam_s = Tensor::scalar1(lam);
-        let n_vec = self.n_vec();
+        let n_vec = self.n_vec()?;
         let n_shape = [n_vec.len()];
         let nv = ValueRef::I32 { data: &n_vec, shape: &n_shape };
         let xr = x.as_ref_value();
@@ -355,7 +361,9 @@ impl<'rt> Session<'rt> {
                 inputs.push(nv);
             }
             "step_phase2" => {
-                let v_star = self.v_star.as_ref().expect("phase 2 without v*");
+                let v_star = self.v_star.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("phase-2 step without captured v* (switch never ran)")
+                })?;
                 for t in v_star {
                     inputs.push(ValueRef::F32(t));
                 }
@@ -374,26 +382,34 @@ impl<'rt> Session<'rt> {
         // unpack outputs: params', m', [v'], loss, [stats]
         let has_v = matches!(spec_recipe.as_str(), "dense_adam" | "srste_adam" | "asp_adam");
         let mut it = out.drain(..);
-        for i in 0..p {
-            self.params[i] = it.next().unwrap().into_tensor();
+        let mut take = || {
+            it.next().ok_or_else(|| {
+                anyhow::anyhow!("artifact {artifact} returned too few outputs")
+            })
+        };
+        for slot in self.params.iter_mut() {
+            *slot = take()?.into_tensor();
         }
-        for i in 0..p {
-            self.m[i] = it.next().unwrap().into_tensor();
+        for slot in self.m.iter_mut() {
+            *slot = take()?.into_tensor();
         }
         if has_v {
-            for i in 0..p {
-                self.v[i] = it.next().unwrap().into_tensor();
+            for slot in self.v.iter_mut() {
+                *slot = take()?.into_tensor();
             }
         }
-        let loss = it.next().unwrap().scalar_f64();
+        let loss = take()?.scalar_f64();
         let stat = if has_v {
-            let stats = it.next().unwrap().into_tensor();
+            let stats = take()?.into_tensor();
             let d = stats.data();
+            let &[v_l1, v_l2, dv_l1, log_dv] = d else {
+                anyhow::bail!("switch-stats output has {} entries, expected 4", d.len());
+            };
             SwitchStat {
-                v_l1: d[0] as f64,
-                v_l2: d[1] as f64,
-                dv_l1: d[2] as f64,
-                log_dv: d[3] as f64,
+                v_l1: v_l1 as f64,
+                v_l2: v_l2 as f64,
+                dv_l1: dv_l1 as f64,
+                log_dv: log_dv as f64,
             }
         } else {
             SwitchStat { v_l1: 0.0, v_l2: 0.0, dv_l1: 0.0, log_dv: 0.0 }
@@ -425,7 +441,7 @@ impl<'rt> Session<'rt> {
         let m = self.cfg.ratio.m;
         let artifact = format!("{}__eval_m{m}", self.cfg.model);
         let n_eval = if self.cfg.recipe.is_sparse() {
-            self.n_vec()
+            self.n_vec()?
         } else {
             vec![m as i32; self.model.n_sparse()]
         };
@@ -445,8 +461,14 @@ impl<'rt> Session<'rt> {
             inputs.push(y.as_ref_value());
             inputs.push(ValueRef::I32 { data: &n_eval, shape: &n_shape });
             let out = self.rt.execute_refs(&artifact, &inputs)?;
-            let loss = out[0].scalar_f64();
-            let metrics = out[1].as_tensor().data().to_vec();
+            let [loss_v, metrics_v, ..] = out.as_slice() else {
+                anyhow::bail!(
+                    "eval artifact {artifact} returned {} outputs, expected 2",
+                    out.len()
+                );
+            };
+            let loss = loss_v.scalar_f64();
+            let metrics = metrics_v.as_tensor().data().to_vec();
             acc.add(loss, &metrics);
         }
         let (primary, metric_name) = match self.eval_metric {
@@ -542,7 +564,11 @@ impl<'rt> Session<'rt> {
     /// [`packed_params`](Self::packed_params).
     fn export_ratios(&self) -> Vec<Option<crate::sparsity::NmRatio>> {
         let sparsify = self.sparsify_at_export();
-        let ns = self.n_vec();
+        // the schedule is constructor-established for DecayingMask sessions;
+        // exports fall back to the uniform configured N if it is ever absent
+        let ns = self
+            .n_vec()
+            .unwrap_or_else(|_| vec![self.cfg.ratio.n as i32; self.model.n_sparse()]);
         let mut si = 0;
         self.model
             .params

@@ -60,6 +60,7 @@
 //! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
 //! experiment ↔ module map.
 
+pub mod analysis;
 pub mod autoswitch;
 pub mod bench;
 pub mod checkpoint;

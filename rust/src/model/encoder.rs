@@ -119,6 +119,7 @@ impl<'a> WeightsView<'a> {
             WeightsView::Packed { params, cols } => match &params[i] {
                 PackedParam::Dense(w) => matmul_bt(delta, w),
                 PackedParam::Packed(w) => {
+                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
                     let ci = cols[i].as_ref().expect("packed param lacks cols cache");
                     let (rows, _) = delta.as_2d();
                     let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
@@ -137,6 +138,7 @@ impl<'a> WeightsView<'a> {
             WeightsView::Packed { params, cols } => match &params[i] {
                 PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a, delta)),
                 PackedParam::Packed(w) => {
+                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
                     let ci = cols[i].as_ref().expect("packed param lacks cols cache");
                     let mut gv = vec![0f32; w.n_values()];
                     packed_matmul_at_into(a, delta, w, ci, &mut gv);

@@ -141,6 +141,7 @@ impl Mlp {
             self.sizes[0]
         );
         // layer 0 reads straight from the borrowed slice
+        // nm-lint: allow(panic-freedom): validate_packed_params at server construction guarantees dense biases
         let b0 = params[1].as_dense().expect("bias tensors are never packed");
         let mut h = Tensor::zeros(&[rows, self.sizes[1]]);
         match &params[0] {
@@ -154,6 +155,7 @@ impl Mlp {
         for l in 1..self.n_layers() {
             let b = params[2 * l + 1]
                 .as_dense()
+                // nm-lint: allow(panic-freedom): validate_packed_params at server construction guarantees dense biases
                 .expect("bias tensors are never packed");
             let mut next = match &params[2 * l] {
                 PackedParam::Dense(w) => matmul(&h, w),
@@ -346,6 +348,7 @@ impl Mlp {
             let input = if l == 0 { x2d } else { &acts[l - 1] };
             let b = params[2 * l + 1]
                 .as_dense()
+                // nm-lint: allow(panic-freedom): validate_packed_params at session construction guarantees dense biases
                 .expect("bias tensors are never packed");
             let mut h = match &params[2 * l] {
                 PackedParam::Dense(w) => matmul(input, w),
@@ -357,6 +360,7 @@ impl Mlp {
             }
             acts.push(h);
         }
+        // nm-lint: allow(panic-freedom): acts holds n_layers >= 1 activations by construction
         let logits = acts.last().unwrap();
         let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
 
@@ -369,6 +373,7 @@ impl Mlp {
             grads[2 * l] = match &params[2 * l] {
                 PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a_in, &delta)),
                 PackedParam::Packed(w) => {
+                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
                     let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
                     let mut gv = vec![0f32; w.n_values()];
                     packed_matmul_at_into(a_in, &delta, w, ci, &mut gv);
@@ -389,6 +394,7 @@ impl Mlp {
                 let mut da = match &params[2 * l] {
                     PackedParam::Dense(w) => matmul_bt(&delta, w),
                     PackedParam::Packed(w) => {
+                        // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
                         let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
                         let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
                         packed_matmul_bt_into(&delta, w, ci, &mut out);

@@ -76,9 +76,15 @@ pub fn relu(t: &Tensor) -> Tensor {
 }
 
 /// L1 distance between two same-shape tensors, in f64 for stable telemetry.
+/// Accumulated by an explicit ascending-index loop: the order is the
+/// bit-identity contract, not an implementation detail.
 pub fn l1_diff(a: &Tensor, b: &Tensor) -> f64 {
     assert_eq!(a.shape(), b.shape());
-    a.data().iter().zip(b.data()).map(|(&x, &y)| (x - y).abs() as f64).sum()
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.data().iter().zip(b.data()) {
+        acc += (x - y).abs() as f64;
+    }
+    acc
 }
 
 /// Max-abs (ℓ∞) distance.
@@ -88,6 +94,7 @@ pub fn linf_diff(a: &Tensor, b: &Tensor) -> f64 {
         .iter()
         .zip(b.data())
         .map(|(&x, &y)| (x - y).abs() as f64)
+        // nm-lint: allow(float-determinism): max-fold is order-independent for non-NaN inputs
         .fold(0.0, f64::max)
 }
 
@@ -232,7 +239,9 @@ pub fn log_softmax(t: &Tensor) -> Tensor {
     let d = out.data_mut();
     for i in 0..m {
         let row = &mut d[i * n..(i + 1) * n];
+        // nm-lint: allow(float-determinism): max-fold is order-independent for non-NaN inputs
         let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        // nm-lint: allow(float-determinism): ascending slice iterator in f64 is the documented oracle order
         let lse = row.iter().map(|&x| ((x - mx) as f64).exp()).sum::<f64>().ln() as f32 + mx;
         for x in row.iter_mut() {
             *x -= lse;

@@ -1,0 +1,494 @@
+//! Fixture tests for the `nm-lint` static-analysis pass: one seeded
+//! violation per rule family, the suppression/adjacency semantics, the
+//! fingerprint + baseline ratchet, and the lexer's structural views.
+//!
+//! Fixtures are in-memory [`SourceFile`]s with repo-shaped paths (the rules
+//! scope by path), so none of this touches the working tree. The final
+//! test *does* lint the real checkout and asserts it is clean against the
+//! checked-in `ANALYSIS_baseline.json` — the same gate CI runs via
+//! `cargo run --bin nm-lint`.
+
+use step_nm::analysis::lexer::{fn_spans, lex, test_spans};
+use step_nm::analysis::report::{Baseline, Report};
+use step_nm::analysis::rules;
+use step_nm::analysis::{analyze, AnalysisInput, SourceFile};
+
+/// Lint a single fixture file with an empty test corpus.
+fn lint_one(path: &str, text: &str) -> Report {
+    analyze(&AnalysisInput {
+        files: vec![SourceFile::new(path, text)],
+        test_corpus: Vec::new(),
+    })
+}
+
+fn hit_rules(rep: &Report) -> Vec<&'static str> {
+    rep.findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// rule 1 — float-determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn float_sum_in_kernel_module_is_flagged() {
+    let src = "\
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::FLOAT_DETERMINISM]);
+    assert_eq!(rep.findings[0].line, 2);
+    assert!(rep.findings[0].snippet.contains(".sum()"));
+}
+
+#[test]
+fn integer_sum_is_exempt() {
+    let src = "\
+pub fn total(xs: &[Vec<f32>]) -> usize {
+    xs.iter().map(|v| v.len()).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+#[test]
+fn rev_feeding_an_accumulator_is_flagged() {
+    let src = "\
+pub fn acc(xs: &[f32]) -> f32 {
+    xs.iter().rev().fold(0.0, |a, &b| a + b)
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    // both the `.rev()` and the `.fold()` violate the contract
+    assert_eq!(rep.findings.len(), 2);
+    assert!(rep.findings.iter().all(|f| f.rule == rules::FLOAT_DETERMINISM));
+}
+
+#[test]
+fn non_kernel_modules_are_out_of_scope_for_floats() {
+    let src = "\
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+";
+    let rep = lint_one("rust/src/experiments/fixture.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+// ---------------------------------------------------------------------------
+// rule 2 — ordered-iteration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hashmap_iteration_in_order_sensitive_module_is_flagged() {
+    let src = "\
+use std::collections::HashMap;
+pub fn dump(map: &HashMap<String, f32>) -> Vec<String> {
+    let mut lines = Vec::new();
+    for (k, v) in map.iter() {
+        lines.push(format!(\"{k}={v}\"));
+    }
+    lines
+}
+";
+    let rep = lint_one("rust/src/util/fixture.rs", src);
+    assert!(!rep.findings.is_empty());
+    assert!(rep.findings.iter().all(|f| f.rule == rules::ORDERED_ITERATION));
+}
+
+#[test]
+fn collect_then_sort_is_blessed() {
+    let src = "\
+use std::collections::HashMap;
+pub fn dump_sorted(map: &HashMap<String, f32>) -> Vec<String> {
+    let mut keys: Vec<&String> = map.keys().collect();
+    keys.sort();
+    keys.into_iter().cloned().collect()
+}
+";
+    let rep = lint_one("rust/src/util/fixture.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+#[test]
+fn hashmap_in_order_insensitive_module_is_out_of_scope() {
+    let src = "\
+use std::collections::HashMap;
+pub fn dump(map: &HashMap<String, f32>) -> usize {
+    let mut n = 0;
+    for (_, _) in map.iter() {
+        n += 1;
+    }
+    n
+}
+";
+    let rep = lint_one("rust/src/data/fixture.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+// ---------------------------------------------------------------------------
+// rule 3 — panic-freedom
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unwrap_on_the_serve_path_is_flagged() {
+    let src = "\
+pub fn serve_one(xs: &[f32]) -> f32 {
+    let y = xs.first().unwrap();
+    *y
+}
+";
+    let rep = lint_one("rust/src/coordinator/serve.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::PANIC_FREEDOM]);
+    assert_eq!(rep.findings[0].line, 2);
+}
+
+#[test]
+fn direct_indexing_on_the_serve_surface_is_flagged() {
+    let src = "\
+pub fn pick(xs: &[f32], i: usize) -> f32 {
+    xs[i]
+}
+";
+    let rep = lint_one("rust/src/coordinator/serve.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::PANIC_FREEDOM]);
+}
+
+#[test]
+fn slice_patterns_and_array_literals_are_not_indexing() {
+    let src = "\
+pub fn shape(&self) -> usize {
+    let [a, b] = self.dims;
+    let dims = [a, b];
+    dims.len()
+}
+";
+    let rep = lint_one("rust/src/coordinator/serve.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+#[test]
+fn session_scoping_covers_hot_fns_only() {
+    let src = "\
+impl Session {
+    pub fn step(&mut self) {
+        panic!(\"boom\");
+    }
+    pub fn export_ratios(&self) -> f32 {
+        self.cached.unwrap()
+    }
+}
+";
+    let rep = lint_one("rust/src/coordinator/session.rs", src);
+    // `step` is a hot fn; `export_ratios` is not on the hot loop
+    assert_eq!(hit_rules(&rep), vec![rules::PANIC_FREEDOM]);
+    assert_eq!(rep.findings[0].line, 3);
+    assert!(rep.findings[0].message.contains("panic!"));
+}
+
+#[test]
+fn packed_chain_fns_are_covered_and_test_code_is_skipped() {
+    let src = "\
+pub fn forward_packed(params: &[f32]) -> f32 {
+    params.first().unwrap() + 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn free_to_unwrap() {
+        let v: Option<f32> = None;
+        v.unwrap();
+    }
+}
+";
+    let rep = lint_one("rust/src/model/mlp.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::PANIC_FREEDOM]);
+    assert_eq!(rep.findings[0].line, 2);
+}
+
+// ---------------------------------------------------------------------------
+// rule 4 — thread-discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thread_spawn_outside_the_allowlist_is_flagged() {
+    let src = "\
+pub fn fanout() {
+    std::thread::spawn(|| {});
+}
+";
+    let rep = lint_one("rust/src/model/fixture.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::THREAD_DISCIPLINE]);
+
+    let allowed = lint_one("rust/src/coordinator/prefetch.rs", src);
+    assert!(allowed.findings.is_empty(), "{:?}", hit_rules(&allowed));
+}
+
+// ---------------------------------------------------------------------------
+// rule 5 — test-coverage
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uncovered_kernel_entry_is_flagged_until_a_test_references_it() {
+    let src = "\
+pub fn packed_frob(x: &mut [f32]) {
+    x[0] = 1.0;
+}
+pub fn helper() {}
+";
+    let rep = lint_one("rust/src/sparsity/packed.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::TEST_COVERAGE]);
+    assert!(rep.findings[0].message.contains("packed_frob"));
+
+    let covered = analyze(&AnalysisInput {
+        files: vec![SourceFile::new("rust/src/sparsity/packed.rs", src)],
+        test_corpus: vec![SourceFile::new(
+            "rust/tests/fixture.rs",
+            "fn t() { packed_frob(&mut [0.0]); }",
+        )],
+    });
+    assert!(covered.findings.is_empty(), "{:?}", hit_rules(&covered));
+}
+
+// ---------------------------------------------------------------------------
+// suppressions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn a_justified_suppression_silences_the_next_line() {
+    let src = "\
+pub fn dot(a: &[f32]) -> f32 {
+    // nm-lint: allow(float-determinism): fixture exercises the suppression path
+    a.iter().map(|x| x * x).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+    assert_eq!(rep.suppressed, 1);
+}
+
+#[test]
+fn a_trailing_suppression_silences_its_own_line() {
+    let src = "\
+pub fn dot(a: &[f32]) -> f32 {
+    a.iter().map(|x| x * x).sum() // nm-lint: allow(float-determinism): fixture
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+    assert_eq!(rep.suppressed, 1);
+}
+
+#[test]
+fn a_distant_suppression_does_not_reach() {
+    let src = "\
+pub fn dot(a: &[f32]) -> f32 {
+    // nm-lint: allow(float-determinism): too far away
+    // a second comment line breaks the adjacency window
+    a.iter().map(|x| x * x).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::FLOAT_DETERMINISM]);
+    assert_eq!(rep.suppressed, 0);
+}
+
+#[test]
+fn wrong_rule_suppressions_do_not_silence_other_rules() {
+    let src = "\
+pub fn dot(a: &[f32]) -> f32 {
+    // nm-lint: allow(panic-freedom): wrong family
+    a.iter().map(|x| x * x).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::FLOAT_DETERMINISM]);
+}
+
+#[test]
+fn unknown_rule_and_missing_justification_are_findings() {
+    let unknown = lint_one(
+        "rust/src/model/fixture.rs",
+        "// nm-lint: allow(no-such-rule): whatever\npub fn f() {}\n",
+    );
+    assert_eq!(hit_rules(&unknown), vec![rules::INVALID_SUPPRESSION]);
+    assert!(unknown.findings[0].message.contains("no-such-rule"));
+
+    let bare = lint_one(
+        "rust/src/model/fixture.rs",
+        "// nm-lint: allow(float-determinism)\npub fn f() {}\n",
+    );
+    assert_eq!(hit_rules(&bare), vec![rules::INVALID_SUPPRESSION]);
+    assert!(bare.findings[0].message.contains("justification"));
+}
+
+#[test]
+fn doc_prose_mentioning_the_syntax_is_not_a_directive() {
+    let src = "\
+//! Silence findings with `// nm-lint: allow(<rule>): <justification>`.
+pub fn f() {}
+";
+    let rep = lint_one("rust/src/model/fixture.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+    assert_eq!(rep.suppressed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// fingerprints + the baseline ratchet
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_snippets_get_distinct_occurrence_fingerprints() {
+    let src = "\
+pub fn a(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum()
+}
+pub fn b(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum()
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert_eq!(rep.findings.len(), 2);
+    assert_ne!(rep.findings[0].fingerprint, rep.findings[1].fingerprint);
+    // identity excludes the line number: same rule|file|snippet prefix
+    let pre = |fp: &str| fp.rsplit_once('|').map(|(a, _)| a.to_string());
+    assert_eq!(pre(&rep.findings[0].fingerprint), pre(&rep.findings[1].fingerprint));
+}
+
+#[test]
+fn baseline_grandfathers_old_findings_and_catches_new_ones() {
+    let old = "\
+pub fn a(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum()
+}
+";
+    let first = lint_one("rust/src/tensor/ops.rs", old);
+    assert_eq!(first.findings.len(), 1);
+    let baseline = Baseline::parse(&first.to_baseline_json()).expect("baseline parses");
+    assert!(first.new_findings(&baseline).is_empty());
+    assert_eq!(first.new_findings(&Baseline::default()).len(), 1);
+
+    // the same debt moved down two lines stays grandfathered; a genuinely
+    // new finding is not
+    let grown = "\
+// a new leading comment shifts every line number
+pub fn a(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum()
+}
+pub fn c(v: &[f32]) -> f32 {
+    v.iter().fold(0.0, |s, x| s + x)
+}
+";
+    let second = lint_one("rust/src/tensor/ops.rs", grown);
+    assert_eq!(second.findings.len(), 2);
+    let new = second.new_findings(&baseline);
+    assert_eq!(new.len(), 1);
+    assert!(new[0].snippet.contains("fold"));
+}
+
+#[test]
+fn report_json_is_machine_readable() {
+    let rep = lint_one(
+        "rust/src/tensor/ops.rs",
+        "pub fn a(v: &[f32]) -> f32 {\n    v.iter().map(|x| x * x).sum()\n}\n",
+    );
+    let json = rep.to_json(&Baseline::default());
+    assert!(json.contains("\"tool\":\"nm-lint\""));
+    assert!(json.contains("\"total_findings\":1"));
+    assert!(json.contains("\"new_findings\":1"));
+    assert!(json.contains(rules::FLOAT_DETERMINISM));
+}
+
+// ---------------------------------------------------------------------------
+// lexer structural views
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fn_spans_capture_names_visibility_and_bodies() {
+    let src = "\
+fn private_one() {}
+pub(crate) fn crate_one<T: Into<String>>(t: T) -> usize {
+    t.into().len()
+}
+pub fn public_one();
+";
+    let out = lex(src);
+    let fns = fn_spans(&out.toks);
+    assert_eq!(fns.len(), 3);
+    assert_eq!(fns[0].name, "private_one");
+    assert!(!fns[0].is_pub);
+    assert_eq!(fns[1].name, "crate_one");
+    assert!(fns[1].is_pub);
+    assert!(fns[1].body_start < fns[1].body_end);
+    assert_eq!(fns[2].name, "public_one");
+    assert!(fns[2].is_pub);
+    assert_eq!(fns[2].body_start, usize::MAX, "bodyless declaration");
+}
+
+#[test]
+fn test_spans_cover_cfg_test_mods_but_not_cfg_not_test() {
+    let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+}
+#[cfg(not(test))]
+fn also_prod() {}
+";
+    let out = lex(src);
+    let spans = test_spans(&out.toks);
+    assert_eq!(spans.len(), 1);
+    let inside = |name: &str| {
+        let idx = out
+            .toks
+            .iter()
+            .position(|t| t.is_ident(name))
+            .expect("token present");
+        spans.iter().any(|&(a, b)| idx >= a && idx <= b)
+    };
+    assert!(inside("helper"));
+    assert!(!inside("prod"));
+    assert!(!inside("also_prod"));
+}
+
+#[test]
+fn directives_parse_rule_and_justification() {
+    let out = lex("// nm-lint: allow(panic-freedom): bounds checked above\n");
+    assert_eq!(out.suppressions.len(), 1);
+    assert_eq!(out.suppressions[0].rule, "panic-freedom");
+    assert_eq!(out.suppressions[0].justification, "bounds checked above");
+    assert!(out.bad_suppressions.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// the real tree
+// ---------------------------------------------------------------------------
+
+/// The checkout itself must be clean against the checked-in baseline —
+/// the same gate `cargo run --bin nm-lint` enforces in CI.
+#[test]
+fn repo_tree_is_clean_against_the_checked_in_baseline() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let baseline = match std::fs::read_to_string(root.join("ANALYSIS_baseline.json")) {
+        Ok(text) => Baseline::parse(&text).expect("ANALYSIS_baseline.json parses"),
+        Err(_) => Baseline::default(),
+    };
+    let (report, new) =
+        step_nm::analysis::run_on_tree(root, Some(&baseline)).expect("analyzer runs");
+    assert!(report.files_scanned > 0);
+    let fresh: Vec<String> = report
+        .new_findings(&baseline)
+        .iter()
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert_eq!(new, fresh.len());
+    assert!(
+        fresh.is_empty(),
+        "nm-lint found non-grandfathered findings:\n{}",
+        fresh.join("\n")
+    );
+}
