@@ -1,0 +1,143 @@
+//! Online serving, end to end and fully offline: train a classifier MLP
+//! with the pure-Rust STEP recipe engine, pack the learned 2:4 sparsity at
+//! phase-2 exit, stand up the dynamic-batching `ServeFrontend`, and drive
+//! it with concurrent clients submitting small individual requests — the
+//! request-level traffic shape production serving has, rather than the
+//! pre-formed eval batches `BatchServer::serve` takes.
+//!
+//! Every response is checked bit-identical to serving that request alone
+//! (batch composition never changes bits — the repo's serving contract),
+//! and the run ends with the frontend's stats dump: batches cut, rows per
+//! batch, and exact-order p50/p95/p99 request latency.
+//!
+//! ```bash
+//! cargo run --release --example serving_frontend
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use step_nm::coordinator::frontend::SubmitError;
+use step_nm::coordinator::BatchServer;
+use step_nm::model::Mlp;
+use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
+use step_nm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Train a small MLP with STEP (dense precondition → frozen-v* mask
+    //    learning at a fixed switch step; see quickstart.rs for AutoSwitch).
+    let mlp = Mlp::new(64, &[128, 64], 10);
+    let mut rng = Pcg64::new(7);
+    let mut params = mlp.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let mut st = RecipeState::new(
+        PureRecipe::Step { lam: 2e-4 },
+        &params,
+        mlp.ratios(ratio),
+        1e-3,
+        AdamHp::default(),
+    );
+    for t in 1..=80 {
+        if t == 30 {
+            st.switch_to_phase2();
+        }
+        let x = Tensor::randn(&[32, 64], &mut rng, 0.0, 1.0);
+        let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
+        st.step(&mut params, |w| mlp.loss_and_grad(w, &x, &labels));
+    }
+    println!("trained 80 STEP steps (phase 2 from step 30)");
+
+    // 2. Pack once; build one server for the solo oracle and one for the
+    //    frontend (identical packing — packing is deterministic).
+    let mut oracle = BatchServer::pack(mlp.clone(), &params, ratio)?;
+    let server = BatchServer::pack(mlp, &params, ratio)?;
+    println!(
+        "packed: {:.1}% of dense weight bytes",
+        server.compression() * 100.0
+    );
+
+    // 3. The frontend: coalesce up to 16 rows per batch, flush after at
+    //    most 500µs, bounded queue, two workers.
+    let cfg = FrontendConfig {
+        max_batch_rows: 16,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 256,
+        workers: 2,
+    };
+    let fe = Arc::new(ServeFrontend::new(server, cfg)?);
+
+    // 4. Concurrent clients: each submits 50 small requests (1–6 rows) in
+    //    a closed loop, pre-checking its own solo-serve oracle response.
+    const CLIENTS: usize = 4;
+    const REQS: usize = 50;
+    let started = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        let mut crng = Pcg64::new(100 + c as u64);
+        let script: Vec<Tensor> = (0..REQS)
+            .map(|_| {
+                let rows = 1 + crng.below(6);
+                Tensor::randn(&[rows, 64], &mut crng, 0.0, 1.0)
+            })
+            .collect();
+        let want: Vec<Tensor> = script
+            .iter()
+            .map(|x| oracle.serve(x))
+            .collect::<anyhow::Result<_>>()?;
+        let fe = Arc::clone(&fe);
+        // nm-lint: allow(thread-discipline): demo traffic clients; responses are bit-checked against the solo oracle, so scheduling cannot affect outputs
+        clients.push(std::thread::spawn(move || {
+            for (x, w) in script.iter().zip(&want) {
+                // backpressure-aware submit: retry on QueueFull
+                let handle = loop {
+                    match fe.submit(x) {
+                        Ok(h) => break h,
+                        Err(SubmitError::QueueFull { .. }) => {
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
+                        Err(e) => panic!("submit failed: {e}"),
+                    }
+                };
+                let got = handle.wait().expect("response");
+                assert_eq!(
+                    &got, w,
+                    "coalesced response must be bit-identical to solo serving"
+                );
+            }
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let elapsed = started.elapsed();
+    println!(
+        "{} clients × {} requests served, every response bit-identical ✓",
+        CLIENTS, REQS
+    );
+
+    // 5. Stats dump: coalescing shape + exact-order latency percentiles.
+    let mut fe = match Arc::try_unwrap(fe) {
+        Ok(fe) => fe,
+        Err(_) => anyhow::bail!("clients still hold the frontend"),
+    };
+    let stats = fe.shutdown();
+    println!(
+        "batches: {}  rows: {}  requests: {}  queue-full rejections: {}",
+        stats.serve.batches, stats.serve.samples, stats.serve.requests, stats.serve.queue_full
+    );
+    println!("mean rows/batch: {:.2}", stats.mean_batch_rows());
+    println!(
+        "latency p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms  max {:.3}ms",
+        stats.latency.p50_ns as f64 / 1e6,
+        stats.latency.p95_ns as f64 / 1e6,
+        stats.latency.p99_ns as f64 / 1e6,
+        stats.latency.max_ns as f64 / 1e6,
+    );
+    println!(
+        "throughput: {:.0} requests/s, {:.0} rows/s over {:.3}s",
+        stats.requests_per_sec(elapsed),
+        stats.rows_per_sec(elapsed),
+        elapsed.as_secs_f64(),
+    );
+    Ok(())
+}

@@ -7,17 +7,25 @@
 //! the packed fine-tune suite (compact-gradient frozen-mask step vs dense
 //! masked step, recorded to `BENCH_finetune.json`), the packed-attention
 //! suite (compressed-projection [`TokenEncoder`] forward vs dense masked,
-//! recorded to `BENCH_attention.json`), and the streaming-driver suite
+//! recorded to `BENCH_attention.json`), the streaming-driver suite
 //! (TrainDriver epoch vs manual batch-at-a-time loop, recorded to
-//! `BENCH_train.json`).
+//! `BENCH_train.json`), and the online-serving suite (closed-loop seeded
+//! traffic through the dynamic-batching `ServeFrontend` vs solo sequential
+//! serving, with exact-order latency percentiles, recorded to
+//! `BENCH_serving.json`).
 //!
 //! Pass `--smoke` (or set `BENCH_SMOKE=1`) for a reduced-iteration run that
-//! still executes every bit-equality gate and writes all five JSON files —
+//! still executes every bit-equality gate and writes all six JSON files —
 //! the CI smoke job uses it to keep the comparison suites honest.
 
+use step_nm::coordinator::frontend::{
+    FrontendConfig, FrontendStats, LatencyRecord, ServeFrontend, SubmitError,
+};
 use step_nm::coordinator::{BatchServer, DriverConfig, FinetuneSession, TrainDriver};
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
-use step_nm::bench::{print_header, write_comparison_json, Comparison, Harness};
+use step_nm::bench::{
+    print_header, write_comparison_json, write_comparison_json_with, Comparison, Harness,
+};
 use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
 use step_nm::model::{Mlp, SparseModel, TokenEncoder};
 use step_nm::optim::{
@@ -562,6 +570,204 @@ fn bench_train_driver(h: Harness, rng: &mut Pcg64, out: &mut Vec<Comparison>) {
     out.push(cmp);
 }
 
+/// One closed-loop traffic round through the dynamic-batching frontend:
+/// seeded clients with Poisson-like think times submit their scripts
+/// concurrently; every response is asserted bit-equal to the solo
+/// `BatchServer::serve` oracle **in the loop** (the `outputs_bit_equal`
+/// gate), then the round is recorded as solo-sequential vs frontend
+/// completion time for the same request set.
+fn serving_round<M: SparseModel + 'static>(
+    name: &str,
+    mut solo: BatchServer<M>,
+    frontend_server: BatchServer<M>,
+    scripts: Vec<Vec<Tensor>>,
+    cfg: FrontendConfig,
+    think_mean_us: f64,
+    out: &mut Vec<Comparison>,
+) -> (FrontendStats, LatencyRecord, f64) {
+    use std::time::{Duration, Instant};
+    let n_req: usize = scripts.iter().map(Vec::len).sum();
+
+    // solo baseline: strictly sequential, one request per serve call —
+    // also precomputes the oracle responses the gate checks against
+    let t0 = Instant::now();
+    let oracle: Vec<Vec<Tensor>> = scripts
+        .iter()
+        .map(|s| s.iter().map(|x| solo.serve(x).unwrap()).collect())
+        .collect();
+    let solo_secs = t0.elapsed().as_secs_f64();
+
+    let fe = std::sync::Arc::new(ServeFrontend::new(frontend_server, cfg).unwrap());
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for (c, (script, want)) in scripts.into_iter().zip(oracle).enumerate() {
+        let fe = std::sync::Arc::clone(&fe);
+        let mut crng = Pcg64::new(7_000 + c as u64);
+        // nm-lint: allow(thread-discipline): closed-loop traffic clients; every response is bit-gated against the solo oracle in-loop, so client scheduling cannot affect outputs
+        clients.push(std::thread::spawn(move || {
+            for (x, w) in script.iter().zip(&want) {
+                if think_mean_us > 0.0 {
+                    // Poisson-like arrivals: exponential think time
+                    let dt = -think_mean_us * (1.0 - crng.f64()).ln();
+                    std::thread::sleep(Duration::from_micros(dt as u64));
+                }
+                let handle = loop {
+                    match fe.submit(x) {
+                        Ok(h) => break h,
+                        Err(SubmitError::QueueFull { .. }) => {
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
+                        Err(e) => panic!("serving submit failed: {e}"),
+                    }
+                };
+                let got = handle.wait_timeout(Duration::from_secs(120)).unwrap();
+                assert_eq!(&got, w, "frontend response != solo serve oracle");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let mut fe = match std::sync::Arc::try_unwrap(fe) {
+        Ok(fe) => fe,
+        Err(_) => unreachable!("all clients joined"),
+    };
+    let stats = fe.shutdown(); // joins the workers: the record is final
+    let latency = fe.latency_record();
+    let fe_secs = t0.elapsed().as_secs_f64();
+
+    let cmp = Comparison {
+        name: name.to_string(),
+        baseline_mean: solo_secs / n_req.max(1) as f64,
+        fused_mean: fe_secs / n_req.max(1) as f64,
+    };
+    println!(
+        "{name:<44} solo {:>10}  frontend {:>10}  p50 {:>10}  p99 {:>10}  {:.1} rows/batch",
+        step_nm::bench::fmt_time(cmp.baseline_mean),
+        step_nm::bench::fmt_time(cmp.fused_mean),
+        step_nm::bench::fmt_time(stats.latency.p50_ns as f64 * 1e-9),
+        step_nm::bench::fmt_time(stats.latency.p99_ns as f64 * 1e-9),
+        stats.mean_batch_rows(),
+    );
+    out.push(cmp);
+    (stats, latency, fe_secs)
+}
+
+/// The online-serving suite: closed-loop seeded traffic (mixed request
+/// sizes, Mlp + TokenEncoder, ragged token sequences) through the
+/// dynamic-batching frontend, recorded to `BENCH_serving.json` with
+/// exact-order latency percentiles and throughput extras.
+fn bench_serving(
+    smoke: bool,
+    rng: &mut Pcg64,
+    out: &mut Vec<Comparison>,
+) -> step_nm::util::json::JsonObj {
+    use step_nm::util::json::{Json, JsonObj};
+    print_header("online serving: dynamic-batching frontend vs solo sequential serve");
+    let clients = if smoke { 2usize } else { 4 };
+    let reqs = if smoke { 3usize } else { 40 };
+    let think_mean_us = if smoke { 0.0 } else { 150.0 };
+    let cfg = FrontendConfig {
+        max_batch_rows: 16,
+        max_wait: std::time::Duration::from_micros(500),
+        queue_cap: 256,
+        workers: 2,
+    };
+
+    let mut agg = LatencyRecord::new();
+    let mut total_requests = 0usize;
+    let mut total_rows = 0usize;
+    let mut total_batches = 0usize;
+    let mut total_secs = 0.0f64;
+    let mut track = |res: (FrontendStats, LatencyRecord, f64)| {
+        let (stats, latency, secs) = res;
+        for &ns in latency.samples_ns() {
+            agg.push(ns);
+        }
+        total_requests += stats.serve.requests;
+        total_rows += stats.serve.samples;
+        total_batches += stats.serve.batches;
+        total_secs += secs;
+    };
+
+    // MLP feature batches at 2:4 and 1:4, mixed 1..=6-row requests
+    for ratio in [NmRatio::new(2, 4), NmRatio::new(1, 4)] {
+        let mlp = Mlp::new(64, &[128, 64], 10);
+        let params = mlp.init(rng);
+        let scripts: Vec<Vec<Tensor>> = (0..clients)
+            .map(|_| {
+                (0..reqs)
+                    .map(|_| {
+                        let rows = 1 + rng.below(6);
+                        Tensor::randn(&[rows, 64], rng, 0.0, 1.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        let solo = BatchServer::pack(mlp.clone(), &params, ratio).unwrap();
+        let fe = BatchServer::pack(mlp, &params, ratio).unwrap();
+        track(serving_round(
+            &format!("serving mlp {}:{} {clients}x{reqs} reqs", ratio.n, ratio.m),
+            solo,
+            fe,
+            scripts,
+            cfg,
+            think_mean_us,
+            out,
+        ));
+    }
+
+    // token-encoder batches (2:4), ragged sequence lengths — different
+    // seqs never share a batch, so the dim-grouped cut rule is exercised
+    let enc = TokenEncoder::classifier(32, 16, 2, 32, 1, 8, 4);
+    let params = SparseModel::init(&enc, rng);
+    let ratio = NmRatio::new(2, 4);
+    let scripts: Vec<Vec<Tensor>> = (0..clients)
+        .map(|_| {
+            (0..reqs)
+                .map(|_| {
+                    let rows = 1 + rng.below(4);
+                    let seq = [4usize, 6, 8][rng.below(3)];
+                    let ids: Vec<f32> =
+                        (0..rows * seq).map(|_| rng.below(32) as f32).collect();
+                    Tensor::new(&[rows, seq], ids)
+                })
+                .collect()
+        })
+        .collect();
+    let solo = BatchServer::pack(enc.clone(), &params, ratio).unwrap();
+    let fe = BatchServer::pack(enc, &params, ratio).unwrap();
+    track(serving_round(
+        &format!("serving encoder 2:4 ragged {clients}x{reqs} reqs"),
+        solo,
+        fe,
+        scripts,
+        cfg,
+        think_mean_us,
+        out,
+    ));
+
+    // exact-order percentile extras: deterministic given the recorded
+    // latency sequence (the pinned rule in coordinator::frontend::stats)
+    let mut extras = JsonObj::new();
+    extras.insert("requests", Json::Num(total_requests as f64));
+    extras.insert("p50_latency_ns", Json::Num(agg.p50_ns() as f64));
+    extras.insert("p95_latency_ns", Json::Num(agg.p95_ns() as f64));
+    extras.insert("p99_latency_ns", Json::Num(agg.p99_ns() as f64));
+    extras.insert("max_latency_ns", Json::Num(agg.max_ns() as f64));
+    extras.insert("mean_latency_ns", Json::Num(agg.mean_ns() as f64));
+    extras.insert(
+        "requests_per_sec",
+        Json::Num(total_requests as f64 / total_secs.max(1e-12)),
+    );
+    extras.insert("rows_per_sec", Json::Num(total_rows as f64 / total_secs.max(1e-12)));
+    extras.insert(
+        "mean_batch_rows",
+        Json::Num(total_rows as f64 / total_batches.max(1) as f64),
+    );
+    extras
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var_os("BENCH_SMOKE").is_some();
@@ -729,5 +935,26 @@ fn main() {
     ) {
         Ok(()) => println!("[json] wrote BENCH_train.json"),
         Err(e) => eprintln!("[json] could not write BENCH_train.json: {e}"),
+    }
+
+    // ---- online serving: frontend vs solo sequential serving -------------
+    let mut serving = Vec::new();
+    let extras = bench_serving(smoke, &mut rng, &mut serving);
+    let mean = serving.iter().map(Comparison::speedup).sum::<f64>()
+        / serving.len().max(1) as f64;
+    println!(
+        "\nmean closed-loop serving speedup over solo sequential serve: {mean:.2}x \
+         (rows compare completion time for the same seeded traffic; the frontend \
+         side includes client think times, so latency extras are the headline)"
+    );
+    match write_comparison_json_with(
+        "BENCH_serving.json",
+        "dynamic-batching frontend vs solo sequential BatchServer::serve (closed-loop seeded clients, Poisson-like think times, mixed request sizes, Mlp 2:4/1:4 + ragged TokenEncoder 2:4; every response asserted bit-identical to the solo oracle in-loop before recording; extras carry exact-order latency percentiles + throughput)",
+        &serving,
+        true, // per-response bit-equality gate inside serving_round
+        &extras,
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_serving.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_serving.json: {e}"),
     }
 }

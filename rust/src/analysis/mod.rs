@@ -73,9 +73,12 @@ pub mod config {
     ];
 
     /// Modules allowed to spawn threads (each owns a deterministic merge).
+    /// The frontend worker pool qualifies: batch composition never changes
+    /// response bits, so worker scheduling is invisible to outputs.
     pub const THREAD_ALLOWLIST: &[&str] = &[
         "rust/src/coordinator/prefetch.rs",
         "rust/src/coordinator/serve.rs",
+        "rust/src/coordinator/frontend/",
         "rust/src/optim/",
     ];
 
@@ -129,12 +132,16 @@ pub mod config {
 
     /// Is `f` (in `path`) on the serve path for panic-freedom purposes?
     ///
-    /// * everything in `coordinator/serve.rs`;
+    /// * everything in `coordinator/serve.rs` and the online
+    ///   `coordinator/frontend/` modules (worker threads must degrade to
+    ///   per-request errors, never abort);
     /// * the `Session` hot-loop methods in `coordinator/session.rs`;
     /// * in the packed-chain files: any fn whose name mentions `packed`, or
     ///   whose body calls a `packed_*` kernel (one-hop chain closure).
     pub fn in_serve_path(path: &str, f: &FnSpan, toks: &[Tok]) -> bool {
-        if path == "rust/src/coordinator/serve.rs" {
+        if path == "rust/src/coordinator/serve.rs"
+            || path.starts_with("rust/src/coordinator/frontend/")
+        {
             return true;
         }
         if path == "rust/src/coordinator/session.rs" {
@@ -161,7 +168,9 @@ pub mod config {
     /// where inputs are externally controlled; inside the packed kernels the
     /// bounds come from layout validation at pack time.
     pub fn index_checked(path: &str, _f: &FnSpan) -> bool {
-        path == "rust/src/coordinator/serve.rs" || path == "rust/src/coordinator/session.rs"
+        path == "rust/src/coordinator/serve.rs"
+            || path == "rust/src/coordinator/session.rs"
+            || path.starts_with("rust/src/coordinator/frontend/")
     }
 
     /// Public kernel entry points rule 5 demands direct tests for.

@@ -414,8 +414,9 @@ pub fn panic_freedom(cx: &FileCx, out: &mut Vec<Finding>) {
 }
 
 /// Rule 4 — `thread-discipline`: `thread::spawn` / `thread::scope` only in
-/// the allow-listed modules (prefetch, serve, optim) — everywhere else a
-/// thread is an accumulation-order hazard waiting for a merge.
+/// the allow-listed modules (prefetch, serve, the frontend worker pool,
+/// optim) — everywhere else a thread is an accumulation-order hazard
+/// waiting for a merge.
 pub fn thread_discipline(cx: &FileCx, out: &mut Vec<Finding>) {
     if config::threads_allowed(cx.path) {
         return;

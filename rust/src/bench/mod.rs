@@ -163,6 +163,20 @@ pub fn write_comparison_json(
     rows: &[Comparison],
     outputs_bit_equal: bool,
 ) -> anyhow::Result<()> {
+    write_comparison_json_with(path, suite, rows, outputs_bit_equal, &crate::util::json::JsonObj::new())
+}
+
+/// [`write_comparison_json`] plus suite-specific top-level fields merged
+/// from `extras` (after the standard keys, in `extras`' insertion order) —
+/// the serving suite uses this to record latency percentiles and
+/// throughput next to the standard comparison rows.
+pub fn write_comparison_json_with(
+    path: impl AsRef<std::path::Path>,
+    suite: &str,
+    rows: &[Comparison],
+    outputs_bit_equal: bool,
+    extras: &crate::util::json::JsonObj,
+) -> anyhow::Result<()> {
     use crate::util::json::{Json, JsonObj};
     let mut doc = JsonObj::new();
     doc.insert("suite", Json::Str(suite.to_string()));
@@ -183,6 +197,11 @@ pub fn write_comparison_json(
         rows.iter().map(Comparison::speedup).sum::<f64>() / rows.len() as f64
     };
     doc.insert("mean_speedup", Json::Num(mean_speedup));
+    for key in extras.keys() {
+        if let Some(val) = extras.get(key) {
+            doc.insert(key, val.clone());
+        }
+    }
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
@@ -251,6 +270,27 @@ mod tests {
         assert_eq!(doc.get("rows").as_arr().unwrap().len(), 2);
         let mean = doc.get("mean_speedup").as_f64().unwrap();
         assert!((mean - 3.0).abs() < 1e-9, "mean speedup {mean}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn comparison_json_with_extras_merges_fields() {
+        use crate::util::json::{Json, JsonObj};
+        let dir = std::env::temp_dir().join(format!("stepnm_benchx_{}", std::process::id()));
+        let path = dir.join("BENCH_extras.json");
+        let rows =
+            vec![Comparison { name: "a".into(), baseline_mean: 0.4, fused_mean: 0.2 }];
+        let mut extras = JsonObj::new();
+        extras.insert("p50_latency_ns", Json::Num(1234.0));
+        extras.insert("requests_per_sec", Json::Num(10.0));
+        write_comparison_json_with(&path, "serving", &rows, true, &extras).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("suite").as_str(), Some("serving"));
+        assert_eq!(doc.get("outputs_bit_equal").as_bool(), Some(true));
+        // extras land as top-level fields, after the standard keys
+        assert_eq!(doc.get("p50_latency_ns").as_f64(), Some(1234.0));
+        assert_eq!(doc.get("requests_per_sec").as_f64(), Some(10.0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

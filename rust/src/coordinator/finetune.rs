@@ -301,6 +301,19 @@ impl<M: SparseModel> FinetuneSession<M> {
         super::serve::BatchServer::new(self.model, self.params)
     }
 
+    /// Fine-tune → online serving in one move: wrap
+    /// [`into_server`](Self::into_server) in a dynamic-batching
+    /// [`ServeFrontend`](super::frontend::ServeFrontend).
+    pub fn into_frontend(
+        self,
+        cfg: super::frontend::FrontendConfig,
+    ) -> anyhow::Result<super::frontend::ServeFrontend<M>>
+    where
+        M: 'static,
+    {
+        super::frontend::ServeFrontend::new(self.into_server()?, cfg)
+    }
+
     // ---- checkpointing (format v2, packed entries) ------------------------
 
     /// Serialize the whole session — packed weights, compact optimizer

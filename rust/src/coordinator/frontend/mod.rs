@@ -1,0 +1,434 @@
+//! The online serving front-end: dynamic request batching over
+//! [`BatchServer`].
+//!
+//! [`BatchServer`] answers one pre-formed batch per call from one caller —
+//! the training-side deployment shape. Production traffic is the opposite:
+//! many concurrent clients, each submitting a few rows, with tail-latency
+//! targets. [`ServeFrontend`] is the admission layer between the two:
+//!
+//! ```text
+//!   client ──submit(rows)──► bounded queue ──cut──► worker pool ──► packed
+//!   client ──submit(rows)──►   (FIFO,       batch    (forward_packed
+//!   client ──submit(rows)──►    backpressure) cut     over the shared
+//!        ◄──per-request responses via channels──      compressed weights)
+//! ```
+//!
+//! * **Coalescing** — requests are merged FIFO into adaptively-sized
+//!   batches, flushed on `max_batch_rows` *or* the `max_wait` deadline of
+//!   the oldest request, whichever comes first (the pinned cut rule lives
+//!   in `queue.rs`, where it is unit-tested in isolation).
+//! * **Backpressure** — the queue is bounded; when it is full,
+//!   [`submit`](ServeFrontend::submit) returns
+//!   [`SubmitError::QueueFull`] immediately instead of blocking forever,
+//!   and the rejection is counted separately (failed calls never bump the
+//!   served counters — the same rule [`BatchServer::serve`] holds).
+//! * **Bit-identity** — every model row is forwarded with an identical
+//!   per-row accumulation order regardless of which other rows share its
+//!   batch, so each coalesced response is **bit-identical** to serving
+//!   that request alone through [`BatchServer::serve`]. The lock-step
+//!   suite in `rust/tests/serve_frontend.rs` and the
+//!   `BENCH_serving.json` gate hold that line; keep it when touching the
+//!   kernels below.
+//! * **Stats** — [`FrontendStats`] extends the [`ServeStats`] counters
+//!   with exact-order p50/p95/p99 latency and throughput accounting
+//!   ([`stats`] pins the percentile rule).
+//!
+//! `cargo bench --bench substrate` drives a closed-loop multi-threaded
+//! traffic generator through this module and records the comparison
+//! against solo sequential serving to `BENCH_serving.json`.
+
+// Serve surface: a malformed request or a poisoned lock must surface as an
+// error (or a canceled response), never abort a serving thread. `nm-lint`
+// enforces the same contract (rules `panic-freedom`, `thread-discipline`).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub(crate) mod queue;
+pub mod stats;
+
+pub use stats::{FrontendStats, LatencyRecord, LatencySummary};
+
+use super::serve::{BatchServer, ServeStats};
+use crate::model::{Mlp, SparseModel};
+use crate::tensor::Tensor;
+use queue::{Mode, Pending, QueueState};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Frontend tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontendConfig {
+    /// Flush a batch once this many rows are pending (a single request
+    /// larger than this is served alone — requests are never split).
+    pub max_batch_rows: usize,
+    /// Flush once the oldest pending request has waited this long, even if
+    /// the batch is not full — the tail-latency bound.
+    pub max_wait: Duration,
+    /// Maximum queued (admitted, not yet served) requests; beyond it,
+    /// `submit` returns [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Worker threads serving packed forwards from the shared weights.
+    pub workers: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        Self {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            workers: 2,
+        }
+    }
+}
+
+/// Why a [`submit`](ServeFrontend::submit) was not admitted. Typed so
+/// callers can distinguish backpressure (retry later) from a bad request
+/// (fix it) without string matching.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded queue is saturated — retry after backoff. Counted in
+    /// [`ServeStats::queue_full`]; served counters are untouched.
+    QueueFull {
+        /// Requests pending at rejection time.
+        pending: usize,
+        /// The configured [`FrontendConfig::queue_cap`].
+        cap: usize,
+    },
+    /// The request failed model validation (wrong trailing dimension,
+    /// malformed token ids, non-2-D shape) — never admitted, never counted
+    /// as served.
+    Rejected(anyhow::Error),
+    /// The frontend is shutting down and no longer admits requests.
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::QueueFull { pending, cap } => {
+                write!(f, "serving queue full ({pending}/{cap} requests pending)")
+            }
+            Self::Rejected(e) => write!(f, "request rejected: {e}"),
+            Self::ShutDown => write!(f, "frontend is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A client's handle to one in-flight request.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<anyhow::Result<Tensor>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives: logits `[rows, out_dim]` for the
+    /// submitted rows, bit-identical to a solo [`BatchServer::serve`] of
+    /// the same request. Returns an error if the frontend was dropped
+    /// before serving it.
+    pub fn wait(self) -> anyhow::Result<Tensor> {
+        match self.rx.recv() {
+            Ok(resp) => resp,
+            Err(_) => Err(anyhow::anyhow!(
+                "request canceled: frontend shut down before serving it"
+            )),
+        }
+    }
+
+    /// [`wait`](Self::wait) with an upper bound — the test harness uses
+    /// this to turn a would-be deadlock into a clean failure.
+    pub fn wait_timeout(self, timeout: Duration) -> anyhow::Result<Tensor> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => resp,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow::anyhow!(
+                "timed out after {timeout:?} waiting for a response"
+            )),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                "request canceled: frontend shut down before serving it"
+            )),
+        }
+    }
+}
+
+/// Mutable serving state shared by the workers (split from the queue so
+/// stats recording never contends with admission).
+struct StatsState {
+    serve: ServeStats,
+    latency: LatencyRecord,
+}
+
+struct Inner<M: SparseModel> {
+    cfg: FrontendConfig,
+    /// The packed server. Workers call the stats-free
+    /// [`BatchServer::forward`]; the frontend owns all counters.
+    server: BatchServer<M>,
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    stats: Mutex<StatsState>,
+}
+
+/// Recover from a poisoned mutex instead of unwrapping: the state under
+/// these locks (a request queue, counters) stays usable even if another
+/// worker panicked mid-update, and the serve surface must not cascade the
+/// abort.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// The dynamic-batching serving front-end (see the module docs).
+///
+/// Constructed from a packed [`BatchServer`]; many threads may
+/// [`submit`](Self::submit) concurrently through a shared reference.
+pub struct ServeFrontend<M: SparseModel + 'static = Mlp> {
+    inner: Arc<Inner<M>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<M: SparseModel + 'static> ServeFrontend<M> {
+    /// Start the frontend: validate `cfg`, take ownership of the packed
+    /// server, and spawn the worker pool.
+    pub fn new(server: BatchServer<M>, cfg: FrontendConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(cfg.max_batch_rows >= 1, "max_batch_rows must be >= 1");
+        anyhow::ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        anyhow::ensure!(cfg.workers >= 1, "workers must be >= 1");
+        let inner = Arc::new(Inner {
+            cfg,
+            server,
+            q: Mutex::new(QueueState::new()),
+            cv: Condvar::new(),
+            stats: Mutex::new(StatsState {
+                serve: ServeStats::default(),
+                latency: LatencyRecord::new(),
+            }),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let inner = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-frontend-{w}"))
+                .spawn(move || worker_loop(&inner))
+                .map_err(|e| anyhow::anyhow!("spawning serve worker {w}: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(Self { inner, workers })
+    }
+
+    /// Submit one request of a few rows (`[rows, dim]`). Validation runs
+    /// **before** admission: a malformed request is rejected here and
+    /// never reaches the queue or the counters. On success the rows are
+    /// copied into the queue and the call returns immediately with a
+    /// [`ResponseHandle`]; the response is produced by a worker after the
+    /// request's batch is cut.
+    pub fn submit(&self, x: &Tensor) -> Result<ResponseHandle, SubmitError> {
+        if x.shape().len() != 2 {
+            return Err(SubmitError::Rejected(anyhow::anyhow!(
+                "requests must be 2-D [rows, dim], got shape {:?}",
+                x.shape()
+            )));
+        }
+        self.inner
+            .server
+            .model()
+            .validate_input(x)
+            .map_err(SubmitError::Rejected)?;
+        let (rows, dim) = x.as_2d();
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = lock(&self.inner.q);
+            if q.mode != Mode::Running {
+                return Err(SubmitError::ShutDown);
+            }
+            if q.pending.len() >= self.inner.cfg.queue_cap {
+                let pending = q.pending.len();
+                drop(q);
+                lock(&self.inner.stats).serve.queue_full += 1;
+                return Err(SubmitError::QueueFull { pending, cap: self.inner.cfg.queue_cap });
+            }
+            q.pending.push_back(Pending {
+                data: x.data().to_vec(),
+                rows,
+                dim,
+                tx,
+                enqueued: Instant::now(),
+            });
+            q.pending_rows += rows;
+        }
+        self.inner.cv.notify_all();
+        Ok(ResponseHandle { rx })
+    }
+
+    /// Force everything admitted so far to be served without waiting for
+    /// size or deadline (the flag clears once the queue empties). The
+    /// deterministic test harness uses this to pin the flush order:
+    /// submit a script, `flush()`, collect.
+    pub fn flush(&self) {
+        {
+            let mut q = lock(&self.inner.q);
+            if !q.pending.is_empty() {
+                q.flush = true;
+            }
+        }
+        self.inner.cv.notify_all();
+    }
+
+    /// Requests admitted but not yet cut into a batch.
+    pub fn queued(&self) -> usize {
+        lock(&self.inner.q).pending.len()
+    }
+
+    /// Snapshot the cumulative serving stats (counters + exact-order
+    /// latency percentiles).
+    pub fn stats(&self) -> FrontendStats {
+        let st = lock(&self.inner.stats);
+        FrontendStats { serve: st.serve, latency: st.latency.summary() }
+    }
+
+    /// The raw per-request latency record (ns, completion order) — the
+    /// bench dumps this into `BENCH_serving.json`.
+    pub fn latency_record(&self) -> LatencyRecord {
+        lock(&self.inner.stats).latency.clone()
+    }
+
+    /// The underlying packed server (weights, layout, compression info).
+    pub fn server(&self) -> &BatchServer<M> {
+        &self.inner.server
+    }
+
+    /// Graceful shutdown: stop admitting, serve every queued request, join
+    /// all workers, and return the final stats. Idempotent — later calls
+    /// (or the eventual drop) are no-ops. In-flight clients get their
+    /// responses; only requests submitted *after* shutdown are refused
+    /// (with [`SubmitError::ShutDown`]).
+    pub fn shutdown(&mut self) -> FrontendStats {
+        self.stop(Mode::Draining);
+        self.stats()
+    }
+
+    fn stop(&mut self, mode: Mode) {
+        {
+            let mut q = lock(&self.inner.q);
+            // never downgrade Draining→Cancelling once drain started: the
+            // drop after a shutdown() must not cancel late arrivals
+            if q.mode == Mode::Running {
+                q.mode = mode;
+            }
+        }
+        self.inner.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<M: SparseModel + 'static> Drop for ServeFrontend<M> {
+    /// Dropping mid-queue joins all workers cleanly: queued requests are
+    /// **canceled** (their clients' `wait()` returns a "canceled" error),
+    /// batches already cut still complete and respond. Use
+    /// [`shutdown`](Self::shutdown) first for a drain instead.
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.stop(Mode::Cancelling);
+        }
+    }
+}
+
+/// One worker: wait until a batch is due, cut it under the lock, serve it
+/// outside the lock, route the responses, record stats; exit when the
+/// frontend drains dry or cancels.
+fn worker_loop<M: SparseModel>(inner: &Inner<M>) {
+    loop {
+        let batch = {
+            let mut q = lock(&inner.q);
+            loop {
+                if q.mode == Mode::Cancelling {
+                    q.cancel_all();
+                    return;
+                }
+                if q.pending.is_empty() {
+                    if q.mode == Mode::Draining {
+                        return;
+                    }
+                    // nothing to do: sleep until a submit notifies. The
+                    // periodic timeout is belt-and-suspenders against a
+                    // missed notify — correctness never depends on it.
+                    let (guard, _) = match inner.cv.wait_timeout(q, Duration::from_millis(50)) {
+                        Ok(r) => r,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    q = guard;
+                    continue;
+                }
+                if q.due(inner.cfg.max_batch_rows, inner.cfg.max_wait, Instant::now()) {
+                    break;
+                }
+                // batch not full yet: sleep at most until the oldest
+                // request's deadline
+                let remaining = q
+                    .pending
+                    .front()
+                    .map(|p| {
+                        inner
+                            .cfg
+                            .max_wait
+                            .saturating_sub(Instant::now().saturating_duration_since(p.enqueued))
+                    })
+                    .unwrap_or(Duration::ZERO)
+                    .max(Duration::from_micros(10));
+                let (guard, _) = match inner.cv.wait_timeout(q, remaining) {
+                    Ok(r) => r,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                q = guard;
+            }
+            q.cut_batch(inner.cfg.max_batch_rows)
+        };
+        if !batch.is_empty() {
+            serve_batch(inner, batch);
+        }
+    }
+}
+
+/// Serve one coalesced batch and route the per-request responses.
+fn serve_batch<M: SparseModel>(inner: &Inner<M>, batch: Vec<Pending>) {
+    let x = queue::coalesce(&batch);
+    let rows = x.shape().first().copied().unwrap_or(0);
+    let counts: Vec<usize> = batch.iter().map(|p| p.rows).collect();
+    let served = inner
+        .server
+        .forward(&x)
+        .and_then(|out| {
+            queue::split_rows(&out, &counts)
+                .ok_or_else(|| anyhow::anyhow!("batched output shorter than the request rows"))
+        });
+    match served {
+        Ok(parts) => {
+            let done = Instant::now();
+            // counters first, response second: a client holding its
+            // response always observes itself counted
+            let mut st = lock(&inner.stats);
+            st.serve.batches += 1;
+            st.serve.samples += rows;
+            for (p, part) in batch.into_iter().zip(parts) {
+                let latency = done.saturating_duration_since(p.enqueued);
+                st.serve.requests += 1;
+                st.latency.push(latency.as_nanos().min(u64::MAX as u128) as u64);
+                // a receiver may have given up (dropped handle): serving
+                // already happened, so it still counts
+                let _ = p.tx.send(Ok(part));
+            }
+        }
+        Err(e) => {
+            // unreachable by construction (requests are validated at
+            // submit and coalesced per-dim), but a future bug must degrade
+            // to per-request errors — never a worker abort, and never a
+            // bump of the served counters (the failed-call rule)
+            for p in batch {
+                let _ = p.tx.send(Err(anyhow::anyhow!("batched forward failed: {e}")));
+            }
+        }
+    }
+}

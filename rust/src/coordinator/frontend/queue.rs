@@ -1,0 +1,276 @@
+//! The admission queue and the deterministic batch-cut rule.
+//!
+//! All coalescing policy lives here as pure data-structure logic (no
+//! threads, no clocks except the enqueue timestamps carried on requests),
+//! so the rule itself is unit-testable in isolation and the worker loop in
+//! [`super`] stays a thin wait/cut/serve shell.
+//!
+//! **The cut rule** (the whole batching policy, pinned):
+//!
+//! 1. A batch becomes *due* when any of: pending rows ≥ `max_batch_rows`;
+//!    the oldest pending request has waited ≥ `max_wait`; a
+//!    [`flush`](super::ServeFrontend::flush) is outstanding; or the
+//!    frontend is draining for shutdown.
+//! 2. A due batch is cut strictly FIFO from the queue front: take the
+//!    oldest request unconditionally (even if it alone exceeds
+//!    `max_batch_rows` — requests are never split, so an oversized request
+//!    becomes its own batch), then keep taking while the next request has
+//!    the **same trailing dimension** (token requests of different
+//!    sequence lengths cannot share a packed forward without padding,
+//!    which would change bits) and the batch stays ≤ `max_batch_rows`.
+//!
+//! Because every model row is forwarded independently with an identical
+//! per-row accumulation order, the *composition* of a batch can never
+//! change a response's bits — the rule only shapes throughput and tail
+//! latency, which is what makes the multi-threaded frontend testable
+//! against the solo-serve oracle under any interleaving.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One admitted request waiting to be coalesced.
+pub(crate) struct Pending {
+    /// Row-major request payload (`rows × dim`).
+    pub data: Vec<f32>,
+    pub rows: usize,
+    /// Trailing dimension (feature width / sequence length).
+    pub dim: usize,
+    /// Response channel back to the submitting client.
+    pub tx: mpsc::Sender<anyhow::Result<Tensor>>,
+    /// Admission timestamp (latency measurement + deadline flushing).
+    pub enqueued: Instant,
+}
+
+/// Frontend lifecycle, guarded by the queue mutex.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Mode {
+    /// Accepting and serving.
+    Running,
+    /// No new admissions; workers serve the queue dry, then exit.
+    Draining,
+    /// No new admissions; workers cancel the queue, then exit.
+    Cancelling,
+}
+
+/// The shared admission queue (lives under the frontend's mutex).
+pub(crate) struct QueueState {
+    pub pending: VecDeque<Pending>,
+    /// Σ rows over `pending` (kept incrementally; the due check is O(1)).
+    pub pending_rows: usize,
+    /// A `flush()` is outstanding: serve everything admitted so far
+    /// without waiting for size or deadline. Cleared when the queue
+    /// empties.
+    pub flush: bool,
+    pub mode: Mode,
+}
+
+impl QueueState {
+    pub fn new() -> Self {
+        Self {
+            pending: VecDeque::new(),
+            pending_rows: 0,
+            flush: false,
+            mode: Mode::Running,
+        }
+    }
+
+    /// Is a batch due right now? (`now` passed in so the rule is pure.)
+    pub fn due(&self, max_batch_rows: usize, max_wait: std::time::Duration, now: Instant) -> bool {
+        let Some(front) = self.pending.front() else {
+            return false;
+        };
+        self.flush
+            || self.mode != Mode::Running
+            || self.pending_rows >= max_batch_rows
+            || now.saturating_duration_since(front.enqueued) >= max_wait
+    }
+
+    /// Cut the next batch per the pinned FIFO rule (see the module docs).
+    /// Call only when [`due`](Self::due); returns the coalesced requests
+    /// in admission order.
+    pub fn cut_batch(&mut self, max_batch_rows: usize) -> Vec<Pending> {
+        let mut batch: Vec<Pending> = Vec::new();
+        let mut batch_dim: Option<usize> = None;
+        let mut rows = 0usize;
+        while let Some(next) = self.pending.front() {
+            let fits = match batch_dim {
+                None => true,
+                Some(d) => next.dim == d && rows + next.rows <= max_batch_rows,
+            };
+            if !fits {
+                break;
+            }
+            let next = match self.pending.pop_front() {
+                Some(p) => p,
+                None => break,
+            };
+            batch_dim = Some(next.dim);
+            rows += next.rows;
+            self.pending_rows = self.pending_rows.saturating_sub(next.rows);
+            batch.push(next);
+            if rows >= max_batch_rows {
+                break;
+            }
+        }
+        if self.pending.is_empty() {
+            self.flush = false;
+        }
+        batch
+    }
+
+    /// Cancel every pending request (dropping the senders makes each
+    /// client's `wait()` return a "canceled" error) and empty the queue.
+    pub fn cancel_all(&mut self) {
+        self.pending.clear();
+        self.pending_rows = 0;
+        self.flush = false;
+    }
+}
+
+/// Concatenate the coalesced requests into one `[Σrows, dim]` batch
+/// tensor, rows in admission order.
+pub(crate) fn coalesce(batch: &[Pending]) -> Tensor {
+    let dim = batch.first().map_or(0, |p| p.dim);
+    let rows: usize = batch.iter().map(|p| p.rows).sum();
+    let mut data = Vec::with_capacity(rows * dim);
+    for p in batch {
+        data.extend_from_slice(&p.data);
+    }
+    Tensor::new(&[rows, dim], data)
+}
+
+/// Split the batched logits `[Σrows, n_out]` back into per-request
+/// tensors, in the same admission order `coalesce` packed them. Returns
+/// `None` if the output is too short (cannot happen for a validated
+/// forward; checked rather than indexed so a bug degrades to an error).
+pub(crate) fn split_rows(out: &Tensor, counts: &[usize]) -> Option<Vec<Tensor>> {
+    let n_out = out.last_dim();
+    let od = out.data();
+    let mut parts = Vec::with_capacity(counts.len());
+    let mut off = 0usize;
+    for &rows in counts {
+        let take = rows * n_out;
+        let slice = od.get(off..off + take)?;
+        parts.push(Tensor::new(&[rows, n_out], slice.to_vec()));
+        off += take;
+    }
+    Some(parts)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn pending(rows: usize, dim: usize) -> (Pending, mpsc::Receiver<anyhow::Result<Tensor>>) {
+        let (tx, rx) = mpsc::channel();
+        let p = Pending {
+            data: vec![0.0; rows * dim],
+            rows,
+            dim,
+            tx,
+            enqueued: Instant::now(),
+        };
+        (p, rx)
+    }
+
+    fn push(q: &mut QueueState, rows: usize, dim: usize) {
+        let (p, rx) = pending(rows, dim);
+        std::mem::forget(rx); // keep the channel alive for the test
+        q.pending_rows += p.rows;
+        q.pending.push_back(p);
+    }
+
+    #[test]
+    fn cut_is_fifo_and_respects_max_rows() {
+        let mut q = QueueState::new();
+        for rows in [3usize, 2, 4, 1] {
+            push(&mut q, rows, 8);
+        }
+        // 3 + 2 fit in 6; 4 would overflow
+        let b = q.cut_batch(6);
+        assert_eq!(b.iter().map(|p| p.rows).collect::<Vec<_>>(), vec![3, 2]);
+        assert_eq!(q.pending_rows, 5);
+        let b = q.cut_batch(6);
+        assert_eq!(b.iter().map(|p| p.rows).collect::<Vec<_>>(), vec![4, 1]);
+        assert_eq!(q.pending_rows, 0);
+    }
+
+    #[test]
+    fn oversized_request_becomes_its_own_batch() {
+        let mut q = QueueState::new();
+        push(&mut q, 10, 4); // larger than max_batch_rows
+        push(&mut q, 1, 4);
+        let b = q.cut_batch(6);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].rows, 10);
+        let b = q.cut_batch(6);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].rows, 1);
+    }
+
+    #[test]
+    fn dim_change_breaks_a_batch() {
+        let mut q = QueueState::new();
+        push(&mut q, 2, 8);
+        push(&mut q, 2, 8);
+        push(&mut q, 2, 4); // different trailing dim: next batch
+        push(&mut q, 2, 4);
+        let b = q.cut_batch(100);
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().all(|p| p.dim == 8));
+        let b = q.cut_batch(100);
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().all(|p| p.dim == 4));
+    }
+
+    #[test]
+    fn due_conditions() {
+        let max_wait = Duration::from_millis(50);
+        let mut q = QueueState::new();
+        let now = Instant::now();
+        assert!(!q.due(4, max_wait, now), "empty queue is never due");
+        push(&mut q, 2, 8);
+        assert!(!q.due(4, max_wait, now), "2 < 4 rows, fresh, no flush");
+        assert!(q.due(2, max_wait, now), "size reached");
+        assert!(q.due(4, max_wait, now + max_wait), "deadline reached");
+        q.flush = true;
+        assert!(q.due(4, max_wait, now), "flush outstanding");
+        q.flush = false;
+        q.mode = Mode::Draining;
+        assert!(q.due(4, max_wait, now), "draining serves immediately");
+    }
+
+    #[test]
+    fn flush_clears_when_queue_empties() {
+        let mut q = QueueState::new();
+        push(&mut q, 1, 8);
+        push(&mut q, 1, 8);
+        q.flush = true;
+        q.cut_batch(1);
+        assert!(q.flush, "still pending → flush stays");
+        q.cut_batch(1);
+        assert!(!q.flush, "queue empty → flush cleared");
+    }
+
+    #[test]
+    fn coalesce_and_split_round_trip() {
+        let (mut a, _ra) = pending(2, 3);
+        let (mut b, _rb) = pending(1, 3);
+        a.data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        b.data = vec![7.0, 8.0, 9.0];
+        let batch = vec![a, b];
+        let x = coalesce(&batch);
+        assert_eq!(x.shape(), &[3, 3]);
+        assert_eq!(x.data()[..3], [1.0, 2.0, 3.0]);
+        let parts = split_rows(&x, &[2, 1]).unwrap();
+        assert_eq!(parts[0].shape(), &[2, 3]);
+        assert_eq!(parts[0].data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(parts[1].data(), &[7.0, 8.0, 9.0]);
+        // short output degrades to None, not a panic
+        assert!(split_rows(&x, &[2, 2]).is_none());
+    }
+}

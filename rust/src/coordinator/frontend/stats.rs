@@ -1,0 +1,175 @@
+//! Frontend serving statistics: exact-order latency percentiles on top of
+//! the [`ServeStats`](crate::coordinator::serve::ServeStats) counters.
+//!
+//! Production serving is judged by tail latency, so the frontend records
+//! **every** per-request latency (enqueue → response) instead of a lossy
+//! histogram. Percentiles are computed with one pinned rule (see
+//! [`LatencyRecord::percentile_ns`]) so that, given a recorded latency
+//! sequence, the reported p50/p95/p99 are deterministic — the
+//! `BENCH_serving.json` numbers are a pure function of the recorded
+//! samples, never of sort instability or interpolation choices.
+//!
+//! Everything here is on the serve surface (`nm-lint` rule
+//! `panic-freedom`): the recorder never indexes unchecked and never
+//! unwraps, so a stats query can never abort a serving thread.
+
+use crate::coordinator::serve::ServeStats;
+
+/// A per-request latency recorder (nanoseconds, completion order).
+///
+/// The raw sequence is kept verbatim: percentile queries sort a copy, so
+/// the record itself stays an append-only log a bench can dump or replay.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyRecord {
+    samples_ns: Vec<u64>,
+}
+
+impl LatencyRecord {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one request latency (in nanoseconds, completion order).
+    pub fn push(&mut self, latency_ns: u64) {
+        self.samples_ns.push(latency_ns);
+    }
+
+    /// Number of recorded requests.
+    pub fn len(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    /// The raw samples in completion order (ns).
+    pub fn samples_ns(&self) -> &[u64] {
+        &self.samples_ns
+    }
+
+    /// Exact-order percentile, **the** pinned rule for every serving stat:
+    /// sort the samples ascending (`u64` — a total order, so the sort is
+    /// deterministic), then take index `round(p/100 × (n−1))` (half-way
+    /// cases round away from zero, `f64::round`). This is nearest-rank on
+    /// the sorted sequence — the same rule
+    /// [`BenchResult::percentile`](crate::bench::BenchResult::percentile)
+    /// uses — so `BENCH_serving.json` is reproducible from a recorded
+    /// latency sequence. Returns `None` on an empty record.
+    ///
+    /// ```
+    /// use step_nm::coordinator::frontend::LatencyRecord;
+    /// let mut r = LatencyRecord::new();
+    /// for ns in [40u64, 10, 30, 20] {
+    ///     r.push(ns);
+    /// }
+    /// // sorted: [10, 20, 30, 40]; p50 → round(0.5 × 3) = 2 → 30
+    /// assert_eq!(r.percentile_ns(50.0), Some(30));
+    /// assert_eq!(r.percentile_ns(100.0), Some(40));
+    /// ```
+    pub fn percentile_ns(&self, p: f64) -> Option<u64> {
+        if self.samples_ns.is_empty() || !(0.0..=100.0).contains(&p) {
+            return None;
+        }
+        let mut sorted = self.samples_ns.clone();
+        sorted.sort_unstable();
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted.get(idx).copied()
+    }
+
+    /// Median latency (ns); 0 on an empty record.
+    pub fn p50_ns(&self) -> u64 {
+        self.percentile_ns(50.0).unwrap_or(0)
+    }
+
+    /// 95th-percentile latency (ns); 0 on an empty record.
+    pub fn p95_ns(&self) -> u64 {
+        self.percentile_ns(95.0).unwrap_or(0)
+    }
+
+    /// 99th-percentile latency (ns); 0 on an empty record.
+    pub fn p99_ns(&self) -> u64 {
+        self.percentile_ns(99.0).unwrap_or(0)
+    }
+
+    /// Maximum latency (ns); 0 on an empty record.
+    pub fn max_ns(&self) -> u64 {
+        self.samples_ns.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean latency in integer nanoseconds (truncating); 0 when empty.
+    pub fn mean_ns(&self) -> u64 {
+        if self.samples_ns.is_empty() {
+            return 0;
+        }
+        let sum: u128 = self.samples_ns.iter().map(|&s| s as u128).sum();
+        (sum / self.samples_ns.len() as u128) as u64
+    }
+
+    /// Snapshot the derived summary (the `Eq`-comparable view).
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.len(),
+            p50_ns: self.p50_ns(),
+            p95_ns: self.p95_ns(),
+            p99_ns: self.p99_ns(),
+            max_ns: self.max_ns(),
+            mean_ns: self.mean_ns(),
+        }
+    }
+}
+
+/// Derived latency summary — all integers, so snapshots compare exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Requests the summary covers.
+    pub count: usize,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// Truncating integer mean.
+    pub mean_ns: u64,
+}
+
+/// One frontend stats snapshot: the [`ServeStats`] counters (batches =
+/// coalesced batches cut, samples = rows served, requests = individual
+/// client requests answered, queue_full = backpressure rejections) plus
+/// the latency summary over every answered request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontendStats {
+    pub serve: ServeStats,
+    pub latency: LatencySummary,
+}
+
+impl FrontendStats {
+    /// Mean rows per coalesced batch — the knob `max_batch_rows`/`max_wait`
+    /// tuning moves; 0.0 before the first batch.
+    pub fn mean_batch_rows(&self) -> f64 {
+        if self.serve.batches == 0 {
+            0.0
+        } else {
+            self.serve.samples as f64 / self.serve.batches as f64
+        }
+    }
+
+    /// Row throughput over a caller-measured wall-clock window.
+    pub fn rows_per_sec(&self, elapsed: std::time::Duration) -> f64 {
+        let secs = elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.serve.samples as f64 / secs
+        }
+    }
+
+    /// Request throughput over a caller-measured wall-clock window.
+    pub fn requests_per_sec(&self, elapsed: std::time::Duration) -> f64 {
+        let secs = elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.serve.requests as f64 / secs
+        }
+    }
+}

@@ -18,6 +18,7 @@
 
 pub mod driver;
 pub mod finetune;
+pub mod frontend;
 pub mod prefetch;
 pub mod serve;
 pub mod session;
@@ -25,6 +26,10 @@ pub mod sweep;
 
 pub use driver::{DriverConfig, DriverReport, EarlyStop, EvalPoint, SwitchPolicy, TrainDriver};
 pub use finetune::{FinetuneMode, FinetuneSession, FinetuneStats};
+pub use frontend::{
+    FrontendConfig, FrontendStats, LatencyRecord, LatencySummary, ResponseHandle, ServeFrontend,
+    SubmitError,
+};
 pub use serve::{BatchServer, ServeStats};
 pub use session::{Report, Session};
 pub use sweep::{Sweep, SweepRow};

@@ -34,12 +34,23 @@ use crate::tensor::{accuracy_from_logits, argmax_rows, Tensor};
 pub const SERVE_PAR_MIN_WORK: usize = 1 << 22;
 
 /// Cumulative serving counters (throughput accounting).
+///
+/// `serve` bumps `batches`/`samples` only (one caller, one batch per call);
+/// the online [`frontend`](super::frontend) additionally counts the
+/// individual client `requests` it answered and the `queue_full`
+/// backpressure rejections — failed or rejected calls never touch the
+/// served counters (the failed-call rule).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// Batches served so far.
     pub batches: usize,
-    /// Samples served so far.
+    /// Samples (rows) served so far.
     pub samples: usize,
+    /// Individual client requests answered (frontend only; a direct
+    /// `serve` call is one batch, not a request).
+    pub requests: usize,
+    /// Submissions rejected with `QueueFull` backpressure (frontend only).
+    pub queue_full: usize,
 }
 
 /// A packed-model inference server.
@@ -124,13 +135,23 @@ impl<M: SparseModel> BatchServer<M> {
     /// per-shard input copy), so the output is bit-identical regardless of
     /// the machine's parallelism.
     pub fn serve(&mut self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let out = self.forward(x)?;
+        // stats mutate only after validation: failed calls are not counted
+        self.stats.batches += 1;
+        self.stats.samples += x.as_2d().0;
+        Ok(out)
+    }
+
+    /// The validated packed forward behind [`serve`](Self::serve), without
+    /// the stats mutation — shared-reference safe, so the multi-threaded
+    /// [`frontend`](super::frontend) workers can serve concurrently from
+    /// one server (the frontend keeps its own counters). Identical
+    /// validation, threading, and bit-for-bit output as `serve`.
+    pub fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor> {
         let (rows, dim) = x.as_2d();
         self.model.validate_input(x).map_err(|e| {
             anyhow::anyhow!("serve {e} (batch shape {:?})", x.shape())
         })?;
-        // stats mutate only after validation: failed calls are not counted
-        self.stats.batches += 1;
-        self.stats.samples += rows;
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let work = rows.saturating_mul(self.weight_values);
         if threads < 2 || rows < 2 || work < SERVE_PAR_MIN_WORK {
@@ -194,7 +215,7 @@ mod tests {
             let x = Tensor::randn(&[batch, 12], &mut rng, 0.0, 1.0);
             assert_eq!(mlp.forward(&masked, &x), server.serve(&x).unwrap(), "batch {batch}");
         }
-        assert_eq!(server.stats(), ServeStats { batches: 3, samples: 32 });
+        assert_eq!(server.stats(), ServeStats { batches: 3, samples: 32, ..Default::default() });
         assert!(server.compression() < 1.0);
         assert!(server.stored_bytes() < server.dense_bytes());
     }
@@ -248,7 +269,7 @@ mod tests {
         // and a good batch still serves afterwards
         let ok = Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0);
         assert_eq!(server.serve(&ok).unwrap().shape(), &[4, 3]);
-        assert_eq!(server.stats(), ServeStats { batches: 1, samples: 4 });
+        assert_eq!(server.stats(), ServeStats { batches: 1, samples: 4, ..Default::default() });
     }
 
     #[test]
@@ -261,7 +282,7 @@ mod tests {
         let logits = server.serve(&empty).unwrap();
         assert_eq!(logits.shape(), &[0, 3]);
         assert_eq!(server.classify(&empty).unwrap(), Vec::<usize>::new());
-        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 0 });
+        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 0, ..Default::default() });
     }
 
     #[test]
@@ -307,6 +328,6 @@ mod tests {
             let err = server.serve(&bad).unwrap_err().to_string();
             assert!(err.contains("token id"), "unhelpful error: {err}");
         }
-        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 10 });
+        assert_eq!(server.stats(), ServeStats { batches: 2, samples: 10, ..Default::default() });
     }
 }

@@ -613,6 +613,17 @@ impl<'rt> Session<'rt> {
         super::serve::BatchServer::new(model, self.packed_params())
     }
 
+    /// Build the online [`ServeFrontend`](super::frontend::ServeFrontend)
+    /// from the current weights: [`batch_server`](Self::batch_server) plus
+    /// a dynamic-batching worker pool — the train → pack → serve-traffic
+    /// pipeline in one call.
+    pub fn serve_frontend(
+        &self,
+        cfg: super::frontend::FrontendConfig,
+    ) -> anyhow::Result<super::frontend::ServeFrontend<crate::model::AnyModel>> {
+        super::frontend::ServeFrontend::new(self.batch_server()?, cfg)
+    }
+
     /// Continue training from the **compressed** form: pack the current
     /// weights (per the export ratios, so per-layer N overrides and the
     /// dense-until-switch rule apply) and return a

@@ -83,7 +83,8 @@ pub mod prelude {
     pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
     pub use crate::config::{ExperimentConfig, RecipeKind};
     pub use crate::coordinator::{
-        BatchServer, DriverConfig, FinetuneSession, Report, Session, Sweep, TrainDriver,
+        BatchServer, DriverConfig, FinetuneSession, FrontendConfig, Report, ServeFrontend,
+        Session, Sweep, TrainDriver,
     };
     pub use crate::data::{Dataset, MiniBatchStream, NextTokenTask};
     pub use crate::model::{model_from_info, AnyModel, Mlp, SparseModel, TokenEncoder};

@@ -228,6 +228,97 @@ pub fn fanout() {
 }
 
 // ---------------------------------------------------------------------------
+// the online-serving frontend surfaces (PR 7)
+// ---------------------------------------------------------------------------
+
+/// The frontend worker pool is on the thread-spawn allowlist (batch
+/// composition never changes response bits, so worker scheduling is
+/// output-invisible) — a spawn there is NOT flagged, while the identical
+/// spawn in a non-allowlisted coordinator file still is.
+#[test]
+fn frontend_worker_spawn_is_allowlisted() {
+    let src = "\
+pub fn start_workers() {
+    std::thread::spawn(|| {});
+}
+";
+    let allowed = lint_one("rust/src/coordinator/frontend/mod.rs", src);
+    assert!(allowed.findings.is_empty(), "{:?}", hit_rules(&allowed));
+    // any file under the frontend/ prefix qualifies
+    let allowed = lint_one("rust/src/coordinator/frontend/queue.rs", src);
+    assert!(allowed.findings.is_empty(), "{:?}", hit_rules(&allowed));
+    // the allowlist is a prefix, not a blanket coordinator pass
+    let flagged = lint_one("rust/src/coordinator/driver.rs", src);
+    assert_eq!(hit_rules(&flagged), vec![rules::THREAD_DISCIPLINE]);
+}
+
+/// Every fn in the frontend module is on the panic-freedom serve surface:
+/// a violating fixture (unwrap + direct indexing) is flagged on both
+/// counts, and the same code in a non-serve module is not.
+#[test]
+fn frontend_fns_are_on_the_panic_freedom_surface() {
+    let src = "\
+pub fn route(xs: &[f32], i: usize) -> f32 {
+    let first = xs.first().copied().unwrap();
+    first + xs[i]
+}
+";
+    let rep = lint_one("rust/src/coordinator/frontend/queue.rs", src);
+    let mut rules_hit = hit_rules(&rep);
+    rules_hit.sort_unstable();
+    assert_eq!(rules_hit, vec![rules::PANIC_FREEDOM, rules::PANIC_FREEDOM]);
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("unwrap")),
+        "{:?}",
+        rep.findings
+    );
+    assert!(
+        rep.findings.iter().any(|f| f.message.contains("direct indexing")),
+        "{:?}",
+        rep.findings
+    );
+    // out of scope elsewhere: same code in a non-serve module is clean
+    let clean = lint_one("rust/src/data/fixture.rs", src);
+    assert!(clean.findings.is_empty(), "{:?}", hit_rules(&clean));
+}
+
+/// Panic macros in a frontend worker are flagged — a worker must degrade
+/// to per-request errors, never abort the pool.
+#[test]
+fn frontend_panic_macro_is_flagged() {
+    let src = "\
+pub fn worker_loop() {
+    panic!(\"queue poisoned\");
+}
+";
+    let rep = lint_one("rust/src/coordinator/frontend/mod.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::PANIC_FREEDOM]);
+    assert!(rep.findings[0].message.contains("worker_loop"));
+}
+
+/// `#[cfg(test)]` blocks inside frontend files stay exempt (the queue's
+/// in-module unit tests unwrap freely).
+#[test]
+fn frontend_test_code_is_exempt_from_panic_freedom() {
+    let src = "\
+pub fn cut(xs: &[f32]) -> f32 {
+    xs.first().copied().unwrap_or(0.0)
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn free_to_unwrap() {
+        let v = vec![1.0f32];
+        let first = v.first().copied().unwrap();
+        assert_eq!(first, v[0]);
+    }
+}
+";
+    let rep = lint_one("rust/src/coordinator/frontend/queue.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+// ---------------------------------------------------------------------------
 // rule 5 — test-coverage
 // ---------------------------------------------------------------------------
 

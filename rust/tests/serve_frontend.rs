@@ -1,0 +1,620 @@
+//! Lock-step bit-identity and concurrency tests for the online serving
+//! front-end (`coordinator::frontend`).
+//!
+//! The contract under test: **batch composition never changes response
+//! bits**. Every response a client receives from the dynamically-batching
+//! multi-threaded `ServeFrontend` must be bit-identical to serving that
+//! request alone through the solo `BatchServer::serve` oracle — for both
+//! model families (`Mlp`, `TokenEncoder`), at 2:4 and 1:4, for 1-row
+//! requests, requests larger than the max batch size, and ragged tails,
+//! under any worker/client interleaving.
+//!
+//! Liveness is tested too: saturation returns `QueueFull` without touching
+//! the served counters (the failed-call rule), and shutdown/drop mid-queue
+//! joins every worker and answers or cancels every in-flight request. All
+//! potentially-hanging tests run under a watchdog timeout so a deadlock
+//! fails instead of wedging the suite.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use step_nm::coordinator::frontend::{
+    FrontendConfig, LatencyRecord, ServeFrontend, SubmitError,
+};
+use step_nm::coordinator::{BatchServer, ServeStats};
+use step_nm::model::{Mlp, SparseModel, TokenEncoder};
+use step_nm::optim::AdamHp;
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::NmRatio;
+use step_nm::tensor::Tensor;
+
+/// Run `f` on a helper thread and fail the test if it has not finished
+/// within `secs` — a deadlocked frontend (lost notify, un-joined worker)
+/// becomes a clean assertion failure instead of a wedged suite.
+fn with_timeout<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => {
+            if let Err(p) = t.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // the body panicked before signalling: propagate its panic
+            if let Err(p) = t.join() {
+                std::panic::resume_unwind(p);
+            }
+            panic!("test body exited without signalling completion");
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded the {secs}s watchdog (frontend hang?)")
+        }
+    }
+}
+
+/// A frontend config that makes flushing fully script-controlled: nothing
+/// is ever due by size or deadline, so batches are cut exactly when the
+/// test calls `flush()` (or shuts down) — deterministic flush order.
+fn manual_cfg(workers: usize) -> FrontendConfig {
+    FrontendConfig {
+        max_batch_rows: usize::MAX,
+        max_wait: Duration::from_secs(3600),
+        queue_cap: 4096,
+        workers,
+    }
+}
+
+fn mlp_fixture(seed: u64, ratio: NmRatio) -> (Mlp, Vec<Tensor>, BatchServer<Mlp>) {
+    let mlp = Mlp::new(12, &[16, 12], 4);
+    let mut rng = Pcg64::new(seed);
+    let params = mlp.init(&mut rng);
+    let oracle = BatchServer::pack(mlp.clone(), &params, ratio).unwrap();
+    (mlp, params, oracle)
+}
+
+fn encoder_fixture(
+    seed: u64,
+    ratio: NmRatio,
+) -> (TokenEncoder, Vec<Tensor>, BatchServer<TokenEncoder>) {
+    let enc = TokenEncoder::classifier(17, 8, 2, 12, 1, 6, 3);
+    let mut rng = Pcg64::new(seed);
+    let params = SparseModel::init(&enc, &mut rng);
+    let oracle = BatchServer::pack(enc.clone(), &params, ratio).unwrap();
+    (enc, params, oracle)
+}
+
+/// Token-id request `[rows, seq]` with valid ids.
+fn token_request(rng: &mut Pcg64, rows: usize, seq: usize, vocab: usize) -> Tensor {
+    let ids: Vec<f32> = (0..rows * seq).map(|_| rng.below(vocab) as f32).collect();
+    Tensor::new(&[rows, seq], ids)
+}
+
+// ---------------------------------------------------------------------------
+// lock-step bit-identity vs the solo-serve oracle
+// ---------------------------------------------------------------------------
+
+/// Scripted clients through a single worker, flush order forced by the
+/// test: every coalesced response is bit-equal to the solo oracle. Mixed
+/// request sizes include 1-row requests and a ragged tail.
+#[test]
+fn lockstep_mlp_responses_bit_equal_solo_oracle() {
+    for ratio in [NmRatio::new(2, 4), NmRatio::new(1, 4)] {
+        with_timeout(60, move || {
+            let (mlp, params, mut oracle) = mlp_fixture(31, ratio);
+            let mut rng = Pcg64::new(32);
+            // N scripted clients' requests, submitted in one deterministic
+            // order: sizes mix 1-row, mid, and a ragged tail
+            let script: Vec<Tensor> = [1usize, 3, 1, 5, 2, 7, 1, 4]
+                .iter()
+                .map(|&rows| Tensor::randn(&[rows, 12], &mut rng, 0.0, 1.0))
+                .collect();
+            let want: Vec<Tensor> = script.iter().map(|x| oracle.serve(x).unwrap()).collect();
+
+            let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+            let mut fe = ServeFrontend::new(server, manual_cfg(1)).unwrap();
+            let handles: Vec<_> =
+                script.iter().map(|x| fe.submit(x).unwrap()).collect();
+            assert_eq!(fe.queued(), script.len(), "nothing due before flush");
+            fe.flush();
+            for (h, w) in handles.into_iter().zip(&want) {
+                let got = h.wait_timeout(Duration::from_secs(30)).unwrap();
+                assert_eq!(&got, w, "coalesced response != solo oracle ({ratio:?})");
+            }
+            let stats = fe.shutdown();
+            assert_eq!(stats.serve.requests, script.len());
+            assert_eq!(
+                stats.serve.samples,
+                script.iter().map(|x| x.shape()[0]).sum::<usize>()
+            );
+            // one flush, one dim, single worker → exactly one coalesced batch
+            assert_eq!(stats.serve.batches, 1);
+            assert_eq!(stats.latency.count, script.len());
+        });
+    }
+}
+
+/// Token-encoder requests of **different sequence lengths** (ragged) must
+/// not share a batch (padding would change bits); same-length requests
+/// coalesce. Every response stays bit-equal to the solo oracle at 2:4 and
+/// 1:4.
+#[test]
+fn lockstep_encoder_ragged_seqs_bit_equal_solo_oracle() {
+    for ratio in [NmRatio::new(2, 4), NmRatio::new(1, 4)] {
+        with_timeout(60, move || {
+            let (enc, params, mut oracle) = encoder_fixture(41, ratio);
+            let mut rng = Pcg64::new(42);
+            // ragged: seq lengths 3/6/4 interleaved, incl. 1-row requests
+            let script: Vec<Tensor> = [(2usize, 3usize), (1, 6), (3, 3), (1, 4), (2, 6), (1, 3)]
+                .iter()
+                .map(|&(rows, seq)| token_request(&mut rng, rows, seq, 17))
+                .collect();
+            let want: Vec<Tensor> = script.iter().map(|x| oracle.serve(x).unwrap()).collect();
+
+            let server = BatchServer::pack(enc, &params, ratio).unwrap();
+            let mut fe = ServeFrontend::new(server, manual_cfg(1)).unwrap();
+            let handles: Vec<_> =
+                script.iter().map(|x| fe.submit(x).unwrap()).collect();
+            fe.flush();
+            for (h, w) in handles.into_iter().zip(&want) {
+                let got = h.wait_timeout(Duration::from_secs(30)).unwrap();
+                assert_eq!(&got, w, "ragged response != solo oracle ({ratio:?})");
+            }
+            let stats = fe.shutdown();
+            assert_eq!(stats.serve.requests, 6);
+            // FIFO dim-grouping over seqs [3,6,3,4,6,3] cuts at every dim
+            // change: 3 | 6 | 3 | 4 | 6 | 3 → 6 batches
+            assert_eq!(stats.serve.batches, 6);
+        });
+    }
+}
+
+/// A request larger than `max_batch_rows` is served whole as its own batch
+/// (never split), and smaller neighbours still coalesce around it.
+#[test]
+fn oversized_request_served_whole_and_bit_equal() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(51, ratio);
+        let mut rng = Pcg64::new(52);
+        let script: Vec<Tensor> = [2usize, 9, 2]
+            .iter()
+            .map(|&rows| Tensor::randn(&[rows, 12], &mut rng, 0.0, 1.0))
+            .collect();
+        let want: Vec<Tensor> = script.iter().map(|x| oracle.serve(x).unwrap()).collect();
+
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(
+            server,
+            FrontendConfig { max_batch_rows: 4, ..manual_cfg(1) },
+        )
+        .unwrap();
+        let handles: Vec<_> = script.iter().map(|x| fe.submit(x).unwrap()).collect();
+        fe.flush();
+        for (h, w) in handles.into_iter().zip(&want) {
+            let got = h.wait_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(&got, w, "oversized-request response != solo oracle");
+        }
+        let stats = fe.shutdown();
+        // cut 1: [2] (adding 9 would exceed 4); cut 2: [9] alone
+        // (oversized, taken unconditionally); cut 3: [2]
+        assert_eq!(stats.serve.batches, 3);
+        assert_eq!(stats.serve.samples, 13);
+    });
+}
+
+/// Deadline-driven flushing (no manual flush): with a tiny `max_wait`
+/// responses still arrive, still bit-equal.
+#[test]
+fn deadline_flush_serves_without_manual_flush() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(61, ratio);
+        let mut rng = Pcg64::new(62);
+        let cfg = FrontendConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 128,
+            workers: 2,
+        };
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(server, cfg).unwrap();
+        for _ in 0..10 {
+            let x = Tensor::randn(&[3, 12], &mut rng, 0.0, 1.0);
+            let want = oracle.serve(&x).unwrap();
+            let got = fe
+                .submit(&x)
+                .unwrap()
+                .wait_timeout(Duration::from_secs(30))
+                .unwrap();
+            assert_eq!(got, want, "deadline-flushed response != solo oracle");
+        }
+        let stats = fe.shutdown();
+        assert_eq!(stats.serve.requests, 10);
+        assert_eq!(stats.serve.samples, 30);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// backpressure + rejection semantics
+// ---------------------------------------------------------------------------
+
+/// Saturating the bounded queue returns `QueueFull` and bumps only the
+/// `queue_full` counter — the served counters never move on a failed call
+/// (the PR-3 rule), and the queued requests still drain correctly after.
+#[test]
+fn queue_full_backpressure_without_counting() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(71, ratio);
+        let mut rng = Pcg64::new(72);
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(
+            server,
+            FrontendConfig { queue_cap: 2, ..manual_cfg(1) },
+        )
+        .unwrap();
+
+        let a = Tensor::randn(&[1, 12], &mut rng, 0.0, 1.0);
+        let b = Tensor::randn(&[2, 12], &mut rng, 0.0, 1.0);
+        let c = Tensor::randn(&[1, 12], &mut rng, 0.0, 1.0);
+        let (wa, wb) = (oracle.serve(&a).unwrap(), oracle.serve(&b).unwrap());
+        let ha = fe.submit(&a).unwrap();
+        let hb = fe.submit(&b).unwrap();
+        // cap reached: nothing is due (manual cfg), so the third submit
+        // must be rejected immediately, not block
+        match fe.submit(&c) {
+            Err(SubmitError::QueueFull { pending, cap }) => {
+                assert_eq!((pending, cap), (2, 2));
+            }
+            other => panic!("expected QueueFull, got {:?}", other.err()),
+        }
+        let snap = fe.stats();
+        assert_eq!(snap.serve.queue_full, 1, "rejection is counted as such");
+        assert_eq!(
+            (snap.serve.batches, snap.serve.samples, snap.serve.requests),
+            (0, 0, 0),
+            "failed submit must not bump served counters"
+        );
+
+        fe.flush();
+        assert_eq!(ha.wait_timeout(Duration::from_secs(30)).unwrap(), wa);
+        assert_eq!(hb.wait_timeout(Duration::from_secs(30)).unwrap(), wb);
+        let stats = fe.shutdown();
+        assert_eq!(stats.serve.requests, 2);
+        assert_eq!(stats.serve.queue_full, 1);
+        // the typed error also renders usefully
+        let msg = SubmitError::QueueFull { pending: 2, cap: 2 }.to_string();
+        assert!(msg.contains("queue full"), "unhelpful error: {msg}");
+    });
+}
+
+/// Malformed requests are rejected at submit — before admission, before
+/// any counter moves — for both model families.
+#[test]
+fn invalid_requests_rejected_without_counting() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, _oracle) = mlp_fixture(81, ratio);
+        let mut rng = Pcg64::new(82);
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(server, manual_cfg(1)).unwrap();
+        // wrong trailing dim
+        let bad_dim = Tensor::randn(&[2, 5], &mut rng, 0.0, 1.0);
+        assert!(matches!(fe.submit(&bad_dim), Err(SubmitError::Rejected(_))));
+        // not 2-D
+        let bad_rank = Tensor::zeros(&[2, 3, 4]);
+        assert!(matches!(fe.submit(&bad_rank), Err(SubmitError::Rejected(_))));
+        assert_eq!(fe.stats().serve, ServeStats::default(), "rejections counted");
+        assert_eq!(fe.queued(), 0, "rejected requests never admitted");
+        fe.shutdown();
+
+        // token models reject malformed ids (out-of-vocab, fractional, NaN)
+        let (enc, params, _oracle) = encoder_fixture(83, ratio);
+        let server = BatchServer::pack(enc, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(server, manual_cfg(1)).unwrap();
+        for bad_id in [99.0f32, 1.5, f32::NAN] {
+            let mut bad = Tensor::zeros(&[2, 4]);
+            bad.data_mut()[3] = bad_id;
+            match fe.submit(&bad) {
+                Err(SubmitError::Rejected(e)) => {
+                    let msg = e.to_string();
+                    assert!(msg.contains("token id"), "unhelpful error: {msg}");
+                }
+                other => panic!("expected Rejected, got {:?}", other.err()),
+            }
+        }
+        assert_eq!(fe.stats().serve, ServeStats::default());
+        fe.shutdown();
+    });
+}
+
+/// Config validation: a zero-worker or zero-capacity frontend is an error,
+/// not a silent hang.
+#[test]
+fn config_validation() {
+    let ratio = NmRatio::new(2, 4);
+    let (mlp, params, _oracle) = mlp_fixture(91, ratio);
+    for cfg in [
+        FrontendConfig { workers: 0, ..FrontendConfig::default() },
+        FrontendConfig { queue_cap: 0, ..FrontendConfig::default() },
+        FrontendConfig { max_batch_rows: 0, ..FrontendConfig::default() },
+    ] {
+        let server = BatchServer::pack(mlp.clone(), &params, ratio).unwrap();
+        assert!(ServeFrontend::new(server, cfg).is_err(), "bad cfg accepted: {cfg:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shutdown / drop lifecycle
+// ---------------------------------------------------------------------------
+
+/// Graceful shutdown mid-queue drains: every admitted request is answered
+/// (bit-equal), all workers join, and later submits get `ShutDown`.
+#[test]
+fn shutdown_mid_queue_answers_everything() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(101, ratio);
+        let mut rng = Pcg64::new(102);
+        let script: Vec<Tensor> = (0..6)
+            .map(|i| Tensor::randn(&[1 + (i % 3), 12], &mut rng, 0.0, 1.0))
+            .collect();
+        let want: Vec<Tensor> = script.iter().map(|x| oracle.serve(x).unwrap()).collect();
+
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let mut fe = ServeFrontend::new(server, manual_cfg(2)).unwrap();
+        let handles: Vec<_> = script.iter().map(|x| fe.submit(x).unwrap()).collect();
+        // no flush: the queue is still full when shutdown starts draining
+        let stats = fe.shutdown();
+        assert_eq!(stats.serve.requests, script.len(), "drain must answer everything");
+        for (h, w) in handles.into_iter().zip(&want) {
+            let got = h.wait_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(&got, w, "drained response != solo oracle");
+        }
+        // post-shutdown submits are refused with the typed error
+        let x = Tensor::randn(&[1, 12], &mut rng, 0.0, 1.0);
+        assert!(matches!(fe.submit(&x), Err(SubmitError::ShutDown)));
+        // idempotent
+        let again = fe.shutdown();
+        assert_eq!(again.serve, stats.serve);
+    });
+}
+
+/// Dropping the frontend mid-queue joins all workers cleanly and resolves
+/// every in-flight request — answered (bit-equal) or canceled with an
+/// error, never a hang.
+#[test]
+fn drop_mid_queue_cancels_or_answers_everything() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(111, ratio);
+        let mut rng = Pcg64::new(112);
+        let script: Vec<Tensor> = (0..5)
+            .map(|_| Tensor::randn(&[2, 12], &mut rng, 0.0, 1.0))
+            .collect();
+        let want: Vec<Tensor> = script.iter().map(|x| oracle.serve(x).unwrap()).collect();
+
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let fe = ServeFrontend::new(server, manual_cfg(2)).unwrap();
+        let handles: Vec<_> = script.iter().map(|x| fe.submit(x).unwrap()).collect();
+        drop(fe); // cancel path: joins workers, drops pending senders
+        for (h, w) in handles.into_iter().zip(&want) {
+            // each request resolves promptly either way
+            match h.wait_timeout(Duration::from_secs(30)) {
+                Ok(got) => assert_eq!(&got, w, "late-served response != solo oracle"),
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(msg.contains("canceled"), "unhelpful cancel error: {msg}");
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// seeded multi-client soak
+// ---------------------------------------------------------------------------
+
+/// Many concurrent clients with seeded scripts and mixed request sizes:
+/// whatever the interleaving, the union of responses matches the solo
+/// oracle bit-for-bit, every request is answered exactly once, and the
+/// counters add up.
+#[test]
+fn soak_concurrent_clients_union_matches_oracle() {
+    with_timeout(120, || {
+        let ratio = NmRatio::new(2, 4);
+        let (mlp, params, mut oracle) = mlp_fixture(121, ratio);
+        const CLIENTS: usize = 4;
+        const REQS: usize = 12;
+        // pre-generate every client's script and its oracle responses
+        let mut scripts: Vec<Vec<(Tensor, Tensor)>> = Vec::new();
+        for c in 0..CLIENTS {
+            let mut rng = Pcg64::new(1000 + c as u64);
+            let mut script = Vec::new();
+            for _ in 0..REQS {
+                let rows = 1 + rng.below(6);
+                let x = Tensor::randn(&[rows, 12], &mut rng, 0.0, 1.0);
+                let want = oracle.serve(&x).unwrap();
+                script.push((x, want));
+            }
+            scripts.push(script);
+        }
+
+        let server = BatchServer::pack(mlp, &params, ratio).unwrap();
+        let cfg = FrontendConfig {
+            max_batch_rows: 8,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 16, // small enough that backpressure can fire
+            workers: 3,
+        };
+        let fe = Arc::new(ServeFrontend::new(server, cfg).unwrap());
+        let mut clients = Vec::new();
+        for script in scripts {
+            let fe = Arc::clone(&fe);
+            clients.push(std::thread::spawn(move || {
+                for (x, want) in &script {
+                    // closed loop with bounded backpressure retries
+                    let handle = loop {
+                        match fe.submit(x) {
+                            Ok(h) => break h,
+                            Err(SubmitError::QueueFull { .. }) => {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    };
+                    let got = handle.wait_timeout(Duration::from_secs(30)).unwrap();
+                    assert_eq!(&got, want, "soak response != solo oracle");
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        let mut fe = match Arc::try_unwrap(fe) {
+            Ok(fe) => fe,
+            Err(_) => panic!("clients still hold the frontend"),
+        };
+        let stats = fe.shutdown();
+        assert_eq!(stats.serve.requests, CLIENTS * REQS, "every request answered once");
+        assert_eq!(stats.latency.count, CLIENTS * REQS);
+        assert!(stats.serve.batches <= stats.serve.requests);
+        assert!(stats.serve.samples >= stats.serve.requests); // >= 1 row each
+        assert!(stats.latency.p50_ns <= stats.latency.p95_ns);
+        assert!(stats.latency.p95_ns <= stats.latency.p99_ns);
+        assert!(stats.latency.p99_ns <= stats.latency.max_ns);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// percentile rule (the BENCH_serving.json determinism contract)
+// ---------------------------------------------------------------------------
+
+/// Hand-computed percentiles pin the exact interpolation rule:
+/// sort ascending, take index `round(p/100 × (n−1))` (nearest-rank,
+/// half-away-from-zero). Any change to this rule changes
+/// `BENCH_serving.json` and must show up here.
+#[test]
+fn percentile_hand_computed_values() {
+    // n = 4, sorted [10, 20, 30, 40]
+    let mut r = LatencyRecord::new();
+    for ns in [40u64, 10, 30, 20] {
+        r.push(ns);
+    }
+    assert_eq!(r.percentile_ns(0.0), Some(10)); //  round(0.00·3) = 0
+    assert_eq!(r.percentile_ns(50.0), Some(30)); // round(1.5)    = 2
+    assert_eq!(r.percentile_ns(95.0), Some(40)); // round(2.85)   = 3
+    assert_eq!(r.percentile_ns(99.0), Some(40)); // round(2.97)   = 3
+    assert_eq!(r.percentile_ns(100.0), Some(40));
+
+    // n = 10, sorted 100..=1000 step 100
+    let mut r = LatencyRecord::new();
+    for ns in [500u64, 900, 100, 1000, 300, 700, 200, 800, 400, 600] {
+        r.push(ns);
+    }
+    assert_eq!(r.percentile_ns(50.0), Some(600)); // round(4.5)  = 5
+    assert_eq!(r.percentile_ns(95.0), Some(1000)); // round(8.55) = 9
+    assert_eq!(r.percentile_ns(99.0), Some(1000)); // round(8.91) = 9
+    assert_eq!(r.percentile_ns(10.0), Some(200)); // round(0.9)  = 1
+    assert_eq!(r.p50_ns(), 600);
+    assert_eq!(r.mean_ns(), 550);
+    assert_eq!(r.max_ns(), 1000);
+
+    // n = 5, duplicates: sorted [1, 1, 2, 3, 5]
+    let mut r = LatencyRecord::new();
+    for ns in [5u64, 1, 3, 1, 2] {
+        r.push(ns);
+    }
+    assert_eq!(r.percentile_ns(25.0), Some(1)); // round(1.0) = 1
+    assert_eq!(r.percentile_ns(50.0), Some(2)); // round(2.0) = 2
+    assert_eq!(r.percentile_ns(75.0), Some(3)); // round(3.0) = 3
+}
+
+/// Edge cases: empty (None / zero summary), a single sample (every
+/// percentile is it), all-equal samples, out-of-range p.
+#[test]
+fn percentile_edge_cases() {
+    let empty = LatencyRecord::new();
+    assert!(empty.is_empty());
+    assert_eq!(empty.percentile_ns(50.0), None);
+    assert_eq!(empty.p50_ns(), 0);
+    assert_eq!(empty.mean_ns(), 0);
+    assert_eq!(empty.max_ns(), 0);
+    let s = empty.summary();
+    assert_eq!((s.count, s.p50_ns, s.p95_ns, s.p99_ns, s.max_ns, s.mean_ns), (0, 0, 0, 0, 0, 0));
+
+    let mut single = LatencyRecord::new();
+    single.push(42);
+    for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+        assert_eq!(single.percentile_ns(p), Some(42), "p{p}");
+    }
+    assert_eq!(single.mean_ns(), 42);
+
+    let mut equal = LatencyRecord::new();
+    for _ in 0..7 {
+        equal.push(9);
+    }
+    for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+        assert_eq!(equal.percentile_ns(p), Some(9), "p{p}");
+    }
+    assert_eq!(equal.summary().mean_ns, 9);
+
+    let mut r = LatencyRecord::new();
+    r.push(1);
+    assert_eq!(r.percentile_ns(-1.0), None);
+    assert_eq!(r.percentile_ns(100.1), None);
+    assert_eq!(r.percentile_ns(f64::NAN), None);
+}
+
+/// The summary is `Eq`: identical recorded sequences give identical
+/// summaries (the determinism the bench output relies on).
+#[test]
+fn summary_is_deterministic_given_samples() {
+    let seq = [7u64, 3, 9, 3, 12, 5, 8, 1];
+    let mut a = LatencyRecord::new();
+    let mut b = LatencyRecord::new();
+    for &ns in &seq {
+        a.push(ns);
+        b.push(ns);
+    }
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.samples_ns(), &seq);
+}
+
+// ---------------------------------------------------------------------------
+// pipeline wiring
+// ---------------------------------------------------------------------------
+
+/// Fine-tune → frontend handoff (`into_frontend`): the packed weights are
+/// moved, never re-densified, and the frontend serves bit-equal to the
+/// session's own packed forward.
+#[test]
+fn finetune_into_frontend_serves_bit_equal() {
+    with_timeout(60, || {
+        let ratio = NmRatio::new(2, 4);
+        let mlp = Mlp::new(12, &[16], 4);
+        let mut rng = Pcg64::new(131);
+        let params = mlp.init(&mut rng);
+        let ft = step_nm::coordinator::FinetuneSession::pack(
+            mlp.clone(),
+            &params,
+            ratio,
+            1e-3,
+            AdamHp::default(),
+        )
+        .unwrap();
+        let mut oracle = BatchServer::new(mlp, ft.params().to_vec()).unwrap();
+        let x = Tensor::randn(&[5, 12], &mut rng, 0.0, 1.0);
+        let want = oracle.serve(&x).unwrap();
+        let mut fe = ft.into_frontend(manual_cfg(1)).unwrap();
+        let h = fe.submit(&x).unwrap();
+        fe.flush();
+        assert_eq!(h.wait_timeout(Duration::from_secs(30)).unwrap(), want);
+        fe.shutdown();
+    });
+}
