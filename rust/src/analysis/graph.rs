@@ -1,0 +1,350 @@
+//! The crate-wide call graph `nm-lint` v2 propagates contracts over.
+//!
+//! Built purely from the lexer's token stream — no type information — so
+//! resolution is a deliberate **may-call overapproximation**:
+//!
+//! * a plain call `name(…)` resolves to every free function `name` in the
+//!   scanned tree;
+//! * a path call `Seg::name(…)` resolves to the `name` items of every
+//!   `impl Seg` / `trait Seg` block (falling back to free functions for
+//!   module paths like `json::write`); `Self::name(…)` resolves within the
+//!   enclosing impl block;
+//! * a method call `.name(…)` resolves to **every** inherent or trait
+//!   method called `name` anywhere in the tree (trait-method
+//!   conservatism: without types, any impl could be the receiver);
+//! * names with no definition in the tree (std, vendored deps) resolve to
+//!   nothing — the analysis trusts std not to violate the repo contracts.
+//!
+//! `#[cfg(test)]` / `#[test]` functions are excluded from the graph in
+//! both roles: they are neither callers (tests may unwrap freely) nor
+//! callees (a test fn shadowing a production name must not create edges).
+
+use super::lexer::{self, FnSpan, Suppression, Tok, TokKind};
+use std::collections::BTreeMap;
+
+/// One lexed source file, shared by the per-file rules and the graph.
+#[derive(Debug)]
+pub struct LexedFile {
+    /// Repo-relative `/`-separated path.
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnSpan>,
+    /// Token ranges of `#[cfg(test)]` / `#[test]` code.
+    pub tests: Vec<(usize, usize)>,
+    pub suppressions: Vec<Suppression>,
+    pub bad_suppressions: Vec<(u32, String)>,
+    /// Source lines (1-based access via `line - 1`), for snippets.
+    pub lines: Vec<String>,
+}
+
+impl LexedFile {
+    pub fn lex(path: &str, text: &str) -> Self {
+        let lexed = lexer::lex(text);
+        let fns = lexer::fn_spans(&lexed.toks);
+        let tests = lexer::test_spans(&lexed.toks);
+        Self {
+            path: path.to_string(),
+            toks: lexed.toks,
+            fns,
+            tests,
+            suppressions: lexed.suppressions,
+            bad_suppressions: lexed.bad_suppressions,
+            lines: text.lines().map(|l| l.to_string()).collect(),
+        }
+    }
+
+    pub fn in_test(&self, idx: usize) -> bool {
+        self.tests.iter().any(|&(a, b)| idx >= a && idx <= b)
+    }
+
+    /// Is a finding of `rule` on `line` silenced by an inline directive?
+    /// (A directive covers its own line and the next.)
+    pub fn is_suppressed(&self, rule: &str, line: u32) -> bool {
+        self.suppressions
+            .iter()
+            .any(|s| s.rule == rule && (s.line == line || s.line + 1 == line))
+    }
+}
+
+/// One function node: where it lives and what owns it.
+#[derive(Debug)]
+pub struct FnNode {
+    /// Index into the graph's file list.
+    pub file: usize,
+    /// Index into that file's `fns`.
+    pub span: usize,
+    pub name: String,
+    /// `impl`/`trait` block type name for methods; `None` for free fns.
+    pub owner: Option<String>,
+    pub is_test: bool,
+    pub line: u32,
+}
+
+/// One call expression inside a function body.
+#[derive(Debug)]
+pub struct CallSite {
+    /// Token index of the callee name, in the caller's file.
+    pub tok: usize,
+    pub line: u32,
+    /// Textual callee name (for diagnostics).
+    pub name: String,
+    /// Resolved may-call targets (graph fn indices). Empty for std/extern.
+    pub targets: Vec<usize>,
+}
+
+/// The crate call graph: nodes, forward edges, and reverse edges.
+#[derive(Debug, Default)]
+pub struct CrateGraph {
+    pub fns: Vec<FnNode>,
+    /// `calls[f]` — call sites inside fn `f` (test fns have none).
+    pub calls: Vec<Vec<CallSite>>,
+    /// `callers[f]` — `(caller fn, index into calls[caller])` pairs.
+    pub callers: Vec<Vec<(usize, usize)>>,
+}
+
+/// Keywords that look like `ident (` but are not calls.
+const NON_CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "move", "fn", "else", "unsafe",
+    "let", "ref", "mut", "box", "dyn", "impl", "where", "use", "pub", "crate", "super", "self",
+    "Self", "async", "await", "break", "continue", "static", "const", "type", "enum", "struct",
+    "trait", "mod", "extern", "union",
+];
+
+/// `(owner name, token range)` for every `impl …` / `trait …` block.
+fn block_owners(toks: &[Tok]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        let is_impl = t.is_ident("impl");
+        let is_trait = t.is_ident("trait");
+        if !is_impl && !is_trait {
+            i += 1;
+            continue;
+        }
+        // `impl Trait for Type` / `impl<T> Type<T>` / `trait Name: Super`
+        let mut owner: Option<String> = None;
+        let mut angle = 0i32;
+        let mut k = i + 1;
+        let mut open = usize::MAX;
+        while k < toks.len() {
+            let tk = &toks[k];
+            if tk.kind == TokKind::Punct {
+                match tk.text.as_str() {
+                    "<" => angle += 1,
+                    ">" => angle = (angle - 1).max(0),
+                    "{" if angle == 0 => {
+                        open = k;
+                        break;
+                    }
+                    ";" if angle == 0 => break, // `trait Foo;`-like, no body
+                    // supertrait bounds (`trait Foo: Bar`) would otherwise
+                    // overwrite the owner with the bound's name
+                    ":" if angle == 0 && is_trait => {
+                        k = skip_to_body(toks, k);
+                        continue;
+                    }
+                    _ => {}
+                }
+            } else if tk.kind == TokKind::Ident && angle == 0 {
+                match tk.text.as_str() {
+                    // the impl subject is the type after `for`, if present
+                    "for" => owner = None,
+                    "where" => {
+                        k = skip_to_body(toks, k);
+                        continue;
+                    }
+                    "dyn" | "mut" | "const" | "unsafe" => {}
+                    _ => owner = Some(tk.text.clone()),
+                }
+            }
+            k += 1;
+        }
+        if open != usize::MAX {
+            if let Some(name) = owner {
+                out.push((name, open, lexer::match_brace(toks, open)));
+            }
+            i = open + 1;
+        } else {
+            i = k.max(i + 1);
+        }
+    }
+    out
+}
+
+/// Advance from a `where`/supertrait position to the body-opening `{`.
+fn skip_to_body(toks: &[Tok], mut k: usize) -> usize {
+    let mut angle = 0i32;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "<" if toks[k].kind == TokKind::Punct => angle += 1,
+            ">" if toks[k].kind == TokKind::Punct => angle = (angle - 1).max(0),
+            "{" if angle == 0 => return k,
+            ";" if angle == 0 => return k,
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// What shape of call expression a site is.
+enum CallForm {
+    Plain,
+    Method,
+    /// `Seg::name(…)` with the segment before the `::`.
+    Path(String),
+}
+
+impl CrateGraph {
+    /// Build the graph over every scanned file.
+    pub fn build(files: &[LexedFile]) -> Self {
+        let mut g = CrateGraph::default();
+
+        // pass 1: nodes + resolution maps
+        let mut owners_by_file: Vec<Vec<(String, usize, usize)>> = Vec::new();
+        for (fi, file) in files.iter().enumerate() {
+            let owners = block_owners(&file.toks);
+            for (si, f) in file.fns.iter().enumerate() {
+                let owner = owners
+                    .iter()
+                    .filter(|(_, a, b)| f.kw_idx > *a && f.kw_idx < *b)
+                    .min_by_key(|(_, a, b)| b - a)
+                    .map(|(n, _, _)| n.clone());
+                g.fns.push(FnNode {
+                    file: fi,
+                    span: si,
+                    name: f.name.clone(),
+                    owner,
+                    is_test: file.in_test(f.kw_idx),
+                    line: f.line,
+                });
+            }
+            owners_by_file.push(owners);
+        }
+        let mut free: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut owned: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+        for (idx, n) in g.fns.iter().enumerate() {
+            if n.is_test {
+                continue;
+            }
+            match &n.owner {
+                None => free.entry(n.name.clone()).or_default().push(idx),
+                Some(o) => {
+                    methods.entry(n.name.clone()).or_default().push(idx);
+                    owned.entry((o.clone(), n.name.clone())).or_default().push(idx);
+                }
+            }
+        }
+
+        // pass 2: call extraction + resolution
+        g.calls = vec![Vec::new(); g.fns.len()];
+        for (idx, n) in g.fns.iter().enumerate() {
+            if n.is_test {
+                continue;
+            }
+            let file = &files[n.file];
+            let f = &file.fns[n.span];
+            if f.body_start == usize::MAX {
+                continue;
+            }
+            let body_end = f.body_end.min(file.toks.len().saturating_sub(1));
+            // nested fn items get their own node — exclude their bodies so
+            // their calls are not double-attributed to the enclosing fn
+            let inner: Vec<(usize, usize)> = file
+                .fns
+                .iter()
+                .filter(|o| o.kw_idx > f.body_start && o.kw_idx < body_end)
+                .filter(|o| o.body_start != usize::MAX)
+                .map(|o| (o.body_start, o.body_end))
+                .collect();
+            let mut k = f.body_start + 1;
+            while k < body_end {
+                if let Some(&(_, ie)) = inner.iter().find(|&&(a, b)| k >= a && k <= b) {
+                    k = ie + 1;
+                    continue;
+                }
+                let t = &file.toks[k];
+                let is_call = t.kind == TokKind::Ident
+                    && !NON_CALL_KEYWORDS.contains(&t.text.as_str())
+                    && file.toks.get(k + 1).is_some_and(|n| n.is_punct("("))
+                    && !file.toks[k - 1].is_ident("fn");
+                if !is_call {
+                    k += 1;
+                    continue;
+                }
+                let form = if file.toks[k - 1].is_punct(".") {
+                    CallForm::Method
+                } else if file.toks[k - 1].is_punct("::") {
+                    match file.toks.get(k.wrapping_sub(2)) {
+                        Some(seg) if seg.kind == TokKind::Ident => {
+                            CallForm::Path(seg.text.clone())
+                        }
+                        _ => CallForm::Plain, // turbofish etc. — fall back
+                    }
+                } else {
+                    CallForm::Plain
+                };
+                let targets: Vec<usize> = match &form {
+                    CallForm::Plain => {
+                        free.get(t.text.as_str()).cloned().unwrap_or_default()
+                    }
+                    CallForm::Method => {
+                        methods.get(t.text.as_str()).cloned().unwrap_or_default()
+                    }
+                    CallForm::Path(seg) => {
+                        let seg = if seg == "Self" {
+                            n.owner.as_deref().unwrap_or(seg.as_str())
+                        } else {
+                            seg.as_str()
+                        };
+                        match owned.get(&(seg.to_string(), t.text.clone())) {
+                            Some(v) => v.clone(),
+                            // module path (`json::write`) → free fns
+                            None => free.get(t.text.as_str()).cloned().unwrap_or_default(),
+                        }
+                    }
+                };
+                g.calls[idx].push(CallSite {
+                    tok: k,
+                    line: t.line,
+                    name: t.text.clone(),
+                    targets,
+                });
+                k += 2; // skip past the `(`
+            }
+        }
+
+        // reverse edges
+        g.callers = vec![Vec::new(); g.fns.len()];
+        for (caller, sites) in g.calls.iter().enumerate() {
+            for (si, site) in sites.iter().enumerate() {
+                for &t in &site.targets {
+                    g.callers[t].push((caller, si));
+                }
+            }
+        }
+        g
+    }
+
+    /// All graph indices of functions named `name` (diagnostics/tests).
+    pub fn find_fns(&self, name: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.name == name)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Does `caller` have a resolved edge to `callee`?
+    pub fn has_edge(&self, caller: usize, callee: usize) -> bool {
+        self.calls[caller].iter().any(|s| s.targets.contains(&callee))
+    }
+
+    /// The `FnSpan` backing a node.
+    pub fn span_of<'a>(&self, files: &'a [LexedFile], idx: usize) -> &'a FnSpan {
+        &files[self.fns[idx].file].fns[self.fns[idx].span]
+    }
+}

@@ -121,6 +121,22 @@ pub fn lex(src: &str) -> LexOut {
                 line += nl;
                 out.toks.push(Tok { kind: TokKind::Str, text: txt, line });
             }
+            // raw identifier `r#ident` — kept with its `r#` prefix so a
+            // `r#fn` never masquerades as the `fn` keyword downstream
+            b'r' if b.get(i + 1) == Some(&b'#')
+                && b.get(i + 2).is_some_and(|c| *c == b'_' || c.is_ascii_alphabetic()) =>
+            {
+                let start = i;
+                i += 2;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
             b'\'' => {
                 // lifetime vs char literal
                 if is_char_literal(b, i) {
@@ -280,10 +296,13 @@ fn scan_string(b: &[u8], i: &mut usize) -> (String, u32) {
     (String::from_utf8_lossy(&b[start..(*i).min(b.len())]).into_owned(), nl)
 }
 
-/// `'x'`, `'\n'`, `'\u{1F600}'` — distinguished from lifetimes (`'a`).
+/// `'x'`, `'\n'`, `'\u{1F600}'`, `'é'` — distinguished from lifetimes
+/// (`'a`). A non-ASCII byte after the quote can only start a char literal:
+/// lifetimes are ASCII identifiers.
 fn is_char_literal(b: &[u8], i: usize) -> bool {
     match b.get(i + 1) {
         Some(b'\\') => true,
+        Some(c) if *c >= 0x80 => true,
         Some(c) if *c != b'\'' => b.get(i + 2) == Some(&b'\''),
         _ => false,
     }

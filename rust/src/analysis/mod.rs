@@ -8,21 +8,32 @@
 //! dynamic side of that contract lives in the lock-step tests and the
 //! `BENCH_*.json` bit-equality gates; this module is the static side — a
 //! self-contained (offline, zero-dependency) source analyzer with its own
-//! lightweight Rust tokenizer ([`lexer`]) and a rule engine ([`rules`])
-//! covering five families:
+//! lightweight Rust tokenizer ([`lexer`]), a crate-wide call graph
+//! ([`graph`]) with propagated per-function summaries ([`summary`]), and a
+//! rule engine ([`rules`]) covering seven families:
 //!
 //! 1. **`float-determinism`** — reassociation-prone constructs
 //!    (`.sum()`/`.fold()` over float iterators, `.rev()` feeding
 //!    accumulators, `mul_add` mixed with split multiply-adds) in the
-//!    kernel modules;
+//!    kernel modules, *or reachable from them through any call chain*;
 //! 2. **`ordered-iteration`** — `HashMap`/`HashSet` iteration in modules
 //!    whose output is serialized (BENCH JSON, checkpoints, `VarStats`);
 //! 3. **`panic-freedom`** — `unwrap`/`expect`/`panic!`/direct indexing on
-//!    the serve path (`coordinator::serve` and the `forward_packed*`
-//!    call chain);
+//!    the serve path (`coordinator::serve`, the frontend, and the
+//!    `forward_packed*` call chain), *or reachable from it transitively*;
 //! 4. **`thread-discipline`** — thread spawns only in allow-listed modules;
 //! 5. **`test-coverage`** — every public kernel entry point referenced
-//!    from `rust/tests/`.
+//!    from `rust/tests/`;
+//! 6. **`lock-discipline`** — one global pairwise lock order across the
+//!    frontend/serve modules, condvar waits inside predicate loops, and no
+//!    may-panic code while a guard is live (poison-safety);
+//! 7. **`allocation-freedom`** — the fused-step and packed kernel hot
+//!    loops stay steady-state allocation-free, directly and via callees.
+//!
+//! Interprocedural findings carry an evidence chain
+//! (`serve_batch → forward → tensor: `.expect()` at encoder.rs:NNN`)
+//! recorded in `ANALYSIS.json` and fingerprinted by its endpoints, so
+//! baselines survive line shifts anywhere along the chain.
 //!
 //! Run it with `cargo run --bin nm-lint`; it scans `rust/src`,
 //! `rust/benches`, and `examples`, writes machine-readable `ANALYSIS.json`
@@ -30,16 +41,20 @@
 //! not grandfathered by the checked-in `ANALYSIS_baseline.json`. Silence a
 //! justified finding inline with
 //! `// nm-lint: allow(<rule>): <justification>` (covering its own line and
-//! the next); suppressions without a justification are themselves findings.
+//! the next); on a call-site line the directive breaks that graph edge, so
+//! a suppression on **any chain link kills every chain through it**.
+//! Suppressions without a justification are themselves findings.
 
+pub mod graph;
 pub mod lexer;
 pub mod report;
 pub mod rules;
+pub mod summary;
 
-use lexer::FnSpan;
+use graph::{CrateGraph, LexedFile};
 use report::{Baseline, Finding, Report};
 use rules::FileCx;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeSet;
 use std::path::Path;
 
 pub use report::{fingerprint_all, Finding as LintFinding};
@@ -179,6 +194,21 @@ pub mod config {
             || name.ends_with("_into")
             || (name.starts_with("masked_") && name.ends_with("_step"))
     }
+
+    /// Modules whose Mutex/RwLock/Condvar usage rule 6 audits: the online
+    /// frontend and the batch server (the only concurrent shared-state
+    /// surfaces; everywhere else locks are a thread-discipline question).
+    pub fn lock_scoped(path: &str) -> bool {
+        path == "rust/src/coordinator/serve.rs"
+            || path.starts_with("rust/src/coordinator/frontend/")
+    }
+
+    /// Kernel functions whose loops rule 7 requires steady-state
+    /// allocation-free: every rule-5 entry point plus the fused ASP step
+    /// (same hot path, different naming scheme).
+    pub fn is_hot_kernel(name: &str) -> bool {
+        is_kernel_entry(name) || (name.starts_with("asp_") && name.ends_with("_step"))
+    }
 }
 
 /// Everything loaded for one run: lint subjects + the `rust/tests/`
@@ -191,6 +221,12 @@ pub struct AnalysisInput {
 
 /// Run the full rule set over `input` and return the report (findings
 /// already fingerprinted and suppression-filtered).
+///
+/// Two phases: the per-file rules run on each file in isolation, then the
+/// interprocedural rules run once over the crate-wide call graph with
+/// propagated summaries. Chain findings are filtered during propagation
+/// (an `allow` on any link breaks the edge), so the retain pass below only
+/// needs to handle root-line directives.
 pub fn analyze(input: &AnalysisInput) -> Report {
     // rule 5's reference set: every identifier appearing in rust/tests/
     let mut test_idents: BTreeSet<String> = BTreeSet::new();
@@ -202,15 +238,20 @@ pub fn analyze(input: &AnalysisInput) -> Report {
         }
     }
 
+    let files: Vec<LexedFile> =
+        input.files.iter().map(|f| LexedFile::lex(&f.path, &f.text)).collect();
+
     let mut findings: Vec<Finding> = Vec::new();
-    let mut lines_by_file: BTreeMap<String, Vec<String>> = BTreeMap::new();
     let mut suppressed = 0usize;
 
-    for file in &input.files {
-        let lexed = lexer::lex(&file.text);
-        let fns: Vec<FnSpan> = lexer::fn_spans(&lexed.toks);
-        let tests = lexer::test_spans(&lexed.toks);
-        let cx = FileCx { path: &file.path, toks: &lexed.toks, fns: &fns, tests: &tests };
+    // phase 1: per-file rules
+    for file in &files {
+        let cx = FileCx {
+            path: &file.path,
+            toks: &file.toks,
+            fns: &file.fns,
+            tests: &file.tests,
+        };
 
         let mut file_findings: Vec<Finding> = Vec::new();
         rules::float_determinism(&cx, &mut file_findings);
@@ -221,7 +262,7 @@ pub fn analyze(input: &AnalysisInput) -> Report {
 
         // malformed suppressions are findings; valid ones with unknown rule
         // names too (a typo must not silently disable a rule)
-        for (line, why) in &lexed.bad_suppressions {
+        for (line, why) in &file.bad_suppressions {
             file_findings.push(Finding::new(
                 rules::INVALID_SUPPRESSION,
                 &file.path,
@@ -229,7 +270,7 @@ pub fn analyze(input: &AnalysisInput) -> Report {
                 why.clone(),
             ));
         }
-        for s in &lexed.suppressions {
+        for s in &file.suppressions {
             if !rules::ALL_RULES.contains(&s.rule.as_str()) {
                 file_findings.push(Finding::new(
                     rules::INVALID_SUPPRESSION,
@@ -243,29 +284,37 @@ pub fn analyze(input: &AnalysisInput) -> Report {
                 ));
             }
         }
-
-        // apply suppressions: a directive covers its own line and the next
-        file_findings.retain(|f| {
-            let hit = lexed.suppressions.iter().any(|s| {
-                s.rule == f.rule && (s.line == f.line || s.line + 1 == f.line)
-            });
-            if hit {
-                suppressed += 1;
-            }
-            !hit
-        });
-
         findings.append(&mut file_findings);
-        lines_by_file.insert(
-            file.path.clone(),
-            file.text.lines().map(|l| l.to_string()).collect(),
-        );
     }
 
+    // phase 2: interprocedural rules over the crate graph
+    let graph = CrateGraph::build(&files);
+    let sums = summary::summarize(&files, &graph);
+    let ccx = rules::CrateCx { files: &files, graph: &graph, sums: &sums };
+    rules::transitive_panic_freedom(&ccx, &mut findings);
+    rules::transitive_float_determinism(&ccx, &mut findings);
+    rules::lock_discipline(&ccx, &mut findings);
+    rules::allocation_freedom(&ccx, &mut findings);
+
+    // apply suppressions: a directive covers its own line and the next
+    // (for chain findings this is the root link; inner links were already
+    // handled during propagation)
+    let by_path: std::collections::BTreeMap<&str, &LexedFile> =
+        files.iter().map(|f| (f.path.as_str(), f)).collect();
+    findings.retain(|f| {
+        let hit = by_path
+            .get(f.file.as_str())
+            .is_some_and(|lf| lf.is_suppressed(f.rule, f.line));
+        if hit {
+            suppressed += 1;
+        }
+        !hit
+    });
+
     fingerprint_all(&mut findings, |file, line| {
-        lines_by_file
+        by_path
             .get(file)
-            .and_then(|ls| ls.get(line.saturating_sub(1) as usize))
+            .and_then(|lf| lf.lines.get(line.saturating_sub(1) as usize))
             .cloned()
             .unwrap_or_default()
     });

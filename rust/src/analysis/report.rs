@@ -4,12 +4,25 @@
 //! A finding's identity is its **fingerprint** — `rule | file | normalized
 //! source line | occurrence ordinal` — deliberately excluding the line
 //! *number*, so unrelated edits that shift code up or down do not turn
-//! grandfathered findings into "new" ones. The baseline is a plain set of
-//! fingerprints: CI fails on any finding whose fingerprint is not in it,
-//! which ratchets the tree toward zero without blocking on day-one debt.
+//! grandfathered findings into "new" ones. Interprocedural findings carry
+//! an evidence **chain** instead of one line; their fingerprint keys on the
+//! chain *endpoints* (`root file::fn ⇒ leaf file::fn` plus the construct),
+//! so a baseline entry survives edits to any intermediate frame. The
+//! baseline is a plain set of fingerprints: CI fails on any finding whose
+//! fingerprint is not in it, which ratchets the tree toward zero without
+//! blocking on day-one debt.
 
 use crate::util::json::{Json, JsonObj};
 use std::collections::{BTreeMap, BTreeSet};
+
+/// One frame of an interprocedural evidence path: a call site (or, for the
+/// last link, the offending construct itself) inside `func`.
+#[derive(Debug, Clone)]
+pub struct ChainLink {
+    pub file: String,
+    pub line: u32,
+    pub func: String,
+}
 
 /// One rule violation, anchored at `file:line`.
 #[derive(Debug, Clone)]
@@ -22,6 +35,12 @@ pub struct Finding {
     pub snippet: String,
     /// Stable identity for baseline matching (filled by [`fingerprint_all`]).
     pub fingerprint: String,
+    /// Evidence path for interprocedural findings: root call chain first,
+    /// the local site last. Empty for per-file findings.
+    pub chain: Vec<ChainLink>,
+    /// The construct at the end of the chain (`` `.unwrap()` ``, …) —
+    /// part of the endpoint fingerprint so it stays line-shift-stable.
+    pub leaf_what: String,
 }
 
 impl Finding {
@@ -33,7 +52,16 @@ impl Finding {
             message,
             snippet: String::new(),
             fingerprint: String::new(),
+            chain: Vec::new(),
+            leaf_what: String::new(),
         }
+    }
+
+    /// Attach an evidence chain (root → leaf) and the leaf construct tag.
+    pub fn with_chain(mut self, chain: Vec<ChainLink>, leaf_what: String) -> Self {
+        self.chain = chain;
+        self.leaf_what = leaf_what;
+        self
     }
 }
 
@@ -57,6 +85,10 @@ fn normalize(snippet: &str) -> String {
 
 /// Sort findings, attach snippets, and assign occurrence-numbered
 /// fingerprints. `line_of` maps `(file, 1-based line)` to source text.
+///
+/// Per-file findings key on the normalized source line; chain findings key
+/// on their endpoints (`root file::fn ⇒ leaf file::fn` + construct) so the
+/// identity survives line shifts anywhere along the chain.
 pub fn fingerprint_all(findings: &mut [Finding], line_of: impl Fn(&str, u32) -> String) {
     findings.sort_by(|a, b| {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
@@ -64,7 +96,13 @@ pub fn fingerprint_all(findings: &mut [Finding], line_of: impl Fn(&str, u32) -> 
     let mut seen: BTreeMap<String, u32> = BTreeMap::new();
     for f in findings.iter_mut() {
         f.snippet = normalize(&line_of(&f.file, f.line));
-        let key = format!("{}|{}|{}", f.rule, f.file, f.snippet);
+        let key = match (f.chain.first(), f.chain.last()) {
+            (Some(root), Some(leaf)) => format!(
+                "{}|{}::{}=>{}::{}|{}",
+                f.rule, root.file, root.func, leaf.file, leaf.func, f.leaf_what
+            ),
+            _ => format!("{}|{}|{}", f.rule, f.file, f.snippet),
+        };
         let occ = seen.entry(key.clone()).or_insert(0);
         f.fingerprint = format!("{key}|{occ}");
         *occ += 1;
@@ -95,7 +133,7 @@ impl Report {
     pub fn to_json(&self, baseline: &Baseline) -> String {
         let mut root = JsonObj::new();
         root.insert("tool", Json::Str("nm-lint".to_string()));
-        root.insert("version", Json::Num(1.0));
+        root.insert("version", Json::Num(2.0));
         root.insert("files_scanned", Json::Num(self.files_scanned as f64));
         root.insert(
             "rules",
@@ -130,6 +168,21 @@ impl Report {
                 o.insert("line", Json::Num(f.line as f64));
                 o.insert("message", Json::Str(f.message.clone()));
                 o.insert("snippet", Json::Str(f.snippet.clone()));
+                if !f.chain.is_empty() {
+                    let chain = f
+                        .chain
+                        .iter()
+                        .map(|l| {
+                            let mut c = JsonObj::new();
+                            c.insert("file", Json::Str(l.file.clone()));
+                            c.insert("line", Json::Num(l.line as f64));
+                            c.insert("fn", Json::Str(l.func.clone()));
+                            Json::Obj(c)
+                        })
+                        .collect();
+                    o.insert("chain", Json::Arr(chain));
+                    o.insert("leaf", Json::Str(f.leaf_what.clone()));
+                }
                 o.insert("fingerprint", Json::Str(f.fingerprint.clone()));
                 o.insert(
                     "baseline",
@@ -146,7 +199,7 @@ impl Report {
     pub fn to_baseline_json(&self) -> String {
         let mut root = JsonObj::new();
         root.insert("tool", Json::Str("nm-lint".to_string()));
-        root.insert("version", Json::Num(1.0));
+        root.insert("version", Json::Num(2.0));
         let fps = self
             .findings
             .iter()

@@ -3,21 +3,30 @@
 //! Every rule is a token-level heuristic scoped by the repo's module map
 //! ([`super::config`]): the analyzer cannot type-check, so each rule trades
 //! a small false-positive rate (absorbed by inline suppressions or the
-//! checked-in baseline) for zero build-time dependencies. The five families
-//! enforce the two contracts everything since PR 1 rests on:
+//! checked-in baseline) for zero build-time dependencies. The seven
+//! families enforce the contracts everything since PR 1 rests on:
 //!
 //! | rule | contract |
 //! |------|----------|
-//! | `float-determinism`  | packed/threaded kernels stay bit-identical to the dense masked oracle — no reassociation-prone constructs |
+//! | `float-determinism`  | packed/threaded kernels stay bit-identical to the dense masked oracle — no reassociation-prone constructs, **including in helpers they call** (transitive since v2) |
 //! | `ordered-iteration`  | serialized output (BENCH JSON, checkpoints, `VarStats` merges) never depends on `HashMap`/`HashSet` iteration order |
-//! | `panic-freedom`      | the serve path returns `anyhow::Result`, it never aborts a serving thread |
+//! | `panic-freedom`      | the serve path returns `anyhow::Result`, it never aborts a serving thread — **including through callees** (transitive since v2) |
 //! | `thread-discipline`  | threads spawn only in the allow-listed modules (prefetch, serve, optim) |
 //! | `test-coverage`      | every public kernel entry point is referenced from `rust/tests/` |
+//! | `lock-discipline`    | frontend/serve locks are acquired in one global pairwise order, condvar waits sit in predicate loops, and no may-panic call runs while a guard is live (poison-safety) |
+//! | `allocation-freedom` | the fused-step and packed kernel hot loops stay steady-state allocation-free, directly and through callees |
+//!
+//! The transitive families run on the crate-wide call graph
+//! ([`super::graph`]) with per-function summaries ([`super::summary`]);
+//! their findings carry an evidence chain from the contract root down to
+//! the offending construct.
 
 use super::config;
+use super::graph::{CrateGraph, LexedFile};
 use super::lexer::{FnSpan, Tok, TokKind};
 use super::report::Finding;
-use std::collections::BTreeSet;
+use super::summary::{self, Summaries, Witness};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Canonical rule names (these are what `allow(<rule>)` takes).
 pub const FLOAT_DETERMINISM: &str = "float-determinism";
@@ -25,6 +34,8 @@ pub const ORDERED_ITERATION: &str = "ordered-iteration";
 pub const PANIC_FREEDOM: &str = "panic-freedom";
 pub const THREAD_DISCIPLINE: &str = "thread-discipline";
 pub const TEST_COVERAGE: &str = "test-coverage";
+pub const LOCK_DISCIPLINE: &str = "lock-discipline";
+pub const ALLOCATION_FREEDOM: &str = "allocation-freedom";
 /// Meta-rule: malformed or unknown suppression directives are findings too.
 pub const INVALID_SUPPRESSION: &str = "invalid-suppression";
 
@@ -35,6 +46,8 @@ pub const ALL_RULES: &[&str] = &[
     PANIC_FREEDOM,
     THREAD_DISCIPLINE,
     TEST_COVERAGE,
+    LOCK_DISCIPLINE,
+    ALLOCATION_FREEDOM,
     INVALID_SUPPRESSION,
 ];
 
@@ -80,7 +93,7 @@ impl<'a> FileCx<'a> {
 
 /// Identifiers that mark an integer-valued iterator chain — `.sum()` over
 /// element counts is order-safe (integer addition is associative).
-const INT_MARKERS: &[&str] = &[
+pub(crate) const INT_MARKERS: &[&str] = &[
     "numel", "len", "count", "n_values", "values_per_row", "shape", "sizes", "n_layers", "usize",
     "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
 ];
@@ -337,11 +350,12 @@ pub fn ordered_iteration(cx: &FileCx, out: &mut Vec<Finding>) {
 }
 
 /// Macros that abort the thread.
-const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+pub(crate) const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
 
 /// Identifiers before `[` that start a slice pattern or array literal, not
 /// an index expression (`let [a, b] = …`, `vec![…]`, `in [1, 2]`, …).
-const NOT_INDEXING_BEFORE: &[&str] = &["vec", "let", "mut", "else", "in", "return", "match"];
+pub(crate) const NOT_INDEXING_BEFORE: &[&str] =
+    &["vec", "let", "mut", "else", "in", "return", "match"];
 
 /// Rule 3 — `panic-freedom`: the serve path (BatchServer::serve and the
 /// `forward_packed*` call chain, plus the Session hot loop) must propagate
@@ -442,6 +456,379 @@ pub fn thread_discipline(cx: &FileCx, out: &mut Vec<Finding>) {
                     config::THREAD_ALLOWLIST.join(", ")
                 ),
             ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// interprocedural rules (v2) — run once per crate, over the call graph
+// ---------------------------------------------------------------------------
+
+/// Everything the crate-wide rules need: lexed files, the call graph, and
+/// the propagated per-function summaries.
+pub struct CrateCx<'a> {
+    pub files: &'a [LexedFile],
+    pub graph: &'a CrateGraph,
+    pub sums: &'a Summaries,
+}
+
+fn chain_str(links: &[super::report::ChainLink]) -> String {
+    links.iter().map(|l| l.func.as_str()).collect::<Vec<_>>().join(" → ")
+}
+
+/// Rule 3 (transitive) — a serve-path function reaching a panic through
+/// any call chain is as fatal as panicking itself. Local sites are covered
+/// by the per-file pass; this one fires only on `Call` witnesses and
+/// reports the full evidence chain.
+pub fn transitive_panic_freedom(cx: &CrateCx, out: &mut Vec<Finding>) {
+    for (idx, node) in cx.graph.fns.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let Some(Witness::Call { line, .. }) = &cx.sums.panic[idx] else { continue };
+        let file = &cx.files[node.file];
+        let f = cx.graph.span_of(cx.files, idx);
+        if !config::in_serve_path(&file.path, f, &file.toks) {
+            continue;
+        }
+        let Some((links, what)) = summary::chain(cx.graph, cx.files, &cx.sums.panic, idx)
+        else {
+            continue;
+        };
+        let leaf = &links[links.len() - 1];
+        out.push(
+            Finding::new(
+                PANIC_FREEDOM,
+                &file.path,
+                *line,
+                format!(
+                    "serve-path fn `{}` can reach a panic: {} — {} at {}:{}; the serve \
+                     surface must degrade to `anyhow::Result`, not abort",
+                    node.name,
+                    chain_str(&links),
+                    what,
+                    leaf.file,
+                    leaf.line
+                ),
+            )
+            .with_chain(links.clone(), what),
+        );
+    }
+}
+
+/// Rule 1 (transitive) — a kernel function calling a helper that does a
+/// reassociation-prone float reduction breaks the bit-identity contract
+/// just as surely as doing it inline. Fires only when the offending site
+/// lives *outside* the kernel modules (inside them the per-file pass
+/// already flags it).
+pub fn transitive_float_determinism(cx: &CrateCx, out: &mut Vec<Finding>) {
+    for (idx, node) in cx.graph.fns.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let file = &cx.files[node.file];
+        if !config::is_kernel_module(&file.path) {
+            continue;
+        }
+        let Some(Witness::Call { line, .. }) = &cx.sums.float[idx] else { continue };
+        let Some((links, what)) = summary::chain(cx.graph, cx.files, &cx.sums.float, idx)
+        else {
+            continue;
+        };
+        let leaf = &links[links.len() - 1];
+        if config::is_kernel_module(&leaf.file) {
+            continue;
+        }
+        out.push(
+            Finding::new(
+                FLOAT_DETERMINISM,
+                &file.path,
+                *line,
+                format!(
+                    "kernel fn `{}` reaches a reassociation-prone float reduction: {} — \
+                     {} at {}:{}; the accumulation order IS the bit-identity contract",
+                    node.name,
+                    chain_str(&links),
+                    what,
+                    leaf.file,
+                    leaf.line
+                ),
+            )
+            .with_chain(links.clone(), what),
+        );
+    }
+}
+
+/// Rule 6 — `lock-discipline` on the frontend/serve modules:
+///
+/// * pairwise lock acquisition order must be globally consistent (an
+///   inverted pair is a deadlock waiting for the right interleaving);
+/// * re-acquiring the same lock while its guard is live self-deadlocks;
+/// * `Condvar::wait*` must sit inside a predicate loop (spurious wakeups);
+/// * no may-panic construct or call while a guard is live — a panic there
+///   poisons the mutex for every other thread (poison-safety).
+pub fn lock_discipline(cx: &CrateCx, out: &mut Vec<Finding>) {
+    // ordered pair -> first witness (file path, line, fn name)
+    let mut pair_witness: BTreeMap<(String, String), (String, u32, String)> = BTreeMap::new();
+    for (idx, node) in cx.graph.fns.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let file = &cx.files[node.file];
+        if !config::lock_scoped(&file.path) {
+            continue;
+        }
+        let f = cx.graph.span_of(cx.files, idx);
+        if f.body_start == usize::MAX {
+            continue;
+        }
+        let facts = summary::lock_facts(file, f);
+
+        for w in &facts.waits {
+            if w.in_loop || file.is_suppressed(LOCK_DISCIPLINE, w.line) {
+                continue;
+            }
+            out.push(Finding::new(
+                LOCK_DISCIPLINE,
+                &file.path,
+                w.line,
+                format!(
+                    "`.{}()` outside a predicate loop in `{}`: condvar wakeups are \
+                     spurious-prone — re-check the predicate in a `while`/`loop`",
+                    w.method, node.name
+                ),
+            ));
+        }
+
+        // nested acquisitions: ordering pairs + same-lock re-entry
+        for (i, a) in facts.acqs.iter().enumerate() {
+            for b in facts.acqs.iter().skip(i + 1) {
+                if b.tok <= a.tok || b.tok > a.end {
+                    continue; // not acquired while `a`'s guard is live
+                }
+                if a.key == b.key {
+                    if !file.is_suppressed(LOCK_DISCIPLINE, b.line) {
+                        out.push(Finding::new(
+                            LOCK_DISCIPLINE,
+                            &file.path,
+                            b.line,
+                            format!(
+                                "`{}` re-locked in `{}` while its guard from line {} is \
+                                 still live — self-deadlock on a non-reentrant mutex",
+                                b.key, node.name, a.line
+                            ),
+                        ));
+                    }
+                    continue;
+                }
+                pair_witness
+                    .entry((a.key.clone(), b.key.clone()))
+                    .or_insert_with(|| (file.path.clone(), b.line, node.name.clone()));
+            }
+        }
+
+        // may-panic while a guard is live (poison-safety)
+        let mut reported: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for a in &facts.acqs {
+            for k in (a.tok + 1)..=a.end.min(file.toks.len().saturating_sub(1)) {
+                if file.in_test(k) {
+                    continue;
+                }
+                let t = &file.toks[k];
+                let silenced = file.is_suppressed(LOCK_DISCIPLINE, t.line)
+                    || file.is_suppressed(PANIC_FREEDOM, t.line);
+                if silenced {
+                    continue;
+                }
+                let dot_call = k > 0 && file.toks[k - 1].is_punct(".");
+                let local_panic = (dot_call
+                    && (t.is_ident("unwrap") || t.is_ident("expect")))
+                    || (t.kind == TokKind::Ident
+                        && PANIC_MACROS.contains(&t.text.as_str())
+                        && file.toks.get(k + 1).is_some_and(|n| n.is_punct("!")));
+                if local_panic && reported.insert((a.line, t.line)) {
+                    out.push(Finding::new(
+                        LOCK_DISCIPLINE,
+                        &file.path,
+                        t.line,
+                        format!(
+                            "may-panic construct while the `{}` guard (line {}) is live in \
+                             `{}` — a panic here poisons the lock for every other thread",
+                            a.key, a.line, node.name
+                        ),
+                    ));
+                }
+            }
+            for site in &cx.graph.calls[idx] {
+                if site.tok <= a.tok || site.tok > a.end {
+                    continue;
+                }
+                let Some(&target) =
+                    site.targets.iter().find(|&&t| cx.sums.panic[t].is_some())
+                else {
+                    continue;
+                };
+                if file.is_suppressed(LOCK_DISCIPLINE, site.line)
+                    || file.is_suppressed(PANIC_FREEDOM, site.line)
+                    || !reported.insert((a.line, site.line))
+                {
+                    continue;
+                }
+                let Some((mut links, what)) =
+                    summary::chain(cx.graph, cx.files, &cx.sums.panic, target)
+                else {
+                    continue;
+                };
+                links.insert(
+                    0,
+                    super::report::ChainLink {
+                        file: file.path.clone(),
+                        line: site.line,
+                        func: node.name.clone(),
+                    },
+                );
+                let leaf = links[links.len() - 1].clone();
+                out.push(
+                    Finding::new(
+                        LOCK_DISCIPLINE,
+                        &file.path,
+                        site.line,
+                        format!(
+                            "call to `{}` may panic while the `{}` guard (line {}) is \
+                             live in `{}`: {} — {} at {}:{}; poison-safety requires \
+                             panic-free critical sections",
+                            site.name,
+                            a.key,
+                            a.line,
+                            node.name,
+                            chain_str(&links),
+                            what,
+                            leaf.file,
+                            leaf.line
+                        ),
+                    )
+                    .with_chain(links, what),
+                );
+            }
+        }
+    }
+
+    // globally inconsistent pairwise order
+    let pairs: Vec<_> = pair_witness.keys().cloned().collect();
+    for (a, b) in pairs {
+        if a >= b {
+            continue;
+        }
+        let (Some(w1), Some(w2)) = (
+            pair_witness.get(&(a.clone(), b.clone())),
+            pair_witness.get(&(b.clone(), a.clone())),
+        ) else {
+            continue;
+        };
+        // a suppression on either witness line kills the pair finding
+        let silenced = cx.files.iter().any(|f| {
+            (f.path == w1.0 && f.is_suppressed(LOCK_DISCIPLINE, w1.1))
+                || (f.path == w2.0 && f.is_suppressed(LOCK_DISCIPLINE, w2.1))
+        });
+        if silenced {
+            continue;
+        }
+        out.push(Finding::new(
+            LOCK_DISCIPLINE,
+            &w2.0,
+            w2.1,
+            format!(
+                "lock order inversion: `{}` → `{}` here in `{}`, but `{}` → `{}` at \
+                 {}:{} in `{}` — pick one global order or a deadlock is one \
+                 interleaving away",
+                b, a, w2.2, a, b, w1.0, w1.1, w1.2
+            ),
+        ));
+    }
+}
+
+/// Rule 7 — `allocation-freedom`: the fused-step and packed kernel hot
+/// loops must stay steady-state allocation-free. Allocations directly in a
+/// loop body, or reachable through any call made from one, are findings;
+/// the `_into`/scratch-reuse kernels allocate nothing, which is the point.
+pub fn allocation_freedom(cx: &CrateCx, out: &mut Vec<Finding>) {
+    for (idx, node) in cx.graph.fns.iter().enumerate() {
+        if node.is_test {
+            continue;
+        }
+        let file = &cx.files[node.file];
+        if !config::is_kernel_module(&file.path) || !config::is_hot_kernel(&node.name) {
+            continue;
+        }
+        let f = cx.graph.span_of(cx.files, idx);
+        if f.body_start == usize::MAX {
+            continue;
+        }
+        let loops = summary::loop_spans(file, f);
+        let mut seen: BTreeSet<(u32, String)> = BTreeSet::new();
+        for &(la, lb) in &loops {
+            for (line, what) in summary::direct_alloc_sites(file, f, (la, lb)) {
+                if seen.insert((line, what.clone())) {
+                    out.push(Finding::new(
+                        ALLOCATION_FREEDOM,
+                        &file.path,
+                        line,
+                        format!(
+                            "{what} allocates inside the hot loop of kernel `{}`; hoist \
+                             the buffer out of the loop or take an `_into` scratch \
+                             parameter",
+                            node.name
+                        ),
+                    ));
+                }
+            }
+            for site in &cx.graph.calls[idx] {
+                if site.tok < la || site.tok > lb {
+                    continue;
+                }
+                let Some(&target) =
+                    site.targets.iter().find(|&&t| cx.sums.alloc[t].is_some())
+                else {
+                    continue;
+                };
+                if file.is_suppressed(ALLOCATION_FREEDOM, site.line)
+                    || !seen.insert((site.line, site.name.clone()))
+                {
+                    continue;
+                }
+                let Some((mut links, what)) =
+                    summary::chain(cx.graph, cx.files, &cx.sums.alloc, target)
+                else {
+                    continue;
+                };
+                links.insert(
+                    0,
+                    super::report::ChainLink {
+                        file: file.path.clone(),
+                        line: site.line,
+                        func: node.name.clone(),
+                    },
+                );
+                let leaf = links[links.len() - 1].clone();
+                out.push(
+                    Finding::new(
+                        ALLOCATION_FREEDOM,
+                        &file.path,
+                        site.line,
+                        format!(
+                            "call to `{}` allocates inside the hot loop of kernel `{}`: \
+                             {} — {} at {}:{}; kernel steady state must reuse scratch",
+                            site.name,
+                            node.name,
+                            chain_str(&links),
+                            what,
+                            leaf.file,
+                            leaf.line
+                        ),
+                    )
+                    .with_chain(links, what),
+                );
+            }
         }
     }
 }

@@ -1,0 +1,520 @@
+//! Per-function summaries and the fixpoint pass that propagates them over
+//! the [`super::graph::CrateGraph`].
+//!
+//! Each function gets local facts — may-panic (`unwrap`/`expect`/panic
+//! macros/unchecked indexing on the checked surface), does-float-reduction
+//! (the reassociation-prone constructs of rule 1), may-allocate
+//! (`Vec::new`/`to_vec`/`clone`/`collect`/…) — and a breadth-first reverse
+//! walk lifts each fact to every caller that can reach it, recording a
+//! **witness**: either the local site or the call edge taken. Following
+//! witnesses from any function reconstructs a shortest evidence chain
+//! (`serve::forward → packed_matmul_rows → decode_codes: unwrap at
+//! packed.rs:NNN`).
+//!
+//! Suppressions participate at both ends: an `allow(<rule>)` on a leaf
+//! site deletes the seed, and an `allow(<rule>)` on any call-site line
+//! breaks that edge during propagation — so a justified suppression on
+//! **any chain link** kills every chain through it, exactly like the
+//! per-file rules.
+
+use super::config;
+use super::graph::{CrateGraph, LexedFile};
+use super::lexer::{FnSpan, Tok, TokKind};
+use super::report::ChainLink;
+use super::rules;
+use std::collections::VecDeque;
+
+/// A concrete contract-violating source location.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub line: u32,
+    /// Human tag for the construct, e.g. `` `.unwrap()` ``.
+    pub what: String,
+}
+
+/// Why a function carries a fact: it does the thing locally, or it calls
+/// (possibly transitively) a function that does.
+#[derive(Debug, Clone)]
+pub enum Witness {
+    Local(Site),
+    Call { line: u32, tok: usize, callee: usize },
+}
+
+/// Propagated facts, indexed by graph fn index.
+#[derive(Debug, Default)]
+pub struct Summaries {
+    pub panic: Vec<Option<Witness>>,
+    pub float: Vec<Option<Witness>>,
+    pub alloc: Vec<Option<Witness>>,
+}
+
+/// Compute local facts for every fn and run the fixpoint for each family.
+pub fn summarize(files: &[LexedFile], g: &CrateGraph) -> Summaries {
+    let mut panic_seeds: Vec<Option<Site>> = vec![None; g.fns.len()];
+    let mut float_seeds: Vec<Option<Site>> = vec![None; g.fns.len()];
+    let mut alloc_seeds: Vec<Option<Site>> = vec![None; g.fns.len()];
+    for (idx, n) in g.fns.iter().enumerate() {
+        if n.is_test {
+            continue;
+        }
+        let file = &files[n.file];
+        let f = &file.fns[n.span];
+        if f.body_start == usize::MAX {
+            continue;
+        }
+        panic_seeds[idx] = local_panic_site(file, f);
+        float_seeds[idx] = local_float_site(file, f);
+        alloc_seeds[idx] = direct_alloc_sites(file, f, (f.body_start, f.body_end))
+            .into_iter()
+            .next()
+            .map(|(line, what)| Site { line, what });
+    }
+    Summaries {
+        panic: propagate(g, files, rules::PANIC_FREEDOM, panic_seeds),
+        float: propagate(g, files, rules::FLOAT_DETERMINISM, float_seeds),
+        alloc: propagate(g, files, rules::ALLOCATION_FREEDOM, alloc_seeds),
+    }
+}
+
+/// Breadth-first reverse reachability: every caller that can reach a seed
+/// gets a witness pointing one hop down. BFS order makes witnesses
+/// shortest chains, and the `Some` check terminates cycles.
+pub fn propagate(
+    g: &CrateGraph,
+    files: &[LexedFile],
+    rule: &'static str,
+    seeds: Vec<Option<Site>>,
+) -> Vec<Option<Witness>> {
+    let mut out: Vec<Option<Witness>> =
+        seeds.into_iter().map(|s| s.map(Witness::Local)).collect();
+    let mut queue: VecDeque<usize> = out
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    while let Some(t) = queue.pop_front() {
+        for &(caller, si) in &g.callers[t] {
+            if out[caller].is_some() || g.fns[caller].is_test {
+                continue;
+            }
+            let site = &g.calls[caller][si];
+            // a suppression on the call-site line breaks this edge — the
+            // chain-link form of `allow(<rule>)`
+            if files[g.fns[caller].file].is_suppressed(rule, site.line) {
+                continue;
+            }
+            out[caller] = Some(Witness::Call { line: site.line, tok: site.tok, callee: t });
+            queue.push_back(caller);
+        }
+    }
+    out
+}
+
+/// Follow witnesses from `root` down to the local site. Returns the chain
+/// (root first, leaf last — the leaf link carries the site line) and the
+/// site's construct tag.
+pub fn chain(
+    g: &CrateGraph,
+    files: &[LexedFile],
+    wit: &[Option<Witness>],
+    root: usize,
+) -> Option<(Vec<ChainLink>, String)> {
+    let mut links = Vec::new();
+    let mut cur = root;
+    loop {
+        match wit.get(cur)?.as_ref()? {
+            Witness::Call { line, callee, .. } => {
+                links.push(ChainLink {
+                    file: files[g.fns[cur].file].path.clone(),
+                    line: *line,
+                    func: g.fns[cur].name.clone(),
+                });
+                cur = *callee;
+                if links.len() > g.fns.len() {
+                    return None; // defensive: malformed witness cycle
+                }
+            }
+            Witness::Local(site) => {
+                links.push(ChainLink {
+                    file: files[g.fns[cur].file].path.clone(),
+                    line: site.line,
+                    func: g.fns[cur].name.clone(),
+                });
+                return Some((links, site.what.clone()));
+            }
+        }
+    }
+}
+
+/// Token ranges of nested fn bodies inside `f` (excluded from local scans
+/// so nested items are attributed to their own node, not the parent).
+fn inner_fn_bodies(file: &LexedFile, f: &FnSpan) -> Vec<(usize, usize)> {
+    file.fns
+        .iter()
+        .filter(|o| o.kw_idx > f.body_start && o.kw_idx < f.body_end)
+        .filter(|o| o.body_start != usize::MAX)
+        .map(|o| (o.body_start, o.body_end))
+        .collect()
+}
+
+/// Iterate `f`'s body token indices, skipping nested fns and test spans.
+fn body_indices(file: &LexedFile, f: &FnSpan) -> Vec<usize> {
+    let end = f.body_end.min(file.toks.len().saturating_sub(1));
+    let inner = inner_fn_bodies(file, f);
+    let mut out = Vec::new();
+    let mut k = f.body_start + 1;
+    while k < end {
+        if let Some(&(_, ie)) = inner.iter().find(|&&(a, b)| k >= a && k <= b) {
+            k = ie + 1;
+            continue;
+        }
+        if !file.in_test(k) {
+            out.push(k);
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Statement bounds around `idx` (between `;`/`{`/`}` separators).
+fn stmt_bounds(toks: &[Tok], idx: usize) -> (usize, usize) {
+    let is_break = |t: &Tok| t.is_punct(";") || t.is_punct("{") || t.is_punct("}");
+    let mut a = idx;
+    while a > 0 && !is_break(&toks[a - 1]) {
+        a -= 1;
+    }
+    let mut b = idx;
+    while b + 1 < toks.len() && !is_break(&toks[b + 1]) {
+        b += 1;
+    }
+    (a, b)
+}
+
+/// First may-panic construct in `f`'s body, honoring `allow(panic-freedom)`
+/// on the site line. Unchecked indexing counts only on the index-checked
+/// surface (same scoping as the per-file rule: kernel indexing is
+/// validated at pack time).
+fn local_panic_site(file: &LexedFile, f: &FnSpan) -> Option<Site> {
+    let toks = &file.toks;
+    for k in body_indices(file, f) {
+        let t = &toks[k];
+        if file.is_suppressed(rules::PANIC_FREEDOM, t.line) {
+            continue;
+        }
+        let dot_call = k > 0 && toks[k - 1].is_punct(".");
+        if dot_call && (t.is_ident("unwrap") || t.is_ident("expect")) {
+            return Some(Site { line: t.line, what: format!("`.{}()`", t.text) });
+        }
+        if t.kind == TokKind::Ident
+            && rules::PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(k + 1).is_some_and(|n| n.is_punct("!"))
+        {
+            return Some(Site { line: t.line, what: format!("`{}!`", t.text) });
+        }
+        if config::index_checked(&file.path, f)
+            && t.is_punct("[")
+            && k > 0
+            && (matches!(toks[k - 1].kind, TokKind::Ident)
+                || toks[k - 1].is_punct(")")
+                || toks[k - 1].is_punct("]")
+                || toks[k - 1].is_punct("?"))
+            && !(toks[k - 1].kind == TokKind::Ident
+                && rules::NOT_INDEXING_BEFORE.contains(&toks[k - 1].text.as_str()))
+        {
+            return Some(Site { line: t.line, what: "direct indexing".to_string() });
+        }
+    }
+    None
+}
+
+/// First reassociation-prone float reduction in `f`'s body (the same
+/// heuristics as rule 1's local pass, applied to **every** file so kernels
+/// calling helpers in non-kernel modules still see the hazard).
+fn local_float_site(file: &LexedFile, f: &FnSpan) -> Option<Site> {
+    let toks = &file.toks;
+    for k in body_indices(file, f) {
+        let t = &toks[k];
+        if file.is_suppressed(rules::FLOAT_DETERMINISM, t.line) {
+            continue;
+        }
+        let dot_call = k > 0 && toks[k - 1].is_punct(".");
+        if dot_call && (t.is_ident("sum") || t.is_ident("fold") || t.is_ident("product")) {
+            let (a, b) = stmt_bounds(toks, k);
+            let int_stmt = toks[a..=b]
+                .iter()
+                .any(|t| t.kind == TokKind::Ident && rules::INT_MARKERS.contains(&t.text.as_str()));
+            if !int_stmt {
+                return Some(Site { line: t.line, what: format!("`.{}()`", t.text) });
+            }
+        }
+        if dot_call && t.is_ident("rev") {
+            let (a, b) = stmt_bounds(toks, k);
+            let feeds_accum = toks[a..=b].iter().any(|s| {
+                s.is_ident("sum")
+                    || s.is_ident("fold")
+                    || s.is_ident("product")
+                    || s.is_punct("+=")
+                    || s.is_punct("*=")
+            });
+            if feeds_accum {
+                return Some(Site { line: t.line, what: "`.rev()` into an accumulator".to_string() });
+            }
+        }
+    }
+    None
+}
+
+/// Method calls that heap-allocate.
+const ALLOC_DOT: &[&str] =
+    &["to_vec", "to_owned", "collect", "clone", "concat", "repeat", "into_owned", "to_string"];
+/// `Type::ctor(…)` pairs that heap-allocate.
+const ALLOC_TYPES: &[&str] = &[
+    "Vec", "String", "Box", "VecDeque", "BTreeMap", "BTreeSet", "HashMap", "HashSet", "Tensor",
+    "Rc", "Arc",
+];
+const ALLOC_CTORS: &[&str] =
+    &["new", "with_capacity", "from", "from_elem", "from_vec", "zeros", "filled", "randn"];
+
+/// Every direct allocation in token range `(a, b)` of `f`'s file, honoring
+/// `allow(allocation-freedom)` on the site line.
+pub fn direct_alloc_sites(
+    file: &LexedFile,
+    f: &FnSpan,
+    range: (usize, usize),
+) -> Vec<(u32, String)> {
+    let toks = &file.toks;
+    let mut out = Vec::new();
+    for k in body_indices(file, f) {
+        if k < range.0 || k > range.1 {
+            continue;
+        }
+        let t = &toks[k];
+        if file.is_suppressed(rules::ALLOCATION_FREEDOM, t.line) {
+            continue;
+        }
+        let dot_call = k > 0 && toks[k - 1].is_punct(".");
+        if dot_call
+            && ALLOC_DOT.contains(&t.text.as_str())
+            && toks.get(k + 1).is_some_and(|n| n.is_punct("("))
+        {
+            out.push((t.line, format!("`.{}()`", t.text)));
+            continue;
+        }
+        if (t.is_ident("vec") || t.is_ident("format"))
+            && toks.get(k + 1).is_some_and(|n| n.is_punct("!"))
+        {
+            out.push((t.line, format!("`{}!`", t.text)));
+            continue;
+        }
+        if k >= 2
+            && ALLOC_CTORS.contains(&t.text.as_str())
+            && toks[k - 1].is_punct("::")
+            && toks[k - 2].kind == TokKind::Ident
+            && ALLOC_TYPES.contains(&toks[k - 2].text.as_str())
+            && toks.get(k + 1).is_some_and(|n| n.is_punct("("))
+        {
+            out.push((t.line, format!("`{}::{}`", toks[k - 2].text, t.text)));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// lock facts (rule 6 raw material)
+// ---------------------------------------------------------------------------
+
+/// One lock acquisition: which field/binding it locks and how long the
+/// guard is live (token range; ends at the enclosing block's `}`, an
+/// explicit `drop(guard)`, or — for unbound temporaries — the statement).
+#[derive(Debug)]
+pub struct LockAcq {
+    /// Receiver key: the last field identifier (`self.inner.q.lock()` → `q`).
+    pub key: String,
+    /// `lock` / `read` / `write`.
+    pub method: String,
+    pub tok: usize,
+    /// Last token index at which the guard is considered live.
+    pub end: usize,
+    pub line: u32,
+}
+
+/// A `Condvar::wait*` call site.
+#[derive(Debug)]
+pub struct CvWait {
+    pub line: u32,
+    pub in_loop: bool,
+    pub method: String,
+}
+
+#[derive(Debug, Default)]
+pub struct LockFacts {
+    pub acqs: Vec<LockAcq>,
+    pub waits: Vec<CvWait>,
+}
+
+/// Token spans of `loop`/`while`/`for` bodies inside `f`.
+pub fn loop_spans(file: &LexedFile, f: &FnSpan) -> Vec<(usize, usize)> {
+    let toks = &file.toks;
+    let mut out = Vec::new();
+    for k in body_indices(file, f) {
+        let t = &toks[k];
+        if !(t.is_ident("loop") || t.is_ident("while") || t.is_ident("for")) {
+            continue;
+        }
+        if toks.get(k + 1).is_some_and(|n| n.is_punct("<")) {
+            continue; // `for<'a>` HRTB, not a loop
+        }
+        // find the body-opening `{` at paren/bracket depth 0
+        let mut depth = 0i32;
+        let mut m = k + 1;
+        let mut open = usize::MAX;
+        while m < toks.len() && m <= f.body_end {
+            let tm = &toks[m];
+            if tm.kind == TokKind::Punct {
+                match tm.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => {
+                        open = m;
+                        break;
+                    }
+                    ";" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            m += 1;
+        }
+        if open != usize::MAX {
+            out.push((open, super::lexer::match_brace(toks, open)));
+        }
+    }
+    out
+}
+
+/// Extract lock acquisitions and condvar waits from `f`'s body.
+///
+/// Heuristics (documented, test-pinned): `.lock()`/`.read()`/`.write()`
+/// dot-calls and the frontend's free `lock(&…)` helper count as
+/// acquisitions, keyed by the last field identifier of the receiver;
+/// `.wait*(…)` counts as a condvar wait only when the receiver name
+/// mentions `cv`/`cond` (so `ResponseHandle::wait` stays out of scope).
+pub fn lock_facts(file: &LexedFile, f: &FnSpan) -> LockFacts {
+    let toks = &file.toks;
+    let mut out = LockFacts::default();
+    for k in body_indices(file, f) {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident || !toks.get(k + 1).is_some_and(|n| n.is_punct("(")) {
+            continue;
+        }
+        let dot_call = k > 0 && toks[k - 1].is_punct(".");
+        let name = t.text.as_str();
+        if dot_call && (name == "wait" || name == "wait_timeout" || name == "wait_while") {
+            let recv = toks
+                .get(k.wrapping_sub(2))
+                .filter(|r| r.kind == TokKind::Ident)
+                .map(|r| r.text.to_ascii_lowercase())
+                .unwrap_or_default();
+            if recv.contains("cv") || recv.contains("cond") {
+                let in_loop =
+                    loop_spans(file, f).iter().any(|&(a, b)| k >= a && k <= b);
+                out.waits.push(CvWait { line: t.line, in_loop, method: t.text.clone() });
+            }
+            continue;
+        }
+        let key = if dot_call && (name == "lock" || name == "read" || name == "write") {
+            // `self.inner.q.lock()` → the field just before the method
+            match toks.get(k.wrapping_sub(2)) {
+                Some(r) if r.kind == TokKind::Ident && r.text != "self" => Some(r.text.clone()),
+                _ => None,
+            }
+        } else if !dot_call
+            && name == "lock"
+            && !toks[k.saturating_sub(1)].is_ident("fn")
+            && !toks[k.saturating_sub(1)].is_punct("::")
+        {
+            // the poison-recovering free helper: `lock(&self.inner.q)` —
+            // key on the last identifier of the argument path
+            let close = matching_paren(toks, k + 1);
+            toks[k + 2..close]
+                .iter()
+                .rev()
+                .find(|a| a.kind == TokKind::Ident && a.text != "self")
+                .map(|a| a.text.clone())
+        } else {
+            None
+        };
+        let Some(key) = key else { continue };
+        let end = guard_end(toks, f, k);
+        out.acqs.push(LockAcq { key, method: t.text.clone(), tok: k, end, line: t.line });
+    }
+    out
+}
+
+fn matching_paren(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// How long the guard from the acquisition at `acq` stays live.
+fn guard_end(toks: &[Tok], f: &FnSpan, acq: usize) -> usize {
+    // enclosing block end: the `}` that closes the block containing `acq`
+    let mut depth = 0i32;
+    let mut block_end = f.body_end;
+    let mut m = acq + 1;
+    while m <= f.body_end.min(toks.len().saturating_sub(1)) {
+        let t = &toks[m];
+        if t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct("}") {
+            if depth == 0 {
+                block_end = m;
+                break;
+            }
+            depth -= 1;
+        }
+        m += 1;
+    }
+    // bound to a `let`? then live to block end (or an explicit drop);
+    // otherwise a temporary: live for this statement only
+    let (sa, sb) = stmt_bounds(toks, acq);
+    let binding = toks[sa..acq].iter().position(|t| t.is_ident("let")).and_then(|p| {
+        let mut np = sa + p + 1;
+        if toks.get(np).is_some_and(|t| t.is_ident("mut")) {
+            np += 1;
+        }
+        toks.get(np).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.clone())
+    });
+    match binding {
+        None => sb.min(block_end),
+        Some(name) => {
+            // explicit `drop(name)` releases early
+            let mut m = sb + 1;
+            while m + 3 <= block_end {
+                if toks[m].is_ident("drop")
+                    && toks[m + 1].is_punct("(")
+                    && toks[m + 2].is_ident(&name)
+                    && toks[m + 3].is_punct(")")
+                {
+                    return m;
+                }
+                m += 1;
+            }
+            block_end
+        }
+    }
+}

@@ -206,7 +206,9 @@ impl SwitchPolicy for AutoSwitch {
         self.samples.push_back(z);
         self.sum += z;
         if self.samples.len() > self.window {
-            self.sum -= self.samples.pop_front().unwrap();
+            if let Some(oldest) = self.samples.pop_front() {
+                self.sum -= oldest;
+            }
         }
         // Guard against drift in the running sum for very long runs.
         if t % (16 * self.window.max(1)) == 0 {
@@ -294,7 +296,9 @@ impl SwitchPolicy for StalenessPolicy {
         if self.history.len() <= self.lag {
             return false; // not enough history yet
         }
-        let stale = self.history.pop_front().unwrap();
+        let Some(stale) = self.history.pop_front() else {
+            return false; // unreachable: len > lag >= 0 implies non-empty
+        };
         stale > 0.0 && stat.v_l1 / stale > self.bound
     }
 

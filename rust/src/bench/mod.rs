@@ -20,6 +20,7 @@ impl BenchResult {
     }
 
     pub fn min(&self) -> f64 {
+        // nm-lint: allow(float-determinism): min is exact and order-independent — no rounding to reassociate
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 

@@ -6,6 +6,7 @@
 //! cargo run --bin nm-lint -- --update-baseline   # grandfather current findings
 //! cargo run --bin nm-lint -- --no-baseline       # fail on ANY finding
 //! cargo run --bin nm-lint -- --root <dir>        # scan another checkout
+//! cargo run --bin nm-lint -- --format github     # ::error workflow annotations
 //! ```
 //!
 //! Exit codes: `0` clean (or every finding grandfathered), `1` new
@@ -15,12 +16,21 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 use step_nm::analysis::{self, report::Baseline};
 
+#[derive(PartialEq)]
+enum Format {
+    Human,
+    /// GitHub workflow-command annotations (`::error file=…,line=…::…`)
+    /// for new findings, so CI failures land on the offending line.
+    Github,
+}
+
 struct Opts {
     root: PathBuf,
     json_out: Option<PathBuf>,
     baseline_path: Option<PathBuf>,
     update_baseline: bool,
     no_baseline: bool,
+    format: Format,
 }
 
 fn parse_opts() -> Result<Opts, String> {
@@ -32,6 +42,7 @@ fn parse_opts() -> Result<Opts, String> {
         baseline_path: None,
         update_baseline: false,
         no_baseline: false,
+        format: Format::Human,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -51,11 +62,23 @@ fn parse_opts() -> Result<Opts, String> {
             }
             "--update-baseline" => opts.update_baseline = true,
             "--no-baseline" => opts.no_baseline = true,
+            "--format" => {
+                opts.format = match args.next().as_deref() {
+                    Some("human") => Format::Human,
+                    Some("github") => Format::Github,
+                    other => {
+                        return Err(format!(
+                            "--format takes `human` or `github`, got {other:?}"
+                        ))
+                    }
+                }
+            }
             "--help" | "-h" => {
                 println!(
                     "nm-lint: static analysis for the bit-identity and panic-freedom \
                      contracts\n\nUSAGE:\n  nm-lint [--root DIR] [--json PATH] \
-                     [--baseline PATH] [--update-baseline] [--no-baseline]"
+                     [--baseline PATH] [--update-baseline] [--no-baseline] \
+                     [--format human|github]"
                 );
                 std::process::exit(0);
             }
@@ -123,14 +146,28 @@ fn main() -> ExitCode {
 
     let new = report.new_findings(&baseline);
     for f in &report.findings {
-        let tag = if baseline.fingerprints.contains(&f.fingerprint) {
-            "grandfathered"
-        } else {
-            "NEW"
-        };
+        let is_new = !baseline.fingerprints.contains(&f.fingerprint);
+        if opts.format == Format::Github {
+            // workflow commands strip everything after a literal newline, so
+            // the annotation is single-line; %0A is the escaped form
+            if is_new {
+                println!(
+                    "::error file={},line={},title=nm-lint[{}]::{}",
+                    f.file,
+                    f.line,
+                    f.rule,
+                    f.message.replace('%', "%25").replace('\n', "%0A")
+                );
+            }
+            continue;
+        }
+        let tag = if is_new { "NEW" } else { "grandfathered" };
         println!("{}:{}: [{}] ({tag}) {}", f.file, f.line, f.rule, f.message);
         if !f.snippet.is_empty() {
             println!("    > {}", f.snippet);
+        }
+        for link in &f.chain {
+            println!("    via {}:{} fn `{}`", link.file, link.line, link.func);
         }
     }
     println!(

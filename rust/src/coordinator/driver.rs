@@ -39,6 +39,11 @@
 //! bench --bench substrate` gates `BENCH_train.json` on the same equality
 //! before timing driver overhead against the manual loop.
 
+// The driver owns the long-running training loop: config errors must
+// surface as `anyhow::Result` errors at the step that hits them, never
+// abort a run. `nm-lint` enforces the same contract transitively.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::autoswitch::{AutoSwitch, Clip, SwitchPolicy as SwitchDetector, ZOption};
 use crate::checkpoint::{join_u64, split_u64, Checkpoint};
 use crate::data::{Batch, BatchX, BatchY, MiniBatchStream};
@@ -494,7 +499,7 @@ impl<M: SparseModel> TrainDriver<M> {
                 .cfg
                 .checkpoint_path
                 .clone()
-                .expect("checkpoint_every validated against checkpoint_path");
+                .ok_or_else(|| anyhow::anyhow!("checkpoint_every set without checkpoint_path"))?;
             self.save_checkpoint(&path)?;
         }
         Ok(Some(loss))
@@ -541,11 +546,14 @@ impl<M: SparseModel> TrainDriver<M> {
         let (mut n, mut loss_sum, mut correct) = (0usize, 0.0f64, 0.0f64);
         for b in &batches {
             let (x, labels) = model_batch(b)?;
-            let logits = match &self.mode {
-                Mode::Dense { model, .. } => {
-                    model.forward(dense_eval.as_ref().expect("dense eval params"), &x)
+            // dense_eval is Some exactly when the mode is Dense (set just
+            // above), so the mismatched arm degrades to an error, not a panic
+            let logits = match (&self.mode, dense_eval.as_ref()) {
+                (Mode::Dense { model, .. }, Some(p)) => model.forward(p, &x),
+                (Mode::Finetune(s), _) => s.model().forward_packed(s.params(), &x),
+                (Mode::Dense { .. }, None) => {
+                    anyhow::bail!("dense eval parameters missing for dense-mode evaluation")
                 }
-                Mode::Finetune(s) => s.model().forward_packed(s.params(), &x),
             };
             let (l, _) = cross_entropy_with_grad(&logits, labels);
             loss_sum += l * labels.len() as f64;

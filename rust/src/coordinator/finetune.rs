@@ -27,6 +27,11 @@
 //! bench --bench substrate` records the step-throughput comparison to
 //! `BENCH_finetune.json`.
 
+// The fine-tune loop sits on the packed serve/train chain: state-pairing
+// mistakes must surface as `anyhow::Result` errors (or compile errors),
+// never abort mid-epoch. `nm-lint` enforces the same contract transitively.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::checkpoint::{join_u64, split_u64, Checkpoint};
 use crate::model::{Mlp, SparseModel};
 use crate::optim::{packed_adam_step, packed_phase2_step, AdamHp, RecipeState};
@@ -159,7 +164,10 @@ impl<M: SparseModel> FinetuneSession<M> {
             recipe.in_phase2(),
             "fine-tuning continues STEP after the phase switch; call switch_to_phase2 first"
         );
-        let v_star_dense = recipe.v_star.as_ref().expect("phase 2 carries v*");
+        let v_star_dense = recipe
+            .v_star
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("phase-2 recipe state lacks v*"))?;
         let params = pack_params(dense, &recipe.ratios);
         model.validate_packed_params(&params)?;
         let compact = |src: &[Tensor]| -> Vec<Vec<f32>> {
@@ -262,15 +270,13 @@ impl<M: SparseModel> FinetuneSession<M> {
                 PackedParam::Dense(t) => t.data_mut(),
                 PackedParam::Packed(p) => p.values_mut(),
             };
-            match self.mode {
-                FinetuneMode::Adam => {
-                    // nm-lint: allow(panic-freedom): constructors and the checkpoint loader pair Adam mode with v state
-                    let v = self.v.as_mut().expect("Adam carries v");
+            // constructors and the checkpoint loader pair each mode with
+            // its optimizer state, so the mismatched arms cannot be reached
+            match (self.mode, self.v.as_mut(), self.v_star.as_ref()) {
+                (FinetuneMode::Adam, Some(v), _) => {
                     packed_adam_step(w, &mut self.m[i], &mut v[i], g, self.t, self.lr, self.hp);
                 }
-                FinetuneMode::Phase2 => {
-                    // nm-lint: allow(panic-freedom): constructors and the checkpoint loader pair Phase2 mode with v*
-                    let v_star = self.v_star.as_ref().expect("Phase2 carries v*");
+                (FinetuneMode::Phase2, _, Some(v_star)) => {
                     packed_phase2_step(
                         w,
                         &mut self.m[i],
@@ -282,6 +288,7 @@ impl<M: SparseModel> FinetuneSession<M> {
                         self.hp.eps,
                     );
                 }
+                _ => debug_assert!(false, "optimizer mode without its state"),
             }
         }
         self.stats.steps += 1;
@@ -439,6 +446,7 @@ impl<M: SparseModel> FinetuneSession<M> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::optim::PureRecipe;

@@ -28,6 +28,7 @@ impl Prefetcher {
                     }
                 }
             })
+            // nm-lint: allow(panic-freedom): thread spawn fails only on resource exhaustion at session startup; there is no session to degrade into
             .expect("spawning prefetch thread");
         Self { req_tx, batch_rx, inflight: None, _handle: handle }
     }
@@ -41,6 +42,7 @@ impl Prefetcher {
         match self.inflight {
             Some(s) if s == step => {}
             _ => {
+                // nm-lint: allow(panic-freedom): training-side prefetch; a dead worker thread is unrecoverable and the panic surfaces its cause
                 self.req_tx.send(step).expect("prefetch worker gone");
                 self.inflight = Some(step);
             }
@@ -48,12 +50,14 @@ impl Prefetcher {
         // receive until the wanted step arrives (stale in-flight results
         // from an out-of-order jump are discarded)
         let batch = loop {
+            // nm-lint: allow(panic-freedom): training-side prefetch; a dead worker thread is unrecoverable and the panic surfaces its cause
             let (got, batch) = self.batch_rx.recv().expect("prefetch worker gone");
             if got == step {
                 break batch;
             }
         };
         // queue the next step so it generates during device execution
+        // nm-lint: allow(panic-freedom): training-side prefetch; a dead worker thread is unrecoverable and the panic surfaces its cause
         self.req_tx.send(step + 1).expect("prefetch worker gone");
         self.inflight = Some(step + 1);
         batch

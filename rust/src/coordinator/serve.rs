@@ -108,12 +108,12 @@ impl<M: SparseModel> BatchServer<M> {
 
     /// Stored weight bytes (compressed where packed).
     pub fn stored_bytes(&self) -> usize {
-        self.params.iter().map(PackedParam::stored_bytes).sum()
+        self.params.iter().map(PackedParam::stored_bytes).sum::<usize>()
     }
 
     /// Dense-equivalent weight bytes.
     pub fn dense_bytes(&self) -> usize {
-        self.params.iter().map(PackedParam::dense_bytes).sum()
+        self.params.iter().map(PackedParam::dense_bytes).sum::<usize>()
     }
 
     /// `stored_bytes / dense_bytes` — 0.53× at 2:4 for an all-sparse model.

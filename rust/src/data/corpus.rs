@@ -167,6 +167,7 @@ impl NextTokenTask {
     /// token *following* the window.
     fn convert(b: Batch) -> Batch {
         let BatchY::Tokens { ids, batch, seq } = b.y else {
+            // nm-lint: allow(panic-freedom): SyntheticCorpus yields Tokens by construction; this arm is unreachable
             panic!("SyntheticCorpus yields token targets")
         };
         let labels = (0..batch).map(|r| ids[r * seq + seq - 1] as usize).collect();

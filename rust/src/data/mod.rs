@@ -133,6 +133,7 @@ pub fn concat_batches(parts: &[Batch]) -> Batch {
             let mut data = Vec::with_capacity(total * dim);
             for b in parts {
                 let BatchX::Features(t) = &b.x else {
+                    // nm-lint: allow(panic-freedom): a single dataset emits one modality; mixing is a programming error, documented on the fn
                     panic!("concat_batches: mixed feature/token inputs")
                 };
                 assert_eq!(t.last_dim(), dim, "concat_batches: feature dim mismatch");
@@ -146,6 +147,7 @@ pub fn concat_batches(parts: &[Batch]) -> Batch {
             let mut total = 0;
             for b in parts {
                 let BatchX::Tokens { ids: i, batch, seq: s } = &b.x else {
+                    // nm-lint: allow(panic-freedom): a single dataset emits one modality; mixing is a programming error, documented on the fn
                     panic!("concat_batches: mixed feature/token inputs")
                 };
                 assert_eq!(*s, seq, "concat_batches: sequence length mismatch");
@@ -161,6 +163,7 @@ pub fn concat_batches(parts: &[Batch]) -> Batch {
                 .iter()
                 .flat_map(|b| match &b.y {
                     BatchY::Classes(v) => v.clone(),
+                    // nm-lint: allow(panic-freedom): a single dataset emits one modality; mixing is a programming error, documented on the fn
                     _ => panic!("concat_batches: mixed target kinds"),
                 })
                 .collect(),
@@ -170,6 +173,7 @@ pub fn concat_batches(parts: &[Batch]) -> Batch {
                 .iter()
                 .flat_map(|b| match &b.y {
                     BatchY::Values(v) => v.clone(),
+                    // nm-lint: allow(panic-freedom): a single dataset emits one modality; mixing is a programming error, documented on the fn
                     _ => panic!("concat_batches: mixed target kinds"),
                 })
                 .collect(),
@@ -180,6 +184,7 @@ pub fn concat_batches(parts: &[Batch]) -> Batch {
             let mut total = 0;
             for b in parts {
                 let BatchY::Tokens { ids: i, batch, seq: s } = &b.y else {
+                    // nm-lint: allow(panic-freedom): a single dataset emits one modality; mixing is a programming error, documented on the fn
                     panic!("concat_batches: mixed target kinds")
                 };
                 assert_eq!(*s, seq, "concat_batches: target sequence length mismatch");

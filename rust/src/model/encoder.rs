@@ -97,6 +97,7 @@ impl<'a> WeightsView<'a> {
             WeightsView::Dense(p) => &p[i],
             WeightsView::Packed { params, .. } => params[i]
                 .as_dense()
+                // nm-lint: allow(panic-freedom): only the dense-always parameter indices reach this accessor — packing eligibility is fixed by sparse_flags at pack time
                 .expect("embeddings, biases and the head are never packed"),
         }
     }
@@ -675,6 +676,7 @@ impl TokenEncoder {
             .into_iter()
             .map(|g| match g {
                 PackedGrad::Dense(t) => t,
+                // nm-lint: allow(panic-freedom): core_loss_and_grad returns Compact only for packed views; this branch is the Dense view
                 PackedGrad::Compact(_) => unreachable!("dense path yields dense grads"),
             })
             .collect();

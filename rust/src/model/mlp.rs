@@ -93,17 +93,22 @@ impl Mlp {
             reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
             &reshaped
         };
-        let mut h: Option<Tensor> = None;
-        for l in 0..self.n_layers() {
-            let input = h.as_ref().unwrap_or(x2d);
-            let mut next = matmul(input, &params[2 * l]);
+        // peel layer 0 so the accumulator is never empty (no Option, no
+        // panic path) — op order is identical to the fused loop
+        let mut h = matmul(x2d, &params[0]);
+        add_bias(&mut h, &params[1]);
+        if self.n_layers() > 1 {
+            h = relu(&h);
+        }
+        for l in 1..self.n_layers() {
+            let mut next = matmul(&h, &params[2 * l]);
             add_bias(&mut next, &params[2 * l + 1]);
             if l != self.n_layers() - 1 {
                 next = relu(&next);
             }
-            h = Some(next);
+            h = next;
         }
-        h.expect("MLP has at least one layer")
+        h
     }
 
     /// Forward pass over **packed** weights: logits `[batch, n_classes]`.
@@ -250,7 +255,7 @@ impl Mlp {
             }
             acts.push(h);
         }
-        let logits = acts.last().unwrap();
+        let logits = &acts[n_layers - 1];
         let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
 
         // backward
@@ -360,8 +365,7 @@ impl Mlp {
             }
             acts.push(h);
         }
-        // nm-lint: allow(panic-freedom): acts holds n_layers >= 1 activations by construction
-        let logits = acts.last().unwrap();
+        let logits = &acts[n_layers - 1];
         let (loss, mut delta) = cross_entropy_with_grad(logits, labels);
 
         // backward
@@ -495,7 +499,7 @@ impl Mlp {
             params,
             sparse_indices,
             kind: "classify".to_string(),
-            n_classes: *self.sizes.last().expect("MLP has layers"),
+            n_classes: self.sizes[self.sizes.len() - 1],
             dim,
             batch,
             seq: None,
@@ -513,7 +517,7 @@ impl super::SparseModel for Mlp {
     }
 
     fn out_dim(&self) -> usize {
-        *self.sizes.last().expect("MLP has layers")
+        self.sizes[self.sizes.len() - 1]
     }
 
     fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {

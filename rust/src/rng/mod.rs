@@ -172,7 +172,7 @@ impl Zipf {
             acc += 1.0 / (k as f64).powf(s);
             cdf.push(acc);
         }
-        let total = *cdf.last().unwrap();
+        let total = acc; // == *cdf.last(): the final accumulated mass
         for c in cdf.iter_mut() {
             *c /= total;
         }
@@ -181,7 +181,7 @@ impl Zipf {
 
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }

@@ -58,6 +58,7 @@ impl Value {
     pub fn as_tensor(&self) -> &Tensor {
         match self {
             Value::F32(t) => t,
+            // nm-lint: allow(panic-freedom): dtype is validated against the manifest before values reach this accessor; a mismatch is a programming error
             Value::I32 { .. } => panic!("expected f32 value, got i32"),
         }
     }
@@ -65,6 +66,7 @@ impl Value {
     pub fn into_tensor(self) -> Tensor {
         match self {
             Value::F32(t) => t,
+            // nm-lint: allow(panic-freedom): dtype is validated against the manifest before values reach this accessor; a mismatch is a programming error
             Value::I32 { .. } => panic!("expected f32 value, got i32"),
         }
     }

@@ -152,6 +152,7 @@ impl Tensor {
     }
 
     pub fn sum(&self) -> f64 {
+        // nm-lint: allow(float-determinism): sequential left-to-right f64 widening sum with a fixed iteration order — this IS the oracle accumulation
         self.data.iter().map(|&x| x as f64).sum()
     }
 

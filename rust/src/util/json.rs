@@ -164,7 +164,9 @@ impl Json {
                     }
                     write_escaped(k, out);
                     out.push(':');
-                    o.get(k).unwrap().write(out);
+                    if let Some(v) = o.get(k) {
+                        v.write(out);
+                    }
                 }
                 out.push('}');
             }
@@ -325,7 +327,9 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // consume one UTF-8 code point
                     let rest = std::str::from_utf8(&self.b[self.i..])?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        anyhow::bail!("truncated string literal");
+                    };
                     s.push(c);
                     self.i += c.len_utf8();
                 }

@@ -583,3 +583,575 @@ fn repo_tree_is_clean_against_the_checked_in_baseline() {
         fresh.join("\n")
     );
 }
+
+// ---------------------------------------------------------------------------
+// v2 — call-graph construction
+// ---------------------------------------------------------------------------
+
+use step_nm::analysis::graph::{CrateGraph, LexedFile};
+
+/// Lint a set of fixture files together (the interprocedural passes need
+/// the whole "crate" at once).
+fn lint_many(files: &[(&str, &str)]) -> Report {
+    analyze(&AnalysisInput {
+        files: files.iter().map(|(p, t)| SourceFile::new(*p, *t)).collect(),
+        test_corpus: Vec::new(),
+    })
+}
+
+fn graph_of(files: &[(&str, &str)]) -> (Vec<LexedFile>, CrateGraph) {
+    let lexed: Vec<LexedFile> =
+        files.iter().map(|(p, t)| LexedFile::lex(p, t)).collect();
+    let graph = CrateGraph::build(&lexed);
+    (lexed, graph)
+}
+
+#[test]
+fn free_fn_calls_resolve_within_and_across_files() {
+    let (_, g) = graph_of(&[
+        ("rust/src/a.rs", "pub fn caller() -> u32 {\n    helper()\n}\n"),
+        ("rust/src/b.rs", "pub fn helper() -> u32 {\n    7\n}\n"),
+    ]);
+    let caller = g.find_fns("caller")[0];
+    let helper = g.find_fns("helper")[0];
+    assert!(g.has_edge(caller, helper));
+}
+
+#[test]
+fn same_name_free_fns_in_different_modules_are_all_may_call_targets() {
+    let (_, g) = graph_of(&[
+        ("rust/src/a.rs", "pub fn caller() -> u32 {\n    helper()\n}\n"),
+        ("rust/src/b.rs", "pub fn helper() -> u32 {\n    1\n}\n"),
+        ("rust/src/c.rs", "pub fn helper() -> u32 {\n    2\n}\n"),
+    ]);
+    let caller = g.find_fns("caller")[0];
+    let helpers = g.find_fns("helper");
+    assert_eq!(helpers.len(), 2);
+    // conservative may-call: without type information both are reachable
+    for h in helpers {
+        assert!(g.has_edge(caller, h), "edge to every same-name free fn");
+    }
+}
+
+#[test]
+fn method_calls_fan_out_to_every_impl_of_the_name() {
+    let (files, g) = graph_of(&[
+        (
+            "rust/src/a.rs",
+            "pub fn dispatch(h: &dyn Handler) -> u32 {\n    h.handle()\n}\n",
+        ),
+        (
+            "rust/src/b.rs",
+            "pub trait Handler {\n    fn handle(&self) -> u32;\n}\n\
+             pub struct Safe;\n\
+             impl Handler for Safe {\n    fn handle(&self) -> u32 {\n        0\n    }\n}\n\
+             pub struct Risky;\n\
+             impl Handler for Risky {\n    fn handle(&self) -> u32 {\n        1\n    }\n}\n",
+        ),
+    ]);
+    let dispatch = g.find_fns("dispatch")[0];
+    let impls: Vec<usize> = g
+        .find_fns("handle")
+        .into_iter()
+        .filter(|&i| g.span_of(&files, i).body_start != usize::MAX)
+        .collect();
+    // `.handle()` may-calls both impl bodies (the bodyless trait decl
+    // contributes no summary either way)
+    assert_eq!(impls.len(), 2);
+    for i in impls {
+        assert!(g.has_edge(dispatch, i));
+    }
+}
+
+#[test]
+fn path_calls_resolve_by_owner_segment_only() {
+    let (_, g) = graph_of(&[
+        (
+            "rust/src/a.rs",
+            "pub fn build() -> u32 {\n    Foo::make()\n}\n",
+        ),
+        (
+            "rust/src/b.rs",
+            "pub struct Foo;\nimpl Foo {\n    pub fn make() -> u32 {\n        1\n    }\n}\n\
+             pub struct Bar;\nimpl Bar {\n    pub fn make() -> u32 {\n        2\n    }\n}\n",
+        ),
+    ]);
+    let build = g.find_fns("build")[0];
+    let makes = g.find_fns("make");
+    assert_eq!(makes.len(), 2);
+    let reachable: Vec<usize> =
+        makes.into_iter().filter(|&m| g.has_edge(build, m)).collect();
+    assert_eq!(reachable.len(), 1, "Foo::make only, not Bar::make");
+}
+
+#[test]
+fn cfg_test_callers_contribute_no_edges() {
+    let (_, g) = graph_of(&[
+        (
+            "rust/src/a.rs",
+            "#[cfg(test)]\nmod tests {\n    fn probe() -> u32 {\n        helper()\n    }\n}\n",
+        ),
+        ("rust/src/b.rs", "pub fn helper() -> u32 {\n    1\n}\n"),
+    ]);
+    let probe = g.find_fns("probe")[0];
+    assert!(g.fns[probe].is_test);
+    assert!(g.calls[probe].is_empty(), "test fns own no call sites");
+}
+
+// ---------------------------------------------------------------------------
+// v2 — transitive panic/float chains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_path_reaching_a_panic_through_helpers_is_flagged_with_the_chain() {
+    let rep = lint_many(&[
+        (
+            "rust/src/coordinator/serve.rs",
+            "use crate::model::helpers::decode;\n\
+             pub fn serve_batch(xs: &[f32]) -> f32 {\n    decode(xs)\n}\n",
+        ),
+        (
+            "rust/src/model/helpers.rs",
+            "pub fn decode(xs: &[f32]) -> f32 {\n    lookup(xs)\n}\n\
+             fn lookup(xs: &[f32]) -> f32 {\n    *xs.first().unwrap()\n}\n",
+        ),
+    ]);
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::PANIC_FREEDOM)
+        .expect("transitive panic finding");
+    assert_eq!(f.file, "rust/src/coordinator/serve.rs");
+    assert_eq!(f.chain.len(), 3, "serve_batch → decode → lookup");
+    assert_eq!(f.chain[0].func, "serve_batch");
+    assert_eq!(f.chain[1].func, "decode");
+    assert_eq!(f.chain[2].func, "lookup");
+    assert_eq!(f.chain[2].file, "rust/src/model/helpers.rs");
+    assert!(f.leaf_what.contains("unwrap"));
+    assert!(f.message.contains("serve_batch"));
+}
+
+#[test]
+fn a_suppression_on_any_chain_link_kills_the_whole_chain() {
+    let rep = lint_many(&[
+        (
+            "rust/src/coordinator/serve.rs",
+            "use crate::model::helpers::decode;\n\
+             pub fn serve_batch(xs: &[f32]) -> f32 {\n    decode(xs)\n}\n",
+        ),
+        (
+            "rust/src/model/helpers.rs",
+            "pub fn decode(xs: &[f32]) -> f32 {\n\
+             \x20   // nm-lint: allow(panic-freedom): xs verified non-empty by the batch validator\n\
+             \x20   lookup(xs)\n}\n\
+             fn lookup(xs: &[f32]) -> f32 {\n    *xs.first().unwrap()\n}\n",
+        ),
+    ]);
+    assert!(
+        !hit_rules(&rep).contains(&rules::PANIC_FREEDOM),
+        "an allow() on an intermediate call site breaks the edge: {:?}",
+        rep.findings
+    );
+}
+
+#[test]
+fn kernel_fn_reaching_an_outside_float_reduction_is_flagged() {
+    let rep = lint_many(&[
+        (
+            "rust/src/tensor/ops.rs",
+            "use crate::util::stats::mean;\n\
+             pub fn normalize(v: &[f32]) -> f32 {\n    mean(v)\n}\n",
+        ),
+        (
+            "rust/src/util/stats.rs",
+            "pub fn mean(v: &[f32]) -> f32 {\n\
+             \x20   let s: f32 = v.iter().sum();\n\
+             \x20   s / v.len() as f32\n}\n",
+        ),
+    ]);
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::FLOAT_DETERMINISM)
+        .expect("transitive float finding");
+    assert_eq!(f.file, "rust/src/tensor/ops.rs");
+    assert_eq!(f.chain.len(), 2, "normalize → mean");
+    assert_eq!(f.chain[1].file, "rust/src/util/stats.rs");
+    assert!(f.leaf_what.contains("sum"));
+}
+
+#[test]
+fn cfg_test_serve_callers_raise_no_transitive_findings() {
+    let rep = lint_many(&[
+        (
+            "rust/src/coordinator/serve.rs",
+            "#[cfg(test)]\nmod tests {\n\
+             \x20   pub fn serve_batch(xs: &[f32]) -> f32 {\n\
+             \x20       crate::model::helpers::decode(xs)\n    }\n}\n",
+        ),
+        (
+            "rust/src/model/helpers.rs",
+            "pub fn decode(xs: &[f32]) -> f32 {\n    *xs.first().unwrap()\n}\n",
+        ),
+    ]);
+    assert!(hit_rules(&rep).is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn chain_fingerprints_survive_line_shifts_at_both_endpoints() {
+    let files = |serve_pad: &str, helper_pad: &str| {
+        vec![
+            (
+                "rust/src/coordinator/serve.rs".to_string(),
+                format!(
+                    "{serve_pad}use crate::model::helpers::decode;\n\
+                     pub fn serve_batch(xs: &[f32]) -> f32 {{\n    decode(xs)\n}}\n"
+                ),
+            ),
+            (
+                "rust/src/model/helpers.rs".to_string(),
+                format!(
+                    "{helper_pad}pub fn decode(xs: &[f32]) -> f32 {{\n    lookup(xs)\n}}\n\
+                     fn lookup(xs: &[f32]) -> f32 {{\n    *xs.first().unwrap()\n}}\n"
+                ),
+            ),
+        ]
+    };
+    let lint = |fs: Vec<(String, String)>| {
+        analyze(&AnalysisInput {
+            files: fs.iter().map(|(p, t)| SourceFile::new(p.clone(), t.clone())).collect(),
+            test_corpus: Vec::new(),
+        })
+    };
+    let before = lint(files("", ""));
+    let after = lint(files("// pad\n// pad\n", "// pad\n"));
+    let fp = |rep: &Report| {
+        rep.findings
+            .iter()
+            .find(|f| f.rule == rules::PANIC_FREEDOM)
+            .expect("chain finding")
+            .fingerprint
+            .clone()
+    };
+    assert_eq!(
+        fp(&before),
+        fp(&after),
+        "chain identity is keyed on endpoints, not line numbers"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// v2 — rule 6: lock-discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn condvar_wait_outside_a_predicate_loop_is_flagged() {
+    let rep = lint_one(
+        "rust/src/coordinator/frontend/queue.rs",
+        "use std::sync::{Condvar, Mutex};\n\
+         pub struct Q {\n    m: Mutex<usize>,\n    cv: Condvar,\n}\n\
+         impl Q {\n\
+         \x20   pub fn bad_wait(&self) -> usize {\n\
+         \x20       let Ok(mut g) = self.m.lock() else { return 0 };\n\
+         \x20       if let Ok(ng) = self.cv.wait(g) {\n\
+         \x20           g = ng;\n\
+         \x20       } else {\n\
+         \x20           return 0;\n\
+         \x20       }\n\
+         \x20       *g\n    }\n\
+         \x20   pub fn good_wait(&self) -> usize {\n\
+         \x20       let Ok(mut g) = self.m.lock() else { return 0 };\n\
+         \x20       while *g == 0 {\n\
+         \x20           let Ok(ng) = self.cv.wait(g) else { return 0 };\n\
+         \x20           g = ng;\n\
+         \x20       }\n\
+         \x20       *g\n    }\n\
+         }\n",
+    );
+    let hits: Vec<&_> = rep
+        .findings
+        .iter()
+        .filter(|f| f.rule == rules::LOCK_DISCIPLINE)
+        .collect();
+    assert_eq!(hits.len(), 1, "only the wait outside the loop: {:?}", rep.findings);
+    assert!(hits[0].message.contains("bad_wait"));
+    assert!(hits[0].message.contains("spurious"));
+}
+
+#[test]
+fn inverted_pairwise_lock_order_is_flagged() {
+    let src_ordered = "\
+use std::sync::Mutex;
+pub struct S {
+    queue: Mutex<u32>,
+    stats: Mutex<u32>,
+}
+impl S {
+    pub fn fwd(&self) -> u32 {
+        let Ok(ga) = self.queue.lock() else { return 0 };
+        let Ok(gb) = self.stats.lock() else { return 0 };
+        *ga + *gb
+    }
+    pub fn also_fwd(&self) -> u32 {
+        let Ok(ga) = self.queue.lock() else { return 0 };
+        let Ok(gb) = self.stats.lock() else { return 0 };
+        *ga * *gb
+    }
+}
+";
+    let clean = lint_one("rust/src/coordinator/serve.rs", src_ordered);
+    assert!(
+        !hit_rules(&clean).contains(&rules::LOCK_DISCIPLINE),
+        "consistent order is fine: {:?}",
+        clean.findings
+    );
+
+    let src_inverted = src_ordered.replace(
+        "    pub fn also_fwd(&self) -> u32 {\n        let Ok(ga) = self.queue.lock() else { return 0 };\n        let Ok(gb) = self.stats.lock() else { return 0 };",
+        "    pub fn rev(&self) -> u32 {\n        let Ok(gb) = self.stats.lock() else { return 0 };\n        let Ok(ga) = self.queue.lock() else { return 0 };",
+    );
+    let rep = lint_one("rust/src/coordinator/serve.rs", &src_inverted);
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::LOCK_DISCIPLINE)
+        .expect("inversion finding");
+    assert!(f.message.contains("lock order inversion"), "{}", f.message);
+    assert!(f.message.contains("queue") && f.message.contains("stats"));
+}
+
+#[test]
+fn relocking_the_same_mutex_under_its_own_guard_is_flagged() {
+    let rep = lint_one(
+        "rust/src/coordinator/serve.rs",
+        "use std::sync::Mutex;\n\
+         pub struct S {\n    queue: Mutex<u32>,\n}\n\
+         impl S {\n\
+         \x20   pub fn relock(&self) -> u32 {\n\
+         \x20       let Ok(g1) = self.queue.lock() else { return 0 };\n\
+         \x20       let Ok(g2) = self.queue.lock() else { return 0 };\n\
+         \x20       *g1 + *g2\n    }\n\
+         }\n",
+    );
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::LOCK_DISCIPLINE)
+        .expect("re-lock finding");
+    assert!(f.message.contains("re-locked"), "{}", f.message);
+    assert!(f.message.contains("self-deadlock"));
+}
+
+#[test]
+fn a_may_panic_construct_while_a_guard_is_live_is_flagged() {
+    let rep = lint_one(
+        "rust/src/coordinator/serve.rs",
+        "use std::sync::Mutex;\n\
+         pub struct S {\n    queue: Mutex<u32>,\n}\n\
+         impl S {\n\
+         \x20   pub fn poison(&self) -> u32 {\n\
+         \x20       let Ok(g) = self.queue.lock() else { return 0 };\n\
+         \x20       let v = *g;\n\
+         \x20       v.checked_add(1).unwrap()\n    }\n\
+         }\n",
+    );
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::LOCK_DISCIPLINE)
+        .expect("poison-safety finding");
+    assert!(f.message.contains("poisons the lock"), "{}", f.message);
+}
+
+#[test]
+fn a_panicking_callee_under_a_guard_is_flagged_with_its_chain() {
+    let rep = lint_many(&[
+        (
+            "rust/src/coordinator/serve.rs",
+            "use std::sync::Mutex;\n\
+             use crate::model::helpers::decode;\n\
+             pub struct S {\n    queue: Mutex<u32>,\n}\n\
+             impl S {\n\
+             \x20   pub fn poison_via_call(&self) -> u32 {\n\
+             \x20       let Ok(g) = self.queue.lock() else { return 0 };\n\
+             \x20       decode(*g)\n    }\n\
+             }\n",
+        ),
+        (
+            "rust/src/model/helpers.rs",
+            "pub fn decode(x: u32) -> u32 {\n    x.checked_mul(2).unwrap()\n}\n",
+        ),
+    ]);
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::LOCK_DISCIPLINE)
+        .expect("poison-safety chain finding");
+    assert!(f.message.contains("decode"), "{}", f.message);
+    assert_eq!(f.chain.len(), 2, "poison_via_call → decode");
+    assert_eq!(f.chain[1].file, "rust/src/model/helpers.rs");
+}
+
+// ---------------------------------------------------------------------------
+// v2 — rule 7: allocation-freedom
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allocation_inside_a_kernel_hot_loop_is_flagged_hoisted_is_not() {
+    let rep = lint_one(
+        "rust/src/sparsity/packed.rs",
+        "pub fn packed_scale(xs: &mut [f32], k: f32) {\n\
+         \x20   for x in xs.iter_mut() {\n\
+         \x20       let tmp = vec![0.0f32; 4];\n\
+         \x20       *x = *x * k + tmp.len() as f32;\n\
+         \x20   }\n\
+         }\n\
+         pub fn packed_scale_into(xs: &mut [f32], k: f32, scratch: &mut [f32]) {\n\
+         \x20   let bias = scratch.len() as f32;\n\
+         \x20   for x in xs.iter_mut() {\n\
+         \x20       *x = *x * k + bias;\n\
+         \x20   }\n\
+         }\n",
+    );
+    let hits: Vec<&_> = rep
+        .findings
+        .iter()
+        .filter(|f| f.rule == rules::ALLOCATION_FREEDOM)
+        .collect();
+    assert_eq!(hits.len(), 1, "{:?}", rep.findings);
+    assert!(hits[0].message.contains("packed_scale"));
+    assert!(hits[0].message.contains("vec!"));
+}
+
+#[test]
+fn an_allocating_callee_inside_a_kernel_hot_loop_is_flagged_with_its_chain() {
+    let rep = lint_many(&[
+        (
+            "rust/src/sparsity/packed.rs",
+            "use crate::util::scratch::fresh_buffer;\n\
+             pub fn packed_gather(xs: &mut [f32]) {\n\
+             \x20   for x in xs.iter_mut() {\n\
+             \x20       let tmp = fresh_buffer();\n\
+             \x20       *x += tmp.len() as f32;\n\
+             \x20   }\n\
+             }\n",
+        ),
+        (
+            "rust/src/util/scratch.rs",
+            "pub fn fresh_buffer() -> Vec<f32> {\n    Vec::with_capacity(8)\n}\n",
+        ),
+    ]);
+    let f = rep
+        .findings
+        .iter()
+        .find(|f| f.rule == rules::ALLOCATION_FREEDOM)
+        .expect("transitive allocation finding");
+    assert!(f.message.contains("fresh_buffer"), "{}", f.message);
+    assert_eq!(f.chain.len(), 2, "packed_gather → fresh_buffer");
+    assert!(f.leaf_what.contains("with_capacity"));
+}
+
+#[test]
+fn non_hot_kernel_fns_may_allocate_in_loops() {
+    let rep = lint_one(
+        "rust/src/sparsity/packed.rs",
+        "pub fn build_layout(n: usize) -> Vec<Vec<u32>> {\n\
+         \x20   let mut out = Vec::new();\n\
+         \x20   for i in 0..n {\n\
+         \x20       out.push(vec![i as u32]);\n\
+         \x20   }\n\
+         \x20   out\n\
+         }\n",
+    );
+    assert!(
+        !hit_rules(&rep).contains(&rules::ALLOCATION_FREEDOM),
+        "setup/pack-time code is out of scope: {:?}",
+        rep.findings
+    );
+}
+
+// ---------------------------------------------------------------------------
+// v2 — lexer robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_strings_containing_fn_do_not_create_fn_spans() {
+    let out = lex("pub fn real() -> usize {\n    let s = r#\"fn fake() {}\"#;\n    s.len()\n}\n");
+    let fns = fn_spans(&out.toks);
+    assert_eq!(fns.len(), 1);
+    assert_eq!(fns[0].name, "real");
+
+    let out = lex("fn real2() {\n    let s = br#\"fn nope() {}\"#;\n    let _ = s;\n}\n");
+    let fns = fn_spans(&out.toks);
+    assert_eq!(fns.len(), 1);
+    assert_eq!(fns[0].name, "real2");
+}
+
+#[test]
+fn char_literals_and_lifetimes_are_distinguished() {
+    use step_nm::analysis::lexer::TokKind;
+    let out = lex("fn f<'a>(x: &'a u8) -> u8 {\n    let c = 'x';\n    *x + c as u8\n}\n");
+    let lifetimes: Vec<&_> =
+        out.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+    let chars: Vec<&_> =
+        out.toks.iter().filter(|t| t.kind == TokKind::CharLit).collect();
+    assert_eq!(lifetimes.len(), 2, "two 'a positions");
+    assert_eq!(chars.len(), 1);
+    assert_eq!(chars[0].text, "'x'");
+    assert_eq!(fn_spans(&out.toks).len(), 1, "the fn span survives the quotes");
+}
+
+#[test]
+fn non_ascii_char_literals_lex_as_one_token() {
+    use step_nm::analysis::lexer::TokKind;
+    let out = lex("fn g() -> char {\n    'é'\n}\n");
+    let chars: Vec<&_> =
+        out.toks.iter().filter(|t| t.kind == TokKind::CharLit).collect();
+    assert_eq!(chars.len(), 1);
+    assert_eq!(chars[0].text, "'é'");
+    assert_eq!(fn_spans(&out.toks).len(), 1);
+}
+
+#[test]
+fn raw_identifiers_keep_their_prefix_and_name_fns() {
+    let out = lex("fn r#match(r#type: u32) -> u32 {\n    r#type\n}\n");
+    let fns = fn_spans(&out.toks);
+    assert_eq!(fns.len(), 1);
+    assert_eq!(fns[0].name, "r#match", "raw identifier is one Ident token");
+}
+
+#[test]
+fn nested_generics_in_signatures_do_not_swallow_the_body() {
+    let out = lex("fn h<T: Iterator<Item = Vec<u8>>>(t: T) -> usize {\n    t.count()\n}\n");
+    let fns = fn_spans(&out.toks);
+    assert_eq!(fns.len(), 1);
+    assert_eq!(fns[0].name, "h");
+    assert!(fns[0].body_start < fns[0].body_end, "body located past the generics");
+}
+
+#[test]
+fn method_call_runs_lex_into_the_expected_token_shapes() {
+    use step_nm::analysis::lexer::TokKind;
+    let out = lex("fn m(q: &std::sync::Mutex<u32>) -> u32 {\n    *q.lock().unwrap()\n}\n");
+    let tail: Vec<(TokKind, &str)> = out
+        .toks
+        .iter()
+        .rev()
+        .take(8)
+        .map(|t| (t.kind, t.text.as_str()))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    let expect = [
+        (TokKind::Punct, "."),
+        (TokKind::Ident, "lock"),
+        (TokKind::Punct, "("),
+        (TokKind::Punct, ")"),
+        (TokKind::Punct, "."),
+        (TokKind::Ident, "unwrap"),
+        (TokKind::Punct, "("),
+        (TokKind::Punct, ")"),
+    ];
+    assert_eq!(&tail[..], &expect[..], "the `.name(` shape the rules key on");
+}
