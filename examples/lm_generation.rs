@@ -1,0 +1,131 @@
+//! Autoregressive generation, end to end and fully offline: train the
+//! causal [`TokenDecoder`] (separate-QKV pre-LayerNorm blocks — the legacy
+//! manifest layout) with the STEP recipe on the synthetic corpus, pack the
+//! learned 2:4 sparsity, and decode token-by-token from the compressed
+//! weights through [`BatchGenerator`]'s KV cache:
+//!
+//!   1. dense Adam precondition → fixed-step switch → frozen-v* mask
+//!      learning (`TrainDriver` over a seed-shuffled `MiniBatchStream`,
+//!      next-token objective at the window's last position),
+//!   2. pack at phase-2 exit: the six projection matrices of every block
+//!      (`wq wk wv wo fc1_w fc2_w`) compress to N:M storage,
+//!   3. batched greedy generation over the packed weights — ragged prompts
+//!      advance in lock step, finished sequences are evicted from the KV
+//!      cache — checked **bit-identical** to the dense masked decoder
+//!      recomputing every prefix from scratch (the repo's generation
+//!      contract: the cache is a pure reordering of the same arithmetic),
+//!   4. the legacy-manifest dispatch loop: `model_info` → `model_from_info`
+//!      → `AnyModel::Decoder` → `BatchServer::generator()` — the path a
+//!      checkpointed manifest takes back to a serving generator.
+//!
+//! ```bash
+//! cargo run --release --example lm_generation
+//! ```
+
+use std::sync::Arc;
+
+use step_nm::coordinator::{BatchGenerator, GenerateConfig, SwitchPolicy};
+use step_nm::data::{Dataset, MiniBatchStream, NextTokenTask, SyntheticCorpus};
+use step_nm::model::TokenDecoder;
+use step_nm::optim::{AdamHp, PureRecipe, RecipeState};
+use step_nm::prelude::*;
+use step_nm::tensor::argmax_rows;
+
+fn main() -> anyhow::Result<()> {
+    let ratio = NmRatio::new(2, 4);
+
+    // A small causal decoder: vocab 48, d=16, 2 heads, ffn 32, 2 blocks.
+    // Training windows are 12 tokens; max_seq 16 leaves generation headroom.
+    let dec = TokenDecoder::new(48, 16, 2, 32, 2, 16);
+    let corpus = SyntheticCorpus::new(48, 12, 8_000, 800, 11);
+    let task = NextTokenTask::new(corpus);
+    let ds: Arc<dyn Dataset> = Arc::new(task);
+    let stream = MiniBatchStream::new(ds, 512, 16, 11)?; // 32 batches/epoch
+
+    // ---- 1. STEP training: dense precondition → mask learning ------------
+    let mut rng = Pcg64::new(11);
+    let params = dec.init(&mut rng);
+    let recipe = RecipeState::for_model(
+        PureRecipe::Step { lam: 2e-4 },
+        &dec,
+        &params,
+        ratio,
+        2e-3,
+        AdamHp::default(),
+    );
+    let total_steps = stream.steps_for(2);
+    let mut driver = TrainDriver::new_dense(
+        dec.clone(),
+        params,
+        recipe,
+        stream,
+        DriverConfig {
+            epochs: 2,
+            eval_every: (total_steps / 2).max(1),
+            switch: SwitchPolicy::At(total_steps / 2 + 1),
+            ..DriverConfig::default()
+        },
+    )?;
+    let report = driver.run()?;
+    println!(
+        "trained {} STEP steps (phase 2 from step {}): next-token acc {:.3}, loss {:.4}",
+        report.steps, report.switch_step, report.final_eval.metric, report.final_eval.loss
+    );
+
+    // ---- 2. pack the learned sparsity -------------------------------------
+    let final_params = driver.dense_params().expect("dense mode").to_vec();
+    let masked = dec.masked_params(&final_params, ratio); // the dense oracle
+    let packed = dec.pack_params(&final_params, ratio);
+    let gen = BatchGenerator::new(dec.clone(), packed.clone())?;
+
+    // ---- 3. batched KV-cached greedy generation ---------------------------
+    // Ragged prompts advance in lock step; finished rows leave the cache.
+    let prompts: Vec<Vec<usize>> = vec![vec![1], vec![2, 3], vec![4, 5, 6, 7], vec![8]];
+    let cfg = GenerateConfig { max_new_tokens: 8, eot: None };
+    let out = gen.generate(&prompts, &cfg)?;
+    println!(
+        "generated {} tokens over {} batched decode steps from packed weights",
+        out.new_tokens, out.steps
+    );
+    for (p, seq) in prompts.iter().zip(&out.tokens) {
+        println!("  prompt {:?} → {:?}", p, &seq[p.len()..]);
+    }
+
+    // The contract: every trajectory equals the dense masked decoder run
+    // greedily with a full from-scratch recompute at each step — the KV
+    // cache may only reorder work, never change bits.
+    for (p, got) in prompts.iter().zip(&out.tokens) {
+        let mut toks = p.clone();
+        while toks.len() < dec.max_seq && toks.len() - p.len() < cfg.max_new_tokens {
+            let x = Tensor::new(&[1, toks.len()], toks.iter().map(|&t| t as f32).collect());
+            let logits = dec.forward(&masked, &x);
+            toks.push(argmax_rows(&logits)[0]);
+        }
+        anyhow::ensure!(
+            &toks == got,
+            "KV-cached generation diverged from the dense oracle"
+        );
+    }
+    println!("every trajectory bit-identical to the dense full-recompute oracle ✓");
+
+    // ---- 4. the legacy-manifest dispatch loop -----------------------------
+    // A decoder round-trips through its manifest description — the layout
+    // `model_from_info` used to reject — and the rebuilt model serves the
+    // same generator from a BatchServer.
+    let info = dec.model_info("lm_legacy", 4);
+    let any = step_nm::model::model_from_info(&info)?;
+    anyhow::ensure!(
+        matches!(any, AnyModel::Decoder(_)),
+        "legacy lm layout must dispatch to the decoder"
+    );
+    let server = BatchServer::new(any, packed)?;
+    println!(
+        "legacy manifest '{}' dispatched to a decoder ({:.1}% of dense weight bytes)",
+        info.key,
+        100.0 * server.compression()
+    );
+    let out2 = server.generator()?.generate(&prompts, &cfg)?;
+    anyhow::ensure!(out2.tokens == out.tokens, "server generator must match");
+    println!("BatchServer::generator() reproduces the same trajectories ✓");
+    Ok(())
+}

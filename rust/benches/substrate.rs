@@ -9,25 +9,29 @@
 //! suite (compressed-projection [`TokenEncoder`] forward vs dense masked,
 //! recorded to `BENCH_attention.json`), the streaming-driver suite
 //! (TrainDriver epoch vs manual batch-at-a-time loop, recorded to
-//! `BENCH_train.json`), and the online-serving suite (closed-loop seeded
+//! `BENCH_train.json`), the online-serving suite (closed-loop seeded
 //! traffic through the dynamic-batching `ServeFrontend` vs solo sequential
 //! serving, with exact-order latency percentiles, recorded to
-//! `BENCH_serving.json`).
+//! `BENCH_serving.json`), and the autoregressive-generation suite
+//! (KV-cached packed decoding through `BatchGenerator` vs the dense masked
+//! full-recompute oracle, recorded to `BENCH_generation.json`).
 //!
 //! Pass `--smoke` (or set `BENCH_SMOKE=1`) for a reduced-iteration run that
-//! still executes every bit-equality gate and writes all six JSON files —
+//! still executes every bit-equality gate and writes all seven JSON files —
 //! the CI smoke job uses it to keep the comparison suites honest.
 
 use step_nm::coordinator::frontend::{
     FrontendConfig, FrontendStats, LatencyRecord, ServeFrontend, SubmitError,
 };
-use step_nm::coordinator::{BatchServer, DriverConfig, FinetuneSession, TrainDriver};
+use step_nm::coordinator::{
+    BatchGenerator, BatchServer, DriverConfig, FinetuneSession, GenerateConfig, TrainDriver,
+};
 use step_nm::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat, ZOption};
 use step_nm::bench::{
     print_header, write_comparison_json, write_comparison_json_with, Comparison, Harness,
 };
 use step_nm::data::{Batch, BatchX, BatchY, CifarLike, Dataset, MiniBatchStream};
-use step_nm::model::{Mlp, SparseModel, TokenEncoder};
+use step_nm::model::{Mlp, SparseModel, TokenDecoder, TokenEncoder};
 use step_nm::optim::{
     adam_update, sgdm_update, step_phase2_update, AdamHp, PureRecipe, RecipeState,
 };
@@ -35,7 +39,7 @@ use step_nm::rng::Pcg64;
 use step_nm::sparsity::{
     apply_nm_inplace, nm_mask_into, DecaySchedule, NmRatio, PackedNmTensor, PackedParam,
 };
-use step_nm::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use step_nm::tensor::{argmax_rows, matmul, matmul_at, matmul_bt, Tensor};
 
 /// An MLP-shaped parameter stack: `[w0, b0, w1, b1, …]`, hidden weights
 /// sparse-eligible at 2:4, final layer + biases dense — the layout every
@@ -768,6 +772,140 @@ fn bench_serving(
     extras
 }
 
+/// The autoregressive-generation suite: batched greedy decoding through
+/// the packed KV-cache path ([`BatchGenerator`]) vs the dense masked
+/// full-recompute oracle — `BENCH_generation.json`.
+///
+/// Two in-suite gates run before any timing:
+/// 1. **Per-step bit-identity.** Over a teacher-forced full-length prefix,
+///    every `decode_step_packed` logits row is asserted bit-equal to the
+///    dense `decode_step` AND to the dense masked full forward recomputed
+///    from scratch over the whole prefix — the KV cache must be invisible
+///    at the bit level.
+/// 2. **Whole-trajectory identity.** `BatchGenerator::generate` over a
+///    ragged batch (with an eot stop, so cache eviction fires mid-run) is
+///    asserted token-for-token equal to a per-sequence greedy loop that
+///    recomputes the dense masked full forward at every step.
+fn bench_generation(
+    h: Harness,
+    smoke: bool,
+    rng: &mut Pcg64,
+    out: &mut Vec<Comparison>,
+) -> step_nm::util::json::JsonObj {
+    use step_nm::util::json::{Json, JsonObj};
+    print_header("autoregressive generation: packed KV-cache decode vs dense full recompute");
+    let max_seq = if smoke { 12 } else { 24 };
+    let dec = TokenDecoder::new(32, 16, 2, 32, 2, max_seq);
+    let params = dec.init(rng);
+
+    // the dense greedy full-recompute oracle for one sequence
+    let oracle_one = |masked: &[Tensor], prompt: &[usize], cfg: &GenerateConfig| {
+        let mut seq = prompt.to_vec();
+        let mut generated = 0usize;
+        while generated < cfg.max_new_tokens && seq.len() < dec.max_seq {
+            let ids: Vec<f32> = seq.iter().map(|&i| i as f32).collect();
+            let logits = dec.forward(masked, &Tensor::new(&[1, seq.len()], ids));
+            let tok = argmax_rows(&logits)[0];
+            seq.push(tok);
+            generated += 1;
+            if Some(tok) == cfg.eot {
+                break;
+            }
+        }
+        seq
+    };
+
+    let mut generated_tokens = 0usize;
+    let mut decode_steps = 0usize;
+    let mut packed_secs = 0.0f64;
+    for ratio in [NmRatio::new(2, 4), NmRatio::new(1, 4)] {
+        let packed = dec.pack_params(&params, ratio);
+        let masked: Vec<Tensor> = packed.iter().map(|p| p.unpack()).collect();
+
+        // gate 1: per-step bit-identity over a teacher-forced full prefix
+        let bsz = 2usize;
+        let seqs: Vec<Vec<usize>> = (0..bsz)
+            .map(|_| (0..dec.max_seq).map(|_| rng.below(32)).collect())
+            .collect();
+        let mut kv_packed = dec.new_cache(bsz);
+        let mut kv_dense = dec.new_cache(bsz);
+        for t in 0..dec.max_seq {
+            let ids: Vec<usize> = seqs.iter().map(|s| s[t]).collect();
+            let lp = dec.decode_step_packed(&packed, &mut kv_packed, &ids).unwrap();
+            let ld = dec.decode_step(&masked, &mut kv_dense, &ids).unwrap();
+            let prefix: Vec<f32> = seqs
+                .iter()
+                .flat_map(|s| s[..=t].iter().map(|&i| i as f32))
+                .collect();
+            let full = dec.forward(&masked, &Tensor::new(&[bsz, t + 1], prefix));
+            assert_eq!(
+                lp.data(),
+                full.data(),
+                "packed KV decode != dense full recompute at step {t} ({}:{})",
+                ratio.n,
+                ratio.m
+            );
+            assert_eq!(
+                ld.data(),
+                full.data(),
+                "dense KV decode != dense full recompute at step {t} ({}:{})",
+                ratio.n,
+                ratio.m
+            );
+        }
+
+        // gate 2: whole-trajectory identity, ragged prompts + eviction
+        let gen = BatchGenerator::new(dec.clone(), packed).unwrap();
+        let prompts: Vec<Vec<usize>> = (0..4)
+            .map(|i| (0..=i).map(|_| rng.below(32)).collect())
+            .collect();
+        let eot_cfg = GenerateConfig { max_new_tokens: dec.max_seq, eot: Some(0) };
+        let got = gen.generate(&prompts, &eot_cfg).unwrap();
+        for (r, p) in prompts.iter().enumerate() {
+            let want = oracle_one(&masked, p, &eot_cfg);
+            assert_eq!(
+                got.tokens[r], want,
+                "generated tokens diverge from the dense oracle (seq {r}, {}:{})",
+                ratio.n, ratio.m
+            );
+        }
+
+        // timing: the same ragged batch, full-length budget, no eot — the
+        // baseline regenerates every sequence by dense full recompute
+        let cfg = GenerateConfig { max_new_tokens: dec.max_seq, eot: None };
+        let r_dense = h.run(&format!("dense recompute generate {}:{}", ratio.n, ratio.m), || {
+            prompts
+                .iter()
+                .map(|p| oracle_one(&masked, p, &cfg).len())
+                .sum::<usize>()
+        });
+        let r_packed = h.run(&format!("packed kv-cache generate {}:{}", ratio.n, ratio.m), || {
+            gen.generate(&prompts, &cfg).unwrap().new_tokens
+        });
+        let timed = gen.generate(&prompts, &cfg).unwrap();
+        generated_tokens += timed.new_tokens;
+        decode_steps += timed.steps;
+        packed_secs += r_packed.mean();
+        let cmp = Comparison {
+            name: format!("generation {}:{} kv-cache vs recompute", ratio.n, ratio.m),
+            baseline_mean: r_dense.mean(),
+            fused_mean: r_packed.mean(),
+        };
+        println!("{}", r_dense.row());
+        println!("{}  (kv-cache speedup {:.2}x)", r_packed.row(), cmp.speedup());
+        out.push(cmp);
+    }
+
+    let mut extras = JsonObj::new();
+    extras.insert("generated_tokens", Json::Num(generated_tokens as f64));
+    extras.insert("decode_steps", Json::Num(decode_steps as f64));
+    extras.insert(
+        "tokens_per_sec",
+        Json::Num(generated_tokens as f64 / packed_secs.max(1e-12)),
+    );
+    extras
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var_os("BENCH_SMOKE").is_some();
@@ -956,5 +1094,26 @@ fn main() {
     ) {
         Ok(()) => println!("[json] wrote BENCH_serving.json"),
         Err(e) => eprintln!("[json] could not write BENCH_serving.json: {e}"),
+    }
+
+    // ---- autoregressive generation: packed KV cache vs full recompute ----
+    let mut generation = Vec::new();
+    let extras = bench_generation(suite_h, smoke, &mut rng, &mut generation);
+    let mean = generation.iter().map(Comparison::speedup).sum::<f64>()
+        / generation.len().max(1) as f64;
+    println!(
+        "\nmean kv-cache generation speedup over dense full recompute: {mean:.2}x \
+         (every step's logits and every greedy trajectory gated bit-identical \
+         to the dense masked oracle before timing)"
+    );
+    match write_comparison_json_with(
+        "BENCH_generation.json",
+        "KV-cached packed greedy generation (BatchGenerator over TokenDecoder, lock-step batch with eviction) vs dense masked full-recompute greedy loop (2:4 and 1:4; per-step logits and whole trajectories asserted bit-identical to the dense oracle in-suite before timing; extras carry token throughput)",
+        &generation,
+        true, // per-step + per-trajectory bit gates inside bench_generation
+        &extras,
+    ) {
+        Ok(()) => println!("[json] wrote BENCH_generation.json"),
+        Err(e) => eprintln!("[json] could not write BENCH_generation.json: {e}"),
     }
 }

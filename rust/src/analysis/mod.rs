@@ -85,6 +85,9 @@ pub mod config {
         "rust/src/tensor/ops.rs",
         "rust/src/model/mlp.rs",
         "rust/src/model/encoder.rs",
+        "rust/src/model/decoder.rs",
+        "rust/src/model/norm.rs",
+        "rust/src/model/weights.rs",
     ];
 
     /// Modules allowed to spawn threads (each owns a deterministic merge).
@@ -125,8 +128,11 @@ pub mod config {
         "rust/src/model/mod.rs",
         "rust/src/model/mlp.rs",
         "rust/src/model/encoder.rs",
+        "rust/src/model/decoder.rs",
+        "rust/src/model/weights.rs",
         "rust/src/sparsity/packed.rs",
         "rust/src/coordinator/finetune.rs",
+        "rust/src/coordinator/generate.rs",
     ];
 
     pub fn is_kernel_module(path: &str) -> bool {
@@ -147,14 +153,16 @@ pub mod config {
 
     /// Is `f` (in `path`) on the serve path for panic-freedom purposes?
     ///
-    /// * everything in `coordinator/serve.rs` and the online
-    ///   `coordinator/frontend/` modules (worker threads must degrade to
-    ///   per-request errors, never abort);
+    /// * everything in `coordinator/serve.rs`, the online
+    ///   `coordinator/frontend/` modules, and the generation loop in
+    ///   `coordinator/generate.rs` (worker threads and decode loops must
+    ///   degrade to per-request errors, never abort);
     /// * the `Session` hot-loop methods in `coordinator/session.rs`;
     /// * in the packed-chain files: any fn whose name mentions `packed`, or
     ///   whose body calls a `packed_*` kernel (one-hop chain closure).
     pub fn in_serve_path(path: &str, f: &FnSpan, toks: &[Tok]) -> bool {
         if path == "rust/src/coordinator/serve.rs"
+            || path == "rust/src/coordinator/generate.rs"
             || path.starts_with("rust/src/coordinator/frontend/")
         {
             return true;
@@ -192,6 +200,7 @@ pub mod config {
     pub fn is_kernel_entry(name: &str) -> bool {
         name.starts_with("packed_")
             || name.ends_with("_into")
+            || name.starts_with("layer_norm")
             || (name.starts_with("masked_") && name.ends_with("_step"))
     }
 

@@ -44,6 +44,42 @@ pub fn join_u64(lo: f32, hi: f32) -> u64 {
     (lo.to_bits() as u64) | ((hi.to_bits() as u64) << 32)
 }
 
+/// [`join_u64`] for counters that live in `usize` variables (step counts,
+/// sample counts, eval counters). On 64-bit targets this is free; on
+/// 32-bit targets a counter above `usize::MAX` surfaces as a
+/// corrupt-checkpoint error instead of silently wrapping to the low 32
+/// bits — the truncation a plain `join_u64(..) as usize` would commit.
+pub fn join_u64_to_usize(lo: f32, hi: f32) -> anyhow::Result<usize> {
+    let x = join_u64(lo, hi);
+    usize::try_from(x).map_err(|_| {
+        anyhow::anyhow!(
+            "checkpoint counter {x} does not fit in usize ({} bits) — \
+             corrupt checkpoint or a 64-bit checkpoint on a 32-bit target",
+            usize::BITS
+        )
+    })
+}
+
+/// Plausibility cap on per-file entry counts (a corrupt header must fail
+/// fast, not drive a huge `Vec::with_capacity`).
+const MAX_ENTRIES: usize = 1 << 20;
+/// Plausibility cap on a single tensor's element count (2^28 ≈ 268M
+/// elements ≈ 1 GiB of f32 — far above any model this crate trains).
+const MAX_NUMEL: usize = 1 << 28;
+
+/// Element count of a shape read from disk: overflow-checked product,
+/// capped at [`MAX_NUMEL`] — corrupt dims error out before any allocation.
+fn checked_numel(shape: &[usize]) -> anyhow::Result<usize> {
+    let mut numel = 1usize;
+    for &d in shape {
+        numel = numel
+            .checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows usize"))?;
+    }
+    anyhow::ensure!(numel <= MAX_NUMEL, "implausible tensor element count {numel}");
+    Ok(numel)
+}
+
 /// A named collection of tensors (params, m, v, …) plus packed N:M tensors.
 #[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
@@ -189,13 +225,15 @@ impl Checkpoint {
         );
         let n = read_u32(&mut r)? as usize;
         let n_packed = if version >= VERSION_PACKED { read_u32(&mut r)? as usize } else { 0 };
+        anyhow::ensure!(n <= MAX_ENTRIES, "implausible tensor count {n}");
+        anyhow::ensure!(n_packed <= MAX_ENTRIES, "implausible packed entry count {n_packed}");
         let mut entries = Vec::with_capacity(n);
         for _ in 0..n {
             let name = read_name(&mut r)?;
             let ndim = read_u32(&mut r)? as usize;
             anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
             let shape = read_dims(&mut r, ndim)?;
-            let numel: usize = shape.iter().product();
+            let numel = checked_numel(&shape)?;
             let data = read_f32s(&mut r, numel)?;
             entries.push((name, Tensor::new(&shape, data)));
         }
@@ -209,7 +247,7 @@ impl Checkpoint {
             anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
             let shape = read_dims(&mut r, ndim)?;
             let n_values = read_u64(&mut r)? as usize;
-            let numel: usize = shape.iter().product();
+            let numel = checked_numel(&shape)?;
             anyhow::ensure!(n_values <= numel, "implausible packed value count {n_values}");
             let values = read_f32s(&mut r, n_values)?;
             let n_bytes = read_u64(&mut r)? as usize;
@@ -228,6 +266,13 @@ impl Checkpoint {
             let t = PackedNmTensor::from_parts(shape, NmRatio::new(pn, pm), values, codes)?;
             packed.push((name, t));
         }
+        // a header that understates its entry counts leaves unread bytes —
+        // that is corruption, not a longer-but-valid file
+        let mut probe = [0u8; 1];
+        anyhow::ensure!(
+            r.read(&mut probe)? == 0,
+            "trailing bytes after the last checkpoint entry (count header disagrees with body)"
+        );
         Ok(Self { entries, packed })
     }
 }
@@ -334,6 +379,61 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
+    /// The corrupt-input matrix: every malformed variant of a valid v2
+    /// file must come back as a clean error — never a panic, never a
+    /// silently wrong checkpoint.
+    #[test]
+    fn corrupt_input_matrix_returns_clean_errors() {
+        // a valid mixed dense+packed (version 2) file to mutate
+        let mut rng = Pcg64::new(12);
+        let mut ck = Checkpoint::new();
+        ck.push("w", Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0));
+        ck.push_packed("p", PackedNmTensor::pack(&Tensor::randn(&[4, 8], &mut rng, 0.0, 1.0), NmRatio::new(2, 4)));
+        let path = tmp("matrix.bin");
+        ck.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes([good[4], good[5], good[6], good[7]]), 2);
+        let reload = |bytes: &[u8]| {
+            std::fs::write(&path, bytes).unwrap();
+            Checkpoint::load(&path)
+        };
+        // truncations at every structurally interesting prefix: inside the
+        // magic, the header, the first name, dims, data, the packed entry
+        for cut in [0, 2, 4, 8, 12, 16, 20, 30, good.len() / 2, good.len() - 1] {
+            let err = reload(&good[..cut]);
+            assert!(err.is_err(), "truncation at {cut} bytes must error");
+        }
+        // version 3 from the future
+        let mut v3 = good.clone();
+        v3[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let err = reload(&v3).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 3"), "{err}");
+        // packed count overstated: the reader runs off the end of the file
+        let mut over = good.clone();
+        over[12..16].copy_from_slice(&2u32.to_le_bytes());
+        assert!(reload(&over).is_err(), "overstated packed count must error");
+        // packed count understated: the packed body is left as trailing
+        // bytes — corruption, not a valid shorter file
+        let mut under = good.clone();
+        under[12..16].copy_from_slice(&0u32.to_le_bytes());
+        let err = reload(&under).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        // dense count understated: same trailing-bytes detection
+        let mut dunder = good.clone();
+        dunder[8..12].copy_from_slice(&0u32.to_le_bytes());
+        assert!(reload(&dunder).is_err(), "understated tensor count must error");
+        // absurd counts fail the plausibility cap before any allocation
+        let mut huge = good.clone();
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = reload(&huge).unwrap_err().to_string();
+        assert!(err.contains("implausible tensor count"), "{err}");
+        let mut hugep = good.clone();
+        hugep[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = reload(&hugep).unwrap_err().to_string();
+        assert!(err.contains("implausible packed entry count"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
     #[test]
     fn get_by_name() {
         let mut ck = Checkpoint::new();
@@ -420,6 +520,46 @@ mod tests {
             let [lo, hi] = split_u64(x);
             assert_eq!(join_u64(lo, hi), x);
         }
+    }
+
+    #[test]
+    fn u64_to_usize_is_checked() {
+        // in-range counters convert losslessly
+        for x in [0u64, 1, (1 << 24) + 1, (1 << 40) + 12_345] {
+            if x <= usize::MAX as u64 {
+                let [lo, hi] = split_u64(x);
+                assert_eq!(join_u64_to_usize(lo, hi).unwrap(), x as usize);
+            }
+        }
+        // out-of-range counters surface an error instead of truncating —
+        // only reachable when usize is narrower than the stored u64
+        if usize::BITS < 64 {
+            let [lo, hi] = split_u64(u64::MAX);
+            let err = join_u64_to_usize(lo, hi).unwrap_err().to_string();
+            assert!(err.contains("does not fit in usize"), "{err}");
+        }
+    }
+
+    /// Counters far beyond 2^32 must survive a save/load cycle through a
+    /// meta tensor and convert back exactly — the `as usize` cast this
+    /// replaced silently kept only the low 32 bits on 32-bit targets.
+    #[test]
+    fn huge_counters_roundtrip_through_checkpoint_meta() {
+        let big: u64 = (1 << 40) + 12_345;
+        let [lo, hi] = split_u64(big);
+        let mut ck = Checkpoint::new();
+        ck.push("meta", Tensor::new(&[2], vec![lo, hi]));
+        let path = tmp("huge_meta.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let md = back.get("meta").unwrap().data();
+        assert_eq!(join_u64(md[0], md[1]), big);
+        if usize::BITS >= 64 {
+            assert_eq!(join_u64_to_usize(md[0], md[1]).unwrap(), big as usize);
+        } else {
+            assert!(join_u64_to_usize(md[0], md[1]).is_err());
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

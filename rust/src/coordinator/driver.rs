@@ -45,7 +45,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::autoswitch::{AutoSwitch, Clip, SwitchPolicy as SwitchDetector, ZOption};
-use crate::checkpoint::{join_u64, split_u64, Checkpoint};
+use crate::checkpoint::{join_u64, join_u64_to_usize, split_u64, Checkpoint};
 use crate::data::{Batch, BatchX, BatchY, MiniBatchStream};
 use crate::data::Dataset;
 use crate::model::{Mlp, SparseModel};
@@ -657,10 +657,10 @@ impl<M: SparseModel> TrainDriver<M> {
             if md[0] == 0.0 { "dense" } else { "fine-tune" }
         );
         Ok(DriverMeta {
-            t: join_u64(md[1], md[2]) as usize,
-            switch_step: join_u64(md[3], md[4]) as usize,
+            t: join_u64_to_usize(md[1], md[2])?,
+            switch_step: join_u64_to_usize(md[3], md[4])?,
             best_eval_loss: f64::from_bits(join_u64(md[5], md[6])),
-            evals_since_best: join_u64(md[7], md[8]) as usize,
+            evals_since_best: join_u64_to_usize(md[7], md[8])?,
             stopped_early: md[9] != 0.0,
         })
     }

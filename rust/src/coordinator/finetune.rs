@@ -32,7 +32,7 @@
 // never abort mid-epoch. `nm-lint` enforces the same contract transitively.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use crate::checkpoint::{join_u64, split_u64, Checkpoint};
+use crate::checkpoint::{join_u64, join_u64_to_usize, split_u64, Checkpoint};
 use crate::model::{Mlp, SparseModel};
 use crate::optim::{packed_adam_step, packed_phase2_step, AdamHp, RecipeState};
 use crate::sparsity::{pack_params, NmRatio, PackedGrad, PackedParam};
@@ -433,8 +433,8 @@ impl<M: SparseModel> FinetuneSession<M> {
             v_star,
             cols,
             stats: FinetuneStats {
-                steps: join_u64(md[7], md[8]) as usize,
-                samples: join_u64(md[9], md[10]) as usize,
+                steps: join_u64_to_usize(md[7], md[8])?,
+                samples: join_u64_to_usize(md[9], md[10])?,
             },
         })
     }

@@ -415,6 +415,9 @@ fn serve_batch<M: SparseModel>(inner: &Inner<M>, batch: Vec<Pending>) {
             for (p, part) in batch.into_iter().zip(parts) {
                 let latency = done.saturating_duration_since(p.enqueued);
                 st.serve.requests += 1;
+                // as_nanos() is u128; the record stores u64, so latencies
+                // saturate at u64::MAX ns (~584 years) — a deliberate clamp,
+                // not a truncating cast that would wrap to a small number
                 st.latency.push(latency.as_nanos().min(u64::MAX as u128) as u64);
                 // a receiver may have given up (dropped handle): serving
                 // already happened, so it still counts

@@ -108,7 +108,18 @@ impl QueueState {
             };
             batch_dim = Some(next.dim);
             rows += next.rows;
-            self.pending_rows = self.pending_rows.saturating_sub(next.rows);
+            // pending_rows is the incrementally-maintained Σ rows over the
+            // queue, so popping a request can never take it below zero; a
+            // masking saturating_sub here would hide an accounting bug (a
+            // drifted counter corrupts the O(1) due() check for the rest of
+            // the frontend's life). Loudly in debug, checked in release.
+            debug_assert!(
+                self.pending_rows >= next.rows,
+                "pending_rows accounting drifted: {} < {}",
+                self.pending_rows,
+                next.rows
+            );
+            self.pending_rows = self.pending_rows.checked_sub(next.rows).unwrap_or(0);
             batch.push(next);
             if rows >= max_batch_rows {
                 break;
@@ -242,6 +253,39 @@ mod tests {
         q.flush = false;
         q.mode = Mode::Draining;
         assert!(q.due(4, max_wait, now), "draining serves immediately");
+    }
+
+    /// Regression for the masking `saturating_sub`: the incremental
+    /// `pending_rows` counter must agree exactly with a recount after
+    /// every cut, across oversized requests, ragged dims, and interleaved
+    /// pushes — any drift corrupts the O(1) `due()` check silently.
+    #[test]
+    fn pending_rows_accounting_stays_exact() {
+        let mut q = QueueState::new();
+        let seq = [(10usize, 4usize), (1, 4), (3, 8), (2, 8), (7, 8), (1, 2)];
+        for &(rows, dim) in &seq {
+            push(&mut q, rows, dim);
+        }
+        let recount = |q: &QueueState| q.pending.iter().map(|p| p.rows).sum::<usize>();
+        assert_eq!(q.pending_rows, recount(&q));
+        let mut cuts = 0;
+        while !q.pending.is_empty() {
+            let b = q.cut_batch(6);
+            assert!(!b.is_empty(), "due queue must always yield a batch");
+            cuts += 1;
+            assert_eq!(
+                q.pending_rows,
+                recount(&q),
+                "incremental counter drifted after cut {cuts}"
+            );
+        }
+        assert_eq!(q.pending_rows, 0);
+        // interleave more pushes after draining: counter picks back up
+        push(&mut q, 4, 4);
+        push(&mut q, 2, 4);
+        assert_eq!(q.pending_rows, 6);
+        q.cut_batch(6);
+        assert_eq!(q.pending_rows, 0);
     }
 
     #[test]

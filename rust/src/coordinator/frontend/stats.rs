@@ -97,13 +97,18 @@ impl LatencyRecord {
         self.samples_ns.iter().copied().max().unwrap_or(0)
     }
 
-    /// Mean latency in integer nanoseconds (truncating); 0 when empty.
+    /// Mean latency in integer nanoseconds, rounded to nearest (half-way
+    /// cases round up); 0 when empty. The sum is accumulated in `u128`, so
+    /// it cannot overflow for any realistic sample count, and rounding
+    /// keeps the reported mean within 0.5 ns of the true mean — a
+    /// truncating division here systematically under-reported latency.
     pub fn mean_ns(&self) -> u64 {
         if self.samples_ns.is_empty() {
             return 0;
         }
         let sum: u128 = self.samples_ns.iter().map(|&s| s as u128).sum();
-        (sum / self.samples_ns.len() as u128) as u64
+        let n = self.samples_ns.len() as u128;
+        ((sum + n / 2) / n) as u64
     }
 
     /// Snapshot the derived summary (the `Eq`-comparable view).
@@ -128,7 +133,7 @@ pub struct LatencySummary {
     pub p95_ns: u64,
     pub p99_ns: u64,
     pub max_ns: u64,
-    /// Truncating integer mean.
+    /// Integer mean, rounded to nearest nanosecond.
     pub mean_ns: u64,
 }
 
@@ -171,5 +176,53 @@ impl FrontendStats {
         } else {
             self.serve.requests as f64 / secs
         }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn record(samples: &[u64]) -> LatencyRecord {
+        let mut r = LatencyRecord::new();
+        for &s in samples {
+            r.push(s);
+        }
+        r
+    }
+
+    /// Regression for the truncating mean: [1, 2] averages to 1.5 ns and
+    /// must report 2 (nearest, half up), not 1.
+    #[test]
+    fn mean_rounds_to_nearest_not_down() {
+        assert_eq!(record(&[1, 2]).mean_ns(), 2);
+        assert_eq!(record(&[1, 1, 2]).mean_ns(), 1, "4/3 rounds down to 1");
+        assert_eq!(record(&[1, 2, 2]).mean_ns(), 2, "5/3 rounds up to 2");
+        assert_eq!(record(&[10, 20, 30]).mean_ns(), 20, "exact mean is exact");
+        assert_eq!(record(&[7]).mean_ns(), 7);
+    }
+
+    #[test]
+    fn mean_of_empty_record_is_zero() {
+        assert_eq!(record(&[]).mean_ns(), 0);
+        assert_eq!(LatencyRecord::new().summary().mean_ns, 0);
+    }
+
+    /// The u128 accumulator keeps huge samples exact where a u64 sum would
+    /// have wrapped.
+    #[test]
+    fn mean_survives_u64_scale_samples() {
+        let r = record(&[u64::MAX, u64::MAX]);
+        assert_eq!(r.mean_ns(), u64::MAX);
+        let r = record(&[u64::MAX, u64::MAX - 2]);
+        assert_eq!(r.mean_ns(), u64::MAX - 1);
+    }
+
+    #[test]
+    fn summary_carries_the_rounded_mean() {
+        let s = record(&[1, 2]).summary();
+        assert_eq!(s.mean_ns, 2);
+        assert_eq!(s.count, 2);
     }
 }

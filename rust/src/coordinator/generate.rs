@@ -1,0 +1,264 @@
+//! Batched autoregressive generation over packed N:M weights — the serving
+//! shape the paper's GPT-2 workload implies: many sequences advancing in
+//! lock step through [`TokenDecoder::decode_step_packed`], each step one
+//! batched single-token forward against a shared [`DecoderKvCache`], with
+//! finished sequences evicted from the cache so the batch shrinks as
+//! prompts complete.
+//!
+//! The bit-identity contract extends to generation: every step's logits
+//! are bit-for-bit what the dense masked decoder recomputed from scratch
+//! over the full prefix would produce, so greedy (argmax) continuations
+//! are **exactly** reproducible across the packed KV path and the dense
+//! oracle — `rust/tests/decoder_generation.rs` and `BENCH_generation.json`
+//! hold that line.
+//!
+//! Entry points: [`BatchGenerator::new`] from a model + packed params,
+//! [`BatchServer::generator`] from a serving decoder, or
+//! `Session::generator` straight from a finished training run.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::coordinator::frontend::ServeFrontend;
+use crate::coordinator::serve::BatchServer;
+use crate::model::{AnyModel, DecoderKvCache, SparseModel, TokenDecoder};
+use crate::sparsity::PackedParam;
+use crate::tensor::{argmax_rows, Tensor};
+
+/// Generation controls: how far to decode and what stops a sequence early.
+#[derive(Debug, Clone)]
+pub struct GenerateConfig {
+    /// Maximum tokens appended per sequence (sequences also stop at the
+    /// decoder's `max_seq` or on `eot`).
+    pub max_new_tokens: usize,
+    /// End-of-text token id: a sequence that emits it stops (the token is
+    /// kept as the final element). `None` decodes to the length limits.
+    pub eot: Option<usize>,
+}
+
+impl Default for GenerateConfig {
+    fn default() -> Self {
+        Self { max_new_tokens: 16, eot: None }
+    }
+}
+
+/// The result of one batched generation run.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    /// Per input sequence: the prompt followed by the generated tokens.
+    pub tokens: Vec<Vec<usize>>,
+    /// Decode steps executed (each one batched single-token forward).
+    pub steps: usize,
+    /// Total tokens generated across the batch (prompt tokens excluded).
+    pub new_tokens: usize,
+}
+
+/// Greedy batched generation over a packed [`TokenDecoder`]: prompts enter
+/// together, advance in lock step (prompt positions teacher-forced, then
+/// argmax continuations), and leave the KV cache as they finish.
+pub struct BatchGenerator {
+    model: TokenDecoder,
+    params: Vec<PackedParam>,
+}
+
+impl BatchGenerator {
+    /// Build a generator, validating the packed parameters against the
+    /// decoder layout up front so every later step is infallible-by-shape.
+    pub fn new(model: TokenDecoder, params: Vec<PackedParam>) -> anyhow::Result<Self> {
+        model.validate_packed_params(&params)?;
+        Ok(Self { model, params })
+    }
+
+    pub fn model(&self) -> &TokenDecoder {
+        &self.model
+    }
+
+    pub fn params(&self) -> &[PackedParam] {
+        &self.params
+    }
+
+    /// Greedy-decode a batch of prompts in lock step. Every prompt must be
+    /// non-empty, fit in `max_seq`, and contain in-vocabulary ids; the
+    /// returned `tokens[i]` starts with `prompts[i]` verbatim. Sequence `i`
+    /// stops when it emits `cfg.eot`, reaches `max_seq`, or has generated
+    /// `cfg.max_new_tokens` tokens — finished sequences are evicted from
+    /// the KV cache and the remaining batch keeps advancing.
+    pub fn generate(
+        &self,
+        prompts: &[Vec<usize>],
+        cfg: &GenerateConfig,
+    ) -> anyhow::Result<Generation> {
+        anyhow::ensure!(!prompts.is_empty(), "generate needs at least one prompt");
+        let max_seq = self.model.max_seq;
+        let vocab = self.model.vocab;
+        for (i, p) in prompts.iter().enumerate() {
+            anyhow::ensure!(!p.is_empty(), "prompt {i} is empty");
+            anyhow::ensure!(
+                p.len() <= max_seq,
+                "prompt {i} has {} tokens, max_seq is {max_seq}",
+                p.len()
+            );
+            for (j, &id) in p.iter().enumerate() {
+                anyhow::ensure!(
+                    id < vocab,
+                    "prompt {i} token {j}: id {id} out of range for vocab {vocab}"
+                );
+            }
+        }
+        if let Some(eot) = cfg.eot {
+            anyhow::ensure!(eot < vocab, "eot id {eot} out of range for vocab {vocab}");
+        }
+        let mut tokens: Vec<Vec<usize>> = prompts.to_vec();
+        // a sequence enters the decode loop only if it can still grow
+        let mut live: Vec<usize> = (0..prompts.len())
+            .filter(|&i| cfg.max_new_tokens > 0 && prompts[i].len() < max_seq)
+            .collect();
+        let mut generated = vec![0usize; prompts.len()];
+        let mut steps = 0usize;
+        let mut new_tokens = 0usize;
+        if live.is_empty() {
+            return Ok(Generation { tokens, steps, new_tokens });
+        }
+        let mut cache = self.model.new_cache(live.len());
+        while !live.is_empty() {
+            let t = cache.len();
+            // invariant: tokens[r].len() > t for every live sequence — the
+            // prompt covers positions it has not yet decoded past, and a
+            // sequence whose generated tail reaches position t got exactly
+            // one token appended at step t-1
+            let ids: Vec<usize> = live.iter().map(|&r| tokens[r][t]).collect();
+            let logits = self.model.decode_step_packed(&self.params, &mut cache, &ids)?;
+            steps += 1;
+            let next = argmax_rows(&logits);
+            let mut keep = vec![true; live.len()];
+            let mut any_evicted = false;
+            for (slot, &r) in live.iter().enumerate() {
+                if t + 1 < tokens[r].len() {
+                    continue; // still teacher-forcing the prompt
+                }
+                let tok = next[slot];
+                tokens[r].push(tok);
+                generated[r] += 1;
+                new_tokens += 1;
+                let done = Some(tok) == cfg.eot
+                    || tokens[r].len() >= max_seq
+                    || generated[r] >= cfg.max_new_tokens;
+                if done {
+                    keep[slot] = false;
+                    any_evicted = true;
+                }
+            }
+            if any_evicted {
+                cache.evict(&keep)?;
+                live = live
+                    .iter()
+                    .zip(keep.iter())
+                    .filter_map(|(&r, &k)| k.then_some(r))
+                    .collect();
+            }
+        }
+        Ok(Generation { tokens, steps, new_tokens })
+    }
+}
+
+impl BatchServer<AnyModel> {
+    /// A [`BatchGenerator`] over this server's decoder and packed weights.
+    /// Errors with a clear message when the served model is not a causal
+    /// decoder (classifiers and encoders have no autoregressive head).
+    pub fn generator(&self) -> anyhow::Result<BatchGenerator> {
+        match self.model() {
+            AnyModel::Decoder(dec) => BatchGenerator::new(dec.clone(), self.params().to_vec()),
+            AnyModel::Mlp(_) => anyhow::bail!(
+                "generation needs a causal decoder; this server holds an MLP classifier"
+            ),
+            AnyModel::Encoder(_) => anyhow::bail!(
+                "generation needs a causal decoder; this server holds a token encoder \
+                 (one-shot heads do not decode autoregressively)"
+            ),
+        }
+    }
+}
+
+impl ServeFrontend<AnyModel> {
+    /// A [`BatchGenerator`] over the fronted server's decoder — the
+    /// generation twin of request serving, sharing the same packed weights.
+    pub fn generator(&self) -> anyhow::Result<BatchGenerator> {
+        self.server().generator()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mlp;
+    use crate::rng::Pcg64;
+    use crate::sparsity::NmRatio;
+
+    fn packed_decoder() -> (TokenDecoder, Vec<PackedParam>) {
+        let dec = TokenDecoder::new(13, 8, 2, 12, 1, 8);
+        let params = dec.init(&mut Pcg64::new(21));
+        let packed = dec.pack_params(&params, NmRatio::new(2, 4));
+        (dec, packed)
+    }
+
+    #[test]
+    fn generates_up_to_the_configured_budget() {
+        let (dec, packed) = packed_decoder();
+        let gen = BatchGenerator::new(dec, packed).unwrap();
+        let out = gen
+            .generate(&[vec![1, 2], vec![3]], &GenerateConfig { max_new_tokens: 3, eot: None })
+            .unwrap();
+        assert_eq!(out.tokens.len(), 2);
+        assert_eq!(&out.tokens[0][..2], &[1, 2], "prompt kept verbatim");
+        assert_eq!(out.tokens[0].len(), 5);
+        assert_eq!(out.tokens[1].len(), 4);
+        assert_eq!(out.new_tokens, 6);
+        assert!(out.steps >= 4, "2 prefill + 3 decode steps minus overlap");
+    }
+
+    #[test]
+    fn sequences_stop_at_max_seq() {
+        let (dec, packed) = packed_decoder();
+        let max_seq = dec.max_seq;
+        let gen = BatchGenerator::new(dec, packed).unwrap();
+        let out = gen
+            .generate(&[vec![0; max_seq - 1]], &GenerateConfig { max_new_tokens: 50, eot: None })
+            .unwrap();
+        assert_eq!(out.tokens[0].len(), max_seq, "cannot grow past max_seq");
+        // a prompt already at max_seq cannot grow at all
+        let out = gen
+            .generate(&[vec![0; max_seq]], &GenerateConfig { max_new_tokens: 50, eot: None })
+            .unwrap();
+        assert_eq!(out.tokens[0].len(), max_seq);
+        assert_eq!(out.new_tokens, 0);
+        assert_eq!(out.steps, 0);
+    }
+
+    #[test]
+    fn rejects_bad_prompts_and_bad_eot() {
+        let (dec, packed) = packed_decoder();
+        let vocab = dec.vocab;
+        let max_seq = dec.max_seq;
+        let gen = BatchGenerator::new(dec, packed).unwrap();
+        let cfg = GenerateConfig::default();
+        assert!(gen.generate(&[], &cfg).is_err(), "no prompts");
+        assert!(gen.generate(&[vec![]], &cfg).is_err(), "empty prompt");
+        assert!(gen.generate(&[vec![vocab]], &cfg).is_err(), "out-of-vocab id");
+        assert!(gen.generate(&[vec![0; max_seq + 1]], &cfg).is_err(), "oversized prompt");
+        assert!(
+            gen.generate(&[vec![0]], &GenerateConfig { max_new_tokens: 1, eot: Some(vocab) })
+                .is_err(),
+            "out-of-vocab eot"
+        );
+    }
+
+    #[test]
+    fn non_decoder_servers_refuse_generation() {
+        let mlp = Mlp::new(8, &[16], 3);
+        let params = mlp.init(&mut Pcg64::new(3));
+        let any = AnyModel::Mlp(mlp);
+        let packed = any.pack_params(&params, NmRatio::new(2, 4));
+        let server = BatchServer::new(any, packed).unwrap();
+        let err = server.generator().unwrap_err().to_string();
+        assert!(err.contains("causal decoder"), "unhelpful error: {err}");
+    }
+}

@@ -19,6 +19,7 @@
 pub mod driver;
 pub mod finetune;
 pub mod frontend;
+pub mod generate;
 pub mod prefetch;
 pub mod serve;
 pub mod session;
@@ -26,6 +27,7 @@ pub mod sweep;
 
 pub use driver::{DriverConfig, DriverReport, EarlyStop, EvalPoint, SwitchPolicy, TrainDriver};
 pub use finetune::{FinetuneMode, FinetuneSession, FinetuneStats};
+pub use generate::{BatchGenerator, GenerateConfig, Generation};
 pub use frontend::{
     FrontendConfig, FrontendStats, LatencyRecord, LatencySummary, ResponseHandle, ServeFrontend,
     SubmitError,

@@ -604,8 +604,10 @@ impl<'rt> Session<'rt> {
     /// manifest layout resolves to a concrete pure-Rust model via
     /// [`model_from_info`](crate::model::model_from_info) — MLP classifier
     /// layouts serve as [`Mlp`](crate::model::Mlp), fused-QKV token layouts
-    /// as [`TokenEncoder`](crate::model::TokenEncoder); unrecognized
-    /// layouts get a clear error.
+    /// as [`TokenEncoder`](crate::model::TokenEncoder), separate-QKV +
+    /// LayerNorm layouts (including the legacy manifests) as
+    /// [`TokenDecoder`](crate::model::TokenDecoder); unrecognized layouts
+    /// get a clear error.
     pub fn batch_server(
         &self,
     ) -> anyhow::Result<super::serve::BatchServer<crate::model::AnyModel>> {
@@ -622,6 +624,15 @@ impl<'rt> Session<'rt> {
         cfg: super::frontend::FrontendConfig,
     ) -> anyhow::Result<super::frontend::ServeFrontend<crate::model::AnyModel>> {
         super::frontend::ServeFrontend::new(self.batch_server()?, cfg)
+    }
+
+    /// Build a [`BatchGenerator`](super::generate::BatchGenerator) from the
+    /// current weights: pack once, then serve token-by-token batched
+    /// generation from the compressed form — the train → pack → generate
+    /// pipeline in one call. Errors (with the server's clear message) when
+    /// the session's manifest does not resolve to a causal decoder.
+    pub fn generator(&self) -> anyhow::Result<super::generate::BatchGenerator> {
+        self.batch_server()?.generator()
     }
 
     /// Continue training from the **compressed** form: pack the current

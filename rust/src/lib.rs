@@ -83,11 +83,11 @@ pub mod prelude {
     pub use crate::autoswitch::{AutoSwitch, SwitchPolicy, SwitchStat};
     pub use crate::config::{ExperimentConfig, RecipeKind};
     pub use crate::coordinator::{
-        BatchServer, DriverConfig, FinetuneSession, FrontendConfig, Report, ServeFrontend,
-        Session, Sweep, TrainDriver,
+        BatchGenerator, BatchServer, DriverConfig, FinetuneSession, FrontendConfig,
+        GenerateConfig, Report, ServeFrontend, Session, Sweep, TrainDriver,
     };
     pub use crate::data::{Dataset, MiniBatchStream, NextTokenTask};
-    pub use crate::model::{model_from_info, AnyModel, Mlp, SparseModel, TokenEncoder};
+    pub use crate::model::{model_from_info, AnyModel, Mlp, SparseModel, TokenDecoder, TokenEncoder};
     pub use crate::optim::OptimizerKind;
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{Registry, Runtime};

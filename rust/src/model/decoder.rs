@@ -1,0 +1,1274 @@
+//! A pure-Rust causal pre-norm transformer decoder with **exact** backprop —
+//! the separate-QKV + LayerNorm model family the legacy manifests describe
+//! (GPT-2 fine-tuning under Adam, the paper's §5.3 workload), plus the
+//! production half: **incremental decoding** over a per-sequence KV cache
+//! so packed weights serve token-by-token batched generation.
+//!
+//! Architecture per block (pre-norm, residual stream `h`):
+//!
+//! ```text
+//!   a      = LN₁(h)                                  (exact backward, model::norm)
+//!   q,k,v  = a @ W_q, a @ W_k, a @ W_v               (separate QKV, sparse-eligible, bias-free)
+//!   ctx    = causal_softmax(Q Kᵀ / √d_h) V  per head (j ≤ i only)
+//!   h      = h + ctx @ W_o                           (sparse-eligible, bias-free)
+//!   b      = LN₂(h)
+//!   h      = h + relu(b @ W_fc1 + b_fc1) @ W_fc2 + b_fc2   (sparse-eligible × 2)
+//! ```
+//!
+//! Head: the **last** position's hidden state through a final LayerNorm and
+//! a dense vocabulary projection (next-token prediction — the decoder has no
+//! pooling choice; it is `Pool::Last` by definition).
+//!
+//! **One core, three entry forms.** Training and one-shot inference run the
+//! shared `WeightsView` core exactly like [`super::TokenEncoder`]; the third
+//! form is [`decode_step`](TokenDecoder::decode_step) /
+//! [`decode_step_packed`](TokenDecoder::decode_step_packed): advance every
+//! sequence in a batch by ONE token against a [`DecoderKvCache`]. Because
+//! LayerNorm is per-row, every matmul kernel computes output rows
+//! independently in a pinned ascending-k order, and the causal attention for
+//! row `t` reads keys/values `0..=t` in ascending `j` with the identical
+//! loop structure as the full forward, the decode step reproduces the full
+//! dense masked forward **bit-for-bit** at every position — the generation
+//! analog of the repo's packed-vs-dense contract, gated in
+//! `rust/tests/decoder_generation.rs` and `BENCH_generation.json`.
+
+use super::norm::{layer_norm, layer_norm_backward, LnCache};
+use super::weights::{colsum, WeightsView};
+use crate::rng::Pcg64;
+use crate::runtime::ModelInfo;
+use crate::sparsity::{PackedGrad, PackedParam};
+use crate::tensor::{add_bias, axpy, cross_entropy_with_grad, Tensor};
+
+/// Parameter tensors per decoder block: `[ln1_g, ln1_b, wq, wk, wv, wo,
+/// ln2_g, ln2_b, fc1_w, fc1_b, fc2_w, fc2_b]`.
+pub const DEC_BLOCK_PARAMS: usize = 12;
+
+/// Parameter tensors outside the blocks: `tok_emb`, `pos_emb` up front;
+/// `lnf_g`, `lnf_b`, `head_w`, `head_b` at the tail.
+pub const DEC_EXTRA_PARAMS: usize = 6;
+
+/// A pure-Rust causal decoder implementing [`super::SparseModel`] — the
+/// next-token LM counterpart of [`super::TokenEncoder`], with LayerNorm and
+/// separate QKV projections (the legacy manifest layout).
+#[derive(Debug, Clone)]
+pub struct TokenDecoder {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    pub max_seq: usize,
+}
+
+/// Per-block forward caches the backward pass replays.
+struct DecBlockCache {
+    /// LN₁ byproducts (normalized input + inverse std).
+    ln1: LnCache,
+    /// Post-LN₁ activations `[B·S, d]` (the QKV matmul input).
+    a: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    /// Causal attention probabilities, `[B, H, S, S]` row-major; entries
+    /// above the diagonal are never written and never read.
+    probs: Vec<f32>,
+    /// Per-head context `[B·S, d]`.
+    ctx: Tensor,
+    /// LN₂ byproducts.
+    ln2: LnCache,
+    /// Post-LN₂ activations `[B·S, d]` (the FFN input).
+    bv: Tensor,
+    /// Post-ReLU FFN hidden `[B·S, d_ff]`.
+    ff_r: Tensor,
+}
+
+/// The whole forward pass: caches + head intermediates + logits.
+struct DecForwardPass {
+    blocks: Vec<DecBlockCache>,
+    /// Final-LN byproducts over the pooled rows.
+    lnf: LnCache,
+    /// Post-final-LN pooled rows `[B, d]` (the head matmul input).
+    pn: Tensor,
+    logits: Tensor,
+    /// Validated token ids (reused by the embedding backward).
+    ids: Vec<usize>,
+    bsz: usize,
+    seq: usize,
+}
+
+/// Per-sequence key/value cache for incremental decoding: one `[bsz,
+/// max_seq, d]` buffer pair per block, filled left to right as
+/// [`TokenDecoder::decode_step`] advances. Rows are appended at the step
+/// index, so cached keys/values carry the exact bits the full forward
+/// would compute for the same prefix.
+pub struct DecoderKvCache {
+    bsz: usize,
+    max_seq: usize,
+    d: usize,
+    len: usize,
+    /// Per block: keys, `[bsz * max_seq * d]` row-major.
+    k: Vec<Vec<f32>>,
+    /// Per block: values, same layout.
+    v: Vec<Vec<f32>>,
+}
+
+impl DecoderKvCache {
+    /// Number of sequences currently tracked.
+    pub fn bsz(&self) -> usize {
+        self.bsz
+    }
+
+    /// Number of positions already decoded (the next step writes here).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop finished sequences: `keep[r]` says whether sequence `r`
+    /// survives. Kept sequences are compacted in order with plain row-chunk
+    /// copies (`copy_within`), so surviving cache entries keep their exact
+    /// bits and their position indexing — eviction can never perturb the
+    /// bit-identity contract.
+    pub fn evict(&mut self, keep: &[bool]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            keep.len() == self.bsz,
+            "evict mask covers {} sequences, cache holds {}",
+            keep.len(),
+            self.bsz
+        );
+        let stride = self.max_seq * self.d;
+        let kept = keep.iter().filter(|&&f| f).count();
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            let mut w = 0usize;
+            for (r, &f) in keep.iter().enumerate() {
+                if f {
+                    if w != r {
+                        buf.copy_within(r * stride..(r + 1) * stride, w * stride);
+                    }
+                    w += 1;
+                }
+            }
+            buf.truncate(kept * stride);
+        }
+        self.bsz = kept;
+        Ok(())
+    }
+}
+
+impl TokenDecoder {
+    /// A causal next-token decoder. Head count must divide `d_model`.
+    pub fn new(
+        vocab: usize,
+        d_model: usize,
+        n_heads: usize,
+        d_ff: usize,
+        n_blocks: usize,
+        max_seq: usize,
+    ) -> Self {
+        assert!(vocab >= 1 && d_model >= 1 && d_ff >= 1 && n_blocks >= 1 && max_seq >= 1);
+        assert!(
+            n_heads >= 1 && d_model % n_heads == 0,
+            "d_model {d_model} must divide into {n_heads} heads"
+        );
+        Self { vocab, d_model, n_heads, d_ff, n_blocks, max_seq }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn n_params(&self) -> usize {
+        DEC_EXTRA_PARAMS + DEC_BLOCK_PARAMS * self.n_blocks
+    }
+
+    /// Expected shape of every parameter tensor, in order.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let d = self.d_model;
+        let mut out = Vec::with_capacity(self.n_params());
+        out.push(vec![self.vocab, d]);
+        out.push(vec![self.max_seq, d]);
+        for _ in 0..self.n_blocks {
+            out.push(vec![d]); // ln1_g
+            out.push(vec![d]); // ln1_b
+            out.push(vec![d, d]); // wq
+            out.push(vec![d, d]); // wk
+            out.push(vec![d, d]); // wv
+            out.push(vec![d, d]); // wo
+            out.push(vec![d]); // ln2_g
+            out.push(vec![d]); // ln2_b
+            out.push(vec![d, self.d_ff]); // fc1_w
+            out.push(vec![self.d_ff]); // fc1_b
+            out.push(vec![self.d_ff, d]); // fc2_w
+            out.push(vec![d]); // fc2_b
+        }
+        out.push(vec![d]); // lnf_g
+        out.push(vec![d]); // lnf_b
+        out.push(vec![d, self.vocab]); // head_w
+        out.push(vec![self.vocab]); // head_b
+        out
+    }
+
+    /// Parameter names matching [`param_shapes`](Self::param_shapes), in
+    /// the legacy manifest convention (`l{b}_wq`, `l{b}_fc1_w`, …). A
+    /// single-head decoder writes plain `pos_emb` — exactly the legacy
+    /// layout — while multi-head decoders tag the head count as
+    /// `pos_emb_h{heads}` so [`from_model_info`](Self::from_model_info)
+    /// can round-trip the architecture.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.n_params());
+        out.push("tok_emb".to_string());
+        if self.n_heads == 1 {
+            out.push("pos_emb".to_string());
+        } else {
+            out.push(format!("pos_emb_h{}", self.n_heads));
+        }
+        for b in 0..self.n_blocks {
+            for suffix in [
+                "ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "fc1_w", "fc1_b",
+                "fc2_w", "fc2_b",
+            ] {
+                out.push(format!("l{b}_{suffix}"));
+            }
+        }
+        out.push("lnf_g".to_string());
+        out.push("lnf_b".to_string());
+        out.push("head_w".to_string());
+        out.push("head_b".to_string());
+        out
+    }
+
+    /// Sparse-eligibility per parameter: the six block projections yes,
+    /// embeddings / LayerNorm affines / biases / head no.
+    pub fn sparse_flags(&self) -> Vec<bool> {
+        let mut out = vec![false, false];
+        for _ in 0..self.n_blocks {
+            out.extend_from_slice(&[
+                false, false, // ln1
+                true, true, true, true, // wq wk wv wo
+                false, false, // ln2
+                true, false, // fc1_w fc1_b
+                true, false, // fc2_w fc2_b
+            ]);
+        }
+        out.extend_from_slice(&[false, false, false, false]);
+        out
+    }
+
+    /// Fan-in-scaled init (weights ~ N(0, 1/√fan_in), embeddings ~
+    /// N(0, 0.05), LayerNorm gains one, every other 1-D tensor zero), one
+    /// sequential draw per tensor in layout order (deterministic in the
+    /// rng).
+    pub fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        let names = self.param_names();
+        self.param_shapes()
+            .into_iter()
+            .enumerate()
+            .map(|(i, shape)| {
+                if i < 2 {
+                    Tensor::randn(&shape, rng, 0.0, 0.05) // embeddings
+                } else if shape.len() == 2 {
+                    let scale = 1.0 / (shape[0] as f32).sqrt();
+                    Tensor::randn(&shape, rng, 0.0, scale)
+                } else if names[i].ends_with("_g") {
+                    Tensor::full(&shape, 1.0) // LayerNorm gains
+                } else {
+                    Tensor::zeros(&shape) // biases + LayerNorm shifts
+                }
+            })
+            .collect()
+    }
+
+    // ---- layout indexing ---------------------------------------------------
+
+    /// First parameter index of block `b` (its `ln1_g`).
+    fn i_block(&self, b: usize) -> usize {
+        2 + DEC_BLOCK_PARAMS * b
+    }
+
+    /// First tail index (`lnf_g`).
+    fn i_tail(&self) -> usize {
+        2 + DEC_BLOCK_PARAMS * self.n_blocks
+    }
+
+    // ---- the shared core ---------------------------------------------------
+
+    /// The single validity rule for an f32-carried token id — shared by the
+    /// forward's panic gate, the serve-time error gate (`validate_input`)
+    /// and the decode step's `ensure!`, so the three can never drift.
+    fn is_token_id(&self, v: f32) -> bool {
+        v.is_finite() && v >= 0.0 && v.fract() == 0.0 && (v as usize) < self.vocab
+    }
+
+    /// Validate and read the token ids out of the f32 input tensor.
+    fn token_ids(&self, x: &Tensor) -> (usize, usize, Vec<usize>) {
+        let (bsz, seq) = x.as_2d();
+        assert!(seq >= 1, "decoder input needs at least one token");
+        assert!(
+            seq <= self.max_seq,
+            "sequence length {seq} exceeds max_seq {}",
+            self.max_seq
+        );
+        let ids: Vec<usize> = x
+            .data()
+            .iter()
+            .map(|&v| {
+                assert!(
+                    self.is_token_id(v),
+                    "token id {v} out of range for vocab {}",
+                    self.vocab
+                );
+                v as usize
+            })
+            .collect();
+        (bsz, seq, ids)
+    }
+
+    /// Causal attention forward for one block: probabilities (lower
+    /// triangle only) + context. Row `i` attends to `j ∈ 0..=i` in
+    /// ascending order — the loop structure the decode step reproduces
+    /// exactly, which is the whole bit-identity argument.
+    fn causal_attention_forward(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        bsz: usize,
+        seq: usize,
+    ) -> (Vec<f32>, Tensor) {
+        let d = self.d_model;
+        let heads = self.n_heads;
+        let dh = self.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let qd = q.data();
+        let kd = k.data();
+        let vd = v.data();
+        let mut probs = vec![0f32; bsz * heads * seq * seq];
+        let mut ctx = Tensor::zeros(&[bsz * seq, d]);
+        let cd = ctx.data_mut();
+        for b in 0..bsz {
+            for h in 0..heads {
+                let col = h * dh;
+                for i in 0..seq {
+                    let qrow = &qd[(b * seq + i) * d + col..][..dh];
+                    let prow = &mut probs[((b * heads + h) * seq + i) * seq..][..i + 1];
+                    // causal scores row: q_i · k_j / √d_h for j ≤ i, row max
+                    let mut mx = f32::NEG_INFINITY;
+                    for (j, p) in prow.iter_mut().enumerate() {
+                        let krow = &kd[(b * seq + j) * d + col..][..dh];
+                        let mut acc = 0f32;
+                        for t in 0..dh {
+                            acc += qrow[t] * krow[t];
+                        }
+                        let sc = acc * scale;
+                        *p = sc;
+                        if sc > mx {
+                            mx = sc;
+                        }
+                    }
+                    // exact softmax over the visible prefix
+                    let mut denom = 0f64;
+                    for p in prow.iter_mut() {
+                        let e = ((*p - mx) as f64).exp();
+                        *p = e as f32;
+                        denom += e;
+                    }
+                    for p in prow.iter_mut() {
+                        *p = ((*p as f64) / denom) as f32;
+                    }
+                    // ctx_i = Σ_{j≤i} p_ij · v_j, ascending j
+                    let crow = &mut cd[(b * seq + i) * d + col..][..dh];
+                    for (j, &p) in prow.iter().enumerate() {
+                        let vrow = &vd[(b * seq + j) * d + col..][..dh];
+                        for t in 0..dh {
+                            crow[t] += p * vrow[t];
+                        }
+                    }
+                }
+            }
+        }
+        (probs, ctx)
+    }
+
+    /// Exact causal attention backward: `(dq, dk, dv)` from `d_ctx`, the
+    /// stored probabilities and the forward activations. The softmax
+    /// Jacobian is applied in closed form over the visible prefix only:
+    /// `ds = p ⊙ (dp − Σ_{j≤i} p_j dp_j)`.
+    #[allow(clippy::too_many_arguments)]
+    fn causal_attention_backward(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        probs: &[f32],
+        d_ctx: &Tensor,
+        bsz: usize,
+        seq: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        let d = self.d_model;
+        let heads = self.n_heads;
+        let dh = self.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let qd = q.data();
+        let kd = k.data();
+        let vd = v.data();
+        let dcd = d_ctx.data();
+        let mut dq = Tensor::zeros(&[bsz * seq, d]);
+        let mut dk = Tensor::zeros(&[bsz * seq, d]);
+        let mut dv = Tensor::zeros(&[bsz * seq, d]);
+        let dqd = dq.data_mut();
+        let dkd = dk.data_mut();
+        let dvd = dv.data_mut();
+        let mut dp = vec![0f32; seq];
+        for b in 0..bsz {
+            for h in 0..heads {
+                let col = h * dh;
+                for i in 0..seq {
+                    let prow = &probs[((b * heads + h) * seq + i) * seq..][..i + 1];
+                    let dcrow = &dcd[(b * seq + i) * d + col..][..dh];
+                    // dV_j += p_ij · dctx_i ; dp_ij = dctx_i · v_j
+                    for (j, &p) in prow.iter().enumerate() {
+                        let vrow = &vd[(b * seq + j) * d + col..][..dh];
+                        let dvrow = &mut dvd[(b * seq + j) * d + col..][..dh];
+                        let mut acc = 0f32;
+                        for t in 0..dh {
+                            acc += dcrow[t] * vrow[t];
+                            dvrow[t] += p * dcrow[t];
+                        }
+                        dp[j] = acc;
+                    }
+                    // softmax Jacobian row over j ≤ i
+                    let mut inner = 0f64;
+                    for (&p, &g) in prow.iter().zip(dp.iter()) {
+                        inner += (p as f64) * (g as f64);
+                    }
+                    let inner = inner as f32;
+                    let qrow = &qd[(b * seq + i) * d + col..][..dh];
+                    for (j, &p) in prow.iter().enumerate() {
+                        let ds = p * (dp[j] - inner) * scale;
+                        if ds == 0.0 {
+                            continue; // zero rows add exact zeros on both paths
+                        }
+                        let krow = &kd[(b * seq + j) * d + col..][..dh];
+                        let dkrow = &mut dkd[(b * seq + j) * d + col..][..dh];
+                        for t in 0..dh {
+                            dkrow[t] += ds * qrow[t];
+                        }
+                        let dqrow = &mut dqd[(b * seq + i) * d + col..][..dh];
+                        for t in 0..dh {
+                            dqrow[t] += ds * krow[t];
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dk, dv)
+    }
+
+    /// The full forward pass with caches (shared by inference and training;
+    /// the storage form only changes which matmul kernels run).
+    fn run_forward(&self, w: &WeightsView, x: &Tensor) -> DecForwardPass {
+        let (bsz, seq, ids) = self.token_ids(x);
+        let d = self.d_model;
+        // embed: tok[id] + pos[s]
+        let tok = w.tensor(0);
+        let pos = w.tensor(1);
+        let mut h = Tensor::zeros(&[bsz * seq, d]);
+        {
+            let td = tok.data();
+            let pd = pos.data();
+            let hd = h.data_mut();
+            for r in 0..bsz {
+                for s in 0..seq {
+                    let id = ids[r * seq + s];
+                    let row = &mut hd[(r * seq + s) * d..][..d];
+                    let trow = &td[id * d..][..d];
+                    let prow = &pd[s * d..][..d];
+                    for j in 0..d {
+                        row[j] = trow[j] + prow[j];
+                    }
+                }
+            }
+        }
+        let mut blocks = Vec::with_capacity(self.n_blocks);
+        for blk in 0..self.n_blocks {
+            let ib = self.i_block(blk);
+            let (a, ln1) = layer_norm(&h, w.tensor(ib), w.tensor(ib + 1));
+            let q = w.matmul(&a, ib + 2);
+            let k = w.matmul(&a, ib + 3);
+            let v = w.matmul(&a, ib + 4);
+            let (probs, ctx) = self.causal_attention_forward(&q, &k, &v, bsz, seq);
+            let attn_out = w.matmul(&ctx, ib + 5);
+            let mut h_mid = h;
+            axpy(&mut h_mid, 1.0, &attn_out);
+            let (bv, ln2) = layer_norm(&h_mid, w.tensor(ib + 6), w.tensor(ib + 7));
+            let mut ff = w.matmul(&bv, ib + 8);
+            add_bias(&mut ff, w.tensor(ib + 9));
+            let ff_r = crate::tensor::relu(&ff);
+            let mut ff_out = w.matmul(&ff_r, ib + 10);
+            add_bias(&mut ff_out, w.tensor(ib + 11));
+            let mut h_out = h_mid;
+            axpy(&mut h_out, 1.0, &ff_out);
+            blocks.push(DecBlockCache { ln1, a, q, k, v, probs, ctx, ln2, bv, ff_r });
+            h = h_out;
+        }
+        // pool the last position per sequence, final LN, dense head
+        let mut pooled = Tensor::zeros(&[bsz, d]);
+        {
+            let hd = h.data();
+            let pd = pooled.data_mut();
+            for r in 0..bsz {
+                pd[r * d..(r + 1) * d].copy_from_slice(&hd[(r * seq + seq - 1) * d..][..d]);
+            }
+        }
+        let it = self.i_tail();
+        let (pn, lnf) = layer_norm(&pooled, w.tensor(it), w.tensor(it + 1));
+        let mut logits = w.matmul(&pn, it + 2);
+        add_bias(&mut logits, w.tensor(it + 3));
+        DecForwardPass { blocks, lnf, pn, logits, ids, bsz, seq }
+    }
+
+    /// Loss + gradients through the shared core; the grad of parameter `i`
+    /// is compact exactly when `w` stores it packed.
+    fn core_loss_and_grad(
+        &self,
+        w: &WeightsView,
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<PackedGrad>) {
+        let fwd = self.run_forward(w, x);
+        let (bsz, seq) = (fwd.bsz, fwd.seq);
+        let d = self.d_model;
+        let (loss, dlogits) = cross_entropy_with_grad(&fwd.logits, labels);
+
+        let mut grads: Vec<PackedGrad> = (0..self.n_params())
+            .map(|_| PackedGrad::Dense(Tensor::zeros(&[0])))
+            .collect();
+
+        // head + final LayerNorm
+        let it = self.i_tail();
+        grads[it + 2] = w.grad_w(&fwd.pn, &dlogits, it + 2);
+        grads[it + 3] = PackedGrad::Dense(colsum(&dlogits));
+        let dpn = w.matmul_bt(&dlogits, it + 2);
+        let (dpooled, dgf, dbf) = layer_norm_backward(&dpn, w.tensor(it), &fwd.lnf);
+        grads[it] = PackedGrad::Dense(dgf);
+        grads[it + 1] = PackedGrad::Dense(dbf);
+
+        // scatter the pooled gradient back into the last position
+        let mut dh = Tensor::zeros(&[bsz * seq, d]);
+        {
+            let dpd = dpooled.data();
+            let dhd = dh.data_mut();
+            for r in 0..bsz {
+                dhd[(r * seq + seq - 1) * d..][..d].copy_from_slice(&dpd[r * d..(r + 1) * d]);
+            }
+        }
+
+        for blk in (0..self.n_blocks).rev() {
+            let c = &fwd.blocks[blk];
+            let ib = self.i_block(blk);
+            // ---- FFN backward (residual: h_out = h_mid + ffn(LN₂(h_mid))) ----
+            grads[ib + 10] = w.grad_w(&c.ff_r, &dh, ib + 10);
+            grads[ib + 11] = PackedGrad::Dense(colsum(&dh));
+            let mut dr = w.matmul_bt(&dh, ib + 10);
+            for (g, &r) in dr.data_mut().iter_mut().zip(c.ff_r.data()) {
+                if r <= 0.0 {
+                    *g = 0.0; // ReLU gate, same convention as the MLP
+                }
+            }
+            grads[ib + 8] = w.grad_w(&c.bv, &dr, ib + 8);
+            grads[ib + 9] = PackedGrad::Dense(colsum(&dr));
+            let dbv = w.matmul_bt(&dr, ib + 8);
+            let (dh_mid_ln, dg2, db2) = layer_norm_backward(&dbv, w.tensor(ib + 6), &c.ln2);
+            grads[ib + 6] = PackedGrad::Dense(dg2);
+            grads[ib + 7] = PackedGrad::Dense(db2);
+            let mut dh_mid = dh; // the residual passes dh through unchanged
+            axpy(&mut dh_mid, 1.0, &dh_mid_ln);
+
+            // ---- attention backward (residual: h_mid = h_in + ctx @ W_o) ----
+            grads[ib + 5] = w.grad_w(&c.ctx, &dh_mid, ib + 5);
+            let dctx = w.matmul_bt(&dh_mid, ib + 5);
+            let (dq, dk, dv) =
+                self.causal_attention_backward(&c.q, &c.k, &c.v, &c.probs, &dctx, bsz, seq);
+            grads[ib + 2] = w.grad_w(&c.a, &dq, ib + 2);
+            grads[ib + 3] = w.grad_w(&c.a, &dk, ib + 3);
+            grads[ib + 4] = w.grad_w(&c.a, &dv, ib + 4);
+            let mut da = w.matmul_bt(&dq, ib + 2);
+            axpy(&mut da, 1.0, &w.matmul_bt(&dk, ib + 3));
+            axpy(&mut da, 1.0, &w.matmul_bt(&dv, ib + 4));
+            let (dh_ln1, dg1, db1) = layer_norm_backward(&da, w.tensor(ib), &c.ln1);
+            grads[ib] = PackedGrad::Dense(dg1);
+            grads[ib + 1] = PackedGrad::Dense(db1);
+            let mut dh_in = dh_mid;
+            axpy(&mut dh_in, 1.0, &dh_ln1);
+            dh = dh_in;
+        }
+
+        // embeddings: scatter-add per token id / position (ids validated
+        // once by the forward pass)
+        let ids = &fwd.ids;
+        let mut dtok = Tensor::zeros(&[self.vocab, d]);
+        let mut dpos = Tensor::zeros(&[self.max_seq, d]);
+        {
+            let dhd = dh.data();
+            let dtd = dtok.data_mut();
+            let dpd = dpos.data_mut();
+            for r in 0..bsz {
+                for s in 0..seq {
+                    let row = &dhd[(r * seq + s) * d..][..d];
+                    let id = ids[r * seq + s];
+                    let trow = &mut dtd[id * d..][..d];
+                    for j in 0..d {
+                        trow[j] += row[j];
+                    }
+                    let prow = &mut dpd[s * d..][..d];
+                    for j in 0..d {
+                        prow[j] += row[j];
+                    }
+                }
+            }
+        }
+        grads[0] = PackedGrad::Dense(dtok);
+        grads[1] = PackedGrad::Dense(dpos);
+        (loss, grads)
+    }
+
+    // ---- incremental decoding ---------------------------------------------
+
+    /// An empty KV cache for `bsz` sequences advancing in lock step.
+    pub fn new_cache(&self, bsz: usize) -> DecoderKvCache {
+        let stride = self.max_seq * self.d_model;
+        DecoderKvCache {
+            bsz,
+            max_seq: self.max_seq,
+            d: self.d_model,
+            len: 0,
+            k: (0..self.n_blocks).map(|_| vec![0f32; bsz * stride]).collect(),
+            v: (0..self.n_blocks).map(|_| vec![0f32; bsz * stride]).collect(),
+        }
+    }
+
+    /// Advance every sequence by one token over dense weights: `ids[r]` is
+    /// the token at position `cache.len()` of sequence `r`; returns the
+    /// next-token logits `[bsz, vocab]`. Bit-identical, per sequence and
+    /// step, to [`forward`](Self::forward) over the full prefix.
+    pub fn decode_step(
+        &self,
+        params: &[Tensor],
+        cache: &mut DecoderKvCache,
+        ids: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "decoder param arity: {} vs {}",
+            params.len(),
+            self.n_params()
+        );
+        self.decode_core(&WeightsView::Dense(params), cache, ids)
+    }
+
+    /// [`decode_step`](Self::decode_step) over packed N:M weights —
+    /// bit-identical to the dense masked decode by the shared-core
+    /// construction plus the packed kernel equalities.
+    pub fn decode_step_packed(
+        &self,
+        params: &[PackedParam],
+        cache: &mut DecoderKvCache,
+        ids: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "decoder packed param arity: {} vs {}",
+            params.len(),
+            self.n_params()
+        );
+        let cols: Vec<Option<Vec<u32>>> = vec![None; params.len()];
+        self.decode_core(&WeightsView::Packed { params, cols: &cols }, cache, ids)
+    }
+
+    /// The single-token forward: one embedding row per sequence, per-block
+    /// LN → QKV → causal attention against the cache → FFN, appending this
+    /// step's keys/values at position `cache.len()`. Every loop mirrors the
+    /// full forward's loop for row `t` exactly (same kernels, same
+    /// ascending-j accumulation), which is what makes the step bit-exact.
+    fn decode_core(
+        &self,
+        w: &WeightsView,
+        cache: &mut DecoderKvCache,
+        ids: &[usize],
+    ) -> anyhow::Result<Tensor> {
+        let d = self.d_model;
+        anyhow::ensure!(
+            cache.d == d && cache.max_seq == self.max_seq && cache.k.len() == self.n_blocks,
+            "KV cache was built for a different decoder (d {} seq {} blocks {})",
+            cache.d,
+            cache.max_seq,
+            cache.k.len()
+        );
+        let bsz = cache.bsz;
+        anyhow::ensure!(bsz >= 1, "KV cache tracks no sequences");
+        anyhow::ensure!(
+            ids.len() == bsz,
+            "decode step got {} ids for {} cached sequences",
+            ids.len(),
+            bsz
+        );
+        let t = cache.len;
+        anyhow::ensure!(
+            t < self.max_seq,
+            "KV cache is full: position {t} at max_seq {}",
+            self.max_seq
+        );
+        for (r, &id) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                id < self.vocab,
+                "sequence {r}: token id {id} out of range for vocab {}",
+                self.vocab
+            );
+        }
+        let heads = self.n_heads;
+        let dh = self.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let stride = self.max_seq * d;
+        // embed this position: tok[id] + pos[t]
+        let mut h = Tensor::zeros(&[bsz, d]);
+        {
+            let td = w.tensor(0).data();
+            let pd = w.tensor(1).data();
+            let hd = h.data_mut();
+            for (r, &id) in ids.iter().enumerate() {
+                let row = &mut hd[r * d..(r + 1) * d];
+                let trow = &td[id * d..][..d];
+                let prow = &pd[t * d..][..d];
+                for j in 0..d {
+                    row[j] = trow[j] + prow[j];
+                }
+            }
+        }
+        let mut prow = vec![0f32; t + 1];
+        for blk in 0..self.n_blocks {
+            let ib = self.i_block(blk);
+            let (a, _ln1) = layer_norm(&h, w.tensor(ib), w.tensor(ib + 1));
+            let q = w.matmul(&a, ib + 2);
+            let k_new = w.matmul(&a, ib + 3);
+            let v_new = w.matmul(&a, ib + 4);
+            // append this step's keys/values at position t
+            {
+                let kbuf = &mut cache.k[blk];
+                let vbuf = &mut cache.v[blk];
+                let knd = k_new.data();
+                let vnd = v_new.data();
+                for r in 0..bsz {
+                    kbuf[(r * self.max_seq + t) * d..][..d]
+                        .copy_from_slice(&knd[r * d..(r + 1) * d]);
+                    vbuf[(r * self.max_seq + t) * d..][..d]
+                        .copy_from_slice(&vnd[r * d..(r + 1) * d]);
+                }
+            }
+            // causal attention for row t against the cached prefix 0..=t —
+            // the exact loop structure of causal_attention_forward at i = t
+            let mut ctx = Tensor::zeros(&[bsz, d]);
+            {
+                let qd = q.data();
+                let kbuf = &cache.k[blk];
+                let vbuf = &cache.v[blk];
+                let cd = ctx.data_mut();
+                for r in 0..bsz {
+                    for hh in 0..heads {
+                        let col = hh * dh;
+                        let qrow = &qd[r * d + col..][..dh];
+                        let mut mx = f32::NEG_INFINITY;
+                        for (j, p) in prow.iter_mut().enumerate() {
+                            let krow = &kbuf[(r * stride + j * d) + col..][..dh];
+                            let mut acc = 0f32;
+                            for u in 0..dh {
+                                acc += qrow[u] * krow[u];
+                            }
+                            let sc = acc * scale;
+                            *p = sc;
+                            if sc > mx {
+                                mx = sc;
+                            }
+                        }
+                        let mut denom = 0f64;
+                        for p in prow.iter_mut() {
+                            let e = ((*p - mx) as f64).exp();
+                            *p = e as f32;
+                            denom += e;
+                        }
+                        for p in prow.iter_mut() {
+                            *p = ((*p as f64) / denom) as f32;
+                        }
+                        let crow = &mut cd[r * d + col..][..dh];
+                        for (j, &p) in prow.iter().enumerate() {
+                            let vrow = &vbuf[(r * stride + j * d) + col..][..dh];
+                            for u in 0..dh {
+                                crow[u] += p * vrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+            let attn_out = w.matmul(&ctx, ib + 5);
+            let mut h_mid = h;
+            axpy(&mut h_mid, 1.0, &attn_out);
+            let (bv, _ln2) = layer_norm(&h_mid, w.tensor(ib + 6), w.tensor(ib + 7));
+            let mut ff = w.matmul(&bv, ib + 8);
+            add_bias(&mut ff, w.tensor(ib + 9));
+            let ff_r = crate::tensor::relu(&ff);
+            let mut ff_out = w.matmul(&ff_r, ib + 10);
+            add_bias(&mut ff_out, w.tensor(ib + 11));
+            let mut h_out = h_mid;
+            axpy(&mut h_out, 1.0, &ff_out);
+            h = h_out;
+        }
+        cache.len = t + 1;
+        let it = self.i_tail();
+        let (pn, _lnf) = layer_norm(&h, w.tensor(it), w.tensor(it + 1));
+        let mut logits = w.matmul(&pn, it + 2);
+        add_bias(&mut logits, w.tensor(it + 3));
+        Ok(logits)
+    }
+
+    // ---- inherent conveniences (the trait impl delegates here) -----------
+
+    /// Dense forward: next-token logits `[batch, vocab]` from token ids
+    /// `[batch, seq]` (the last position's prediction).
+    pub fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
+        assert_eq!(params.len(), self.n_params(), "decoder param arity");
+        self.run_forward(&WeightsView::Dense(params), x).logits
+    }
+
+    /// Packed forward — bit-identical to [`forward`](Self::forward) over
+    /// the dense masked weights on finite inputs.
+    pub fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
+        assert_eq!(params.len(), self.n_params(), "decoder packed param arity");
+        let cols: Vec<Option<Vec<u32>>> = vec![None; params.len()];
+        self.run_forward(&WeightsView::Packed { params, cols: &cols }, x)
+            .logits
+    }
+
+    /// Dense loss + exact gradients.
+    pub fn loss_and_grad(
+        &self,
+        params: &[Tensor],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<Tensor>) {
+        assert_eq!(params.len(), self.n_params(), "decoder param arity");
+        let (loss, grads) = self.core_loss_and_grad(&WeightsView::Dense(params), x, labels);
+        let grads = grads
+            .into_iter()
+            .map(|g| match g {
+                PackedGrad::Dense(t) => t,
+                // nm-lint: allow(panic-freedom): core_loss_and_grad returns Compact only for packed views; this branch is the Dense view
+                PackedGrad::Compact(_) => unreachable!("dense path yields dense grads"),
+            })
+            .collect();
+        (loss, grads)
+    }
+
+    /// Describe this decoder as a manifest-style [`ModelInfo`]; the layout
+    /// (names + shapes) is sufficient to rebuild the architecture via
+    /// [`from_model_info`](Self::from_model_info). Single-head decoders
+    /// emit the plain `pos_emb` name — byte-for-byte the legacy manifest
+    /// layout.
+    pub fn model_info(&self, key: &str, batch: usize) -> ModelInfo {
+        let names = self.param_names();
+        let shapes = self.param_shapes();
+        let flags = self.sparse_flags();
+        let params: Vec<(String, Vec<usize>, bool)> = names
+            .into_iter()
+            .zip(shapes)
+            .zip(flags.iter().copied())
+            .map(|((n, s), f)| (n, s, f))
+            .collect();
+        let sparse_indices = flags
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &s)| s.then_some(i))
+            .collect();
+        let dim = params.iter().map(|(_, s, _)| s.iter().product::<usize>()).sum();
+        ModelInfo {
+            key: key.to_string(),
+            params,
+            sparse_indices,
+            kind: "lm".to_string(),
+            n_classes: self.vocab,
+            dim,
+            batch,
+            seq: Some(self.max_seq),
+        }
+    }
+
+    /// Rebuild a [`TokenDecoder`] from a manifest layout: `tok_emb`, a
+    /// position embedding (plain `pos_emb` reads as one head — the legacy
+    /// convention — or `pos_emb_h{heads}`), separate-QKV LayerNorm blocks
+    /// of [`DEC_BLOCK_PARAMS`] tensors, and a final-LN vocabulary head.
+    /// Only kind `"lm"` dispatches here: the decoder is a next-token model
+    /// by construction.
+    pub fn from_model_info(info: &ModelInfo) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            info.kind == "lm",
+            "model {:?}: the causal decoder serves kind \"lm\", not {:?}",
+            info.key,
+            info.kind
+        );
+        let n = info.params.len();
+        anyhow::ensure!(
+            n >= DEC_EXTRA_PARAMS + DEC_BLOCK_PARAMS
+                && (n - DEC_EXTRA_PARAMS) % DEC_BLOCK_PARAMS == 0,
+            "model {:?}: {n} params do not form tok/pos + LayerNorm QKV blocks + LN head",
+            info.key
+        );
+        let n_blocks = (n - DEC_EXTRA_PARAMS) / DEC_BLOCK_PARAMS;
+        let (tok_name, tok_shape, _) = &info.params[0];
+        let (pos_name, pos_shape, _) = &info.params[1];
+        anyhow::ensure!(
+            tok_name.starts_with("tok_emb") && tok_shape.len() == 2,
+            "model {:?}: first param {tok_name:?} {tok_shape:?} is not a token embedding",
+            info.key
+        );
+        let (vocab, d_model) = (tok_shape[0], tok_shape[1]);
+        anyhow::ensure!(
+            pos_shape.len() == 2 && pos_shape[1] == d_model,
+            "model {:?}: position embedding {pos_shape:?} does not match d_model {d_model}",
+            info.key
+        );
+        let max_seq = pos_shape[0];
+        let n_heads: usize = if pos_name == "pos_emb" {
+            1 // the legacy manifests carry no head tag: single-head
+        } else {
+            pos_name
+                .strip_prefix("pos_emb_h")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "model {:?}: cannot infer the head count from {pos_name:?} \
+                         (expected pos_emb or pos_emb_h<heads>)",
+                        info.key
+                    )
+                })?
+        };
+        anyhow::ensure!(
+            n_heads >= 1 && d_model % n_heads == 0,
+            "model {:?}: {n_heads} heads do not divide d_model {d_model}",
+            info.key
+        );
+        // d_ff from the first block's fc1 shape
+        let (_, fc1_shape, _) = &info.params[2 + 8];
+        anyhow::ensure!(
+            fc1_shape.len() == 2 && fc1_shape[0] == d_model,
+            "model {:?}: fc1 shape {fc1_shape:?} does not start at d_model {d_model}",
+            info.key
+        );
+        let d_ff = fc1_shape[1];
+        let (_, head_shape, _) = &info.params[n - 2];
+        anyhow::ensure!(
+            head_shape.len() == 2 && head_shape[0] == d_model && head_shape[1] == vocab,
+            "model {:?}: head shape {head_shape:?} is not [d_model {d_model}, vocab {vocab}]",
+            info.key
+        );
+        anyhow::ensure!(
+            info.n_classes == vocab,
+            "model {:?}: n_classes {} != vocab {vocab} (next-token head)",
+            info.key,
+            info.n_classes
+        );
+        let dec = Self::new(vocab, d_model, n_heads, d_ff, n_blocks, max_seq);
+        // the whole layout (incl. every block + sparse flags) must agree
+        let shapes = dec.param_shapes();
+        let flags = dec.sparse_flags();
+        for (i, (name, shape, sparse)) in info.params.iter().enumerate() {
+            anyhow::ensure!(
+                *shape == shapes[i],
+                "model {:?} param {i} ({name:?}): shape {shape:?} vs expected {:?}",
+                info.key,
+                shapes[i]
+            );
+            anyhow::ensure!(
+                *sparse == flags[i],
+                "model {:?} param {i} ({name:?}): sparse flag {sparse} vs expected {}",
+                info.key,
+                flags[i]
+            );
+        }
+        Ok(dec)
+    }
+}
+
+impl super::SparseModel for TokenDecoder {
+    fn n_params(&self) -> usize {
+        TokenDecoder::n_params(self)
+    }
+
+    fn in_dim(&self) -> usize {
+        self.max_seq
+    }
+
+    fn out_dim(&self) -> usize {
+        self.vocab
+    }
+
+    fn init(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+        TokenDecoder::init(self, rng)
+    }
+
+    fn sparse_flags(&self) -> Vec<bool> {
+        TokenDecoder::sparse_flags(self)
+    }
+
+    fn forward(&self, params: &[Tensor], x: &Tensor) -> Tensor {
+        TokenDecoder::forward(self, params, x)
+    }
+
+    fn loss_and_grad(&self, params: &[Tensor], x: &Tensor, labels: &[usize]) -> (f64, Vec<Tensor>) {
+        TokenDecoder::loss_and_grad(self, params, x, labels)
+    }
+
+    fn forward_packed(&self, params: &[PackedParam], x: &Tensor) -> Tensor {
+        TokenDecoder::forward_packed(self, params, x)
+    }
+
+    fn loss_and_grad_packed_with_cols(
+        &self,
+        params: &[PackedParam],
+        cols: &[Option<Vec<u32>>],
+        x: &Tensor,
+        labels: &[usize],
+    ) -> (f64, Vec<PackedGrad>) {
+        assert_eq!(params.len(), self.n_params(), "decoder packed param arity");
+        assert_eq!(params.len(), cols.len(), "cols cache arity");
+        self.core_loss_and_grad(&WeightsView::Packed { params, cols }, x, labels)
+    }
+
+    fn validate_packed_params(&self, params: &[PackedParam]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n_params(),
+            "packed model has {} params, decoder wants {}",
+            params.len(),
+            self.n_params()
+        );
+        let shapes = self.param_shapes();
+        let flags = self.sparse_flags();
+        for (i, p) in params.iter().enumerate() {
+            anyhow::ensure!(
+                p.shape() == &shapes[i][..],
+                "decoder param {i}: shape {:?} vs expected {:?}",
+                p.shape(),
+                shapes[i]
+            );
+            if !flags[i] {
+                anyhow::ensure!(
+                    p.as_dense().is_some(),
+                    "decoder param {i} (embedding/norm/bias/head) must be dense"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Sequences of any length `1..=max_seq` serve (the positional table is
+    /// sliced, exactly like the dense forward).
+    fn check_input_dim(&self, dim: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dim >= 1 && dim <= self.max_seq,
+            "batch feature dim {dim} does not fit the decoder (sequence length must be 1..={})",
+            self.max_seq
+        );
+        Ok(())
+    }
+
+    /// Value-level validation on top of the width check: every entry must
+    /// be a whole in-vocabulary token id — the error twin of the panic the
+    /// forward's own `token_ids` gate would raise, so serving rejects a
+    /// malformed batch instead of panicking after the counters moved.
+    fn validate_input(&self, x: &Tensor) -> anyhow::Result<()> {
+        self.check_input_dim(x.last_dim())?;
+        for (i, &v) in x.data().iter().enumerate() {
+            anyhow::ensure!(
+                self.is_token_id(v),
+                "batch entry {i} ({v}) is not a token id in vocab 0..{}",
+                self.vocab
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SparseModel;
+
+    fn tiny() -> TokenDecoder {
+        TokenDecoder::new(13, 8, 2, 12, 2, 6)
+    }
+
+    fn token_batch(rng: &mut Pcg64, dec: &TokenDecoder, bsz: usize, seq: usize) -> Tensor {
+        let data: Vec<f32> = (0..bsz * seq).map(|_| rng.below(dec.vocab) as f32).collect();
+        Tensor::new(&[bsz, seq], data)
+    }
+
+    #[test]
+    fn shapes_flags_and_arity() {
+        let dec = tiny();
+        assert_eq!(dec.n_params(), 6 + 24);
+        let shapes = dec.param_shapes();
+        assert_eq!(shapes[0], vec![13, 8]);
+        assert_eq!(shapes[1], vec![6, 8]);
+        assert_eq!(shapes[2], vec![8], "ln1_g");
+        assert_eq!(shapes[4], vec![8, 8], "wq");
+        assert_eq!(shapes[10], vec![8, 12], "fc1_w");
+        let flags = dec.sparse_flags();
+        assert_eq!(flags.len(), dec.n_params());
+        assert_eq!(flags.iter().filter(|&&f| f).count(), 6 * dec.n_blocks);
+        assert!(!flags[0] && !flags[1], "embeddings dense");
+        assert!(!flags[2] && !flags[3], "LayerNorm affines dense");
+        let names = dec.param_names();
+        assert_eq!(names[2], "l0_ln1_g");
+        assert_eq!(names[4], "l0_wq");
+        assert_eq!(names[dec.n_params() - 2], "head_w");
+        let params = dec.init(&mut Pcg64::new(1));
+        for (p, s) in params.iter().zip(&shapes) {
+            assert_eq!(p.shape(), &s[..]);
+        }
+    }
+
+    #[test]
+    fn init_layer_norm_gains_are_one() {
+        let dec = tiny();
+        let params = dec.init(&mut Pcg64::new(2));
+        let names = dec.param_names();
+        for (i, name) in names.iter().enumerate() {
+            if name.ends_with("_g") {
+                assert!(params[i].data().iter().all(|&v| v == 1.0), "{name}");
+            }
+            if name.ends_with("ln1_b") || name.ends_with("ln2_b") || name == "lnf_b" {
+                assert!(params[i].data().iter().all(|&v| v == 0.0), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_short_sequences() {
+        let dec = tiny();
+        let params = dec.init(&mut Pcg64::new(3));
+        let mut rng = Pcg64::new(4);
+        for seq in [1usize, 3, 6] {
+            let x = token_batch(&mut rng, &dec, 4, seq);
+            let y = dec.forward(&params, &x);
+            assert_eq!(y.shape(), &[4, 13], "seq {seq}");
+            assert!(y.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_vocab_ids() {
+        let dec = tiny();
+        let params = dec.init(&mut Pcg64::new(5));
+        let x = Tensor::new(&[1, 2], vec![0.0, 99.0]);
+        dec.forward(&params, &x);
+    }
+
+    #[test]
+    fn model_info_round_trips_single_and_multi_head() {
+        for dec in [TokenDecoder::new(32, 8, 1, 32, 1, 6), tiny()] {
+            let info = dec.model_info("dec_rt", 4);
+            if dec.n_heads == 1 {
+                assert_eq!(info.params[1].0, "pos_emb", "legacy plain name");
+            } else {
+                assert_eq!(info.params[1].0, "pos_emb_h2");
+            }
+            let back = TokenDecoder::from_model_info(&info).unwrap();
+            assert_eq!(back.vocab, dec.vocab);
+            assert_eq!(back.d_model, dec.d_model);
+            assert_eq!(back.n_heads, dec.n_heads);
+            assert_eq!(back.d_ff, dec.d_ff);
+            assert_eq!(back.n_blocks, dec.n_blocks);
+            assert_eq!(back.max_seq, dec.max_seq);
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_forward_dense() {
+        // teacher-forced decode over a full sequence: the step-t logits
+        // must equal forward() over the t+1-token prefix, bit for bit
+        let dec = tiny();
+        let params = dec.init(&mut Pcg64::new(6));
+        let mut rng = Pcg64::new(7);
+        let bsz = 3;
+        let x = token_batch(&mut rng, &dec, bsz, dec.max_seq);
+        let mut cache = dec.new_cache(bsz);
+        for t in 0..dec.max_seq {
+            let ids: Vec<usize> =
+                (0..bsz).map(|r| x.data()[r * dec.max_seq + t] as usize).collect();
+            let step = dec.decode_step(&params, &mut cache, &ids).unwrap();
+            let prefix = {
+                let mut data = Vec::with_capacity(bsz * (t + 1));
+                for r in 0..bsz {
+                    data.extend_from_slice(&x.data()[r * dec.max_seq..][..t + 1]);
+                }
+                Tensor::new(&[bsz, t + 1], data)
+            };
+            let full = dec.forward(&params, &prefix);
+            assert_eq!(step.data(), full.data(), "step {t} logits diverge");
+        }
+        assert_eq!(cache.len(), dec.max_seq);
+        let err = dec.decode_step(&params, &mut cache, &vec![0; bsz]);
+        assert!(err.is_err(), "decoding past max_seq must error");
+    }
+
+    #[test]
+    fn cache_eviction_preserves_survivor_bits() {
+        let dec = tiny();
+        let params = dec.init(&mut Pcg64::new(8));
+        let mut rng = Pcg64::new(9);
+        let x = token_batch(&mut rng, &dec, 4, 4);
+        // advance 4 sequences two steps, evict rows 1 and 3, keep going
+        let mut cache = dec.new_cache(4);
+        for t in 0..2 {
+            let ids: Vec<usize> = (0..4).map(|r| x.data()[r * 4 + t] as usize).collect();
+            dec.decode_step(&params, &mut cache, &ids).unwrap();
+        }
+        cache.evict(&[true, false, true, false]).unwrap();
+        assert_eq!(cache.bsz(), 2);
+        let ids: Vec<usize> = [0usize, 2].iter().map(|&r| x.data()[r * 4 + 2] as usize).collect();
+        let after = dec.decode_step(&params, &mut cache, &ids).unwrap();
+        // reference: the same two sequences decoded alone from scratch
+        let mut solo = dec.new_cache(2);
+        let mut last = None;
+        for t in 0..3 {
+            let ids: Vec<usize> =
+                [0usize, 2].iter().map(|&r| x.data()[r * 4 + t] as usize).collect();
+            last = Some(dec.decode_step(&params, &mut solo, &ids).unwrap());
+        }
+        assert_eq!(after.data(), last.unwrap().data(), "eviction perturbed survivors");
+        assert!(cache.evict(&[true]).is_err(), "wrong-arity evict mask must error");
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let dec = TokenDecoder::new(9, 8, 2, 12, 1, 5);
+        let mut rng = Pcg64::new(10);
+        let mut params = dec.init(&mut rng);
+        // learnable rule: the next token is the last token plus one mod 9
+        let x = token_batch(&mut rng, &dec, 24, 5);
+        let labels: Vec<usize> = (0..24)
+            .map(|r| (x.data()[r * 5 + 4] as usize + 1) % 9)
+            .collect();
+        let (first, _) = dec.loss_and_grad(&params, &x, &labels);
+        for _ in 0..400 {
+            let (_, grads) = dec.loss_and_grad(&params, &x, &labels);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                crate::tensor::axpy(p, -0.1, g);
+            }
+        }
+        let (last, _) = dec.loss_and_grad(&params, &x, &labels);
+        assert!(last < first * 0.5, "{first} -> {last}");
+        assert!(dec.accuracy(&params, &x, &labels) > 0.8);
+    }
+}

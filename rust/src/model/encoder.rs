@@ -21,10 +21,11 @@
 //! the zoo's "hidden weights sparse, head dense" convention (SR-STE /
 //! MaskLLM prune exactly this family).
 //!
-//! **One core, two storage forms.** The forward and backward run through an
-//! internal `WeightsView` that dispatches each projection matmul to either
-//! the dense kernels or the packed N:M kernels
-//! ([`packed_matmul`] / [`packed_matmul_at_into`] / [`packed_matmul_bt_into`]).
+//! **One core, two storage forms.** The forward and backward run through the
+//! shared crate-internal `weights::WeightsView` that dispatches each projection
+//! matmul to either the dense kernels or the packed N:M kernels
+//! ([`crate::sparsity::packed_matmul`] / [`crate::sparsity::packed_matmul_at_into`] /
+//! [`crate::sparsity::packed_matmul_bt_into`]).
 //! Everything else — embedding gather, softmax, residuals, bias sums — is
 //! shared code, so the packed path is **bit-for-bit** identical to the dense
 //! *masked* oracle on finite inputs by construction plus the kernel-level
@@ -38,14 +39,11 @@
 //! ([`Pool::First`]), a next-token LM head pools the last ([`Pool::Last`])
 //! and classifies over the vocabulary.
 
+use super::weights::{colsum, WeightsView};
 use crate::rng::Pcg64;
 use crate::runtime::ModelInfo;
-use crate::sparsity::{
-    packed_matmul, packed_matmul_at_into, packed_matmul_bt_into, PackedGrad, PackedParam,
-};
-use crate::tensor::{
-    add_bias, axpy, cross_entropy_with_grad, matmul, matmul_at, matmul_bt, Tensor,
-};
+use crate::sparsity::{PackedGrad, PackedParam};
+use crate::tensor::{add_bias, axpy, cross_entropy_with_grad, Tensor};
 
 /// Parameter tensors per encoder block: `[qkv_w, qkv_b, out_w, out_b,
 /// ff1_w, ff1_b, ff2_w, ff2_b]`.
@@ -73,81 +71,6 @@ pub struct TokenEncoder {
     /// next-token head.
     pub n_out: usize,
     pub pool: Pool,
-}
-
-/// Storage-form dispatch for the core forward/backward: the three matmul
-/// shapes a projection participates in either run the dense kernels or the
-/// packed N:M kernels. Only the four block projections ever differ; every
-/// dense-always parameter (embeddings, biases, head) reads through
-/// [`WeightsView::tensor`].
-enum WeightsView<'a> {
-    Dense(&'a [Tensor]),
-    Packed {
-        params: &'a [PackedParam],
-        /// Decoded column indices per packed parameter (`None` for dense).
-        cols: &'a [Option<Vec<u32>>],
-    },
-}
-
-impl<'a> WeightsView<'a> {
-    /// Parameter `i` as a dense tensor (panics if it is packed — only ever
-    /// called for the dense-always parameters).
-    fn tensor(&self, i: usize) -> &Tensor {
-        match self {
-            WeightsView::Dense(p) => &p[i],
-            WeightsView::Packed { params, .. } => params[i]
-                .as_dense()
-                // nm-lint: allow(panic-freedom): only the dense-always parameter indices reach this accessor — packing eligibility is fixed by sparse_flags at pack time
-                .expect("embeddings, biases and the head are never packed"),
-        }
-    }
-
-    /// `h @ W_i` — forward projection.
-    fn matmul(&self, h: &Tensor, i: usize) -> Tensor {
-        match self {
-            WeightsView::Dense(p) => matmul(h, &p[i]),
-            WeightsView::Packed { params, .. } => match &params[i] {
-                PackedParam::Dense(w) => matmul(h, w),
-                PackedParam::Packed(w) => packed_matmul(h, w),
-            },
-        }
-    }
-
-    /// `delta @ W_iᵀ` — the activation gradient through projection `i`.
-    fn matmul_bt(&self, delta: &Tensor, i: usize) -> Tensor {
-        match self {
-            WeightsView::Dense(p) => matmul_bt(delta, &p[i]),
-            WeightsView::Packed { params, cols } => match &params[i] {
-                PackedParam::Dense(w) => matmul_bt(delta, w),
-                PackedParam::Packed(w) => {
-                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
-                    let ci = cols[i].as_ref().expect("packed param lacks cols cache");
-                    let (rows, _) = delta.as_2d();
-                    let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
-                    packed_matmul_bt_into(delta, w, ci, &mut out);
-                    out
-                }
-            },
-        }
-    }
-
-    /// `aᵀ @ delta` — the weight gradient of projection `i` (compact on the
-    /// packed side: pruned coordinates are never materialized).
-    fn grad_w(&self, a: &Tensor, delta: &Tensor, i: usize) -> PackedGrad {
-        match self {
-            WeightsView::Dense(_) => PackedGrad::Dense(matmul_at(a, delta)),
-            WeightsView::Packed { params, cols } => match &params[i] {
-                PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a, delta)),
-                PackedParam::Packed(w) => {
-                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
-                    let ci = cols[i].as_ref().expect("packed param lacks cols cache");
-                    let mut gv = vec![0f32; w.n_values()];
-                    packed_matmul_at_into(a, delta, w, ci, &mut gv);
-                    PackedGrad::Compact(gv)
-                }
-            },
-        }
-    }
 }
 
 /// Per-block forward caches the backward pass replays.
@@ -178,21 +101,6 @@ struct ForwardPass {
     ids: Vec<usize>,
     bsz: usize,
     seq: usize,
-}
-
-/// Column-sum of a 2-D tensor (the bias gradient), identical accumulation
-/// order to the MLP's inline loop.
-fn colsum(t: &Tensor) -> Tensor {
-    let (rows, cols) = t.as_2d();
-    let mut out = Tensor::zeros(&[cols]);
-    let td = t.data();
-    let od = out.data_mut();
-    for r in 0..rows {
-        for (o, &v) in od.iter_mut().zip(&td[r * cols..(r + 1) * cols]) {
-            *o += v;
-        }
-    }
-    out
 }
 
 impl TokenEncoder {

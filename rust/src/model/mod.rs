@@ -15,7 +15,13 @@
 //!   with exact softmax backprop, FFN, residuals; all projection matrices
 //!   sparse-eligible, embeddings/biases/head dense) — the paper's central
 //!   BERT/GPT-2 workload family.
-//! * [`AnyModel`] — the runtime dispatch over both, resolved from a
+//! * [`TokenDecoder`] — the causal pre-norm decoder (separate-QKV
+//!   projections, LayerNorm with an exact analytic backward from
+//!   [`norm`], last-token next-token head) — the legacy manifest layout,
+//!   plus KV-cached incremental decoding
+//!   ([`TokenDecoder::decode_step_packed`]) for token-by-token batched
+//!   generation over packed weights.
+//! * [`AnyModel`] — the runtime dispatch over all three, resolved from a
 //!   manifest [`ModelInfo`] by [`model_from_info`].
 //!
 //! The **bit-identity contract** is part of the trait: for finite inputs,
@@ -27,9 +33,13 @@
 //! swapped (the kernel-level equalities live in
 //! [`crate::sparsity::packed`]).
 
+pub mod decoder;
 pub mod encoder;
 pub mod mlp;
+pub mod norm;
+mod weights;
 
+pub use decoder::{DecoderKvCache, TokenDecoder};
 pub use encoder::{Pool, TokenEncoder};
 pub use mlp::Mlp;
 
@@ -225,6 +235,7 @@ pub trait SparseModel: Clone + Send + Sync {
 pub enum AnyModel {
     Mlp(Mlp),
     Encoder(TokenEncoder),
+    Decoder(TokenDecoder),
 }
 
 macro_rules! any_delegate {
@@ -232,6 +243,7 @@ macro_rules! any_delegate {
         match $self {
             AnyModel::Mlp($m) => $body,
             AnyModel::Encoder($m) => $body,
+            AnyModel::Decoder($m) => $body,
         }
     };
 }
@@ -315,11 +327,12 @@ impl SparseModel for AnyModel {
 /// the dispatcher behind `Session::batch_server` / `finetune_session`.
 ///
 /// Classifier layouts with alternating `[w, b]` pairs resolve to [`Mlp`];
-/// token-model layouts (`tok_emb` / `pos_emb_h<heads>` followed by
-/// fused-QKV blocks and a dense head, kind `"classify"` or `"lm"`) resolve
-/// to [`TokenEncoder`]. Anything else — including the legacy separate-QKV
-/// manifest layout, which the pure-Rust encoder does not model — gets an
-/// error naming both attempts instead of silent garbage.
+/// fused-QKV token-model layouts (`tok_emb` / `pos_emb_h<heads>` followed
+/// by QKV blocks and a dense head, kind `"classify"` or `"lm"`) resolve to
+/// [`TokenEncoder`]; separate-QKV + LayerNorm layouts — including the
+/// legacy manifests with a plain untagged `pos_emb` — resolve to
+/// [`TokenDecoder`]. Anything else gets an error naming every attempt
+/// instead of silent garbage.
 pub fn model_from_info(info: &ModelInfo) -> anyhow::Result<AnyModel> {
     let mlp_err = if info.kind == "classify" {
         match Mlp::from_model_info(info) {
@@ -329,16 +342,25 @@ pub fn model_from_info(info: &ModelInfo) -> anyhow::Result<AnyModel> {
     } else {
         None
     };
-    match TokenEncoder::from_model_info(info) {
-        Ok(enc) => Ok(AnyModel::Encoder(enc)),
-        Err(enc_err) => match mlp_err {
-            Some(mlp_err) => Err(anyhow::anyhow!(
-                "model {:?} matches neither pure-Rust layout (MLP: {mlp_err}; encoder: {enc_err})",
-                info.key
-            )),
-            None => Err(enc_err),
-        },
-    }
+    let enc_err = match TokenEncoder::from_model_info(info) {
+        Ok(enc) => return Ok(AnyModel::Encoder(enc)),
+        Err(e) => e,
+    };
+    let dec_err = match TokenDecoder::from_model_info(info) {
+        Ok(dec) => return Ok(AnyModel::Decoder(dec)),
+        Err(e) => e,
+    };
+    Err(match mlp_err {
+        Some(mlp_err) => anyhow::anyhow!(
+            "model {:?} matches no pure-Rust layout (MLP: {mlp_err}; encoder: {enc_err}; \
+             decoder: {dec_err})",
+            info.key
+        ),
+        None => anyhow::anyhow!(
+            "model {:?} matches no pure-Rust layout (encoder: {enc_err}; decoder: {dec_err})",
+            info.key
+        ),
+    })
 }
 
 #[cfg(test)]
@@ -393,9 +415,59 @@ mod tests {
         assert_eq!(cback.n_out, 3);
     }
 
+    /// The legacy separate-QKV + LayerNorm manifest layout — the exact
+    /// plain-`pos_emb` naming the old manifests used — dispatches to
+    /// [`TokenDecoder`] and round-trips. This used to be an `is_err`
+    /// rejection test, open since PR 5.
     #[test]
-    fn model_from_info_rejects_foreign_layouts_with_both_attempts() {
-        // a classify layout that is neither an [w, b] MLP nor an encoder
+    fn model_from_info_dispatches_legacy_layernorm_layouts_to_the_decoder() {
+        let lm = ModelInfo {
+            key: "lm_legacy".into(),
+            params: vec![
+                ("tok_emb".into(), vec![32, 8], false),
+                ("pos_emb".into(), vec![6, 8], false), // no head-count tag: 1 head
+                ("l0_ln1_g".into(), vec![8], false),
+                ("l0_ln1_b".into(), vec![8], false),
+                ("l0_wq".into(), vec![8, 8], true),
+                ("l0_wk".into(), vec![8, 8], true),
+                ("l0_wv".into(), vec![8, 8], true),
+                ("l0_wo".into(), vec![8, 8], true),
+                ("l0_ln2_g".into(), vec![8], false),
+                ("l0_ln2_b".into(), vec![8], false),
+                ("l0_fc1_w".into(), vec![8, 32], true),
+                ("l0_fc1_b".into(), vec![32], false),
+                ("l0_fc2_w".into(), vec![32, 8], true),
+                ("l0_fc2_b".into(), vec![8], false),
+                ("lnf_g".into(), vec![8], false),
+                ("lnf_b".into(), vec![8], false),
+                ("head_w".into(), vec![8, 32], false),
+                ("head_b".into(), vec![32], false),
+            ],
+            sparse_indices: vec![4, 5, 6, 7, 10, 12],
+            kind: "lm".into(),
+            n_classes: 32,
+            dim: 0,
+            batch: 1,
+            seq: Some(6),
+        };
+        let AnyModel::Decoder(dec) = model_from_info(&lm).unwrap() else {
+            panic!("legacy LayerNorm layout must dispatch to TokenDecoder");
+        };
+        assert_eq!(dec.vocab, 32);
+        assert_eq!(dec.d_model, 8);
+        assert_eq!(dec.n_heads, 1, "plain pos_emb reads as single-head");
+        assert_eq!(dec.d_ff, 32);
+        assert_eq!(dec.n_blocks, 1);
+        assert_eq!(dec.max_seq, 6);
+        // and the decoder's own manifest reproduces the legacy naming
+        let info = dec.model_info("lm_legacy", 1);
+        assert_eq!(info.params[1].0, "pos_emb");
+        assert_eq!(info.sparse_indices, vec![4, 5, 6, 7, 10, 12]);
+    }
+
+    #[test]
+    fn model_from_info_rejects_foreign_layouts_with_every_attempt() {
+        // a classify layout that matches no family names all three attempts
         let info = ModelInfo {
             key: "weird".into(),
             params: vec![("w".into(), vec![4, 4, 4], true)],
@@ -407,13 +479,15 @@ mod tests {
             seq: None,
         };
         let err = model_from_info(&info).unwrap_err().to_string();
-        assert!(err.contains("neither"), "unhelpful error: {err}");
-        // legacy separate-QKV LM layouts (wq/wk/wv + LayerNorm) still error
+        assert!(err.contains("matches no pure-Rust layout"), "unhelpful error: {err}");
+        assert!(err.contains("MLP:") && err.contains("decoder:"), "missing attempts: {err}");
+        // a truncated legacy LM layout (separate QKV but no LayerNorm
+        // tensors) fits neither token family: error, not silent garbage
         let lm = ModelInfo {
-            key: "lm_legacy".into(),
+            key: "lm_no_norms".into(),
             params: vec![
                 ("tok_emb".into(), vec![32, 8], false),
-                ("pos_emb".into(), vec![6, 8], false), // no head-count tag
+                ("pos_emb".into(), vec![6, 8], false),
                 ("l0_wq".into(), vec![8, 8], true),
                 ("l0_wk".into(), vec![8, 8], true),
                 ("l0_wv".into(), vec![8, 8], true),
@@ -432,7 +506,9 @@ mod tests {
             batch: 1,
             seq: Some(6),
         };
-        assert!(model_from_info(&lm).is_err());
+        let err = model_from_info(&lm).unwrap_err().to_string();
+        assert!(err.contains("matches no pure-Rust layout"), "unhelpful error: {err}");
+        assert!(err.contains("encoder:") && err.contains("decoder:"), "missing attempts: {err}");
     }
 
     #[test]

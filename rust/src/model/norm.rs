@@ -1,0 +1,234 @@
+//! LayerNorm with an **exact analytic backward** — the missing primitive
+//! behind the legacy separate-QKV + LayerNorm manifest layouts (open since
+//! PR 5, closed by [`super::TokenDecoder`]).
+//!
+//! Forward, per row over the trailing dimension `d` (μ and σ² accumulated
+//! in f64, ascending index order — the fixed accumulation order IS the
+//! bit-identity contract for this module):
+//!
+//! ```text
+//!   x̂_j = (x_j − μ) / √(σ² + ε)        y_j = x̂_j · γ_j + β_j
+//! ```
+//!
+//! Backward, in closed form (the standard LayerNorm Jacobian; `m1`/`m2`
+//! are per-row means of `dŷ` and `dŷ ⊙ x̂` in f64):
+//!
+//! ```text
+//!   dx̂_j = dy_j · γ_j
+//!   dx_j  = (dx̂_j − m1 − x̂_j · m2) / √(σ² + ε)
+//!   dγ_j  = Σ_rows dy_j · x̂_j          dβ_j = Σ_rows dy_j
+//! ```
+//!
+//! `rust/tests/decoder_generation.rs` holds [`layer_norm_backward`] to
+//! finite-difference checks. Because the normalization is **per-row**, a
+//! row's output depends on nothing but that row — which is what lets the
+//! KV-cached incremental decode ([`super::TokenDecoder::decode_step`])
+//! reproduce the full-sequence forward bit-for-bit.
+
+use crate::tensor::Tensor;
+
+/// The ε inside the √ of every LayerNorm in the model zoo (the GPT-2 /
+/// BERT convention).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Forward byproducts the backward replays: the normalized activations
+/// and the per-row `1/√(σ²+ε)` (kept in f64 so forward and backward agree
+/// to the last bit on what was divided by).
+pub struct LnCache {
+    /// `x̂` — normalized pre-affine activations `[rows, d]`.
+    pub xhat: Tensor,
+    /// Per-row inverse standard deviation (f64, the forward's own value).
+    pub inv_std: Vec<f64>,
+}
+
+/// Row-wise LayerNorm over the trailing dimension: `y = x̂ ⊙ γ + β` with
+/// the cache the exact backward needs. `gamma`/`beta` are `[d]` where `d`
+/// is `x`'s trailing dimension.
+pub fn layer_norm(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> (Tensor, LnCache) {
+    let (rows, d) = x.as_2d();
+    assert_eq!(gamma.numel(), d, "layer_norm: gamma length vs trailing dim");
+    assert_eq!(beta.numel(), d, "layer_norm: beta length vs trailing dim");
+    assert!(d >= 1, "layer_norm: empty trailing dimension");
+    let xd = x.data();
+    let gd = gamma.data();
+    let bd = beta.data();
+    let mut y = Tensor::zeros(&[rows, d]);
+    let mut xhat = Tensor::zeros(&[rows, d]);
+    let mut inv_std = vec![0f64; rows];
+    let yd = y.data_mut();
+    let hd = xhat.data_mut();
+    for r in 0..rows {
+        let row = &xd[r * d..(r + 1) * d];
+        // μ and σ² in f64, ascending j — the pinned accumulation order
+        let mut sum = 0f64;
+        for &v in row {
+            sum += v as f64;
+        }
+        let mean = sum / d as f64;
+        let mut var_sum = 0f64;
+        for &v in row {
+            let c = v as f64 - mean;
+            var_sum += c * c;
+        }
+        let istd = 1.0 / (var_sum / d as f64 + LN_EPS as f64).sqrt();
+        inv_std[r] = istd;
+        let hrow = &mut hd[r * d..(r + 1) * d];
+        let yrow = &mut yd[r * d..(r + 1) * d];
+        for j in 0..d {
+            let xh = ((row[j] as f64 - mean) * istd) as f32;
+            hrow[j] = xh;
+            yrow[j] = xh * gd[j] + bd[j];
+        }
+    }
+    (y, LnCache { xhat, inv_std })
+}
+
+/// Exact analytic backward of [`layer_norm`]: `(dx, dγ, dβ)` from the
+/// upstream gradient `dy` and the forward cache. Per-row means `m1`/`m2`
+/// accumulate in f64 ascending; the parameter gradients accumulate rows
+/// ascending (the same convention as the model zoo's bias column-sums).
+pub fn layer_norm_backward(
+    dy: &Tensor,
+    gamma: &Tensor,
+    cache: &LnCache,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, d) = dy.as_2d();
+    assert_eq!(cache.xhat.shape(), &[rows, d], "layer_norm_backward: cache shape");
+    assert_eq!(cache.inv_std.len(), rows, "layer_norm_backward: cache rows");
+    assert_eq!(gamma.numel(), d, "layer_norm_backward: gamma length");
+    let dyd = dy.data();
+    let gd = gamma.data();
+    let hd = cache.xhat.data();
+    let mut dx = Tensor::zeros(&[rows, d]);
+    let mut dgamma = Tensor::zeros(&[d]);
+    let mut dbeta = Tensor::zeros(&[d]);
+    let dxd = dx.data_mut();
+    let dgd = dgamma.data_mut();
+    let dbd = dbeta.data_mut();
+    for r in 0..rows {
+        let dyrow = &dyd[r * d..(r + 1) * d];
+        let hrow = &hd[r * d..(r + 1) * d];
+        let istd = cache.inv_std[r];
+        // m1 = mean(dx̂), m2 = mean(dx̂ ⊙ x̂) in f64, ascending j
+        let mut m1 = 0f64;
+        let mut m2 = 0f64;
+        for j in 0..d {
+            let dxh = (dyrow[j] * gd[j]) as f64;
+            m1 += dxh;
+            m2 += dxh * hrow[j] as f64;
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        let dxrow = &mut dxd[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxh = (dyrow[j] * gd[j]) as f64;
+            dxrow[j] = ((dxh - m1 - hrow[j] as f64 * m2) * istd) as f32;
+            dgd[j] += dyrow[j] * hrow[j];
+            dbd[j] += dyrow[j];
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn forward_normalizes_rows() {
+        let mut rng = Pcg64::new(11);
+        let x = Tensor::randn(&[4, 16], &mut rng, 3.0, 2.0);
+        let gamma = Tensor::full(&[16], 1.0);
+        let beta = Tensor::zeros(&[16]);
+        let (y, cache) = layer_norm(&x, &gamma, &beta);
+        assert_eq!(y.shape(), &[4, 16]);
+        let yd = y.data();
+        for r in 0..4 {
+            let row = &yd[r * 16..(r + 1) * 16];
+            let mean: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / 16.0;
+            let var: f64 = row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / 16.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+            assert!(cache.inv_std[r] > 0.0);
+        }
+        // identity affine keeps y == x̂
+        assert_eq!(y.data(), cache.xhat.data());
+    }
+
+    #[test]
+    fn affine_applies_per_feature() {
+        let x = Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let gamma = Tensor::new(&[4], vec![2.0, 2.0, 2.0, 2.0]);
+        let beta = Tensor::new(&[4], vec![0.5, 0.5, 0.5, 0.5]);
+        let (y, cache) = layer_norm(&x, &gamma, &beta);
+        for (j, &v) in y.data().iter().enumerate() {
+            let expect = cache.xhat.data()[j] * 2.0 + 0.5;
+            assert_eq!(v, expect, "feature {j}");
+        }
+    }
+
+    #[test]
+    fn constant_rows_stay_finite() {
+        // σ² = 0: the ε keeps the division finite and x̂ exactly zero
+        let x = Tensor::full(&[2, 8], 7.0);
+        let gamma = Tensor::full(&[8], 1.5);
+        let beta = Tensor::full(&[8], -0.25);
+        let (y, cache) = layer_norm(&x, &gamma, &beta);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!(cache.xhat.data().iter().all(|&v| v == 0.0));
+        assert!(y.data().iter().all(|&v| v == -0.25));
+        let dy = Tensor::full(&[2, 8], 1.0);
+        let (dx, dg, db) = layer_norm_backward(&dy, &gamma, &cache);
+        assert!(dx.data().iter().all(|v| v.is_finite()));
+        assert!(dg.data().iter().all(|&v| v == 0.0), "dγ over zero x̂");
+        assert!(db.data().iter().all(|&v| v == 2.0), "dβ sums the rows");
+    }
+
+    /// The analytic backward against central finite differences of the
+    /// scalar probe L = Σ w ⊙ layer_norm(x) for fixed random w, over x,
+    /// γ and β. (The heavier fd suite lives in
+    /// `rust/tests/decoder_generation.rs`.)
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg64::new(12);
+        let x = Tensor::randn(&[3, 5], &mut rng, 0.0, 1.0);
+        let gamma = Tensor::randn(&[5], &mut rng, 1.0, 0.2);
+        let beta = Tensor::randn(&[5], &mut rng, 0.0, 0.2);
+        let w = Tensor::randn(&[3, 5], &mut rng, 0.0, 1.0);
+        let probe = |x: &Tensor, g: &Tensor, b: &Tensor| -> f64 {
+            let (y, _) = layer_norm(x, g, b);
+            y.data().iter().zip(w.data()).map(|(&a, &c)| a as f64 * c as f64).sum()
+        };
+        let (_, cache) = layer_norm(&x, &gamma, &beta);
+        let (dx, dg, db) = layer_norm_backward(&w, &gamma, &cache);
+        let eps = 1e-2f32;
+        let check = |analytic: f32, plus: f64, minus: f64, what: &str| {
+            let fd = (plus - minus) / (2.0 * eps as f64);
+            let tol = 1e-2 * (1.0 + fd.abs());
+            assert!(
+                (analytic as f64 - fd).abs() < tol,
+                "{what}: analytic {analytic} vs fd {fd}"
+            );
+        };
+        for i in 0..x.numel() {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            check(dx.data()[i], probe(&xp, &gamma, &beta), probe(&xm, &gamma, &beta), "dx");
+        }
+        for i in 0..gamma.numel() {
+            let mut gp = gamma.clone();
+            gp.data_mut()[i] += eps;
+            let mut gm = gamma.clone();
+            gm.data_mut()[i] -= eps;
+            check(dg.data()[i], probe(&x, &gp, &beta), probe(&x, &gm, &beta), "dγ");
+            let mut bp = beta.clone();
+            bp.data_mut()[i] += eps;
+            let mut bm = beta.clone();
+            bm.data_mut()[i] -= eps;
+            check(db.data()[i], probe(&x, &gamma, &bp), probe(&x, &gamma, &bm), "dβ");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Storage-form dispatch shared by the attention model family
+//! ([`super::TokenEncoder`], [`super::TokenDecoder`]): the same core
+//! forward/backward code runs over dense tensors or packed N:M weights,
+//! with only the projection matmuls swapping kernels. Keeping the dispatch
+//! in one place is what makes the packed paths **bit-for-bit** identical
+//! to the dense masked oracle by construction — there is exactly one
+//! implementation of everything that is not a matmul.
+
+use crate::sparsity::{
+    packed_matmul, packed_matmul_at_into, packed_matmul_bt_into, PackedGrad, PackedParam,
+};
+use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+
+/// Storage-form dispatch for the core forward/backward: the three matmul
+/// shapes a projection participates in either run the dense kernels or the
+/// packed N:M kernels. Only the sparse-eligible block projections ever
+/// differ; every dense-always parameter (embeddings, biases, LayerNorm
+/// affines, head) reads through [`WeightsView::tensor`].
+pub(crate) enum WeightsView<'a> {
+    Dense(&'a [Tensor]),
+    Packed {
+        params: &'a [PackedParam],
+        /// Decoded column indices per packed parameter (`None` for dense).
+        cols: &'a [Option<Vec<u32>>],
+    },
+}
+
+impl<'a> WeightsView<'a> {
+    /// Parameter `i` as a dense tensor (panics if it is packed — only ever
+    /// called for the dense-always parameters).
+    pub(crate) fn tensor(&self, i: usize) -> &Tensor {
+        match self {
+            WeightsView::Dense(p) => &p[i],
+            WeightsView::Packed { params, .. } => params[i]
+                .as_dense()
+                // nm-lint: allow(panic-freedom): only the dense-always parameter indices reach this accessor — packing eligibility is fixed by sparse_flags at pack time
+                .expect("embeddings, biases, norms and the head are never packed"),
+        }
+    }
+
+    /// `h @ W_i` — forward projection.
+    pub(crate) fn matmul(&self, h: &Tensor, i: usize) -> Tensor {
+        match self {
+            WeightsView::Dense(p) => matmul(h, &p[i]),
+            WeightsView::Packed { params, .. } => match &params[i] {
+                PackedParam::Dense(w) => matmul(h, w),
+                PackedParam::Packed(w) => packed_matmul(h, w),
+            },
+        }
+    }
+
+    /// `delta @ W_iᵀ` — the activation gradient through projection `i`.
+    pub(crate) fn matmul_bt(&self, delta: &Tensor, i: usize) -> Tensor {
+        match self {
+            WeightsView::Dense(p) => matmul_bt(delta, &p[i]),
+            WeightsView::Packed { params, cols } => match &params[i] {
+                PackedParam::Dense(w) => matmul_bt(delta, w),
+                PackedParam::Packed(w) => {
+                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
+                    let ci = cols[i].as_ref().expect("packed param lacks cols cache");
+                    let (rows, _) = delta.as_2d();
+                    let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
+                    packed_matmul_bt_into(delta, w, ci, &mut out);
+                    out
+                }
+            },
+        }
+    }
+
+    /// `aᵀ @ delta` — the weight gradient of projection `i` (compact on the
+    /// packed side: pruned coordinates are never materialized).
+    pub(crate) fn grad_w(&self, a: &Tensor, delta: &Tensor, i: usize) -> PackedGrad {
+        match self {
+            WeightsView::Dense(_) => PackedGrad::Dense(matmul_at(a, delta)),
+            WeightsView::Packed { params, cols } => match &params[i] {
+                PackedParam::Dense(_) => PackedGrad::Dense(matmul_at(a, delta)),
+                PackedParam::Packed(w) => {
+                    // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
+                    let ci = cols[i].as_ref().expect("packed param lacks cols cache");
+                    let mut gv = vec![0f32; w.n_values()];
+                    packed_matmul_at_into(a, delta, w, ci, &mut gv);
+                    PackedGrad::Compact(gv)
+                }
+            },
+        }
+    }
+}
+
+/// Column-sum of a 2-D tensor (the bias gradient), identical accumulation
+/// order to the MLP's inline loop.
+pub(crate) fn colsum(t: &Tensor) -> Tensor {
+    let (rows, cols) = t.as_2d();
+    let mut out = Tensor::zeros(&[cols]);
+    let td = t.data();
+    let od = out.data_mut();
+    for r in 0..rows {
+        for (o, &v) in od.iter_mut().zip(&td[r * cols..(r + 1) * cols]) {
+            *o += v;
+        }
+    }
+    out
+}

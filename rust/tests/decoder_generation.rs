@@ -1,0 +1,482 @@
+//! End-to-end guarantees of the causal decoder + KV-cached generation
+//! stack (the PR-9 bugfix surface):
+//!
+//! 1. `layer_norm` / `layer_norm_backward` — the exact analytic LayerNorm
+//!    backward is held to central finite differences over inputs, gains
+//!    and shifts across shapes and seeds.
+//! 2. The legacy separate-QKV + LayerNorm manifest layouts dispatch
+//!    through `model_from_info` to a working `TokenDecoder` and round-trip
+//!    (the layouts the dispatcher used to reject).
+//! 3. The packed decoder forward / loss / gradients are **bit-for-bit**
+//!    identical to the dense masked oracle.
+//! 4. KV-cached incremental decoding (`decode_step` /
+//!    `decode_step_packed`) reproduces the full-sequence forward bit-exactly
+//!    at every step, including after cache eviction.
+//! 5. Batched greedy generation (ragged prompts, eot stops, mid-run
+//!    eviction) is token-for-token the dense full-recompute trajectory,
+//!    whether built directly, from a `BatchServer`, from a `ServeFrontend`,
+//!    or from a checkpoint reload.
+
+use step_nm::checkpoint::Checkpoint;
+use step_nm::coordinator::{
+    BatchGenerator, BatchServer, FrontendConfig, GenerateConfig, ServeFrontend,
+};
+use step_nm::model::norm::{layer_norm, layer_norm_backward};
+use step_nm::model::{model_from_info, AnyModel, SparseModel, TokenDecoder};
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::{NmRatio, PackedParam};
+use step_nm::tensor::{argmax_rows, Tensor};
+
+/// The shared tiny decoder: vocab 17, d_model 8, 2 heads, d_ff 16,
+/// 2 blocks, max_seq 8 — big enough to exercise multi-head attention,
+/// residuals and both LayerNorm sites, small enough to fd-check.
+fn tiny() -> TokenDecoder {
+    TokenDecoder::new(17, 8, 2, 16, 2, 8)
+}
+
+fn ids_tensor(seqs: &[Vec<usize>]) -> Tensor {
+    let seq = seqs[0].len();
+    assert!(seqs.iter().all(|s| s.len() == seq));
+    let data: Vec<f32> = seqs.iter().flat_map(|s| s.iter().map(|&i| i as f32)).collect();
+    Tensor::new(&[seqs.len(), seq], data)
+}
+
+fn random_seqs(rng: &mut Pcg64, bsz: usize, seq: usize, vocab: usize) -> Vec<Vec<usize>> {
+    (0..bsz)
+        .map(|_| (0..seq).map(|_| rng.below(vocab)).collect())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. LayerNorm backward vs finite differences
+// ---------------------------------------------------------------------------
+
+/// Central-difference check of the analytic backward on the scalar probe
+/// `L = Σ w ⊙ layer_norm(x)` for fixed random `w`: dL/dx, dL/dγ and dL/dβ
+/// must all match `(L(θ+ε) − L(θ−ε)) / 2ε` within fd tolerance, across
+/// shapes (tall, wide, single-row, single-column) and seeds.
+#[test]
+fn layer_norm_backward_matches_finite_differences() {
+    for (case, &(rows, d)) in [(2usize, 7usize), (5, 3), (1, 16), (6, 1 + 1)].iter().enumerate() {
+        let mut rng = Pcg64::new(90 + case as u64);
+        let x = Tensor::randn(&[rows, d], &mut rng, 0.5, 1.5);
+        let gamma = Tensor::randn(&[d], &mut rng, 1.0, 0.3);
+        let beta = Tensor::randn(&[d], &mut rng, 0.0, 0.3);
+        let w = Tensor::randn(&[rows, d], &mut rng, 0.0, 1.0);
+        let probe = |x: &Tensor, g: &Tensor, b: &Tensor| -> f64 {
+            let (y, _) = layer_norm(x, g, b);
+            let mut acc = 0f64;
+            for (a, c) in y.data().iter().zip(w.data()) {
+                acc += *a as f64 * *c as f64;
+            }
+            acc
+        };
+        let (_, cache) = layer_norm(&x, &gamma, &beta);
+        let (dx, dgamma, dbeta) = layer_norm_backward(&w, &gamma, &cache);
+        let eps = 1e-2f32;
+        let mut check = |analytic: f32, plus: f64, minus: f64, what: String| {
+            let fd = (plus - minus) / (2.0 * eps as f64);
+            let tol = 2e-2 * (1.0 + fd.abs());
+            assert!(
+                (analytic as f64 - fd).abs() < tol,
+                "{what}: analytic {analytic} vs fd {fd} (case {case})"
+            );
+        };
+        for i in 0..rows * d {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            check(
+                dx.data()[i],
+                probe(&xp, &gamma, &beta),
+                probe(&xm, &gamma, &beta),
+                format!("dx[{i}]"),
+            );
+        }
+        for j in 0..d {
+            let mut gp = gamma.clone();
+            gp.data_mut()[j] += eps;
+            let mut gm = gamma.clone();
+            gm.data_mut()[j] -= eps;
+            check(
+                dgamma.data()[j],
+                probe(&x, &gp, &beta),
+                probe(&x, &gm, &beta),
+                format!("dgamma[{j}]"),
+            );
+            let mut bp = beta.clone();
+            bp.data_mut()[j] += eps;
+            let mut bm = beta.clone();
+            bm.data_mut()[j] -= eps;
+            check(
+                dbeta.data()[j],
+                probe(&x, &gamma, &bp),
+                probe(&x, &gamma, &bm),
+                format!("dbeta[{j}]"),
+            );
+        }
+    }
+}
+
+/// The whole-decoder gradient (which routes through four LayerNorm
+/// backwards per token plus attention and FFN) fd-checks on a scalar
+/// directional probe: dL/dθ · v ≈ (L(θ+εv) − L(θ−εv)) / 2ε for random
+/// directions v over every parameter tensor.
+#[test]
+fn decoder_gradients_match_directional_finite_differences() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(77);
+    let params = dec.init(&mut rng);
+    let seqs = random_seqs(&mut rng, 3, dec.max_seq - 2, dec.vocab);
+    let x = ids_tensor(&seqs);
+    let labels: Vec<usize> = (0..3).map(|_| rng.below(dec.vocab)).collect();
+    let (_, grads) = dec.loss_and_grad(&params, &x, &labels);
+    let eps = 1e-2f32;
+    for (i, p) in params.iter().enumerate() {
+        let v = Tensor::randn(p.shape(), &mut rng, 0.0, 1.0);
+        let analytic: f64 = grads[i]
+            .data()
+            .iter()
+            .zip(v.data())
+            .map(|(&g, &d)| g as f64 * d as f64)
+            .sum();
+        let mut shifted = |sign: f32| -> f64 {
+            let mut pp = params.clone();
+            for (w, &d) in pp[i].data_mut().iter_mut().zip(v.data()) {
+                *w += sign * eps * d;
+            }
+            dec.loss_and_grad(&pp, &x, &labels).0
+        };
+        let fd = (shifted(1.0) - shifted(-1.0)) / (2.0 * eps as f64);
+        let tol = 5e-2 * (1.0 + fd.abs());
+        assert!(
+            (analytic - fd).abs() < tol,
+            "param {i}: directional grad {analytic} vs fd {fd}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Legacy manifest dispatch
+// ---------------------------------------------------------------------------
+
+/// The bug this PR fixes: a legacy `lm_legacy`-style manifest (separate
+/// wq/wk/wv/wo + ln1/ln2/lnf, plain `pos_emb`) must resolve through
+/// `model_from_info` to a `TokenDecoder` whose own manifest reproduces the
+/// layout byte-for-byte — names, shapes, and sparse indices.
+#[test]
+fn legacy_layernorm_manifests_dispatch_and_round_trip() {
+    for heads in [1usize, 2] {
+        let dec = TokenDecoder::new(17, 8, heads, 16, 2, 8);
+        let info = dec.model_info("lm_legacy", 4);
+        assert_eq!(info.kind, "lm");
+        if heads == 1 {
+            assert!(
+                info.params.iter().any(|(n, _, _)| n == "pos_emb"),
+                "single-head decoders carry the legacy plain pos_emb name"
+            );
+        }
+        let any = model_from_info(&info).unwrap_or_else(|e| {
+            panic!("legacy layout ({heads} heads) must dispatch, got: {e}")
+        });
+        let back = match any {
+            AnyModel::Decoder(d) => d,
+            other => panic!("expected a decoder, got {other:?}"),
+        };
+        assert_eq!(back.vocab, dec.vocab);
+        assert_eq!(back.d_model, dec.d_model);
+        assert_eq!(back.n_heads, heads);
+        assert_eq!(back.d_ff, dec.d_ff);
+        assert_eq!(back.n_blocks, dec.n_blocks);
+        assert_eq!(back.max_seq, dec.max_seq);
+        let re = back.model_info("lm_legacy", 4);
+        assert_eq!(re.params, info.params, "layout must survive the round trip");
+        assert_eq!(re.sparse_indices, info.sparse_indices);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Packed vs dense masked bit-identity (forward, loss, gradients)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_decoder_matches_dense_masked_bit_for_bit() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(31);
+    let params = dec.init(&mut rng);
+    for (n, m) in [(2usize, 4usize), (1, 4)] {
+        let ratio = NmRatio::new(n, m);
+        let packed = dec.pack_params(&params, ratio);
+        let masked = dec.masked_params(&params, ratio);
+        // pack really is the masked weights, compressed
+        for (p, w) in packed.iter().zip(&masked) {
+            assert_eq!(&p.unpack(), w, "{n}:{m} pack != mask");
+        }
+        let seqs = random_seqs(&mut rng, 4, dec.max_seq, dec.vocab);
+        let x = ids_tensor(&seqs);
+        let dense_logits = dec.forward(&masked, &x);
+        let packed_logits = dec.forward_packed(&packed, &x);
+        assert_eq!(
+            dense_logits.data(),
+            packed_logits.data(),
+            "{n}:{m} packed forward must be bit-identical"
+        );
+        // loss and gradients: same bits on the same path
+        let labels: Vec<usize> = (0..4).map(|_| rng.below(dec.vocab)).collect();
+        let (dense_loss, dense_grads) = dec.loss_and_grad(&masked, &x, &labels);
+        let (packed_loss, packed_grads) = dec.loss_and_grad_packed(&packed, &x, &labels);
+        assert_eq!(
+            dense_loss.to_bits(),
+            packed_loss.to_bits(),
+            "{n}:{m} packed loss must be bit-identical"
+        );
+        for (i, (pg, dg)) in packed_grads.iter().zip(&dense_grads).enumerate() {
+            match (pg, &packed[i]) {
+                (step_nm::sparsity::PackedGrad::Dense(t), _) => {
+                    assert_eq!(t.data(), dg.data(), "{n}:{m} dense grad {i}");
+                }
+                (step_nm::sparsity::PackedGrad::Compact(c), PackedParam::Packed(pk)) => {
+                    // compact grads are the dense masked grads at the kept
+                    // coordinates, in storage order
+                    let cols = pk.col_indices();
+                    let vpr = pk.values_per_row();
+                    let width = pk.shape()[pk.shape().len() - 1];
+                    let rows = pk.shape().iter().product::<usize>() / width;
+                    assert_eq!(c.len(), rows * vpr);
+                    for r in 0..rows {
+                        for k in 0..vpr {
+                            let col = cols[r * vpr + k] as usize;
+                            assert_eq!(
+                                c[r * vpr + k].to_bits(),
+                                dg.data()[r * width + col].to_bits(),
+                                "{n}:{m} compact grad {i} row {r} slot {k}"
+                            );
+                        }
+                    }
+                }
+                (step_nm::sparsity::PackedGrad::Compact(_), PackedParam::Dense(_)) => {
+                    panic!("compact grad for a dense param {i}")
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. KV-cached decode vs full recompute
+// ---------------------------------------------------------------------------
+
+/// At every step t of a teacher-forced sequence, both `decode_step` (dense)
+/// and `decode_step_packed` must produce logits bit-identical to the dense
+/// masked full forward recomputed from scratch over positions 0..=t — the
+/// KV cache must be invisible at the bit level.
+#[test]
+fn kv_decode_matches_full_recompute_at_every_step() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(55);
+    let params = dec.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let packed = dec.pack_params(&params, ratio);
+    let masked = dec.masked_params(&params, ratio);
+    let bsz = 3usize;
+    let seqs = random_seqs(&mut rng, bsz, dec.max_seq, dec.vocab);
+    let mut kv_dense = dec.new_cache(bsz);
+    let mut kv_packed = dec.new_cache(bsz);
+    for t in 0..dec.max_seq {
+        let ids: Vec<usize> = seqs.iter().map(|s| s[t]).collect();
+        let step_dense = dec.decode_step(&masked, &mut kv_dense, &ids).unwrap();
+        let step_packed = dec.decode_step_packed(&packed, &mut kv_packed, &ids).unwrap();
+        let prefixes: Vec<Vec<usize>> = seqs.iter().map(|s| s[..=t].to_vec()).collect();
+        let full = dec.forward(&masked, &ids_tensor(&prefixes));
+        assert_eq!(
+            step_dense.data(),
+            full.data(),
+            "dense decode_step != full recompute at t={t}"
+        );
+        assert_eq!(
+            step_packed.data(),
+            full.data(),
+            "decode_step_packed != full recompute at t={t}"
+        );
+    }
+    // the cache is now full: one more step must error cleanly, not panic
+    let ids: Vec<usize> = vec![0; bsz];
+    assert!(dec.decode_step(&masked, &mut kv_dense, &ids).is_err());
+}
+
+/// Evicting finished rows from a shared cache must not perturb a single
+/// bit of the survivors: after eviction, continued decoding matches a
+/// from-scratch cache that only ever held the surviving sequences.
+#[test]
+fn cache_eviction_is_bit_invisible_to_survivors() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(56);
+    let params = dec.init(&mut rng);
+    let packed = dec.pack_params(&params, NmRatio::new(2, 4));
+    let seqs = random_seqs(&mut rng, 4, dec.max_seq, dec.vocab);
+    let t_evict = 3usize;
+    let mut cache = dec.new_cache(4);
+    for t in 0..t_evict {
+        let ids: Vec<usize> = seqs.iter().map(|s| s[t]).collect();
+        dec.decode_step_packed(&packed, &mut cache, &ids).unwrap();
+    }
+    cache.evict(&[false, true, false, true]).unwrap();
+    assert_eq!(cache.bsz(), 2);
+    // survivor-only cache built from scratch
+    let survivors = [seqs[1].clone(), seqs[3].clone()];
+    let mut solo = dec.new_cache(2);
+    for t in 0..t_evict {
+        let ids: Vec<usize> = survivors.iter().map(|s| s[t]).collect();
+        dec.decode_step_packed(&packed, &mut solo, &ids).unwrap();
+    }
+    for t in t_evict..dec.max_seq {
+        let ids: Vec<usize> = survivors.iter().map(|s| s[t]).collect();
+        let evicted = dec.decode_step_packed(&packed, &mut cache, &ids).unwrap();
+        let scratch = dec.decode_step_packed(&packed, &mut solo, &ids).unwrap();
+        assert_eq!(
+            evicted.data(),
+            scratch.data(),
+            "eviction perturbed survivor bits at t={t}"
+        );
+    }
+    // wrong-arity eviction masks error cleanly
+    assert!(cache.evict(&[true]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// 5. Greedy generation vs the dense oracle, through every entry point
+// ---------------------------------------------------------------------------
+
+/// The dense full-recompute greedy oracle for one sequence.
+fn oracle_generate(
+    dec: &TokenDecoder,
+    masked: &[Tensor],
+    prompt: &[usize],
+    cfg: &GenerateConfig,
+) -> Vec<usize> {
+    let mut seq = prompt.to_vec();
+    let mut generated = 0usize;
+    while generated < cfg.max_new_tokens && seq.len() < dec.max_seq {
+        let logits = dec.forward(masked, &ids_tensor(&[seq.clone()]));
+        let tok = argmax_rows(&logits)[0];
+        seq.push(tok);
+        generated += 1;
+        if Some(tok) == cfg.eot {
+            break;
+        }
+    }
+    seq
+}
+
+#[test]
+fn batched_generation_matches_the_dense_oracle() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(61);
+    let params = dec.init(&mut rng);
+    for (n, m) in [(2usize, 4usize), (1, 4)] {
+        let ratio = NmRatio::new(n, m);
+        let packed = dec.pack_params(&params, ratio);
+        let masked = dec.masked_params(&params, ratio);
+        let gen = BatchGenerator::new(dec.clone(), packed).unwrap();
+        // ragged prompts of lengths 1..=4; an eot stop so eviction fires
+        // mid-run while other sequences keep decoding
+        let prompts: Vec<Vec<usize>> = (0..4)
+            .map(|i| (0..=i).map(|_| rng.below(dec.vocab)).collect())
+            .collect();
+        for eot in [None, Some(0usize)] {
+            let cfg = GenerateConfig { max_new_tokens: dec.max_seq, eot };
+            let got = gen.generate(&prompts, &cfg).unwrap();
+            let mut want_new = 0usize;
+            for (r, p) in prompts.iter().enumerate() {
+                let want = oracle_generate(&dec, &masked, p, &cfg);
+                assert_eq!(
+                    got.tokens[r], want,
+                    "{n}:{m} eot={eot:?} seq {r} diverges from the dense oracle"
+                );
+                assert_eq!(&got.tokens[r][..p.len()], &p[..], "prompt kept verbatim");
+                want_new += want.len() - p.len();
+            }
+            assert_eq!(got.new_tokens, want_new, "token accounting");
+        }
+    }
+}
+
+/// `BatchServer::generator` / `ServeFrontend::generator` route the same
+/// packed weights into the same trajectories; non-decoder servers refuse
+/// with a clear error (covered in the module's unit tests).
+#[test]
+fn server_and_frontend_generators_match_the_direct_path() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(62);
+    let params = dec.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    // resolve through the manifest, exactly like Session::batch_server does
+    let any = model_from_info(&dec.model_info("lm_legacy", 4)).unwrap();
+    let packed = any.pack_params(&params, ratio);
+    let prompts: Vec<Vec<usize>> =
+        (0..3).map(|i| (0..=i).map(|_| rng.below(dec.vocab)).collect()).collect();
+    let cfg = GenerateConfig { max_new_tokens: 4, eot: None };
+
+    let direct = BatchGenerator::new(dec.clone(), dec.pack_params(&params, ratio))
+        .unwrap()
+        .generate(&prompts, &cfg)
+        .unwrap();
+
+    let server = BatchServer::new(any.clone(), packed.clone()).unwrap();
+    let via_server = server.generator().unwrap().generate(&prompts, &cfg).unwrap();
+    assert_eq!(via_server.tokens, direct.tokens, "server generator diverges");
+
+    let fe_cfg = FrontendConfig {
+        max_batch_rows: 8,
+        max_wait: std::time::Duration::from_micros(200),
+        queue_cap: 16,
+        workers: 1,
+    };
+    let mut fe = ServeFrontend::new(BatchServer::new(any, packed).unwrap(), fe_cfg).unwrap();
+    let via_frontend = fe.generator().unwrap().generate(&prompts, &cfg).unwrap();
+    assert_eq!(via_frontend.tokens, direct.tokens, "frontend generator diverges");
+    fe.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 6. Checkpoint round trip of the packed decoder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_decoder_survives_a_checkpoint_round_trip() {
+    let dec = tiny();
+    let mut rng = Pcg64::new(63);
+    let params = dec.init(&mut rng);
+    let ratio = NmRatio::new(2, 4);
+    let packed = dec.pack_params(&params, ratio);
+    let prompts: Vec<Vec<usize>> =
+        (0..3).map(|i| (0..=i).map(|_| rng.below(dec.vocab)).collect()).collect();
+    let cfg = GenerateConfig { max_new_tokens: dec.max_seq, eot: None };
+    let before = BatchGenerator::new(dec.clone(), packed.clone())
+        .unwrap()
+        .generate(&prompts, &cfg)
+        .unwrap();
+
+    let mut ck = Checkpoint::new();
+    ck.push_packed_model("dec", &packed);
+    let path = std::env::temp_dir()
+        .join(format!("stepnm_decgen_{}.bin", std::process::id()));
+    ck.save(&path).unwrap();
+    let reloaded = Checkpoint::load(&path).unwrap().packed_model("dec");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(reloaded.len(), packed.len());
+
+    // reloaded weights forward bit-identically and generate identically
+    let x = ids_tensor(&random_seqs(&mut rng, 2, dec.max_seq, dec.vocab));
+    assert_eq!(
+        dec.forward_packed(&packed, &x).data(),
+        dec.forward_packed(&reloaded, &x).data(),
+        "reloaded packed forward must be bit-identical"
+    );
+    let after = BatchGenerator::new(dec, reloaded)
+        .unwrap()
+        .generate(&prompts, &cfg)
+        .unwrap();
+    assert_eq!(after.tokens, before.tokens, "checkpoint round trip changed a trajectory");
+}

@@ -535,6 +535,32 @@ fn percentile_hand_computed_values() {
     assert_eq!(r.percentile_ns(75.0), Some(3)); // round(3.0) = 3
 }
 
+/// Hand-computed means pin the rounding rule the same way the percentile
+/// cases pin nearest-rank: round to nearest integer nanosecond, half up.
+/// The old truncating mean reported [1, 2] as 1 ns — a systematic
+/// under-report that compounds in `BENCH_serving.json` comparisons.
+#[test]
+fn mean_hand_computed_values() {
+    let mut r = LatencyRecord::new();
+    for ns in [1u64, 2] {
+        r.push(ns);
+    }
+    assert_eq!(r.mean_ns(), 2, "1.5 rounds up, not down to 1");
+    assert_eq!(r.summary().mean_ns, 2);
+
+    let mut r = LatencyRecord::new();
+    for ns in [1u64, 1, 2] {
+        r.push(ns);
+    }
+    assert_eq!(r.mean_ns(), 1, "4/3 ≈ 1.33 rounds down");
+
+    let mut r = LatencyRecord::new();
+    for ns in [99u64, 100, 101] {
+        r.push(ns);
+    }
+    assert_eq!(r.mean_ns(), 100, "exact mean stays exact");
+}
+
 /// Edge cases: empty (None / zero summary), a single sample (every
 /// percentile is it), all-equal samples, out-of-range p.
 #[test]
