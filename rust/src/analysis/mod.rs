@@ -10,7 +10,7 @@
 //! self-contained (offline, zero-dependency) source analyzer with its own
 //! lightweight Rust tokenizer ([`lexer`]), a crate-wide call graph
 //! ([`graph`]) with propagated per-function summaries ([`summary`]), and a
-//! rule engine ([`rules`]) covering seven families:
+//! rule engine ([`rules`]) covering eight families:
 //!
 //! 1. **`float-determinism`** — reassociation-prone constructs
 //!    (`.sum()`/`.fold()` over float iterators, `.rev()` feeding
@@ -28,7 +28,10 @@
 //!    frontend/serve modules, condvar waits inside predicate loops, and no
 //!    may-panic code while a guard is live (poison-safety);
 //! 7. **`allocation-freedom`** — the fused-step and packed kernel hot
-//!    loops stay steady-state allocation-free, directly and via callees.
+//!    loops stay steady-state allocation-free, directly and via callees;
+//! 8. **`unsafe-confinement`** — `unsafe` (SIMD intrinsics, raw-pointer
+//!    views) only in `sparsity/dispatch.rs`; justified exceptions carry an
+//!    inline `allow`.
 //!
 //! Interprocedural findings carry an evidence chain
 //! (`serve_batch → forward → tensor: `.expect()` at encoder.rs:NNN`)
@@ -80,6 +83,7 @@ pub mod config {
     /// Modules whose accumulation order IS the bit-identity contract.
     pub const KERNEL_MODULES: &[&str] = &[
         "rust/src/sparsity/packed.rs",
+        "rust/src/sparsity/dispatch.rs",
         "rust/src/sparsity/mod.rs",
         "rust/src/optim/mod.rs",
         "rust/src/tensor/ops.rs",
@@ -131,9 +135,15 @@ pub mod config {
         "rust/src/model/decoder.rs",
         "rust/src/model/weights.rs",
         "rust/src/sparsity/packed.rs",
+        "rust/src/sparsity/dispatch.rs",
         "rust/src/coordinator/finetune.rs",
         "rust/src/coordinator/generate.rs",
     ];
+
+    /// The one module allowed to contain `unsafe` (rule 8): the SIMD
+    /// dispatch surface, where every intrinsic call is gated by a runtime
+    /// CPU-feature check and documented with a SAFETY argument.
+    pub const UNSAFE_ALLOWED_MODULE: &str = "rust/src/sparsity/dispatch.rs";
 
     pub fn is_kernel_module(path: &str) -> bool {
         KERNEL_MODULES.contains(&path)
@@ -268,6 +278,7 @@ pub fn analyze(input: &AnalysisInput) -> Report {
         rules::panic_freedom(&cx, &mut file_findings);
         rules::thread_discipline(&cx, &mut file_findings);
         rules::test_coverage(&cx, &test_idents, &mut file_findings);
+        rules::unsafe_confinement(&cx, &mut file_findings);
 
         // malformed suppressions are findings; valid ones with unknown rule
         // names too (a typo must not silently disable a rule)

@@ -3,7 +3,7 @@
 //! Every rule is a token-level heuristic scoped by the repo's module map
 //! ([`super::config`]): the analyzer cannot type-check, so each rule trades
 //! a small false-positive rate (absorbed by inline suppressions or the
-//! checked-in baseline) for zero build-time dependencies. The seven
+//! checked-in baseline) for zero build-time dependencies. The eight
 //! families enforce the contracts everything since PR 1 rests on:
 //!
 //! | rule | contract |
@@ -15,6 +15,7 @@
 //! | `test-coverage`      | every public kernel entry point is referenced from `rust/tests/` |
 //! | `lock-discipline`    | frontend/serve locks are acquired in one global pairwise order, condvar waits sit in predicate loops, and no may-panic call runs while a guard is live (poison-safety) |
 //! | `allocation-freedom` | the fused-step and packed kernel hot loops stay steady-state allocation-free, directly and through callees |
+//! | `unsafe-confinement` | `unsafe` (SIMD intrinsics, raw-pointer views) lives only in the dispatch module, where every block carries a SAFETY argument — anywhere else it needs an inline justification |
 //!
 //! The transitive families run on the crate-wide call graph
 //! ([`super::graph`]) with per-function summaries ([`super::summary`]);
@@ -36,6 +37,7 @@ pub const THREAD_DISCIPLINE: &str = "thread-discipline";
 pub const TEST_COVERAGE: &str = "test-coverage";
 pub const LOCK_DISCIPLINE: &str = "lock-discipline";
 pub const ALLOCATION_FREEDOM: &str = "allocation-freedom";
+pub const UNSAFE_CONFINEMENT: &str = "unsafe-confinement";
 /// Meta-rule: malformed or unknown suppression directives are findings too.
 pub const INVALID_SUPPRESSION: &str = "invalid-suppression";
 
@@ -48,6 +50,7 @@ pub const ALL_RULES: &[&str] = &[
     TEST_COVERAGE,
     LOCK_DISCIPLINE,
     ALLOCATION_FREEDOM,
+    UNSAFE_CONFINEMENT,
     INVALID_SUPPRESSION,
 ];
 
@@ -454,6 +457,38 @@ pub fn thread_discipline(cx: &FileCx, out: &mut Vec<Finding>) {
                      merges live in prefetch/serve/optim — route threading through them",
                     t.text,
                     config::THREAD_ALLOWLIST.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 8 — `unsafe-confinement`: the only module allowed to contain
+/// `unsafe` is the SIMD dispatch module
+/// ([`config::UNSAFE_ALLOWED_MODULE`]), where every intrinsic call sits
+/// behind a runtime CPU-feature check and carries a SAFETY comment. An
+/// `unsafe` token anywhere else is a finding — grandfathered exceptions
+/// (e.g. the POD byte views the PJRT literal upload uses) carry an inline
+/// `allow` with a justification, so the full audit surface for memory
+/// safety stays greppable and reviewed.
+pub fn unsafe_confinement(cx: &FileCx, out: &mut Vec<Finding>) {
+    if cx.path == config::UNSAFE_ALLOWED_MODULE {
+        return;
+    }
+    for (i, t) in cx.toks.iter().enumerate() {
+        if cx.in_test(i) {
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            out.push(Finding::new(
+                UNSAFE_CONFINEMENT,
+                cx.path,
+                t.line,
+                format!(
+                    "`unsafe` outside the dispatch module ({}); move the intrinsic \
+                     behind the runtime-dispatch surface or suppress with a safety \
+                     justification",
+                    config::UNSAFE_ALLOWED_MODULE
                 ),
             ));
         }

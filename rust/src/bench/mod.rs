@@ -198,6 +198,12 @@ pub fn write_comparison_json_with(
         rows.iter().map(Comparison::speedup).sum::<f64>() / rows.len() as f64
     };
     doc.insert("mean_speedup", Json::Num(mean_speedup));
+    // which SIMD tier produced these numbers — perf trajectories are only
+    // comparable across commits when the dispatch decision is recorded
+    doc.insert(
+        "dispatch",
+        Json::Str(crate::sparsity::Dispatch::active().name().to_string()),
+    );
     for key in extras.keys() {
         if let Some(val) = extras.get(key) {
             doc.insert(key, val.clone());
@@ -271,6 +277,8 @@ mod tests {
         assert_eq!(doc.get("rows").as_arr().unwrap().len(), 2);
         let mean = doc.get("mean_speedup").as_f64().unwrap();
         assert!((mean - 3.0).abs() < 1e-9, "mean speedup {mean}");
+        let tier = doc.get("dispatch").as_str().unwrap();
+        assert!(["scalar", "sse2", "avx2", "neon"].contains(&tier), "tier {tier}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -36,6 +36,7 @@ use super::norm::{layer_norm, layer_norm_backward, LnCache};
 use super::weights::{colsum, WeightsView};
 use crate::rng::Pcg64;
 use crate::runtime::ModelInfo;
+use crate::sparsity::dispatch::{self, Dispatch};
 use crate::sparsity::{PackedGrad, PackedParam};
 use crate::tensor::{add_bias, axpy, cross_entropy_with_grad, Tensor};
 
@@ -342,30 +343,45 @@ impl TokenDecoder {
         let heads = self.n_heads;
         let dh = self.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
+        let disp = Dispatch::active();
         let qd = q.data();
         let kd = k.data();
         let vd = v.data();
         let mut probs = vec![0f32; bsz * heads * seq * seq];
         let mut ctx = Tensor::zeros(&[bsz * seq, d]);
         let cd = ctx.data_mut();
+        // Transposed key panel for one sequence: kt[c][j] = k_j[c] — pure
+        // data movement so the SIMD score columns read contiguous keys.
+        let mut kt = vec![0f32; d * seq];
         for b in 0..bsz {
-            for h in 0..heads {
-                let col = h * dh;
-                for i in 0..seq {
-                    let qrow = &qd[(b * seq + i) * d + col..][..dh];
-                    let prow = &mut probs[((b * heads + h) * seq + i) * seq..][..i + 1];
-                    // causal scores row: q_i · k_j / √d_h for j ≤ i, row max
+            for j in 0..seq {
+                let krow = &kd[(b * seq + j) * d..][..d];
+                for (c, &v2) in krow.iter().enumerate() {
+                    kt[c * seq + j] = v2;
+                }
+            }
+            for i in 0..seq {
+                let qrow = &qd[(b * seq + i) * d..][..d];
+                let pbase = ((b * heads) * seq + i) * seq;
+                // causal scores for all heads of row i: j ≤ i only
+                dispatch::attn_scores_all_heads(
+                    disp,
+                    qrow,
+                    &kt,
+                    seq,
+                    i + 1,
+                    dh,
+                    scale,
+                    &mut probs[pbase..],
+                    seq * seq,
+                );
+                for h in 0..heads {
+                    let prow = &mut probs[pbase + h * seq * seq..][..i + 1];
+                    // row max over the visible prefix, ascending j
                     let mut mx = f32::NEG_INFINITY;
-                    for (j, p) in prow.iter_mut().enumerate() {
-                        let krow = &kd[(b * seq + j) * d + col..][..dh];
-                        let mut acc = 0f32;
-                        for t in 0..dh {
-                            acc += qrow[t] * krow[t];
-                        }
-                        let sc = acc * scale;
-                        *p = sc;
-                        if sc > mx {
-                            mx = sc;
+                    for &p in prow.iter() {
+                        if p > mx {
+                            mx = p;
                         }
                     }
                     // exact softmax over the visible prefix
@@ -378,15 +394,19 @@ impl TokenDecoder {
                     for p in prow.iter_mut() {
                         *p = ((*p as f64) / denom) as f32;
                     }
-                    // ctx_i = Σ_{j≤i} p_ij · v_j, ascending j
-                    let crow = &mut cd[(b * seq + i) * d + col..][..dh];
-                    for (j, &p) in prow.iter().enumerate() {
-                        let vrow = &vd[(b * seq + j) * d + col..][..dh];
-                        for t in 0..dh {
-                            crow[t] += p * vrow[t];
-                        }
-                    }
                 }
+                // ctx_i = Σ_{j≤i} p_ij · v_j for every head, ascending j
+                let crow = &mut cd[(b * seq + i) * d..][..d];
+                dispatch::attn_context_all_heads(
+                    disp,
+                    &probs[pbase..],
+                    seq * seq,
+                    i + 1,
+                    &vd[(b * seq) * d..],
+                    d,
+                    dh,
+                    crow,
+                );
             }
         }
         (probs, ctx)
@@ -747,7 +767,10 @@ impl TokenDecoder {
                 }
             }
         }
-        let mut prow = vec![0f32; t + 1];
+        // One score row per head: head hh's scores live at
+        // prow[hh * (t + 1)..][..t + 1] — a single kernel call covers all
+        // heads of a sequence.
+        let mut prow = vec![0f32; heads * (t + 1)];
         for blk in 0..self.n_blocks {
             let ib = self.i_block(blk);
             let (a, _ln1) = layer_norm(&h, w.tensor(ib), w.tensor(ib + 1));
@@ -768,47 +791,58 @@ impl TokenDecoder {
                 }
             }
             // causal attention for row t against the cached prefix 0..=t —
-            // the exact loop structure of causal_attention_forward at i = t
+            // the exact term order of causal_attention_forward at i = t,
+            // batched so one kernel call covers every head of a sequence.
+            // Keys stay row-major (the cache layout): transposing here
+            // would cost as much as the dots themselves at kv = t + 1.
             let mut ctx = Tensor::zeros(&[bsz, d]);
             {
                 let qd = q.data();
                 let kbuf = &cache.k[blk];
                 let vbuf = &cache.v[blk];
                 let cd = ctx.data_mut();
+                let disp = Dispatch::active();
                 for r in 0..bsz {
+                    let qrow = &qd[r * d..][..d];
+                    dispatch::attn_scores_rows_all_heads(
+                        qrow,
+                        &kbuf[r * stride..],
+                        d,
+                        t + 1,
+                        dh,
+                        scale,
+                        &mut prow,
+                        t + 1,
+                    );
                     for hh in 0..heads {
-                        let col = hh * dh;
-                        let qrow = &qd[r * d + col..][..dh];
+                        let ph = &mut prow[hh * (t + 1)..][..t + 1];
                         let mut mx = f32::NEG_INFINITY;
-                        for (j, p) in prow.iter_mut().enumerate() {
-                            let krow = &kbuf[(r * stride + j * d) + col..][..dh];
-                            let mut acc = 0f32;
-                            for u in 0..dh {
-                                acc += qrow[u] * krow[u];
-                            }
-                            let sc = acc * scale;
-                            *p = sc;
-                            if sc > mx {
-                                mx = sc;
+                        for &p in ph.iter() {
+                            if p > mx {
+                                mx = p;
                             }
                         }
                         let mut denom = 0f64;
-                        for p in prow.iter_mut() {
+                        for p in ph.iter_mut() {
                             let e = ((*p - mx) as f64).exp();
                             *p = e as f32;
                             denom += e;
                         }
-                        for p in prow.iter_mut() {
+                        for p in ph.iter_mut() {
                             *p = ((*p as f64) / denom) as f32;
                         }
-                        let crow = &mut cd[r * d + col..][..dh];
-                        for (j, &p) in prow.iter().enumerate() {
-                            let vrow = &vbuf[(r * stride + j * d) + col..][..dh];
-                            for u in 0..dh {
-                                crow[u] += p * vrow[u];
-                            }
-                        }
                     }
+                    let crow = &mut cd[r * d..][..d];
+                    dispatch::attn_context_all_heads(
+                        disp,
+                        &prow,
+                        t + 1,
+                        t + 1,
+                        &vbuf[r * stride..],
+                        d,
+                        dh,
+                        crow,
+                    );
                 }
             }
             let attn_out = w.matmul(&ctx, ib + 5);

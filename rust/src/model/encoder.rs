@@ -42,6 +42,7 @@
 use super::weights::{colsum, WeightsView};
 use crate::rng::Pcg64;
 use crate::runtime::ModelInfo;
+use crate::sparsity::dispatch::{self, Dispatch};
 use crate::sparsity::{PackedGrad, PackedParam};
 use crate::tensor::{add_bias, axpy, cross_entropy_with_grad, Tensor};
 
@@ -273,34 +274,56 @@ impl TokenEncoder {
     }
 
     /// Fused-QKV attention forward for one block: probabilities + context.
+    ///
+    /// Batched over heads: per query row one [`dispatch::attn_scores_all_heads`]
+    /// call scores every head against a transposed key panel and one
+    /// [`dispatch::attn_context_all_heads`] call accumulates every head's
+    /// context — the SIMD lanes run independent score columns / context
+    /// elements, so each accumulator still sees the scalar loop's exact
+    /// ascending-`t` / ascending-`j` term order (bit-identity contract).
     fn attention_forward(&self, qkv: &Tensor, bsz: usize, seq: usize) -> (Vec<f32>, Tensor) {
         let d = self.d_model;
         let heads = self.n_heads;
         let dh = self.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
+        let disp = Dispatch::active();
         let qd = qkv.data();
         let mut probs = vec![0f32; bsz * heads * seq * seq];
         let mut ctx = Tensor::zeros(&[bsz * seq, d]);
         let cd = ctx.data_mut();
+        // Transposed key panel for one sequence: kt[c][j] = k_j[c]. Pure
+        // data movement — values are untouched, so this cannot change bits.
+        let mut kt = vec![0f32; d * seq];
         for b in 0..bsz {
-            for h in 0..heads {
-                let col = h * dh;
-                for i in 0..seq {
-                    let qrow = &qd[(b * seq + i) * 3 * d + col..][..dh];
-                    let prow =
-                        &mut probs[((b * heads + h) * seq + i) * seq..][..seq];
-                    // scores row: q_i · k_j / √d_h, tracking the row max
+            for j in 0..seq {
+                let krow = &qd[(b * seq + j) * 3 * d + d..][..d];
+                for (c, &v) in krow.iter().enumerate() {
+                    kt[c * seq + j] = v;
+                }
+            }
+            for i in 0..seq {
+                let qrow = &qd[(b * seq + i) * 3 * d..][..d];
+                let pbase = ((b * heads) * seq + i) * seq;
+                // scores for all heads of row i: s_hj = (q_h · k_hj) / √d_h
+                dispatch::attn_scores_all_heads(
+                    disp,
+                    qrow,
+                    &kt,
+                    seq,
+                    seq,
+                    dh,
+                    scale,
+                    &mut probs[pbase..],
+                    seq * seq,
+                );
+                for h in 0..heads {
+                    let prow = &mut probs[pbase + h * seq * seq..][..seq];
+                    // row max, ascending j — same comparisons as the scalar
+                    // inline tracking
                     let mut mx = f32::NEG_INFINITY;
-                    for (j, p) in prow.iter_mut().enumerate() {
-                        let krow = &qd[(b * seq + j) * 3 * d + d + col..][..dh];
-                        let mut acc = 0f32;
-                        for t in 0..dh {
-                            acc += qrow[t] * krow[t];
-                        }
-                        let sc = acc * scale;
-                        *p = sc;
-                        if sc > mx {
-                            mx = sc;
+                    for &p in prow.iter() {
+                        if p > mx {
+                            mx = p;
                         }
                     }
                     // exact softmax: e_j = exp(s_j − max), p_j = e_j / Σe
@@ -313,15 +336,19 @@ impl TokenEncoder {
                     for p in prow.iter_mut() {
                         *p = ((*p as f64) / denom) as f32;
                     }
-                    // ctx_i = Σ_j p_ij · v_j
-                    let crow = &mut cd[(b * seq + i) * d + col..][..dh];
-                    for (j, &p) in prow.iter().enumerate() {
-                        let vrow = &qd[(b * seq + j) * 3 * d + 2 * d + col..][..dh];
-                        for t in 0..dh {
-                            crow[t] += p * vrow[t];
-                        }
-                    }
                 }
+                // ctx_i = Σ_j p_ij · v_j for every head in one call
+                let crow = &mut cd[(b * seq + i) * d..][..d];
+                dispatch::attn_context_all_heads(
+                    disp,
+                    &probs[pbase..],
+                    seq * seq,
+                    seq,
+                    &qd[(b * seq) * 3 * d + 2 * d..],
+                    3 * d,
+                    dh,
+                    crow,
+                );
             }
         }
         (probs, ctx)

@@ -18,8 +18,8 @@
 use crate::rng::Pcg64;
 use crate::runtime::ModelInfo;
 use crate::sparsity::{
-    packed_matmul, packed_matmul_at_into, packed_matmul_bt_into, packed_matmul_rows, NmRatio,
-    PackedGrad, PackedParam,
+    packed_matmul_at_into, packed_matmul_bt_tiled_into, packed_matmul_rows_into, NmRatio,
+    PackedGrad, PackedParam, PackedScratch,
 };
 use crate::tensor::{
     accuracy_from_logits, add_bias, cross_entropy_with_grad, matmul, matmul_at, matmul_bt,
@@ -115,7 +115,8 @@ impl Mlp {
     ///
     /// The inference twin of [`Mlp::forward`]: hidden weights stored as
     /// [`PackedNmTensor`](crate::sparsity::PackedNmTensor) run the sparse
-    /// kernels ([`packed_matmul`]) that skip pruned slots, dense parameters
+    /// kernels ([`crate::sparsity::packed_matmul_rows_into`]) that skip
+    /// pruned slots, dense parameters
     /// run the ordinary dense path. Output is bit-for-bit identical to
     /// `forward` over the dense *masked* weights on finite inputs — the
     /// integration suite (`rust/tests/packed_inference.rs`) holds the two
@@ -145,13 +146,17 @@ impl Mlp {
             xs.len(),
             self.sizes[0]
         );
+        // One scratch threads through every packed layer, so a steady-state
+        // forward is allocation-free in the kernels (the per-layer
+        // activation tensors remain; they are the function's output chain).
+        let mut scratch = PackedScratch::new();
         // layer 0 reads straight from the borrowed slice
         // nm-lint: allow(panic-freedom): validate_packed_params at server construction guarantees dense biases
         let b0 = params[1].as_dense().expect("bias tensors are never packed");
         let mut h = Tensor::zeros(&[rows, self.sizes[1]]);
         match &params[0] {
             PackedParam::Dense(w) => matmul_rows(xs, rows, self.sizes[0], w, &mut h),
-            PackedParam::Packed(w) => packed_matmul_rows(xs, rows, w, &mut h),
+            PackedParam::Packed(w) => packed_matmul_rows_into(xs, rows, w, &mut h, &mut scratch),
         }
         add_bias(&mut h, b0);
         if self.n_layers() > 1 {
@@ -164,7 +169,11 @@ impl Mlp {
                 .expect("bias tensors are never packed");
             let mut next = match &params[2 * l] {
                 PackedParam::Dense(w) => matmul(&h, w),
-                PackedParam::Packed(w) => packed_matmul(&h, w),
+                PackedParam::Packed(w) => {
+                    let mut c = Tensor::zeros(&[rows, self.sizes[l + 1]]);
+                    packed_matmul_rows_into(h.data(), rows, w, &mut c, &mut scratch);
+                    c
+                }
             };
             add_bias(&mut next, b);
             if l != self.n_layers() - 1 {
@@ -347,6 +356,9 @@ impl Mlp {
             reshaped = x.clone().reshape(&[x.rows_2d(), x.last_dim()]);
             &reshaped
         };
+        // one kernel scratch for the whole forward + backward pass
+        let mut scratch = PackedScratch::new();
+        let batch = x2d.rows_2d();
         // forward, caching each layer's post-ReLU output
         let mut acts: Vec<Tensor> = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
@@ -357,7 +369,11 @@ impl Mlp {
                 .expect("bias tensors are never packed");
             let mut h = match &params[2 * l] {
                 PackedParam::Dense(w) => matmul(input, w),
-                PackedParam::Packed(w) => packed_matmul(input, w),
+                PackedParam::Packed(w) => {
+                    let mut c = Tensor::zeros(&[batch, self.sizes[l + 1]]);
+                    packed_matmul_rows_into(input.data(), batch, w, &mut c, &mut scratch);
+                    c
+                }
             };
             add_bias(&mut h, b);
             if l != n_layers - 1 {
@@ -401,7 +417,7 @@ impl Mlp {
                         // nm-lint: allow(panic-freedom): cols_cache builds an entry for every packed param
                         let ci = cols[2 * l].as_ref().expect("packed param lacks cols cache");
                         let mut out = Tensor::zeros(&[rows, w.shape()[0]]);
-                        packed_matmul_bt_into(&delta, w, ci, &mut out);
+                        packed_matmul_bt_tiled_into(&delta, w, ci, &mut out, &mut scratch);
                         out
                     }
                 };

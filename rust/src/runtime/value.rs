@@ -102,6 +102,7 @@ impl Value {
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let lit = match self {
             Value::F32(t) => {
+                // nm-lint: allow(unsafe-confinement): POD byte view of an f32 slice for the PJRT literal upload; lifetime and length are tied to `t`
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(
                         t.data().as_ptr() as *const u8,
@@ -116,6 +117,7 @@ impl Value {
                 .map_err(|e| anyhow::anyhow!("f32 literal: {e:?}"))?
             }
             Value::I32 { data, shape } => {
+                // nm-lint: allow(unsafe-confinement): POD byte view of an i32 slice for the PJRT literal upload; lifetime and length are tied to `data`
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };
@@ -222,6 +224,7 @@ impl<'a> ValueRef<'a> {
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         match self {
             ValueRef::F32(t) => {
+                // nm-lint: allow(unsafe-confinement): POD byte view of an f32 slice for the PJRT literal upload; lifetime and length are tied to `t`
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(
                         t.data().as_ptr() as *const u8,
@@ -236,6 +239,7 @@ impl<'a> ValueRef<'a> {
                 .map_err(|e| anyhow::anyhow!("f32 literal: {e:?}"))
             }
             ValueRef::I32 { data, shape } => {
+                // nm-lint: allow(unsafe-confinement): POD byte view of an i32 slice for the PJRT literal upload; lifetime and length are tied to `data`
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
                 };

@@ -1,0 +1,535 @@
+//! Runtime SIMD dispatch for the packed kernel family.
+//!
+//! The packed kernels ([`super::packed`]) and the attention models batch
+//! their inner loops over *independent accumulators* — batch lanes in the
+//! row-tiled forward, score columns against a transposed key panel, output
+//! elements of a context row. Each accumulator still receives exactly the
+//! terms the dense masked oracle gave it, in the same ascending order; the
+//! vector unit only evaluates several such independent chains per
+//! instruction. That is the repo's bit-identity contract: **speedups come
+//! from vectorization, never reassociation.**
+//!
+//! [`Dispatch`] is the one-time CPU-feature decision behind that strategy:
+//!
+//! * `x86_64` — AVX2 when the CPU reports it (checked once through
+//!   `is_x86_feature_detected!`), otherwise the SSE2 baseline every
+//!   `x86_64` target guarantees;
+//! * `aarch64` — NEON, mandatory on the architecture;
+//! * anything else — the scalar reference loops.
+//!
+//! `NM_FORCE_SCALAR=1` (or [`Dispatch::scalar`]) forces the scalar tier so
+//! both paths stay testable on any machine; [`Dispatch::candidates`]
+//! enumerates every tier the current machine can run, which is how the
+//! property tests pin SIMD against scalar bit-for-bit.
+//!
+//! The per-element kernel is [`Dispatch::axpy`]: `acc[t] += a * x[t]`.
+//! Per lane this is one IEEE-754 single multiply and one add — bitwise
+//! identical to the scalar statement (Rust never enables FTZ, and the
+//! intrinsics used here are the exact-rounding `mul`/`add` pairs, never
+//! FMA, so there is no double-rounding difference). All `unsafe` intrinsic
+//! use in the crate is confined to this module and enforced by nm-lint's
+//! `unsafe-confinement` rule.
+
+use std::sync::OnceLock;
+
+/// The instruction tiers this build can name. Only tiers valid for the
+/// compilation target exist, and `Avx2` is only ever constructed after a
+/// positive runtime feature check — which is what makes the safe
+/// [`Dispatch::axpy`] wrapper sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// A validated SIMD tier. Copy-cheap; pass it by value into kernels.
+///
+/// The inner [`Tier`] is private on purpose: the only constructors are
+/// [`Dispatch::scalar`], [`Dispatch::detect`], [`Dispatch::active`] and
+/// [`Dispatch::candidates`], each of which guarantees the tier is actually
+/// runnable on this machine. That invariant is what lets [`Dispatch::axpy`]
+/// call `#[target_feature]` code from a safe API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch(Tier);
+
+/// Cached process-wide dispatch decision (one feature probe per process).
+static ACTIVE: OnceLock<Dispatch> = OnceLock::new();
+
+impl Dispatch {
+    /// The scalar reference tier — always available, on every arch.
+    pub fn scalar() -> Self {
+        Dispatch(Tier::Scalar)
+    }
+
+    /// Probe the CPU and return the widest tier it supports.
+    pub fn detect() -> Self {
+        Dispatch(detect_tier())
+    }
+
+    /// The tier every kernel in the process uses: [`Dispatch::detect`]
+    /// once, cached — unless `NM_FORCE_SCALAR` is set to a non-empty value
+    /// other than `0`, which pins the whole process to the scalar tier.
+    pub fn active() -> Self {
+        *ACTIVE.get_or_init(|| {
+            if force_scalar_env() {
+                Dispatch(Tier::Scalar)
+            } else {
+                Dispatch::detect()
+            }
+        })
+    }
+
+    /// Every tier that can run on this machine, scalar first. The property
+    /// tests iterate this to pin each SIMD tier against the scalar oracle.
+    pub fn candidates() -> Vec<Dispatch> {
+        let mut out = vec![Dispatch(Tier::Scalar)];
+        #[cfg(target_arch = "x86_64")]
+        {
+            out.push(Dispatch(Tier::Sse2));
+            if is_x86_feature_detected!("avx2") {
+                out.push(Dispatch(Tier::Avx2));
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            out.push(Dispatch(Tier::Neon));
+        }
+        out
+    }
+
+    /// Stable lower-case tier name — recorded in every `BENCH_*.json` so
+    /// perf trajectories are comparable across machines.
+    pub fn name(self) -> &'static str {
+        match self.0 {
+            Tier::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Tier::Sse2 => "sse2",
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector register on this tier.
+    pub fn lanes(self) -> usize {
+        match self.0 {
+            Tier::Scalar => 1,
+            #[cfg(target_arch = "x86_64")]
+            Tier::Sse2 => 4,
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => 8,
+            #[cfg(target_arch = "aarch64")]
+            Tier::Neon => 4,
+        }
+    }
+
+    /// Row-tile width for the batch-tiled packed kernels: two vector
+    /// registers of accumulators per streamed weight. The scalar tier keeps
+    /// the legacy width 8 so a forced-scalar run walks the exact tiling the
+    /// seed kernels used.
+    pub fn tile(self) -> usize {
+        match self.0 {
+            Tier::Scalar => 8,
+            #[cfg(target_arch = "x86_64")]
+            Tier::Sse2 => 8,
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => 16,
+            #[cfg(target_arch = "aarch64")]
+            Tier::Neon => 8,
+        }
+    }
+
+    /// The dispatch primitive: `acc[t] += a * x[t]` over
+    /// `min(acc.len(), x.len())` elements.
+    ///
+    /// Every tier performs, per element, one IEEE single-precision multiply
+    /// followed by one add — the SIMD tiers evaluate 4 or 8 independent
+    /// elements per instruction but each lane rounds exactly like the
+    /// scalar statement. No FMA, no reordering across elements.
+    #[inline]
+    pub fn axpy(self, acc: &mut [f32], x: &[f32], a: f32) {
+        match self.0 {
+            Tier::Scalar => axpy_scalar(acc, x, a),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: SSE2 is part of the x86_64 baseline ABI.
+            Tier::Sse2 => unsafe { axpy_sse2(acc, x, a) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Tier::Avx2 is only constructed after
+            // `is_x86_feature_detected!("avx2")` returned true.
+            Tier::Avx2 => unsafe { axpy_avx2(acc, x, a) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is mandatory on aarch64 targets.
+            Tier::Neon => unsafe { axpy_neon(acc, x, a) },
+        }
+    }
+}
+
+/// `NM_FORCE_SCALAR` set to anything non-empty other than `0`?
+fn force_scalar_env() -> bool {
+    match std::env::var("NM_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_tier() -> Tier {
+    if is_x86_feature_detected!("avx2") {
+        Tier::Avx2
+    } else {
+        Tier::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_tier() -> Tier {
+    Tier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_tier() -> Tier {
+    Tier::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// per-tier axpy implementations
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn axpy_scalar(acc: &mut [f32], x: &[f32], a: f32) {
+    let n = if acc.len() < x.len() { acc.len() } else { x.len() };
+    for t in 0..n {
+        acc[t] += a * x[t];
+    }
+}
+
+/// SSE2 axpy — 4 lanes. Always callable on `x86_64` (baseline ISA).
+///
+/// # Safety
+/// Raw-pointer loads/stores; bounds are established by `t + 4 <= n` with
+/// `n` clamped to both slice lengths. `loadu`/`storeu` are alignment-free.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+unsafe fn axpy_sse2(acc: &mut [f32], x: &[f32], a: f32) {
+    use core::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+    let n = if acc.len() < x.len() { acc.len() } else { x.len() };
+    let av = _mm_set1_ps(a);
+    let mut t = 0usize;
+    while t + 4 <= n {
+        // split mul + add, never FMA: each lane must round exactly like
+        // the scalar `acc[t] + a * x[t]`
+        let prod = _mm_mul_ps(av, _mm_loadu_ps(x.as_ptr().add(t)));
+        let sum = _mm_add_ps(_mm_loadu_ps(acc.as_ptr().add(t)), prod);
+        _mm_storeu_ps(acc.as_mut_ptr().add(t), sum);
+        t += 4;
+    }
+    while t < n {
+        acc[t] += a * x[t];
+        t += 1;
+    }
+}
+
+/// AVX2 axpy — 8 lanes.
+///
+/// # Safety
+/// Caller must have verified AVX2 support (`Tier::Avx2` construction does);
+/// pointer bounds as in [`axpy_sse2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn axpy_avx2(acc: &mut [f32], x: &[f32], a: f32) {
+    use core::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+    let n = if acc.len() < x.len() { acc.len() } else { x.len() };
+    let av = _mm256_set1_ps(a);
+    let mut t = 0usize;
+    while t + 8 <= n {
+        let prod = _mm256_mul_ps(av, _mm256_loadu_ps(x.as_ptr().add(t)));
+        let sum = _mm256_add_ps(_mm256_loadu_ps(acc.as_ptr().add(t)), prod);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(t), sum);
+        t += 8;
+    }
+    while t < n {
+        acc[t] += a * x[t];
+        t += 1;
+    }
+}
+
+/// NEON axpy — 4 lanes. NEON is mandatory on aarch64.
+///
+/// # Safety
+/// Pointer bounds as in [`axpy_sse2`].
+#[cfg(target_arch = "aarch64")]
+#[inline]
+unsafe fn axpy_neon(acc: &mut [f32], x: &[f32], a: f32) {
+    use core::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    let n = if acc.len() < x.len() { acc.len() } else { x.len() };
+    let av = vdupq_n_f32(a);
+    let mut t = 0usize;
+    while t + 4 <= n {
+        let prod = vmulq_f32(av, vld1q_f32(x.as_ptr().add(t)));
+        let sum = vaddq_f32(vld1q_f32(acc.as_ptr().add(t)), prod);
+        vst1q_f32(acc.as_mut_ptr().add(t), sum);
+        t += 4;
+    }
+    while t < n {
+        acc[t] += a * x[t];
+        t += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched attention helpers — one call covers every head of a sequence row
+// ---------------------------------------------------------------------------
+
+/// Attention scores for **all heads** of one query row in a single call,
+/// against a transposed key panel.
+///
+/// * `q` — the query row, `heads * dh` long (head `h` at `q[h*dh..][..dh]`);
+/// * `kt` — transposed keys: component `c` of key `j` at `kt[c*kt_stride + j]`;
+/// * `kv` — number of key positions to score (`<= kt_stride`);
+/// * `out` — head `h`'s score row is `out[h*out_stride..][..kv]`; it is
+///   overwritten (zero-filled, accumulated, then scaled).
+///
+/// Bit-identity: score `j` of head `h` starts at `0.0` and receives
+/// `q[h*dh+t] * k_j[h*dh+t]` for `t` ascending — exactly the scalar dot
+/// loop's term sequence — then one multiply by `scale`. The SIMD tier only
+/// advances independent `j` columns in lock-step.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_scores_all_heads(
+    d: Dispatch,
+    q: &[f32],
+    kt: &[f32],
+    kt_stride: usize,
+    kv: usize,
+    dh: usize,
+    scale: f32,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let heads = q.len() / dh;
+    for h in 0..heads {
+        let orow = &mut out[h * out_stride..][..kv];
+        orow.fill(0.0);
+        for t in 0..dh {
+            let c = h * dh + t;
+            d.axpy(orow, &kt[c * kt_stride..][..kv], q[c]);
+        }
+        for s in orow.iter_mut() {
+            *s *= scale;
+        }
+    }
+}
+
+/// Attention scores for **all heads** of one query row against *row-major*
+/// keys (the KV-cache layout, where transposing would cost as much as the
+/// dot products themselves). Scalar ascending-`t` dots — one call still
+/// covers every head, and the term order matches [`attn_scores_all_heads`]
+/// exactly, so cached decode stays bit-identical to the full forward pass.
+///
+/// Key `j` lives at `kr[j*k_stride..][..heads*dh]`; head `h`'s score row is
+/// `out[h*out_stride..][..kv]`.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_scores_rows_all_heads(
+    q: &[f32],
+    kr: &[f32],
+    k_stride: usize,
+    kv: usize,
+    dh: usize,
+    scale: f32,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let heads = q.len() / dh;
+    for h in 0..heads {
+        let qrow = &q[h * dh..][..dh];
+        let orow = &mut out[h * out_stride..][..kv];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let krow = &kr[j * k_stride + h * dh..][..dh];
+            let mut acc = 0f32;
+            for t in 0..dh {
+                acc += qrow[t] * krow[t];
+            }
+            *o = acc * scale;
+        }
+    }
+}
+
+/// Probability-weighted value accumulation for **all heads** of one output
+/// row: `out[h*dh + t] += probs[h*p_stride + j] * v_j[h*dh + t]` for `j`
+/// ascending. `out` must be zeroed on entry (`heads * dh` long); value row
+/// `j` lives at `v[j*v_stride..][..heads*dh]`.
+///
+/// Bit-identity: every output element accumulates its probability-weighted
+/// value terms for `j` strictly ascending — the scalar per-head loop's
+/// order — the SIMD tier only advances the `dh` elements of a head in
+/// lock-step.
+pub fn attn_context_all_heads(
+    d: Dispatch,
+    probs: &[f32],
+    p_stride: usize,
+    kv: usize,
+    v: &[f32],
+    v_stride: usize,
+    dh: usize,
+    out: &mut [f32],
+) {
+    let heads = out.len() / dh;
+    for j in 0..kv {
+        let vrow = &v[j * v_stride..][..out.len()];
+        for h in 0..heads {
+            d.axpy(&mut out[h * dh..][..dh], &vrow[h * dh..][..dh], probs[h * p_stride + j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Cases;
+
+    fn bits_eq(a: f32, b: f32) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    #[test]
+    fn detect_and_active_are_runnable_candidates() {
+        let cands = Dispatch::candidates();
+        assert_eq!(cands[0], Dispatch::scalar());
+        assert!(cands.contains(&Dispatch::detect()));
+        assert!(cands.contains(&Dispatch::active()));
+        for d in cands {
+            assert!(d.lanes() >= 1);
+            assert!(d.tile() >= d.lanes());
+            assert!(!d.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn scalar_tier_is_stable() {
+        let d = Dispatch::scalar();
+        assert_eq!(d.name(), "scalar");
+        assert_eq!(d.lanes(), 1);
+        assert_eq!(d.tile(), 8, "forced-scalar must keep the legacy tile width");
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise_on_every_tier() {
+        Cases::new(64).run(|rng, _| {
+            let n = rng.range(1, 70); // crosses 4- and 8-lane boundaries + tails
+            let a = (rng.f32() - 0.5) * 4.0;
+            let x: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let base: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let mut want = base.clone();
+            axpy_scalar(&mut want, &x, a);
+            for d in Dispatch::candidates() {
+                let mut got = base.clone();
+                d.axpy(&mut got, &x, a);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert!(bits_eq(g, w), "{}: lane {i}: {g:?} vs {w:?}", d.name());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn axpy_handles_nan_and_inf_payloads() {
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e38];
+        for (si, &s) in specials.iter().enumerate() {
+            let mut x = vec![1.0f32; 19];
+            x[si % 19] = s;
+            x[18] = -s;
+            let base = vec![0.25f32; 19];
+            let mut want = base.clone();
+            axpy_scalar(&mut want, &x, 2.0);
+            for d in Dispatch::candidates() {
+                let mut got = base.clone();
+                d.axpy(&mut got, &x, 2.0);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert!(bits_eq(g, w), "{}: lane {i}: {g:?} vs {w:?}", d.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scores_helper_matches_scalar_dot_loop() {
+        Cases::new(32).run(|rng, _| {
+            let heads = rng.range(1, 4);
+            let dh = rng.range(1, 9);
+            let kv = rng.range(1, 13);
+            let d_model = heads * dh;
+            let scale = 1.0 / (dh as f32).sqrt();
+            let q: Vec<f32> = (0..d_model).map(|_| rng.f32() - 0.5).collect();
+            let keys: Vec<f32> = (0..kv * d_model).map(|_| rng.f32() - 0.5).collect();
+            // transposed panel: kt[c*kv + j] = keys[j*d_model + c]
+            let mut kt = vec![0f32; d_model * kv];
+            for j in 0..kv {
+                for c in 0..d_model {
+                    kt[c * kv + j] = keys[j * d_model + c];
+                }
+            }
+            // oracle: per-head scalar dots
+            let mut want = vec![0f32; heads * kv];
+            for h in 0..heads {
+                for j in 0..kv {
+                    let mut acc = 0f32;
+                    for t in 0..dh {
+                        acc += q[h * dh + t] * keys[j * d_model + h * dh + t];
+                    }
+                    want[h * kv + j] = acc * scale;
+                }
+            }
+            for d in Dispatch::candidates() {
+                let mut got = vec![0f32; heads * kv];
+                attn_scores_all_heads(d, &q, &kt, kv, kv, dh, scale, &mut got, kv);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert!(bits_eq(g, w), "{}: score {i}: {g:?} vs {w:?}", d.name());
+                }
+            }
+            // the row-major variant must agree bit-for-bit too
+            let mut got = vec![0f32; heads * kv];
+            attn_scores_rows_all_heads(&q, &keys, d_model, kv, dh, scale, &mut got, kv);
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(bits_eq(g, w), "rows variant: score {i}: {g:?} vs {w:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn context_helper_matches_scalar_loop() {
+        Cases::new(32).run(|rng, _| {
+            let heads = rng.range(1, 4);
+            let dh = rng.range(1, 9);
+            let kv = rng.range(1, 13);
+            let d_model = heads * dh;
+            let probs: Vec<f32> = (0..heads * kv).map(|_| rng.f32()).collect();
+            let vals: Vec<f32> = (0..kv * d_model).map(|_| rng.f32() - 0.5).collect();
+            let mut want = vec![0f32; d_model];
+            for h in 0..heads {
+                for j in 0..kv {
+                    let p = probs[h * kv + j];
+                    for t in 0..dh {
+                        want[h * dh + t] += p * vals[j * d_model + h * dh + t];
+                    }
+                }
+            }
+            // oracle order differs (h-outer vs j-outer) but each element's
+            // term sequence is identical: j ascending.
+            for d in Dispatch::candidates() {
+                let mut got = vec![0f32; d_model];
+                attn_context_all_heads(d, &probs, kv, kv, &vals, d_model, dh, &mut got);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    assert!(bits_eq(g, w), "{}: ctx {i}: {g:?} vs {w:?}", d.name());
+                }
+            }
+        });
+    }
+}

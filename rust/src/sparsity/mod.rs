@@ -12,15 +12,18 @@
 //! into persistent scratch; deployment packs masks + weights into
 //! [`PackedNmTensor`]s whose kernels skip pruned slots entirely.
 
+pub mod dispatch;
 pub mod domino;
 pub mod packed;
 pub mod schedule;
 
+pub use dispatch::Dispatch;
 pub use domino::{domino_assign, DominoBudget};
 pub use packed::{
     pack_params, packed_matmul, packed_matmul_at, packed_matmul_at_into, packed_matmul_bt,
-    packed_matmul_bt_into, packed_matmul_into, packed_matmul_rows, packed_matvec, PackedGrad,
-    PackedNmTensor, PackedParam,
+    packed_matmul_bt_into, packed_matmul_bt_tiled_into, packed_matmul_into, packed_matmul_rows,
+    packed_matmul_rows_into, packed_matvec, PackedGrad, PackedNmTensor, PackedParam,
+    PackedScratch,
 };
 pub use schedule::{decaying_n, DecaySchedule};
 

@@ -34,9 +34,13 @@
 //! contributions accumulate in the same ascending-`k` order, and the terms
 //! they skip are exactly the ones the dense kernel either skips
 //! (`x[k] == 0`) or adds as `±0.0` no-ops (pruned slots). The batched path
-//! transposes 8-row tiles so each kept value becomes one 8-wide FMA across
-//! the batch — half the vector work of the dense masked product at 2:4 —
-//! and streams the packed weights (≈0.53× the bytes) once per tile.
+//! transposes batch-row tiles so each kept value is applied to a whole tile
+//! of samples through the runtime-dispatched SIMD axpy
+//! ([`crate::sparsity::dispatch`] — the tile width follows the detected
+//! vector width, e.g. 16 rows on AVX2) — half the vector work of the dense
+//! masked product at 2:4 — and streams the packed weights (≈0.53× the
+//! bytes) once per tile. Batch lanes are independent accumulators, so
+//! vectorizing across them never reassociates any single dot product.
 //!
 //! The **backward** kernels close the training loop for frozen-mask
 //! fine-tuning: [`packed_matmul_at`] computes the compact weight gradient
@@ -54,6 +58,7 @@
 //! packed-vs-dense forward throughput to `BENCH_inference.json` and
 //! fine-tune step throughput to `BENCH_finetune.json`.
 
+use super::dispatch::Dispatch;
 use super::{select_keep, NmRatio};
 use crate::tensor::Tensor;
 
@@ -61,9 +66,44 @@ use crate::tensor::Tensor;
 /// `u32` per group).
 pub const MAX_PACKED_M: usize = 32;
 
-/// Batch rows per tile of the batched kernel: each kept value is applied to
-/// `TILE` samples with one contiguous FMA loop (8 f32 = one AVX2 register).
-const TILE: usize = 8;
+/// Caller-owned scratch for the batch-tiled kernels
+/// ([`packed_matmul_rows_into`], [`packed_matmul_bt_tiled_into`]).
+///
+/// The tiled kernels transpose a `tile`-row panel of the batch before
+/// streaming the packed weights; that panel plus the tile of output
+/// accumulators used to be `vec!`'d on every invocation, which put an
+/// allocation on every serve-path call. Constructing a `PackedScratch` is
+/// free (empty vecs); each kernel grows the buffers it needs **before** its
+/// hot loop and steady-state reuse is allocation-free once the buffers have
+/// reached the layer's working-set size.
+#[derive(Debug, Default)]
+pub struct PackedScratch {
+    /// Transposed input panel (`rows * tile`, forward kernel).
+    xt: Vec<f32>,
+    /// Output accumulator panel (`cols * tile`, forward kernel).
+    yt: Vec<f32>,
+    /// Transposed delta panel (`k * tile`, backward-`bt` kernel).
+    dt: Vec<f32>,
+    /// Lane-group accumulators (`5 * tile`, backward-`bt` kernel: the four
+    /// `j % 4` partitions plus the tail partition).
+    acc: Vec<f32>,
+}
+
+impl PackedScratch {
+    /// An empty scratch; buffers grow on first kernel use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Grow `buf` to at least `len` and return the `len`-prefix. Called before
+/// the kernels' hot loops, so steady-state iterations never allocate.
+fn grown(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
 
 /// A tensor stored in compressed N:M form: kept values + per-group index
 /// codes (see the [`crate::sparsity::packed`] module docs for the layout).
@@ -501,12 +541,14 @@ pub fn packed_matmul(h: &Tensor, w: &PackedNmTensor) -> Tensor {
 
 /// Allocation-conscious `C = H @ W` into a preallocated output.
 ///
-/// Batches of ≥ 8 rows run the tiled kernel: 8 input rows are transposed so
-/// every kept weight value is applied to all 8 samples with one contiguous
-/// FMA loop, and the packed weight stream (values + codes) is read once per
-/// tile instead of once per sample. Remainder rows fall back to
+/// Batches of ≥ one dispatch tile run the tiled kernel: `tile` input rows
+/// (the width [`Dispatch::tile`] picks from the detected vector width) are
+/// transposed so every kept weight value is applied to the whole tile with
+/// one SIMD axpy, and the packed weight stream (values + codes) is read
+/// once per tile instead of once per sample. Remainder rows fall back to
 /// [`packed_matvec`]. Results are bit-identical to per-row
-/// [`packed_matvec`] — and hence to the dense masked matmul.
+/// [`packed_matvec`] — and hence to the dense masked matmul — at every tile
+/// width, because batch lanes are independent accumulators.
 pub fn packed_matmul_into(h: &Tensor, w: &PackedNmTensor, out: &mut Tensor) {
     let (batch, k) = h.as_2d();
     assert_eq!(k, w.rows(), "inner dims {k} vs {}", w.rows());
@@ -515,8 +557,22 @@ pub fn packed_matmul_into(h: &Tensor, w: &PackedNmTensor, out: &mut Tensor) {
 
 /// `C = H @ W` where `H` is a **borrowed** row-major `[batch, w.rows()]`
 /// slice — the copy-free entry the threaded serving shards use (no `Tensor`
-/// is materialized per shard). [`packed_matmul_into`] delegates here.
+/// is materialized per shard). Allocates its own scratch;
+/// [`packed_matmul_rows_into`] is the allocation-free variant for hot loops.
 pub fn packed_matmul_rows(h: &[f32], batch: usize, w: &PackedNmTensor, out: &mut Tensor) {
+    packed_matmul_rows_into(h, batch, w, out, &mut PackedScratch::new());
+}
+
+/// [`packed_matmul_rows`] with caller-owned [`PackedScratch`]: the serve
+/// hot path threads one scratch through every layer so steady-state
+/// forwards are allocation-free.
+pub fn packed_matmul_rows_into(
+    h: &[f32],
+    batch: usize,
+    w: &PackedNmTensor,
+    out: &mut Tensor,
+    scratch: &mut PackedScratch,
+) {
     let (n, m) = (w.ratio.n, w.ratio.m);
     let rows = w.rows();
     let cols = w.cols();
@@ -536,24 +592,31 @@ pub fn packed_matmul_rows(h: &[f32], batch: usize, w: &PackedNmTensor, out: &mut
     let codes = &w.codes[..];
     let hd = h;
     let od = out.data_mut();
+    let disp = Dispatch::active();
+    let tile = disp.tile();
     let mut b0 = 0usize;
-    if batch >= TILE {
-        let mut xt = vec![0f32; rows * TILE];
-        let mut yt = vec![0f32; cols * TILE];
-        while b0 + TILE <= batch {
+    if batch >= tile {
+        // Scratch growth happens here, before the tile loop — steady-state
+        // iterations are allocation-free.
+        let xt = grown(&mut scratch.xt, rows * tile);
+        let yt = grown(&mut scratch.yt, cols * tile);
+        while b0 + tile <= batch {
             // Transpose the tile: xt[i][t] = h[b0 + t][i], contiguous in t.
-            for t in 0..TILE {
+            for t in 0..tile {
                 let hrow = &hd[(b0 + t) * k..(b0 + t + 1) * k];
                 for (i, &v) in hrow.iter().enumerate() {
-                    xt[i * TILE + t] = v;
+                    xt[i * tile + t] = v;
                 }
             }
             yt.fill(0.0);
-            // Stream the packed weights once for the whole tile.
+            // Stream the packed weights once for the whole tile. Each kept
+            // value hits all `tile` batch lanes with one SIMD axpy — the
+            // lanes are independent accumulators, so no dot product is
+            // reassociated at any tile width.
             let mut vc = 0usize;
             let mut gi = 0usize;
             for i in 0..rows {
-                let xi = &xt[i * TILE..(i + 1) * TILE];
+                let xi = &xt[i * tile..(i + 1) * tile];
                 if xi.iter().all(|&v| v == 0.0) {
                     vc += values_per_row;
                     gi += groups_per_row;
@@ -567,10 +630,7 @@ pub fn packed_matmul_rows(h: &[f32], batch: usize, w: &PackedNmTensor, out: &mut
                             let j = g * 4 + code.trailing_zeros() as usize;
                             let v = vals[vc];
                             vc += 1;
-                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
-                            for t in 0..TILE {
-                                yj[t] += v * xi[t];
-                            }
+                            disp.axpy(&mut yt[j * tile..(j + 1) * tile], xi, v);
                             code &= code - 1;
                         }
                     }
@@ -582,10 +642,7 @@ pub fn packed_matmul_rows(h: &[f32], batch: usize, w: &PackedNmTensor, out: &mut
                             let j = g * m + code.trailing_zeros() as usize;
                             let v = vals[vc];
                             vc += 1;
-                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
-                            for t in 0..TILE {
-                                yj[t] += v * xi[t];
-                            }
+                            disp.axpy(&mut yt[j * tile..(j + 1) * tile], xi, v);
                             code &= code - 1;
                         }
                     }
@@ -594,22 +651,19 @@ pub fn packed_matmul_rows(h: &[f32], batch: usize, w: &PackedNmTensor, out: &mut
                         for j in full * m..cols {
                             let v = vals[vc];
                             vc += 1;
-                            let yj = &mut yt[j * TILE..(j + 1) * TILE];
-                            for t in 0..TILE {
-                                yj[t] += v * xi[t];
-                            }
+                            disp.axpy(&mut yt[j * tile..(j + 1) * tile], xi, v);
                         }
                     }
                 }
             }
             // Write the tile back row-major.
-            for t in 0..TILE {
+            for t in 0..tile {
                 let orow = &mut od[(b0 + t) * cols..(b0 + t + 1) * cols];
                 for (j, o) in orow.iter_mut().enumerate() {
-                    *o = yt[j * TILE + t];
+                    *o = yt[j * tile + t];
                 }
             }
-            b0 += TILE;
+            b0 += tile;
         }
     }
     for b in b0..batch {
@@ -699,12 +753,37 @@ pub fn packed_matmul_bt(delta: &Tensor, w: &PackedNmTensor) -> Tensor {
 
 /// Allocation-free [`packed_matmul_bt`] with a caller-cached `cols_idx`
 /// (see [`PackedNmTensor::col_indices`]) and a preallocated output
-/// `[batch, w.rows()]`.
+/// `[batch, w.rows()]`. Allocates its own scratch for the batch-tiled
+/// path; [`packed_matmul_bt_tiled_into`] is the variant for hot loops.
 pub fn packed_matmul_bt_into(
     delta: &Tensor,
     w: &PackedNmTensor,
     cols_idx: &[u32],
     out: &mut Tensor,
+) {
+    packed_matmul_bt_tiled_into(delta, w, cols_idx, out, &mut PackedScratch::new());
+}
+
+/// [`packed_matmul_bt_into`] with caller-owned [`PackedScratch`] — the
+/// batch-tiled activation-gradient kernel.
+///
+/// Batches of ≥ one dispatch tile transpose a `tile`-column delta panel and
+/// keep **five accumulator rows per weight row** — the dense kernel's four
+/// `j % 4` partitions plus its scalar tail — each `tile` lanes wide. Every
+/// kept value lands in its partition through one SIMD axpy, and the final
+/// per-lane reduction `acc0 + acc1 + acc2 + acc3 + tail` is the dense
+/// kernel's left-to-right sum. Each partition receives exactly the terms
+/// the scalar kernel gave it, in the same ascending-slot order, so the
+/// result is bit-identical to the scalar path (and to
+/// [`crate::tensor::matmul_bt`] over the masked weights on finite inputs —
+/// the same qualifier [`packed_matmul_bt`] carries). Remainder batch rows
+/// run the scalar per-row loop.
+pub fn packed_matmul_bt_tiled_into(
+    delta: &Tensor,
+    w: &PackedNmTensor,
+    cols_idx: &[u32],
+    out: &mut Tensor,
+    scratch: &mut PackedScratch,
 ) {
     let (batch, k) = delta.as_2d();
     let rows = w.rows();
@@ -723,7 +802,39 @@ pub fn packed_matmul_bt_into(
     let dd = delta.data();
     let vals = &w.values[..];
     let od = out.data_mut();
-    for b in 0..batch {
+    let disp = Dispatch::active();
+    let tile = disp.tile();
+    let mut b0 = 0usize;
+    if batch >= tile {
+        // Scratch growth before the tile loop — steady state allocates
+        // nothing.
+        let dt = grown(&mut scratch.dt, k * tile);
+        let acc = grown(&mut scratch.acc, 5 * tile);
+        while b0 + tile <= batch {
+            // Transpose the delta panel: dt[j][t] = delta[b0 + t][j].
+            for t in 0..tile {
+                let drow = &dd[(b0 + t) * k..(b0 + t + 1) * k];
+                for (j, &v) in drow.iter().enumerate() {
+                    dt[j * tile + t] = v;
+                }
+            }
+            for i in 0..rows {
+                let s = i * vpr;
+                acc.fill(0.0);
+                for (&v, &j) in vals[s..s + vpr].iter().zip(&cols_idx[s..s + vpr]) {
+                    let j = j as usize;
+                    let part = if j < chunks4 { j & 3 } else { 4 };
+                    disp.axpy(&mut acc[part * tile..(part + 1) * tile], &dt[j * tile..(j + 1) * tile], v);
+                }
+                for t in 0..tile {
+                    od[(b0 + t) * rows + i] =
+                        acc[t] + acc[tile + t] + acc[2 * tile + t] + acc[3 * tile + t] + acc[4 * tile + t];
+                }
+            }
+            b0 += tile;
+        }
+    }
+    for b in b0..batch {
         let drow = &dd[b * k..(b + 1) * k];
         let orow = &mut od[b * rows..(b + 1) * rows];
         for (i, o) in orow.iter_mut().enumerate() {

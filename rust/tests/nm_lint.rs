@@ -345,6 +345,59 @@ pub fn helper() {}
 }
 
 // ---------------------------------------------------------------------------
+// rule 8 — unsafe-confinement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unsafe_outside_the_dispatch_module_is_flagged() {
+    let src = "\
+pub fn view(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+";
+    let rep = lint_one("rust/src/tensor/ops.rs", src);
+    assert_eq!(hit_rules(&rep), vec![rules::UNSAFE_CONFINEMENT]);
+    assert_eq!(rep.findings[0].line, 2);
+    assert!(rep.findings[0].message.contains("dispatch"));
+}
+
+#[test]
+fn unsafe_inside_the_dispatch_module_is_exempt() {
+    let src = "\
+pub fn lanes() -> usize {
+    unsafe { probe_width() }
+}
+";
+    let rep = lint_one("rust/src/sparsity/dispatch.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+#[test]
+fn a_justified_unsafe_suppression_is_honored() {
+    let src = "\
+pub fn view(xs: &[f32]) -> &[u8] {
+    // nm-lint: allow(unsafe-confinement): POD byte view, length tied to xs
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+";
+    let rep = lint_one("rust/src/runtime/value.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+    assert_eq!(rep.suppressed, 1);
+}
+
+#[test]
+fn unsafe_mentioned_in_strings_and_comments_is_ignored() {
+    let src = "\
+pub fn describe() -> &'static str {
+    // the word unsafe in a comment must not trip the lint
+    \"unsafe is confined to the dispatch module\"
+}
+";
+    let rep = lint_one("rust/src/analysis/mod.rs", src);
+    assert!(rep.findings.is_empty(), "{:?}", hit_rules(&rep));
+}
+
+// ---------------------------------------------------------------------------
 // suppressions
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,273 @@
+//! SIMD-vs-scalar bit-identity for the dispatch-tiled packed kernel family.
+//!
+//! Whatever tier the runtime dispatcher selects (scalar, SSE2, AVX2, NEON),
+//! every tiled kernel must reproduce the scalar reference **bit for bit**:
+//!
+//! 1. `packed_matmul_rows_into` vs per-row `packed_matvec` across all
+//!    satellite ratios, non-multiple-of-M tails, and batches straddling the
+//!    dispatch tile width (sub-tile, exact-tile, tile + remainder).
+//! 2. The same forward property with NaN / ±inf kept payloads in the
+//!    weights — non-finite values must flow through the SIMD lanes exactly
+//!    like the scalar path.
+//! 3. `packed_matmul_bt_tiled_into` (batch-tiled backward) vs the scalar
+//!    remainder path run one row at a time, finite and non-finite.
+//! 4. `packed_matmul_at` vs the dense `matmul_at` oracle compacted onto the
+//!    kept slots, finite and non-finite.
+//! 5. `decode_step_packed` vs the dense masked full recompute at every step
+//!    — the batched-heads attention helpers must be invisible at the bit
+//!    level.
+//!
+//! The forced-scalar CI job re-runs this whole suite under
+//! `NM_FORCE_SCALAR=1`, so the properties are pinned on both sides of the
+//! dispatch.
+
+use step_nm::model::{SparseModel, TokenDecoder};
+use step_nm::rng::Pcg64;
+use step_nm::sparsity::{
+    packed_matmul_at, packed_matmul_bt_tiled_into, packed_matmul_rows_into, packed_matvec,
+    Dispatch, NmRatio, PackedNmTensor, PackedScratch,
+};
+use step_nm::tensor::{matmul_at, Tensor};
+use step_nm::testutil::{gen_tensor, gen_tensor_with_ties, Cases};
+
+/// The satellite ratios the ISSUE calls out, all exercised explicitly.
+const RATIOS: [(usize, usize); 4] = [(1, 4), (2, 4), (2, 8), (4, 8)];
+
+/// Bitwise equality with NaN payload tolerance: multiplication operand
+/// order differs between the scalar and axpy paths (`a·w` vs `w·a`), which
+/// is bit-transparent for every value class except two-NaN products.
+fn bits_eq(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            bits_eq(*g, *w),
+            "{what}[{i}]: {g} ({:#010x}) vs {w} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Overwrite a handful of entries with NaN / ±inf — `pack` keeps payloads
+/// verbatim, so these flow straight into the kernels' kept-value stream.
+fn inject_nonfinite(t: &mut Tensor, rng: &mut Pcg64) {
+    let n = t.numel();
+    for _ in 0..(1 + n / 8) {
+        let i = rng.below(n);
+        t.data_mut()[i] = match rng.below(3) {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            _ => f32::NEG_INFINITY,
+        };
+    }
+}
+
+/// Strictly-positive activations: keeps the zero-activation skip (shared by
+/// the scalar and tiled paths only when a whole lane group is zero) out of
+/// the non-finite comparisons.
+fn gen_nonzero(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let mut t = gen_tensor(rng, shape);
+    for v in t.data_mut() {
+        *v = 0.25 + v.abs();
+    }
+    t
+}
+
+/// Batch sizes straddling the active tile width: matvec-only, one short of
+/// a tile, an exact tile, a tile plus a sub-tile remainder, multiple tiles.
+fn batches_around_tile(tile: usize) -> [usize; 5] {
+    [1, tile - 1, tile, tile + 3, 2 * tile + 1]
+}
+
+// ---------------------------------------------------------------------------
+// 0. dispatch surface sanity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn active_tier_is_a_detected_candidate_with_sane_geometry() {
+    let active = Dispatch::active();
+    let names: Vec<&str> = Dispatch::candidates().iter().map(|d| d.name()).collect();
+    assert!(names.contains(&active.name()), "{} not in {names:?}", active.name());
+    assert!(names.contains(&"scalar"), "scalar tier must always be a candidate");
+    for d in Dispatch::candidates() {
+        assert!(d.lanes() >= 1);
+        assert!(d.tile() >= d.lanes(), "{}: tile below lane width", d.name());
+        assert!(d.tile() % d.lanes() == 0, "{}: ragged tile", d.name());
+    }
+    assert_eq!(Dispatch::scalar().tile(), 8, "scalar tier must keep the legacy tile");
+}
+
+// ---------------------------------------------------------------------------
+// 1+2. tiled forward vs per-row scalar matvec
+// ---------------------------------------------------------------------------
+
+fn check_forward(nonfinite: bool, seed: u64) {
+    let tile = Dispatch::active().tile();
+    for (n, m) in RATIOS {
+        let mut scratch = PackedScratch::new();
+        Cases::with_seed(20, seed + (n * 100 + m) as u64).run(|rng, case| {
+            let rows = rng.range(1, 9);
+            let tail = case % m; // every tail residue, including none
+            let cols = rng.range(1, 5) * m + tail;
+            let batch = batches_around_tile(tile)[case % 5];
+            let mut w = gen_tensor_with_ties(rng, &[rows, cols]);
+            if nonfinite {
+                inject_nonfinite(&mut w, rng);
+            }
+            let p = PackedNmTensor::pack(&w, NmRatio::new(n, m));
+            let h = if nonfinite {
+                gen_nonzero(rng, &[batch, rows])
+            } else {
+                gen_tensor(rng, &[batch, rows])
+            };
+            let mut tiled = Tensor::zeros(&[batch, cols]);
+            packed_matmul_rows_into(h.data(), batch, &p, &mut tiled, &mut scratch);
+            // scalar reference: one matvec per batch row, no dispatch tier
+            let mut want = vec![0f32; cols];
+            for b in 0..batch {
+                packed_matvec(&h.data()[b * rows..(b + 1) * rows], &p, &mut want);
+                assert_bits_eq(
+                    &tiled.data()[b * cols..(b + 1) * cols],
+                    &want,
+                    &format!("{n}:{m} batch {batch} row {b}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn tiled_forward_matches_scalar_matvec_bitwise() {
+    check_forward(false, 0x51D0);
+}
+
+#[test]
+fn tiled_forward_matches_scalar_matvec_with_nonfinite_payloads() {
+    check_forward(true, 0x51D1);
+}
+
+// ---------------------------------------------------------------------------
+// 3. batch-tiled bt backward vs the scalar remainder path
+// ---------------------------------------------------------------------------
+
+fn check_bt(nonfinite: bool, seed: u64) {
+    let tile = Dispatch::active().tile();
+    for (n, m) in RATIOS {
+        let mut scratch = PackedScratch::new();
+        Cases::with_seed(12, seed + (n * 100 + m) as u64).run(|rng, case| {
+            let rows = rng.range(1, 8);
+            let tail = case % m;
+            let cols = rng.range(1, 4) * m + tail;
+            let batch = tile + 1 + case % tile; // always hits tiles AND remainder
+            let mut w = gen_tensor_with_ties(rng, &[rows, cols]);
+            if nonfinite {
+                inject_nonfinite(&mut w, rng);
+            }
+            let p = PackedNmTensor::pack(&w, NmRatio::new(n, m));
+            let ci = p.col_indices();
+            let delta = gen_tensor(rng, &[batch, cols]);
+            let mut tiled = Tensor::zeros(&[batch, rows]);
+            packed_matmul_bt_tiled_into(&delta, &p, &ci, &mut tiled, &mut scratch);
+            // scalar reference: a batch of 1 can never fill a tile, so the
+            // same entry point runs its scalar remainder loop per row
+            for b in 0..batch {
+                let drow =
+                    Tensor::new(&[1, cols], delta.data()[b * cols..(b + 1) * cols].to_vec());
+                let mut want = Tensor::zeros(&[1, rows]);
+                packed_matmul_bt_tiled_into(&drow, &p, &ci, &mut want, &mut scratch);
+                assert_bits_eq(
+                    &tiled.data()[b * rows..(b + 1) * rows],
+                    want.data(),
+                    &format!("{n}:{m} bt batch {batch} row {b}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn tiled_bt_backward_matches_scalar_rows_bitwise() {
+    check_bt(false, 0xB7A0);
+}
+
+#[test]
+fn tiled_bt_backward_matches_scalar_rows_with_nonfinite_payloads() {
+    check_bt(true, 0xB7A1);
+}
+
+// ---------------------------------------------------------------------------
+// 4. at backward vs the dense oracle on the kept slots
+// ---------------------------------------------------------------------------
+
+fn check_at(nonfinite: bool, seed: u64) {
+    for (n, m) in RATIOS {
+        Cases::with_seed(12, seed + (n * 100 + m) as u64).run(|rng, case| {
+            let rows = rng.range(1, 8);
+            let tail = case % m;
+            let cols = rng.range(1, 4) * m + tail;
+            let batch = 1 + case * 3; // sub-tile through multi-tile
+            let mut w = gen_tensor_with_ties(rng, &[rows, cols]);
+            if nonfinite {
+                inject_nonfinite(&mut w, rng);
+            }
+            let p = PackedNmTensor::pack(&w, NmRatio::new(n, m));
+            let a = gen_tensor(rng, &[batch, rows]);
+            let delta = gen_tensor(rng, &[batch, cols]);
+            let gv = packed_matmul_at(&a, &delta, &p);
+            let want = p.compact_like(&matmul_at(&a, &delta));
+            assert_bits_eq(&gv, &want, &format!("{n}:{m} at batch {batch}"));
+        });
+    }
+}
+
+#[test]
+fn at_backward_matches_dense_oracle_on_kept_slots() {
+    check_at(false, 0xA7A0);
+}
+
+#[test]
+fn at_backward_matches_dense_oracle_with_nonfinite_payloads() {
+    check_at(true, 0xA7A1);
+}
+
+// ---------------------------------------------------------------------------
+// 5. KV-cached packed decode under the active tier
+// ---------------------------------------------------------------------------
+
+/// The batched-heads attention helpers (scores / softmax-context for all
+/// heads in one dispatch call) must leave `decode_step_packed` bit-identical
+/// to the dense masked full recompute at every step.
+#[test]
+fn decode_step_packed_matches_dense_full_recompute() {
+    for (k, (n, m)) in RATIOS.into_iter().enumerate() {
+        let dec = TokenDecoder::new(13, 8, 2, 16, 2, 6);
+        let mut rng = Pcg64::new(0xDEC0 + k as u64);
+        let params = dec.init(&mut rng);
+        let ratio = NmRatio::new(n, m);
+        let packed = dec.pack_params(&params, ratio);
+        let masked = dec.masked_params(&params, ratio);
+        let bsz = 3usize;
+        let seqs: Vec<Vec<usize>> = (0..bsz)
+            .map(|_| (0..dec.max_seq).map(|_| rng.below(dec.vocab)).collect())
+            .collect();
+        let mut cache = dec.new_cache(bsz);
+        for t in 0..dec.max_seq {
+            let ids: Vec<usize> = seqs.iter().map(|s| s[t]).collect();
+            let step = dec.decode_step_packed(&packed, &mut cache, &ids).unwrap();
+            let prefix: Vec<f32> = seqs
+                .iter()
+                .flat_map(|s| s[..=t].iter().map(|&i| i as f32))
+                .collect();
+            let full = dec.forward(&masked, &Tensor::new(&[bsz, t + 1], prefix));
+            assert_eq!(
+                step.data(),
+                full.data(),
+                "{n}:{m}: decode_step_packed != full recompute at t={t}"
+            );
+        }
+    }
+}
